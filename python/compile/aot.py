@@ -1,0 +1,154 @@
+"""AOT compile path: lower the L2/L1 jax computations to HLO *text*.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the image's xla_extension 0.5.1 (behind the rust `xla` crate) rejects
+(`proto.id() <= INT_MAX`). The HLO text parser reassigns ids, so text
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Emitted artifacts (see `ENTRY_POINTS`):
+
+  golden_{direct,tconv,fgrad}_*  fixed-shape single-plane kernels used by
+                                 the Rust runtime to validate SASiML's
+                                 functional outputs against JAX/XLA.
+  train_step_{stride,pool}       one SGD step of the small CNN (batch 16).
+  logits_{stride,pool}           inference logits (batch 64) for accuracy.
+
+Each artifact is `<name>.hlo.txt`; `manifest.txt` lists name, file, and the
+input arity/shapes/dtypes so the Rust loader can sanity-check its buffers.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.direct_conv import direct_conv
+from .kernels.ecoflow_dilated import ecoflow_filter_grad
+from .kernels.ecoflow_transpose import ecoflow_transpose_conv
+
+BATCH_TRAIN = 16
+BATCH_EVAL = 64
+
+# (name, H_in, K, S) single-plane golden configs; H_in exact-fit.
+GOLDEN = [
+    ("15_3_2", 15, 3, 2),
+    ("13_3_1", 13, 3, 1),
+    ("13_5_4", 13, 5, 4),
+    ("11_4_1", 11, 4, 1),
+    ("19_5_2", 19, 5, 2),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _entry_points():
+    eps = {}
+
+    for tag, h, k, s in GOLDEN:
+        he = (h - k) // s + 1
+
+        def mk_direct(s=s):
+            return lambda x, w: (direct_conv(x, w, s),)
+
+        def mk_tconv(s=s):
+            return lambda e, w: (ecoflow_transpose_conv(e, w, s),)
+
+        def mk_fgrad(s=s):
+            return lambda x, e: (ecoflow_filter_grad(x, e, s),)
+
+        eps[f"golden_direct_{tag}"] = (mk_direct(), [f32(h, h), f32(k, k)])
+        eps[f"golden_tconv_{tag}"] = (mk_tconv(), [f32(he, he), f32(k, k)])
+        eps[f"golden_fgrad_{tag}"] = (mk_fgrad(), [f32(h, h), f32(he, he)])
+
+    for variant in ("stride", "pool"):
+        params = M.init_params(variant)
+        pspecs = [f32(*p.shape) for p in params]
+
+        def mk_step(variant=variant, n=len(params)):
+            def step(*args):
+                ps, xb, yb = args[:n], args[n], args[n + 1]
+                return M.train_step(tuple(ps), xb, yb, variant)
+
+            return step
+
+        def mk_logits(variant=variant, n=len(params)):
+            def logits(*args):
+                ps, xb = args[:n], args[n]
+                return (M.model_logits(tuple(ps), xb, variant),)
+
+            return logits
+
+        eps[f"train_step_{variant}"] = (
+            mk_step(),
+            pspecs + [f32(BATCH_TRAIN, M.IN_CH, M.IMG, M.IMG),
+                      i32(BATCH_TRAIN)],
+        )
+        eps[f"logits_{variant}"] = (
+            mk_logits(),
+            pspecs + [f32(BATCH_EVAL, M.IN_CH, M.IMG, M.IMG)],
+        )
+
+    return eps
+
+
+def emit(out_dir: str, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, specs) in sorted(_entry_points().items()):
+        if only and only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            f"{s.dtype}:{'x'.join(str(d) for d in s.shape)}" for s in specs
+        )
+        manifest.append(f"{name}\t{name}.hlo.txt\t{len(specs)}\t{shapes}")
+        print(f"  wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"  wrote {os.path.join(out_dir, 'manifest.txt')}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output dir OR a path ending in .hlo.txt "
+                         "(its parent dir is used)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on entry-point names")
+    args = ap.parse_args()
+    out = args.out
+    if out.endswith(".hlo.txt"):
+        out = os.path.dirname(out) or "."
+    emit(out, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package run with ``interpret=True``: the CPU PJRT
+plugin in this image cannot execute Mosaic custom-calls, and interpret-mode
+pallas_call lowers to plain traceable jax ops, so the kernels inline into
+the AOT-exported HLO (see python/compile/aot.py).
+"""
+
+from __future__ import annotations
+
+INTERPRET = True
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def phase_subfilter_len(k: int, stride: int, phase: int) -> int:
+    """Number of filter taps w[phase::stride] along one dimension."""
+    return ceil_div(k - phase, stride)
+
+
+def vmem_bytes_transpose(he: int, we: int, k: int, stride: int,
+                         dtype_bytes: int = 4) -> int:
+    """Worst-case VMEM footprint of one phase block of the transposed-conv
+    kernel (padded error tile + sub-filter + output tile).
+
+    Used by the §Perf analysis: real-TPU residency is estimated from this,
+    since interpret-mode wallclock is not a TPU proxy.
+    """
+    ka = phase_subfilter_len(k, stride, 0)
+    err_pad = (he + 2 * (ka - 1)) * (we + 2 * (ka - 1))
+    out = (he + ka - 1) * (we + ka - 1)
+    return dtype_bytes * (err_pad + ka * ka + out)
+
+
+def mxu_useful_mac_fraction(k: int, stride: int) -> float:
+    """Fraction of MACs that are useful (non-padding) for the phase-
+    decomposed transposed conv, relative to its own issued MACs.
+
+    The only overhead is the per-phase border halo; inner (dilation) zeros
+    are eliminated entirely. Computed for an asymptotically large error map
+    this tends to 1.0; we report the exact small-map value in tests.
+    """
+    total = 0
+    useful = 0
+    for p in range(stride):
+        for t in range(stride):
+            ka = phase_subfilter_len(k, stride, p)
+            kb = phase_subfilter_len(k, stride, t)
+            if ka == 0 or kb == 0:
+                continue
+            useful += ka * kb
+            total += ka * kb
+    return useful / max(total, 1)

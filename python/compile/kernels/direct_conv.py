@@ -1,0 +1,62 @@
+"""Pallas kernel: strided VALID direct convolution (forward pass).
+
+out[i,j] = sum_{u,v} x[i*S+u, j*S+v] * w[u,v]
+
+The kernel vectorizes over the whole output plane and unrolls the K*K tap
+loop; each tap is one shifted strided slice of the ifmap, so every issued
+multiply touches real data (there is no padding in a VALID forward conv,
+but this kernel is the structural template the two EcoFlow kernels build
+on).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+
+def _direct_conv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int,
+                        ho: int, wo: int):
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.zeros((ho, wo), x.dtype)
+    for u in range(k):
+        for v in range(k):
+            xs = lax.slice(
+                x,
+                (u, v),
+                (u + stride * (ho - 1) + 1, v + stride * (wo - 1) + 1),
+                (stride, stride),
+            )
+            acc = acc + xs * w[u, v]
+    o_ref[...] = acc
+
+
+def direct_conv(x, w, stride: int):
+    """Strided VALID direct convolution of a 2-D plane with a KxK filter."""
+    h, wdt = x.shape
+    k = w.shape[0]
+    assert w.shape == (k, k), "square filters only"
+    ho = (h - k) // stride + 1
+    wo = (wdt - k) // stride + 1
+    assert ho >= 1 and wo >= 1, "filter larger than input"
+    kern = functools.partial(
+        _direct_conv_kernel, k=k, stride=stride, ho=ho, wo=wo
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((ho, wo), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def direct_conv_mac_count(h: int, k: int, stride: int) -> int:
+    """MACs issued by this kernel (per 2-D plane)."""
+    ho = (h - k) // stride + 1
+    return ho * ho * k * k

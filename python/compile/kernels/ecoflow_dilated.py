@@ -1,0 +1,76 @@
+"""Pallas kernel: zero-free dilated convolution (filter gradients).
+
+EcoFlow §4.2 computes dW by convolving the ifmap with the S-dilated error,
+but never materializes the dilation zeros: each gradient element is a dense
+contraction of the un-padded error with a strided window of the ifmap:
+
+  dW[u,v] = sum_{i,j} err[i,j] * x[i*S+u, j*S+v]
+
+On the spatial array the paper assigns one gradient element per PE and
+multicasts ifmap elements; here (DESIGN.md §Hardware-Adaptation) each
+(u,v) is a dense elementwise-product + full reduction over a strided slice
+of x — exactly the useful-MAC count K^2 * He*We, with zero padding zeros.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+
+def _filter_grad_kernel(x_ref, e_ref, o_ref, *, k: int, stride: int,
+                        he: int, we: int):
+    x = x_ref[...]
+    e = e_ref[...]
+    rows = []
+    for u in range(k):
+        cols = []
+        for v in range(k):
+            xs = lax.slice(
+                x,
+                (u, v),
+                (u + stride * (he - 1) + 1, v + stride * (we - 1) + 1),
+                (stride, stride),
+            )
+            cols.append(jnp.sum(xs * e))
+        rows.append(jnp.stack(cols))
+    o_ref[...] = jnp.stack(rows)
+
+
+def ecoflow_filter_grad(x, err, stride: int):
+    """Filter gradients dW (K x K) without materializing dilation zeros.
+
+    x: (Hin, Win) forward ifmap; err: (He, We) backpropagated error.
+    Exact-fit geometry: K = Hin - S*(He-1) must be >= 1.
+    """
+    hin, win = x.shape
+    he, we = err.shape
+    k = hin - stride * (he - 1)
+    kw = win - stride * (we - 1)
+    assert k == kw, f"non-square filter implied: {k}x{kw}"
+    assert k >= 1, "inconsistent geometry"
+    kern = functools.partial(
+        _filter_grad_kernel, k=k, stride=stride, he=he, we=we
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((k, k), x.dtype),
+        interpret=INTERPRET,
+    )(x, err)
+
+
+def filter_grad_mac_count(he: int, k: int) -> int:
+    """MACs issued by this kernel — exactly the useful count."""
+    return k * k * he * he
+
+
+def naive_filter_grad_mac_count(he: int, k: int, stride: int) -> int:
+    """MACs the dense dataflow issues sliding the dilated error."""
+    d = stride * (he - 1) + 1
+    return k * k * d * d

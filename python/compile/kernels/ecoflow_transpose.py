@@ -1,0 +1,109 @@
+"""Pallas kernel: zero-free transposed convolution via phase decomposition.
+
+This is the paper's core insight (EcoFlow §4.1 — padding zeros are static
+and deterministic, so re-index the computation instead of materializing
+them) re-derived for an MXU/VMEM-style target (DESIGN.md
+§Hardware-Adaptation):
+
+  din[S*q+p, S*r+t] = sum_{a,b} err[q-a, r-b] * w[S*a+p, S*b+t]
+
+i.e. output phase (p,t) is a *dense, full* true-convolution of the
+un-padded error map with the sub-filter w[p::S, t::S]. The S^2 inner
+(dilation) zeros per useful element that a direct-conv dataflow multiplies
+are never generated; each phase is a small dense conv the MXU/VPU executes
+at full utilization. Only the (Ka-1)-wide halo of the full convolution
+remains — the same border elements EcoFlow's white-cell labels produce
+directly.
+
+MAC accounting (asserted in tests): the naive padded dataflow issues
+~S^2 x the useful MACs; this kernel issues exactly
+sum_phases (He+Ka-1)(We+Kb-1) * Ka*Kb, which approaches the useful count
+He*We*K^2 for large maps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, phase_subfilter_len
+
+
+def _phase_conv_kernel(e_ref, w_ref, o_ref, *, ka: int, kb: int,
+                       ho: int, wo: int):
+    """Dense full correlation of the zero-halo-padded error with the
+    rot180'd sub-filter; output is one phase plane of the input gradient."""
+    e = e_ref[...]  # (he + 2(ka-1), we + 2(kb-1))
+    w = w_ref[...]  # (ka, kb), already rotated 180
+    acc = jnp.zeros((ho, wo), e.dtype)
+    for a in range(ka):
+        for b in range(kb):
+            acc = acc + e[a:a + ho, b:b + wo] * w[a, b]
+    o_ref[...] = acc
+
+
+def _phase_plane(err, wsub):
+    """Full true-convolution err (*) wsub, as a Pallas call."""
+    he, we = err.shape
+    ka, kb = wsub.shape
+    ho, wo = he + ka - 1, we + kb - 1
+    # Halo for the full conv; rot180 turns convolution into correlation.
+    epad = jnp.pad(err, ((ka - 1, ka - 1), (kb - 1, kb - 1)))
+    wrot = jnp.rot90(wsub, 2)
+    kern = functools.partial(_phase_conv_kernel, ka=ka, kb=kb, ho=ho, wo=wo)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((ho, wo), err.dtype),
+        interpret=INTERPRET,
+    )(epad, wrot)
+
+
+def ecoflow_transpose_conv(err, w, stride: int):
+    """Input gradients din (transposed conv) without padding zeros.
+
+    err: (He, We) backpropagated error, w: (K, K) forward filter.
+    Returns din of shape (S*(He-1)+K, S*(We-1)+K).
+    """
+    he, we = err.shape
+    k = w.shape[0]
+    assert w.shape == (k, k), "square filters only"
+    s = stride
+    hin, win = s * (he - 1) + k, s * (we - 1) + k
+    din = jnp.zeros((hin, win), err.dtype)
+    for p in range(min(s, k)):
+        for t in range(min(s, k)):
+            ka = phase_subfilter_len(k, s, p)
+            kb = phase_subfilter_len(k, s, t)
+            if ka == 0 or kb == 0:
+                continue
+            wsub = w[p::s, t::s]
+            plane = _phase_plane(err, wsub)
+            # Phase (p,t) occupies rows p, p+S, ... — trim the full-conv
+            # plane to the rows that exist in din.
+            hq = -(-(hin - p) // s)
+            wq = -(-(win - t) // s)
+            din = din.at[p::s, t::s].set(plane[:hq, :wq])
+    return din
+
+
+def transpose_mac_count(he: int, k: int, stride: int) -> int:
+    """MACs issued by this kernel (per 2-D plane, square maps)."""
+    total = 0
+    for p in range(min(stride, k)):
+        for t in range(min(stride, k)):
+            ka = phase_subfilter_len(k, stride, p)
+            kb = phase_subfilter_len(k, stride, t)
+            if ka == 0 or kb == 0:
+                continue
+            total += (he + ka - 1) * (he + kb - 1) * ka * kb
+    return total
+
+
+def naive_transpose_mac_count(he: int, k: int, stride: int) -> int:
+    """MACs the padded direct-conv dataflow issues for the same result."""
+    d = stride * (he - 1) + 1 + 2 * (k - 1)
+    out = d - k + 1
+    return out * out * k * k

@@ -1,0 +1,169 @@
+"""Pure-jnp / lax correctness oracles for the EcoFlow kernels.
+
+These are the ground truth that the Pallas kernels (and, transitively, the
+Rust SASiML simulator's functional outputs) are validated against.
+
+Conventions (single 2-D plane; channel/filter/batch dims are vmapped at the
+model level):
+
+  forward (direct, VALID):   out[i,j]  = sum_{u,v} x[i*S+u, j*S+v] * w[u,v]
+  input gradient (transposed convolution):
+      din[y,x] = sum_{i,j} err[i,j] * w[y-i*S, x-j*S]   (0 <= y-i*S < K)
+  filter gradient (dilated convolution):
+      dw[u,v]  = sum_{i,j} err[i,j] * x[i*S+u, j*S+v]
+
+`x` is H_in x W_in, `w` is K x K, `err` is H_e x W_e where H_e is the
+forward output height. Exact-fit geometry is assumed: H_in = S*(H_e-1)+K.
+
+The *naive* variants explicitly materialize the zero-padded tensors the way
+a direct-convolution dataflow would (paper Fig. 1 / Fig. 4), and the
+`*_zero_fraction` helpers count the padding-induced useless multiplications
+(paper Fig. 3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# lax-based oracles
+# ---------------------------------------------------------------------------
+
+
+def _nchw(a):
+    return a[None, None, :, :]
+
+
+def direct_conv_ref(x, w, stride: int):
+    """VALID direct convolution (cross-correlation, as in CNNs)."""
+    out = lax.conv_general_dilated(
+        _nchw(x), _nchw(w), window_strides=(stride, stride), padding="VALID"
+    )
+    return out[0, 0]
+
+
+def transposed_conv_ref(err, w, stride: int):
+    """Input gradients: full conv of the S-dilated error with rot180(w).
+
+    Output is S*(H_e-1)+K per dim (exact-fit geometry).
+    """
+    kh, kw = w.shape
+    out = lax.conv_general_dilated(
+        _nchw(err),
+        _nchw(jnp.rot90(w, 2)),
+        window_strides=(1, 1),
+        padding=[(kh - 1, kh - 1), (kw - 1, kw - 1)],
+        lhs_dilation=(stride, stride),
+    )
+    return out[0, 0]
+
+
+def dilated_conv_ref(x, err, stride: int):
+    """Filter gradients: VALID conv of the ifmap with the S-dilated error."""
+    out = lax.conv_general_dilated(
+        _nchw(x),
+        _nchw(err),
+        window_strides=(1, 1),
+        padding="VALID",
+        rhs_dilation=(stride, stride),
+    )
+    return out[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Naive zero-padded implementations (what RS/TPU dataflows execute)
+# ---------------------------------------------------------------------------
+
+
+def dilate2d(a, stride: int):
+    """Insert stride-1 zero rows/columns between elements (inner padding)."""
+    if stride == 1:
+        return a
+    h, w = a.shape
+    out = jnp.zeros((stride * (h - 1) + 1, stride * (w - 1) + 1), a.dtype)
+    return out.at[::stride, ::stride].set(a)
+
+
+def pad_border(a, amount: int):
+    """Outer zero padding on all four borders."""
+    return jnp.pad(a, amount)
+
+
+def naive_transposed_conv(err, w, stride: int):
+    """Materialize the padded error, then dense stride-1 VALID conv.
+
+    This is the padded input of paper Fig. 4 (inner + outer padding);
+    arithmetic identical to `transposed_conv_ref` but with explicit zeros.
+    """
+    k = w.shape[0]
+    padded = pad_border(dilate2d(err, stride), k - 1)
+    return direct_conv_ref(padded, jnp.rot90(w, 2), 1)
+
+
+def naive_dilated_conv(x, err, stride: int):
+    """Materialize the dilated error ("padded filter"), dense VALID conv."""
+    return direct_conv_ref(x, dilate2d(err, stride), 1)
+
+
+# ---------------------------------------------------------------------------
+# Zero-multiplication accounting (paper §3.1, Fig. 3 / Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def transpose_inner_padding(n: int, stride: int) -> int:
+    """[S(N-1)+1]^2 - N^2  (paper §3.1.1)."""
+    return (stride * (n - 1) + 1) ** 2 - n * n
+
+
+def transpose_outer_padding(n: int, k: int, stride: int) -> int:
+    """4(K-1)[S(N-1)+1] + 4(K-1)^2  (paper §3.1.1)."""
+    d = stride * (n - 1) + 1
+    return 4 * (k - 1) * d + 4 * (k - 1) ** 2
+
+
+def transpose_zero_fraction(n: int, k: int, stride: int) -> float:
+    """Fraction of the padded error matrix that is zero (Fig. 4 metric)."""
+    d = stride * (n - 1) + 1 + 2 * (k - 1)
+    total = d * d
+    return 1.0 - (n * n) / total
+
+
+def dilated_zero_fraction(n_err: int, stride: int) -> float:
+    """Fraction of the dilated error ("padded filter") that is zero."""
+    d = stride * (n_err - 1) + 1
+    return 1.0 - (n_err * n_err) / (d * d)
+
+
+def transpose_zero_mult_fraction(n: int, k: int, stride: int) -> float:
+    """Fraction of MACs that touch a padding zero when a dense dataflow
+    computes the transposed convolution (Fig. 3 metric, input grads)."""
+    d = stride * (n - 1) + 1 + 2 * (k - 1)
+    out = d - k + 1
+    total_macs = out * out * k * k
+    useful = n * n * k * k  # every real error element meets every tap once
+    return 1.0 - useful / total_macs
+
+
+def dilated_zero_mult_fraction(n_err: int, k: int, stride: int) -> float:
+    """Fraction of zero MACs for the filter-gradient dilated conv (Fig. 3).
+
+    The dense dataflow slides the dilated (S-padded) error, of size
+    D = S*(N_e-1)+1, over the ifmap; only N_e^2 taps are non-zero.
+    `k` is the forward filter size = number of output gradient elements
+    per dim.
+    """
+    d = stride * (n_err - 1) + 1
+    total = k * k * d * d
+    useful = k * k * n_err * n_err
+    return 1.0 - useful / total
+
+
+def useful_macs_transpose(n_err: int, k: int) -> int:
+    """MACs a zero-free dataflow needs for the transposed conv."""
+    return n_err * n_err * k * k
+
+
+def useful_macs_dilated(n_err: int, k: int) -> int:
+    """MACs a zero-free dataflow needs for the filter gradients."""
+    return k * k * n_err * n_err

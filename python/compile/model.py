@@ -1,0 +1,177 @@
+"""L2: JAX model — small CNN whose forward uses the Pallas direct-conv
+kernel and whose backward is wired (via custom_vjp) to the EcoFlow
+zero-free transposed-conv (input gradients) and dilated-conv (filter
+gradients) Pallas kernels. The whole train step lowers to a single HLO
+module (python/compile/aot.py) that the Rust runtime executes via PJRT.
+
+Two topologies are exported, mirroring the paper's Table 4 experiment:
+
+  * ``stride``: downsampling via stride-2 convolutions (EcoFlow-friendly)
+  * ``pool``:   stride-1 convolutions + 2x2 average pooling (original)
+
+Geometry is exact-fit everywhere (H_in = S*(H_out-1)+K) so the backward
+kernels need no cropping.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.direct_conv import direct_conv
+from .kernels.ecoflow_dilated import ecoflow_filter_grad
+from .kernels.ecoflow_transpose import ecoflow_transpose_conv
+
+# ---------------------------------------------------------------------------
+# Multi-channel conv layer with EcoFlow backward
+# ---------------------------------------------------------------------------
+
+
+def _conv_fwd_impl(x, w, stride):
+    """x: (C,H,W), w: (F,C,K,K) -> (F,Ho,Wo) via the Pallas kernel."""
+    per_fc = jax.vmap(  # over filters
+        lambda wf: jax.vmap(  # over channels
+            lambda xc, wfc: direct_conv(xc, wfc, stride)
+        )(x, wf)
+    )(w)
+    return per_fc.sum(axis=1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def conv_layer(x, w, stride):
+    """Direct conv forward; EcoFlow zero-free dataflows in the backward."""
+    return _conv_fwd_impl(x, w, stride)
+
+
+def _conv_layer_fwd(x, w, stride):
+    return _conv_fwd_impl(x, w, stride), (x, w)
+
+
+def _conv_layer_bwd(stride, res, g):
+    x, w = res
+    # dx[c] = sum_f transposed_conv(g[f], w[f,c])   (EcoFlow transpose)
+    planes = jax.vmap(  # over filters
+        lambda gf, wf: jax.vmap(  # over channels
+            lambda wfc: ecoflow_transpose_conv(gf, wfc, stride)
+        )(wf)
+    )(g, w)  # (F, C, Hin, Win)
+    dx = planes.sum(axis=0)
+    # dw[f,c] = filter_grad(x[c], g[f])             (EcoFlow dilated)
+    dw = jax.vmap(  # over filters
+        lambda gf: jax.vmap(  # over channels
+            lambda xc: ecoflow_filter_grad(xc, gf, stride)
+        )(x)
+    )(g)  # (F, C, K, K)
+    return dx, dw
+
+
+conv_layer.defvjp(_conv_layer_fwd, _conv_layer_bwd)
+
+
+def avg_pool2(x):
+    """2x2/2 average pooling over (C,H,W); truncates odd trailing row/col."""
+    c, h, w = x.shape
+    h2, w2 = (h // 2) * 2, (w // 2) * 2
+    xc = x[:, :h2, :w2].reshape(c, h2 // 2, 2, w2 // 2, 2)
+    return xc.mean(axis=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# Topologies (input: (3, 15, 15), NUM_CLASSES logits)
+# ---------------------------------------------------------------------------
+
+NUM_CLASSES = 4
+IMG = 15
+IN_CH = 3
+C1, C2 = 8, 16
+
+
+def init_params(variant: str, seed: int = 0):
+    """He-style init. Returns a flat tuple of arrays (AOT-friendly)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w1 = jax.random.normal(ks[0], (C1, IN_CH, 3, 3), jnp.float32) * 0.35
+    w2 = jax.random.normal(ks[1], (C2, C1, 3, 3), jnp.float32) * 0.18
+    feat = _feature_dim(variant)
+    wd = jax.random.normal(ks[2], (feat, NUM_CLASSES), jnp.float32) * 0.2
+    b1 = jnp.zeros((C1,), jnp.float32)
+    b2 = jnp.zeros((C2,), jnp.float32)
+    bd = jnp.zeros((NUM_CLASSES,), jnp.float32)
+    return (w1, b1, w2, b2, wd, bd)
+
+
+def _feature_dim(variant: str) -> int:
+    if variant == "stride":
+        return C2 * 3 * 3  # 15 ->(K3,S2) 7 ->(K3,S2) 3
+    if variant == "pool":
+        return C2 * 2 * 2  # 15 ->(K3,S1) 13 ->pool 6 ->(K3,S1) 4 ->pool 2
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def _forward_single(params, x, variant: str):
+    """x: (3, 15, 15) -> logits (NUM_CLASSES,)."""
+    w1, b1, w2, b2, wd, bd = params
+    if variant == "stride":
+        h = jax.nn.relu(conv_layer(x, w1, 2) + b1[:, None, None])
+        h = jax.nn.relu(conv_layer(h, w2, 2) + b2[:, None, None])
+    else:
+        h = jax.nn.relu(conv_layer(x, w1, 1) + b1[:, None, None])
+        h = avg_pool2(h)
+        h = jax.nn.relu(conv_layer(h, w2, 1) + b2[:, None, None])
+        h = avg_pool2(h)
+    return h.reshape(-1) @ wd + bd
+
+
+def model_logits(params, xb, variant: str):
+    """xb: (B, 3, 15, 15) -> (B, NUM_CLASSES)."""
+    return jax.vmap(lambda x: _forward_single(params, x, variant))(xb)
+
+
+def loss_fn(params, xb, yb, variant: str):
+    logits = model_logits(params, xb, variant)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, yb[:, None], axis=-1).mean()
+    return nll
+
+
+def train_step(params, xb, yb, variant: str, lr: float = 0.05):
+    """One SGD step. Returns (new_params..., loss). AOT entry point."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb, variant)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return new + (loss,)
+
+
+def accuracy(params, xb, yb, variant: str):
+    pred = jnp.argmax(model_logits(params, xb, variant), axis=-1)
+    return (pred == yb).mean()
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset (Table 4 substitution — see DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+def synthetic_batch(key, batch: int):
+    """Class-conditional oriented-gradient patterns + noise.
+
+    Class 0/1: horizontal/vertical ramps; class 2: centered blob;
+    class 3: checkerboard. Learnable by a 2-conv CNN in a few hundred
+    steps, which is all the Table 4 delta comparison needs.
+    """
+    kc, kn = jax.random.split(key)
+    y = jax.random.randint(kc, (batch,), 0, NUM_CLASSES)
+    r = jnp.arange(IMG, dtype=jnp.float32)
+    hh, ww = jnp.meshgrid(r, r, indexing="ij")
+    base = jnp.stack(
+        [
+            hh / IMG,
+            ww / IMG,
+            jnp.exp(-((hh - 7) ** 2 + (ww - 7) ** 2) / 18.0),
+            ((hh + ww) % 2).astype(jnp.float32),
+        ]
+    )  # (4, 15, 15)
+    pat = base[y]  # (B, 15, 15)
+    noise = 0.35 * jax.random.normal(kn, (batch, IN_CH, IMG, IMG))
+    xb = pat[:, None, :, :] + noise
+    return xb.astype(jnp.float32), y

@@ -1,0 +1,221 @@
+"""Kernel vs ref allclose — the core L1 correctness signal.
+
+Hypothesis sweeps geometry (H, K, S) and dtypes; every Pallas kernel must
+match the pure-lax oracle, and the zero-elimination MAC accounting must
+hold (the EcoFlow kernels issue ~S^2 fewer MACs than the padded dataflow).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.common import phase_subfilter_len, vmem_bytes_transpose
+from compile.kernels.direct_conv import direct_conv, direct_conv_mac_count
+from compile.kernels.ecoflow_dilated import (
+    ecoflow_filter_grad,
+    filter_grad_mac_count,
+    naive_filter_grad_mac_count,
+)
+from compile.kernels.ecoflow_transpose import (
+    ecoflow_transpose_conv,
+    naive_transpose_mac_count,
+    transpose_mac_count,
+)
+
+SETTINGS = hypothesis.settings(
+    max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+
+
+def geometry():
+    """(He, K, S) with He the error-map side; ifmap side derived exact-fit."""
+    return st.tuples(
+        st.integers(1, 9),   # He
+        st.integers(1, 7),   # K
+        st.integers(1, 4),   # S
+    )
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    # bf16 has ~8 mantissa bits; K^2-long accumulations in a different
+    # order than lax's conv easily differ by a few ULPs.
+    return dict(rtol=8e-2, atol=8e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+class TestKernelsVsRef:
+    @SETTINGS
+    @hypothesis.given(geom=geometry(), seed=st.integers(0, 2**31 - 1))
+    def test_direct(self, dtype, geom, seed):
+        he, k, s = geom
+        h = s * (he - 1) + k
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = _rand(k1, (h, h), dtype)
+        w = _rand(k2, (k, k), dtype)
+        got = direct_conv(x, w, s)
+        want = ref.direct_conv_ref(x, w, s)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    @SETTINGS
+    @hypothesis.given(geom=geometry(), seed=st.integers(0, 2**31 - 1))
+    def test_transpose(self, dtype, geom, seed):
+        he, k, s = geom
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        e = _rand(k1, (he, he), dtype)
+        w = _rand(k2, (k, k), dtype)
+        got = ecoflow_transpose_conv(e, w, s)
+        want = ref.transposed_conv_ref(e, w, s)
+        assert got.shape == (s * (he - 1) + k,) * 2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    @SETTINGS
+    @hypothesis.given(geom=geometry(), seed=st.integers(0, 2**31 - 1))
+    def test_filter_grad(self, dtype, geom, seed):
+        he, k, s = geom
+        h = s * (he - 1) + k
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = _rand(k1, (h, h), dtype)
+        e = _rand(k2, (he, he), dtype)
+        got = ecoflow_filter_grad(x, e, s)
+        want = ref.dilated_conv_ref(x, e, s)
+        assert got.shape == (k, k)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+
+class TestNaiveEquivalence:
+    """The naive padded implementations equal the lax oracles (they ARE the
+    same arithmetic, plus explicit zeros)."""
+
+    @SETTINGS
+    @hypothesis.given(geom=geometry(), seed=st.integers(0, 2**31 - 1))
+    def test_naive_transpose(self, geom, seed):
+        he, k, s = geom
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        e = jax.random.normal(k1, (he, he))
+        w = jax.random.normal(k2, (k, k))
+        np.testing.assert_allclose(
+            ref.naive_transposed_conv(e, w, s),
+            ref.transposed_conv_ref(e, w, s), rtol=1e-5, atol=1e-5)
+
+    @SETTINGS
+    @hypothesis.given(geom=geometry(), seed=st.integers(0, 2**31 - 1))
+    def test_naive_dilated(self, geom, seed):
+        he, k, s = geom
+        h = s * (he - 1) + k
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(k1, (h, h))
+        e = jax.random.normal(k2, (he, he))
+        np.testing.assert_allclose(
+            ref.naive_dilated_conv(x, e, s),
+            ref.dilated_conv_ref(x, e, s), rtol=1e-5, atol=1e-5)
+
+
+class TestZeroElimination:
+    """Paper §3/§4: MAC accounting for the zero-free dataflows."""
+
+    @SETTINGS
+    @hypothesis.given(geom=geometry())
+    def test_transpose_mac_reduction(self, geom):
+        he, k, s = geom
+        ours = transpose_mac_count(he, k, s)
+        naive = naive_transpose_mac_count(he, k, s)
+        assert ours <= naive
+        # inner-padding zeros eliminated: asymptotic ratio ~ S^2
+        if s > 1 and he >= 6 and k >= 3:
+            assert naive / ours > (s * s) * 0.5
+
+    @SETTINGS
+    @hypothesis.given(geom=geometry())
+    def test_filter_grad_mac_reduction(self, geom):
+        he, k, s = geom
+        ours = filter_grad_mac_count(he, k)
+        naive = naive_filter_grad_mac_count(he, k, s)
+        assert ours <= naive
+        if s > 1 and he >= 4:
+            # exactly S^2 asymptotically; >= half that for finite maps
+            assert naive / ours >= (s * s) * 0.5
+
+    def test_fig3_stride2_over_70_percent(self):
+        # Paper Fig. 3: >70% zero multiplications at stride 2.
+        f = ref.transpose_zero_mult_fraction(28, 3, 2)
+        assert f > 0.70
+
+    def test_fig4_layer_a_81_percent(self):
+        # Fig. 4 layer A: 3x3 err, 3x3 filter, S=1 -> 40 outer pads,
+        # 40/49 = 81% of the padded matrix is zero.
+        assert ref.transpose_inner_padding(3, 1) == 0
+        assert ref.transpose_outer_padding(3, 3, 1) == 40
+        assert abs(ref.transpose_zero_fraction(3, 3, 1) - 40 / 49) < 1e-9
+
+    def test_fig4_layer_b_92_percent(self):
+        # Fig. 4 layer B: 2x2 err, 3x3 filter, S=2 -> 5 inner + 40 outer
+        # pads, 45/49 = 92% of the padded matrix is zero.
+        assert ref.transpose_inner_padding(2, 2) == 5
+        assert ref.transpose_outer_padding(2, 3, 2) == 40
+        assert abs(ref.transpose_zero_fraction(2, 3, 2) - 45 / 49) < 1e-9
+
+    def test_direct_mac_count_matches_kernel_structure(self):
+        assert direct_conv_mac_count(15, 3, 2) == 7 * 7 * 9
+
+    def test_phase_subfilter_partition(self):
+        # The S phases partition the K filter taps exactly.
+        for k in range(1, 12):
+            for s in range(1, 6):
+                assert sum(phase_subfilter_len(k, s, p)
+                           for p in range(min(s, k))) == k
+
+    def test_vmem_estimate_positive_and_monotonic(self):
+        a = vmem_bytes_transpose(14, 14, 3, 2)
+        b = vmem_bytes_transpose(28, 28, 3, 2)
+        assert 0 < a < b
+
+
+class TestEdgeCases:
+    def test_one_by_one_everything(self):
+        e = jnp.ones((1, 1))
+        w = jnp.full((1, 1), 3.0)
+        assert float(ecoflow_transpose_conv(e, w, 1)[0, 0]) == 3.0
+        assert float(ecoflow_filter_grad(e, e, 1)[0, 0]) == 1.0
+        assert float(direct_conv(e, w, 1)[0, 0]) == 3.0
+
+    def test_stride_larger_than_filter(self):
+        # S > K: some output phases have no contributing taps (all-zero
+        # rows/cols of din) — the kernel must still produce them.
+        e = jax.random.normal(jax.random.PRNGKey(0), (3, 3))
+        w = jax.random.normal(jax.random.PRNGKey(1), (2, 2))
+        got = ecoflow_transpose_conv(e, w, 3)
+        want = ref.transposed_conv_ref(e, w, 3)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        # phase p=2 has zero taps -> rows 2, 5, ... are exactly zero
+        assert np.all(np.asarray(got)[2::3, :] == 0.0)
+
+    def test_zero_error_gives_zero_gradients(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (7, 7))
+        e = jnp.zeros((3, 3))
+        assert np.all(np.asarray(ecoflow_filter_grad(x, e, 2)) == 0.0)
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3))
+        assert np.all(np.asarray(ecoflow_transpose_conv(e, w, 2)) == 0.0)
+
+    def test_identity_filter_transpose_stride1(self):
+        # K=1, S=1: transposed conv is scalar multiplication.
+        e = jax.random.normal(jax.random.PRNGKey(0), (5, 5))
+        w = jnp.full((1, 1), 2.5)
+        np.testing.assert_allclose(
+            ecoflow_transpose_conv(e, w, 1), 2.5 * e, rtol=1e-6)

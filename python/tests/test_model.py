@@ -1,0 +1,108 @@
+"""L2 model tests: shapes, custom_vjp gradients vs lax autodiff, training
+dynamics for both Table-4 topologies, dataset properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from compile import model as M
+
+
+def _conv_ref_layer(x, w, stride):
+    return lax.conv_general_dilated(
+        x[None], w, (stride, stride), "VALID")[0]
+
+
+class TestConvLayer:
+    @pytest.mark.parametrize("stride,h", [(1, 9), (2, 15), (3, 9)])
+    def test_forward_matches_lax(self, stride, h):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, h, h))
+        w = jax.random.normal(jax.random.PRNGKey(1), (5, 3, 3, 3))
+        got = M.conv_layer(x, w, stride)
+        want = _conv_ref_layer(x, w, stride)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_gradients_match_lax_autodiff(self, stride):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 15, 15))
+        w = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 3, 3))
+
+        def f(x, w):
+            return (M.conv_layer(x, w, stride) ** 2).sum()
+
+        def g(x, w):
+            return (_conv_ref_layer(x, w, stride) ** 2).sum()
+
+        gx1, gw1 = jax.grad(f, (0, 1))(x, w)
+        gx2, gw2 = jax.grad(g, (0, 1))(x, w)
+        np.testing.assert_allclose(gx1, gx2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gw1, gw2, rtol=1e-4, atol=1e-4)
+
+    def test_avg_pool_shapes_and_values(self):
+        x = jnp.arange(2 * 5 * 5, dtype=jnp.float32).reshape(2, 5, 5)
+        p = M.avg_pool2(x)
+        assert p.shape == (2, 2, 2)
+        np.testing.assert_allclose(
+            p[0, 0, 0], x[0, :2, :2].mean(), rtol=1e-6)
+
+
+class TestTopologies:
+    @pytest.mark.parametrize("variant", ["stride", "pool"])
+    def test_logits_shape(self, variant):
+        params = M.init_params(variant)
+        xb, yb = M.synthetic_batch(jax.random.PRNGKey(0), 4)
+        logits = M.model_logits(params, xb, variant)
+        assert logits.shape == (4, M.NUM_CLASSES)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    @pytest.mark.parametrize("variant", ["stride", "pool"])
+    def test_loss_decreases(self, variant):
+        params = M.init_params(variant)
+        step = jax.jit(lambda p, x, y: M.train_step(p, x, y, variant))
+        key = jax.random.PRNGKey(7)
+        losses = []
+        for _ in range(25):
+            key, sk = jax.random.split(key)
+            xb, yb = M.synthetic_batch(sk, 16)
+            *params, loss = step(tuple(params), xb, yb)
+            losses.append(float(loss))
+        assert losses[-1] < 0.7 * losses[0]
+
+    @pytest.mark.parametrize("variant", ["stride", "pool"])
+    def test_accuracy_beats_chance_after_training(self, variant):
+        params = M.init_params(variant)
+        step = jax.jit(lambda p, x, y: M.train_step(p, x, y, variant))
+        key = jax.random.PRNGKey(3)
+        for _ in range(40):
+            key, sk = jax.random.split(key)
+            xb, yb = M.synthetic_batch(sk, 16)
+            *params, _ = step(tuple(params), xb, yb)
+        xt, yt = M.synthetic_batch(jax.random.PRNGKey(999), 64)
+        acc = float(M.accuracy(tuple(params), xt, yt, variant))
+        assert acc > 0.5  # chance is 0.25
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            M.init_params("maxpool")
+
+
+class TestDataset:
+    def test_deterministic_given_key(self):
+        a = M.synthetic_batch(jax.random.PRNGKey(5), 8)
+        b = M.synthetic_batch(jax.random.PRNGKey(5), 8)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+    def test_labels_in_range_and_varied(self):
+        _, y = M.synthetic_batch(jax.random.PRNGKey(0), 128)
+        y = np.asarray(y)
+        assert y.min() >= 0 and y.max() < M.NUM_CLASSES
+        assert len(np.unique(y)) == M.NUM_CLASSES
+
+    def test_shapes_and_dtype(self):
+        x, y = M.synthetic_batch(jax.random.PRNGKey(1), 16)
+        assert x.shape == (16, M.IN_CH, M.IMG, M.IMG)
+        assert x.dtype == jnp.float32
+        assert y.dtype == jnp.int32

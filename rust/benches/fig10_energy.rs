@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Fig. 10 (CNN gradient energy breakdown).
+use ecoflow::report::figures;
+use ecoflow::util::bench::bench_case;
+
+fn main() {
+    let t = figures::fig10_energy(8);
+    print!("{}", t.render());
+    bench_case("fig10_energy/full_sweep", 1500, || {
+        std::hint::black_box(figures::fig10_energy(8));
+    });
+}

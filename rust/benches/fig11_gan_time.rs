@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Fig. 11 (GAN layer execution time, RS-normalized).
+use ecoflow::report::figures;
+use ecoflow::util::bench::bench_case;
+
+fn main() {
+    let t = figures::fig11_gan_time(8);
+    print!("{}", t.render());
+    bench_case("fig11_gan_time/full_sweep", 1500, || {
+        std::hint::black_box(figures::fig11_gan_time(8));
+    });
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Fig. 3 (padding-induced zero multiplications).
+use ecoflow::report::figures;
+use ecoflow::util::bench::bench_case;
+
+fn main() {
+    print!("{}", figures::fig3_zero_mults().render());
+    bench_case("fig3_zero_mults/generate", 200, || {
+        std::hint::black_box(figures::fig3_zero_mults());
+    });
+}

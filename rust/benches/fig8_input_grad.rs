@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Fig. 8 (input-gradient speedups, TPU-normalized).
+use ecoflow::report::figures;
+use ecoflow::util::bench::bench_case;
+
+fn main() {
+    let t = figures::fig8_input_grad(8);
+    print!("{}", t.render());
+    bench_case("fig8_input_grad/full_sweep", 1500, || {
+        std::hint::black_box(figures::fig8_input_grad(8));
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Fig. 9 (filter-gradient speedups, TPU-normalized).
+use ecoflow::report::figures;
+use ecoflow::util::bench::bench_case;
+
+fn main() {
+    let t = figures::fig9_filter_grad(8);
+    print!("{}", t.render());
+    bench_case("fig9_filter_grad/full_sweep", 1500, || {
+        std::hint::black_box(figures::fig9_filter_grad(8));
+    });
+}

@@ -1,0 +1,59 @@
+//! Perf bench: the simulator hot paths that dominate the bench suite.
+//!
+//! Reported metric: PE-slot updates per second of the cycle-accurate
+//! array loop (EXPERIMENTS.md §Perf target: >= 50M/s release) and the
+//! per-op cost of the three dataflow passes + the systolic array.
+
+use ecoflow::compiler::{ecoflow as ef, rs, tpu};
+use ecoflow::config::ArchConfig;
+use ecoflow::sim::systolic::systolic_matmul;
+use ecoflow::tensor::Mat;
+use ecoflow::util::bench::BenchSet;
+use ecoflow::util::prng::Prng;
+
+fn main() {
+    let arch = ArchConfig::ecoflow();
+    let arch_rs = ArchConfig::eyeriss();
+    let mut rng = Prng::new(99);
+    let e = Mat::random(12, 12, &mut rng);
+    let w = Mat::random(3, 3, &mut rng);
+    let x = Mat::random(25, 25, &mut rng);
+    let a = Mat::random(128, 64, &mut rng);
+    let b = Mat::random(64, 128, &mut rng);
+
+    let mut set = BenchSet::new();
+    let m = set.run("ecoflow_transpose_pass/12x12_k3_s2", 800, || {
+        std::hint::black_box(ef::transpose_pass(&arch, &e, &w, 2).unwrap());
+    });
+    // PE-slot updates: cycles x PE-set size, per wall second
+    let (_, st) = ef::transpose_pass(&arch, &e, &w, 2).unwrap();
+    let slots = st.cycles as f64 * 144.0;
+    println!(
+        "  -> {:.1}M PE-slot updates/s",
+        slots / m.median_ns() * 1e3
+    );
+
+    set.run("ecoflow_filter_grad_pass/he12_k3_s2", 800, || {
+        std::hint::black_box(ef::filter_grad_pass(&arch, &x, &e, 2).unwrap());
+    });
+    set.run("rs_direct_pass/25x25_k3_s2", 800, || {
+        std::hint::black_box(rs::direct_pass(&arch_rs, &x, &w, 2).unwrap());
+    });
+    set.run("rs_transpose_padded/12x12_k3_s2", 800, || {
+        std::hint::black_box(rs::transpose_via_padding(&arch_rs, &e, &w, 2).unwrap());
+    });
+    set.run("tpu_direct_pass/25x25_k3_s2", 800, || {
+        std::hint::black_box(tpu::direct_pass(&arch, &x, &w, 2));
+    });
+    set.run("systolic_matmul/128x64x128", 800, || {
+        std::hint::black_box(systolic_matmul(&arch, &a, &b));
+    });
+    set.run("golden_conv_oracle/25x25_k3_s2", 400, || {
+        std::hint::black_box(ecoflow::tensor::conv::direct_conv(&x, &w, 2));
+    });
+
+    if let Some(s) = set.speedup("golden_conv_oracle/25x25_k3_s2", "rs_direct_pass/25x25_k3_s2")
+    {
+        println!("  sim-vs-oracle overhead: cycle-accurate RS pass is {s:.0}x the plain conv");
+    }
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Table 1 (NoC widths + §4.4 multicast sizing).
+use ecoflow::report::tables;
+use ecoflow::util::bench::bench_case;
+
+fn main() {
+    print!("{}", tables::table1_noc().render());
+    bench_case("table1_noc/generate", 100, || {
+        std::hint::black_box(tables::table1_noc());
+    });
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Table 2 (SASiML vs real Eyeriss chip).
+use ecoflow::report::tables;
+use ecoflow::util::bench::bench_case;
+
+fn main() {
+    print!("{}", tables::table2_validation().render());
+    print!("{}", tables::table5_layers().render());
+    print!("{}", tables::table7_layers().render());
+    bench_case("table2_validation/generate", 1000, || {
+        std::hint::black_box(tables::table2_validation());
+    });
+}

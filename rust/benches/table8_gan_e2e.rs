@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Table 8 (end-to-end GAN training vs TPU).
+use ecoflow::report::tables;
+use ecoflow::util::bench::bench_case;
+
+fn main() {
+    let t = tables::table8_gan_e2e(8);
+    print!("{}", t.render());
+    bench_case("table8_gan_e2e/full_estimate", 2000, || {
+        std::hint::black_box(tables::table8_gan_e2e(8));
+    });
+}

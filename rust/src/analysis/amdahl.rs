@@ -1,0 +1,109 @@
+//! End-to-end speedup / energy estimation via Amdahl's law (paper §6.1).
+//!
+//! "To estimate the execution time of the end-to-end CNN training
+//! algorithm ... we first profile the evaluated models to get the average
+//! breakdown of the execution time per layer, and we apply Amdahl's law."
+//!
+//! Inputs: per-(layer, pass) time shares under the baseline dataflow and
+//! per-(layer, pass) speedups of the candidate dataflow over the baseline.
+
+/// One accelerable fragment: share of baseline time and achieved speedup.
+#[derive(Clone, Copy, Debug)]
+pub struct Fragment {
+    pub share: f64,
+    pub speedup: f64,
+}
+
+/// Amdahl composition: total speedup given fragments and a serial share.
+/// `fragments` shares + `serial_share` must sum to ≤ 1 (remainder is
+/// treated as serial too).
+pub fn total_speedup(fragments: &[Fragment], serial_share: f64) -> f64 {
+    let frag_share: f64 = fragments.iter().map(|f| f.share).sum();
+    assert!(
+        frag_share + serial_share <= 1.0 + 1e-9,
+        "shares sum to {} > 1",
+        frag_share + serial_share
+    );
+    let serial = (1.0 - frag_share).max(serial_share);
+    let accelerated: f64 = fragments.iter().map(|f| f.share / f.speedup).sum();
+    1.0 / (serial + accelerated)
+}
+
+/// Energy-savings composition: total old/new energy ratio given fragments
+/// whose `speedup` field carries the per-fragment energy-savings factor.
+/// Identical arithmetic to [`total_speedup`] — both are weighted harmonic
+/// compositions — but kept separate for call-site clarity.
+pub fn total_energy_savings(fragments: &[Fragment], unchanged_share: f64) -> f64 {
+    total_speedup(fragments, unchanged_share)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_acceleration_is_identity() {
+        assert!((total_speedup(&[], 1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infinite_speedup_bounded_by_serial_share() {
+        let f = [Fragment {
+            share: 0.8,
+            speedup: 1e12,
+        }];
+        let s = total_speedup(&f, 0.2);
+        assert!((s - 5.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn textbook_amdahl() {
+        // 50% at 2x -> 1 / (0.5 + 0.25) = 1.333x
+        let f = [Fragment {
+            share: 0.5,
+            speedup: 2.0,
+        }];
+        let s = total_speedup(&f, 0.5);
+        assert!((s - 4.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multiple_fragments_compose() {
+        let f = [
+            Fragment {
+                share: 0.3,
+                speedup: 3.0,
+            },
+            Fragment {
+                share: 0.3,
+                speedup: 1.5,
+            },
+        ];
+        let s = total_speedup(&f, 0.4);
+        let expect = 1.0 / (0.4 + 0.1 + 0.2);
+        assert!((s - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "shares sum")]
+    fn overfull_shares_panic() {
+        total_speedup(
+            &[Fragment {
+                share: 0.9,
+                speedup: 2.0,
+            }],
+            0.2,
+        );
+    }
+
+    #[test]
+    fn slowdown_fragments_allowed() {
+        // a dataflow can also be slower on some fragment (speedup < 1)
+        let f = [Fragment {
+            share: 0.5,
+            speedup: 0.5,
+        }];
+        let s = total_speedup(&f, 0.5);
+        assert!(s < 1.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Analytic models from the paper:
+//!
+//! * [`zeros`]  — padding / zero-multiplication formulas (§3.1, Figs. 3–4)
+//! * [`noc`]    — multicast-network ID sizing and area overhead (§4.4,
+//!   Table 1)
+//! * [`amdahl`] — end-to-end speedup/energy estimation from per-layer
+//!   results (§6.1, Tables 6/8)
+
+pub mod amdahl;
+pub mod noc;
+pub mod zeros;

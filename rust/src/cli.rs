@@ -1,0 +1,214 @@
+//! Hand-rolled CLI (clap is unavailable in this offline image).
+//!
+//! Subcommands mirror the report generators plus runtime operations:
+//!
+//! ```text
+//! ecoflow fig3|fig8|fig9|fig10|fig11|fig12       regenerate a figure
+//! ecoflow table1|table2|table5|table6|table7|table8
+//! ecoflow validate [--artifacts DIR]             golden JAX-vs-sim check
+//! ecoflow train [--steps N] [--variant stride|pool]
+//! ecoflow sweep [--csv]                          full layer sweep
+//! ecoflow version
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::compiler::Dataflow;
+use crate::coordinator::scheduler::{default_threads, job_matrix, run_sweep};
+use crate::energy::{DramModel, EnergyParams};
+use crate::model::zoo;
+use crate::report::{figures, tables};
+use crate::runtime::trainer::{Trainer, Variant};
+use crate::runtime::{golden, Engine};
+use crate::util::prng::Prng;
+
+/// Parsed command line: subcommand + `--key value` / `--flag` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: HashMap<String, String>,
+}
+
+/// Parse `args` (excluding argv[0]).
+pub fn parse_args(args: &[String]) -> Result<Args> {
+    let mut out = Args::default();
+    let mut it = args.iter().peekable();
+    out.command = it
+        .next()
+        .cloned()
+        .ok_or_else(|| anyhow!("missing subcommand\n{}", usage()))?;
+    while let Some(a) = it.next() {
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("unexpected argument {a}"))?;
+        let value = match it.peek() {
+            Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+            _ => "true".to_string(),
+        };
+        out.options.insert(key.to_string(), value);
+    }
+    Ok(out)
+}
+
+/// CLI usage text.
+pub fn usage() -> &'static str {
+    "usage: ecoflow <command> [options]\n\
+     commands:\n\
+     \u{20}  fig3|fig8|fig9|fig10|fig11|fig12   regenerate a paper figure\n\
+     \u{20}  table1|table2|table5|table6|table7|table8\n\
+     \u{20}  validate [--artifacts DIR]         golden JAX-vs-simulator check\n\
+     \u{20}  train [--steps N] [--variant stride|pool] [--artifacts DIR]\n\
+     \u{20}  sweep [--csv]                      full layer x dataflow sweep\n\
+     \u{20}  version\n\
+     options: --threads N, --csv"
+}
+
+impl Args {
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.options
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.options.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn emit(t: crate::util::table::Table, csv: bool) {
+    if csv {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+}
+
+/// Run the CLI; returns process exit code.
+pub fn run(args: &[String]) -> Result<()> {
+    let parsed = parse_args(args)?;
+    let threads = parsed.usize_or("threads", default_threads());
+    let csv = parsed.flag("csv");
+    match parsed.command.as_str() {
+        "version" => println!("ecoflow {}", crate::version()),
+        "fig3" => emit(figures::fig3_zero_mults(), csv),
+        "fig8" => emit(figures::fig8_input_grad(threads), csv),
+        "fig9" => emit(figures::fig9_filter_grad(threads), csv),
+        "fig10" => emit(figures::fig10_energy(threads), csv),
+        "fig11" => emit(figures::fig11_gan_time(threads), csv),
+        "fig12" => emit(figures::fig12_gan_energy(threads), csv),
+        "table1" => emit(tables::table1_noc(), csv),
+        "table2" => emit(tables::table2_validation(), csv),
+        "table5" => emit(tables::table5_layers(), csv),
+        "table6" => emit(tables::table6_cnn_e2e(threads), csv),
+        "table7" => emit(tables::table7_layers(), csv),
+        "table8" => emit(tables::table8_gan_e2e(threads), csv),
+        "validate" => {
+            let dir = parsed
+                .options
+                .get("artifacts")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(crate::runtime::pjrt::artifacts_dir);
+            let mut engine = Engine::new(&dir)?;
+            println!("platform: {}", engine.platform());
+            let arch = crate::config::ArchConfig::ecoflow();
+            for r in golden::validate_all(&mut engine, &arch)? {
+                println!(
+                    "golden {:<8} direct={:.2e} tconv={:.2e} fgrad={:.2e}  OK",
+                    r.tag, r.direct_max_err, r.tconv_max_err, r.fgrad_max_err
+                );
+            }
+            println!("all golden configs validated (JAX == oracle == SASiML)");
+        }
+        "train" => {
+            let dir = parsed
+                .options
+                .get("artifacts")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(crate::runtime::pjrt::artifacts_dir);
+            let steps = parsed.usize_or("steps", 100);
+            let variant = match parsed.options.get("variant").map(String::as_str) {
+                Some("pool") => Variant::Pool,
+                _ => Variant::Stride,
+            };
+            let mut engine = Engine::new(&dir)?;
+            let mut trainer = Trainer::new(variant, 0xEC0);
+            let mut rng = Prng::new(42);
+            for step in 0..steps {
+                let loss = trainer.step(&mut engine, &mut rng)?;
+                if step % 10 == 0 || step + 1 == steps {
+                    println!("step {step:>4}  loss {loss:.4}");
+                }
+            }
+            let acc = trainer.eval_accuracy(&mut engine, &mut rng)?;
+            println!("final accuracy: {:.1}%", 100.0 * acc);
+        }
+        "sweep" => {
+            let params = EnergyParams::default();
+            let dram = DramModel::default();
+            let jobs = job_matrix(&zoo::evaluation_layers(), &Dataflow::ALL, 4);
+            let results = run_sweep(&params, &dram, jobs, threads);
+            let mut t = crate::util::table::Table::new(
+                "Full layer sweep",
+                &["layer", "pass", "flow", "ms", "uJ", "util"],
+            );
+            for r in results {
+                let c = r.cost.map_err(|e| anyhow!(e))?;
+                t.row(vec![
+                    r.job.layer.full_name(),
+                    r.job.pass.name().to_string(),
+                    r.job.flow.name().to_string(),
+                    format!("{:.3}", c.millis()),
+                    format!("{:.1}", c.energy.total_uj()),
+                    format!("{:.2}", c.utilization),
+                ]);
+            }
+            emit(t, csv);
+        }
+        other => return Err(anyhow!("unknown command {other}\n{}", usage())),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_command_and_options() {
+        let a = parse_args(&[
+            "fig8".into(),
+            "--threads".into(),
+            "4".into(),
+            "--csv".into(),
+        ])
+        .unwrap();
+        assert_eq!(a.command, "fig8");
+        assert_eq!(a.usize_or("threads", 0), 4);
+        assert!(a.flag("csv"));
+    }
+
+    #[test]
+    fn missing_command_errors() {
+        assert!(parse_args(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&["nonsense".into()]).is_err());
+    }
+
+    #[test]
+    fn version_runs() {
+        run(&["version".into()]).unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse_args(&["sweep".into()]).unwrap();
+        assert_eq!(a.usize_or("threads", 7), 7);
+        assert!(!a.flag("csv"));
+    }
+}

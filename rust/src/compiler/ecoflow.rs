@@ -1,0 +1,486 @@
+//! EcoFlow dataflows (paper §4): zero-free transposed and dilated
+//! convolutions for the Eyeriss-style PE array.
+//!
+//! # Transposed convolution (§4.1)
+//!
+//! The compiler follows the paper's five steps, in the algebraic form:
+//! the transposed conv `din[y,x] = Σ e[i,j]·w[y−iS, x−jS]` is exactly the
+//! symbolic outer product of the error vector and the filter vector
+//! (steps 1–2); each product `e[i,j]·w[u,v]` belongs to output
+//! `(iS+u, jS+v)` (the *label*, step 3); error element `e[i,j]` is owned
+//! by PE `(i,j)` (step 4); and the **circular shift** (step 5) re-assigns
+//! the product of `(u,v)` with `d = ⌊v/S⌋` to PE `(i, (j+d) mod We)`, so
+//! that all products of one output land in a single PE column and
+//! accumulate over vertically-adjacent PEs only:
+//!
+//! * PE `(p,q)` at step `(u,v)` multiplies the broadcast weight `w[u,v]`
+//!   by its held error element `e[p, (q−d) mod We]`;
+//! * the product's output is `(pS+u, j'S+v)` with `j' = (q−d) mod We`,
+//!   whose accumulation column is `⌊x/S⌋ mod We = q` for every
+//!   contributor — vertical accumulation only, zero padding nowhere.
+//!
+//! Register pressure is bounded by chunking the filter's `u` range
+//! (grouping, §4.1.1): a label's products all share one `u`, so labels
+//! retire at chunk boundaries and PassUp/RecvAdd/WriteOut chains are
+//! emitted per chunk in canonical `(u, x)` order (which both ends of
+//! every vertical link observe consistently — see the FIFO-consistency
+//! test).
+//!
+//! # Dilated convolution (§4.2)
+//!
+//! `dw[u,v] = Σ e[i,j]·x[iS+u, jS+v]`: one PE per filter-gradient
+//! element; the error is broadcast (one element per step, consumed by all
+//! PEs), the ifmap is multicast in step-row order, partial sums stay in
+//! the PE (§4.2.2). No zero is ever generated.
+
+use crate::config::ArchConfig;
+use crate::sim::microprogram::{Microprogram, Operands, PeInstr, SrcRef, WSrc, XSrc};
+use crate::sim::stats::PassStats;
+use crate::sim::{ArraySim, SimError};
+use crate::tensor::Mat;
+
+/// Wrap-around index `(a - d) mod m`.
+#[inline]
+fn wrap_sub(a: usize, d: usize, m: usize) -> usize {
+    ((a as isize - d as isize).rem_euclid(m as isize)) as usize
+}
+
+/// Exact number of distinct output labels one filter row `u` produces in
+/// a single PE: `|{ ((q−⌊v/S⌋) mod We)·S + v : v ∈ [0,K) }|` — identical
+/// for every column `q` (the wrap pattern only shifts).
+fn labels_per_u(k: usize, stride: usize, we: usize) -> usize {
+    let mut xs: Vec<usize> = (0..k)
+        .map(|v| wrap_sub(0, v / stride, we) * stride + v)
+        .collect();
+    xs.sort_unstable();
+    xs.dedup();
+    xs.len().max(1)
+}
+
+/// Chunk size for the filter-row (`u`) grouping: labels per chunk must
+/// fit the psum register file (the paper's grouping, §4.1.1).
+fn u_chunk(k: usize, stride: usize, we: usize, rf_psum: usize) -> usize {
+    (rf_psum / labels_per_u(k, stride, we)).clamp(1, k)
+}
+
+/// Compile the EcoFlow transposed-convolution pass for an `he x we` error
+/// tile and a `k x k` filter at stride `s`. Operand A is the error tile,
+/// operand B the (un-rotated) forward filter.
+pub fn transpose_program(
+    he: usize,
+    we: usize,
+    k: usize,
+    s: usize,
+    rf_psum: usize,
+) -> Microprogram {
+    assert!(he >= 1 && we >= 1 && k >= 1 && s >= 1);
+    let hin = s * (he - 1) + k;
+    let win = s * (we - 1) + k;
+    let mut mp = Microprogram::new(he, we, hin, win, "ecoflow-transpose");
+    // stride > K leaves structurally-zero output rows/cols no PE computes
+    mp.zero_unwritten = s > k;
+    let n = mp.num_pes();
+    mp.uses_w = vec![true; n];
+
+    let d_phases = k.div_ceil(s);
+    let cu = u_chunk(k, s, we, rf_psum);
+
+    // Each PE holds its D shifted error elements in the ifmap spad
+    // (§4.1.2 multicast groups: e[p, (q−d) mod We] for d < D); the GIN
+    // multicasts each error element once — unique footprint He·We.
+    for p in 0..he {
+        for q in 0..we {
+            let pe = p * we + q;
+            mp.x_preload[pe] = (0..d_phases)
+                .map(|d| SrcRef::A((p * we + wrap_sub(q, d, we)) as u32))
+                .collect();
+        }
+    }
+    mp.x_preload_unique = Some(he * we);
+
+    // Per-PE scratch: label -> (reg, last_product_weight_step) per chunk.
+    // Emission loops chunks; inside, global weight order is (v asc, u asc).
+    let mut chunk_start = 0usize;
+    while chunk_start < k {
+        let chunk_end = (chunk_start + cu).min(k);
+        // ---- weight broadcast stream for this chunk -------------------
+        for v in 0..k {
+            for u in chunk_start..chunk_end {
+                mp.w_stream.push(SrcRef::B((u * k + v) as u32));
+            }
+        }
+        // ---- per-PE instructions for this chunk -----------------------
+        for p in 0..he {
+            for q in 0..we {
+                let pe = mp.pe_id(p, q);
+                // label -> (reg, macs emitted so far); labels are (y, x)
+                let mut labels: Vec<((usize, usize), u8)> = Vec::new();
+                let mut instrs: Vec<PeInstr> = Vec::new();
+                for v in 0..k {
+                    let d = v / s;
+                    for u in chunk_start..chunk_end {
+                        let jp = wrap_sub(q, d, we);
+                        let y = p * s + u;
+                        let x = jp * s + v;
+                        let label = (y, x);
+                        let reg = match labels.iter().position(|(l, _)| *l == label)
+                        {
+                            Some(i) => labels[i].1,
+                            None => {
+                                let r = labels.len() as u8;
+                                labels.push((label, r));
+                                r
+                            }
+                        };
+                        // the phase-d error element sits in ifmap reg d
+                        instrs.push(PeInstr::Mac {
+                            acc: reg,
+                            w: WSrc::Pop,
+                            x: XSrc::Reg(d as u16),
+                        });
+                    }
+                }
+                // ---- chain ops at chunk end, canonical (y, x) order ----
+                let mut ordered = labels.clone();
+                ordered.sort_by_key(|((y, x), _)| (*y, *x));
+                for ((y, x), reg) in ordered {
+                    // contributing PE rows for output row y
+                    let p_hi = (y / s).min(he - 1);
+                    let p_lo = (y + 1).saturating_sub(k).div_ceil(s);
+                    debug_assert!((p_lo..=p_hi).contains(&p));
+                    let is_bottom = p == p_hi;
+                    let is_top = p == p_lo;
+                    if !is_bottom {
+                        instrs.push(PeInstr::RecvAdd { acc: reg });
+                    }
+                    if is_top {
+                        instrs.push(PeInstr::WriteOut {
+                            acc: reg,
+                            out_idx: (y * win + x) as u32,
+                        });
+                    } else {
+                        instrs.push(PeInstr::PassUp { acc: reg });
+                    }
+                }
+                mp.programs[pe].extend(instrs);
+            }
+        }
+        chunk_start = chunk_end;
+    }
+    mp
+}
+
+/// Run the EcoFlow transposed conv over a full error map, tiling it into
+/// array-sized blocks (the paper's *grouping*, realized as PE-set tiles).
+/// Tile outputs overlap by `k - s` and are accumulated in the global
+/// buffer; the extra read-modify-write traffic is charged to the stats.
+pub fn transpose_pass(
+    arch: &ArchConfig,
+    err: &Mat,
+    w: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
+    let k = w.rows;
+    let (he, we) = (err.rows, err.cols);
+    let hin = s * (he - 1) + k;
+    let win = s * (we - 1) + k;
+    let mut out = Mat::zeros(hin, win);
+    let mut written = Mat::zeros(hin, win); // overlap tracking
+    let mut stats = PassStats::default();
+    let (tr, tc) = (arch.array_rows, arch.array_cols);
+    let mut p0 = 0;
+    while p0 < he {
+        let th = tr.min(he - p0);
+        let mut q0 = 0;
+        while q0 < we {
+            let tw = tc.min(we - q0);
+            let tile = Mat::from_fn(th, tw, |r, c| err.at(p0 + r, q0 + c));
+            let mp = transpose_program(th, tw, k, s, arch.rf_psum);
+            let ops = Operands {
+                a: tile,
+                b: w.clone(),
+            };
+            let (local, st) = ArraySim::new(arch, &mp).run(&ops)?;
+            stats.accumulate(&st);
+            for r in 0..local.rows {
+                for c in 0..local.cols {
+                    let (gy, gx) = (p0 * s + r, q0 * s + c);
+                    if written.at(gy, gx) != 0.0 {
+                        // halo accumulation: read-modify-write in the GB
+                        stats.gbuf_reads += 1;
+                        stats.gbuf_writes += 1;
+                    }
+                    *out.at_mut(gy, gx) += local.at(r, c);
+                    *written.at_mut(gy, gx) = 1.0;
+                }
+            }
+            q0 += tw;
+        }
+        p0 += th;
+    }
+    Ok((out, stats))
+}
+
+/// Compile the EcoFlow dilated-convolution (filter-gradient) pass:
+/// `dw[u,v] = Σ_{i,j} e[i,j] · x[iS+u, jS+v]` with a `k x k` PE set.
+/// Operand A is the ifmap, operand B the error matrix.
+pub fn filter_grad_program(
+    hx: usize,
+    wx: usize,
+    he: usize,
+    we: usize,
+    s: usize,
+) -> Microprogram {
+    let k = hx - s * (he - 1);
+    let kw = wx - s * (we - 1);
+    assert_eq!(k, kw, "non-square filter gradient implied");
+    assert!(k >= 1);
+    let mut mp = Microprogram::new(k, k, k, k, "ecoflow-dilated");
+    let n = mp.num_pes();
+    mp.uses_w = vec![true; n];
+
+    // error broadcast: one element per step, all PEs consume it (§4.2.2)
+    for i in 0..he {
+        for j in 0..we {
+            mp.w_stream.push(SrcRef::B((i * we + j) as u32));
+        }
+    }
+    // ifmap multicast: each element x[a,b] is delivered ONCE, row-major,
+    // to every PE that will ever use it: PE (u,v) with a = iS+u, b = jS+v
+    // for valid (i,j). Per-PE arrival order is (a asc, b asc) = exactly
+    // its pop order (step-row i asc, step j asc), so a single multicast
+    // transaction per element suffices — the unique-footprint property
+    // the paper's multicast groups provide (§4.2.2, Fig. 7).
+    for a in 0..hx {
+        for b in 0..wx {
+            let mut members = Vec::new();
+            for u in 0..k {
+                if a < u || (a - u) % s != 0 || (a - u) / s >= he {
+                    continue;
+                }
+                for v in 0..k {
+                    if b < v || (b - v) % s != 0 || (b - v) / s >= we {
+                        continue;
+                    }
+                    members.push(mp.pe_id(u, v) as u16);
+                }
+            }
+            if !members.is_empty() {
+                let g = mp.groups.len() as u16;
+                mp.groups.push(members);
+                mp.x_stream.push((SrcRef::A((a * wx + b) as u32), g));
+            }
+        }
+    }
+    // per-PE FSM: one MAC per error element, then a single WriteOut
+    for u in 0..k {
+        for v in 0..k {
+            let pe = mp.pe_id(u, v);
+            let mut prog = Vec::with_capacity(he * we + 1);
+            for _ in 0..he * we {
+                prog.push(PeInstr::Mac {
+                    acc: 0,
+                    w: WSrc::Pop,
+                    x: XSrc::Pop,
+                });
+            }
+            prog.push(PeInstr::WriteOut {
+                acc: 0,
+                out_idx: (u * k + v) as u32,
+            });
+            mp.programs[pe] = prog;
+        }
+    }
+    mp
+}
+
+/// Run the EcoFlow filter-gradient pass. The PE set is `k x k`; error maps
+/// of any size stream through it (queue backpressure throttles the buses),
+/// so no tiling is required for functionality. `assignment expansion`
+/// (§4.2.2) — replicating the PE set over error chunks to fill the array —
+/// is a layer-level parallelism factor handled by the tiler.
+pub fn filter_grad_pass(
+    arch: &ArchConfig,
+    x: &Mat,
+    err: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
+    let mp = filter_grad_program(x.rows, x.cols, err.rows, err.cols, s);
+    let ops = Operands {
+        a: x.clone(),
+        b: err.clone(),
+    };
+    ArraySim::new(arch, &mp).run(&ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv;
+    use crate::util::prng::{for_each_case, Prng};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::ecoflow()
+    }
+
+    #[test]
+    fn transpose_matches_oracle_small() {
+        // the paper's running example: 2x2 error, 3x3 filter, stride 2
+        let arch = arch();
+        let mut rng = Prng::new(5);
+        let e = Mat::random(2, 2, &mut rng);
+        let w = Mat::random(3, 3, &mut rng);
+        let (got, stats) = transpose_pass(&arch, &e, &w, 2).unwrap();
+        let want = conv::transposed_conv(&e, &w, 2);
+        assert_eq!((got.rows, got.cols), (5, 5)); // paper: 5x5 input grads
+        got.assert_close(&want, 1e-4);
+        // zero-free: exactly He*We*K^2 multiplications, none gated
+        assert_eq!(stats.macs + stats.gated_macs, (2 * 2 * 9) as u64);
+    }
+
+    #[test]
+    fn transpose_matches_oracle_sweep() {
+        let arch = arch();
+        for_each_case(60, 0xEC0, |rng| {
+            let he = rng.range(1, 7);
+            let we = rng.range(1, 7);
+            let k = rng.range(1, 6);
+            let s = rng.range(1, 4);
+            let e = Mat::random(he, we, rng);
+            let w = Mat::random(k, k, rng);
+            let (got, _) = transpose_pass(&arch, &e, &w, s).unwrap();
+            let want = conv::transposed_conv(&e, &w, s);
+            got.assert_close(&want, 1e-3);
+        });
+    }
+
+    #[test]
+    fn transpose_wraparound_cases() {
+        // We smaller than the number of phases forces heavy wrap-around
+        // in the circular shift.
+        let arch = arch();
+        for (he, we, k, s) in [(1, 1, 5, 1), (2, 1, 4, 2), (1, 2, 5, 2), (3, 2, 7, 3)] {
+            let mut rng = Prng::new((he * 7 + we * 3 + k + s) as u64);
+            let e = Mat::random(he, we, &mut rng);
+            let w = Mat::random(k, k, &mut rng);
+            let (got, _) = transpose_pass(&arch, &e, &w, s).unwrap();
+            got.assert_close(&conv::transposed_conv(&e, &w, s), 1e-3);
+        }
+    }
+
+    #[test]
+    fn transpose_large_filter_chunking() {
+        // K=11, S=4 (AlexNet CONV1 backward): register chunking engages.
+        let arch = arch();
+        let mut rng = Prng::new(11);
+        let e = Mat::random(4, 4, &mut rng);
+        let w = Mat::random(11, 11, &mut rng);
+        let (got, _) = transpose_pass(&arch, &e, &w, 4).unwrap();
+        got.assert_close(&conv::transposed_conv(&e, &w, 4), 1e-3);
+    }
+
+    #[test]
+    fn transpose_stride_larger_than_filter() {
+        let arch = arch();
+        let mut rng = Prng::new(13);
+        let e = Mat::random(3, 3, &mut rng);
+        let w = Mat::random(2, 2, &mut rng);
+        let (got, _) = transpose_pass(&arch, &e, &w, 3).unwrap();
+        got.assert_close(&conv::transposed_conv(&e, &w, 3), 1e-3);
+    }
+
+    #[test]
+    fn transpose_tiled_larger_than_array() {
+        // error map larger than the 13x15 array: grouping tiles engage
+        let arch = arch();
+        let mut rng = Prng::new(17);
+        let e = Mat::random(20, 23, &mut rng);
+        let w = Mat::random(3, 3, &mut rng);
+        let (got, _) = transpose_pass(&arch, &e, &w, 2).unwrap();
+        got.assert_close(&conv::transposed_conv(&e, &w, 2), 1e-3);
+    }
+
+    #[test]
+    fn transpose_has_no_zero_macs_for_nonzero_inputs() {
+        // the EcoFlow property: with dense inputs, not a single gated MAC
+        let arch = arch();
+        let mut rng = Prng::new(23);
+        let e = Mat::from_fn(5, 4, |_, _| 1.0 + rng.f32());
+        let w = Mat::from_fn(3, 3, |_, _| 1.0 + rng.f32());
+        let (_, stats) = transpose_pass(&arch, &e, &w, 2).unwrap();
+        assert_eq!(stats.gated_macs, 0);
+        assert_eq!(stats.macs, (5 * 4 * 9) as u64);
+    }
+
+    #[test]
+    fn transpose_register_budget_respected() {
+        for (k, s) in [(3, 2), (5, 1), (5, 4), (11, 4), (11, 8), (7, 3)] {
+            let mp = transpose_program(3, 3, k, s, 24);
+            assert!(
+                mp.acc_registers_used() <= 24,
+                "k={k} s={s}: {}",
+                mp.acc_registers_used()
+            );
+            assert!(mp.validate(24).is_empty(), "k={k} s={s}");
+        }
+    }
+
+    #[test]
+    fn filter_grad_matches_oracle_sweep() {
+        let arch = arch();
+        for_each_case(60, 0xEC1, |rng| {
+            let he = rng.range(1, 6);
+            let we = rng.range(1, 6);
+            let k = rng.range(1, 6);
+            let s = rng.range(1, 4);
+            let (hx, wx) = (s * (he - 1) + k, s * (we - 1) + k);
+            let x = Mat::random(hx, wx, rng);
+            let e = Mat::random(he, we, rng);
+            let (got, _) = filter_grad_pass(&arch, &x, &e, s).unwrap();
+            let want = conv::dilated_conv(&x, &e, s);
+            assert_eq!((got.rows, got.cols), (k, k));
+            got.assert_close(&want, 1e-3);
+        });
+    }
+
+    #[test]
+    fn filter_grad_zero_free() {
+        let arch = arch();
+        let mut rng = Prng::new(29);
+        let he = 4;
+        let (k, s) = (3, 2);
+        let hx = s * (he - 1) + k;
+        let x = Mat::from_fn(hx, hx, |_, _| 1.0 + rng.f32());
+        let e = Mat::from_fn(he, he, |_, _| 1.0 + rng.f32());
+        let (_, stats) = filter_grad_pass(&arch, &x, &e, s).unwrap();
+        assert_eq!(stats.gated_macs, 0);
+        // exactly K^2 * He*We useful MACs (paper §4.2)
+        assert_eq!(stats.macs, (k * k * he * he) as u64);
+    }
+
+    #[test]
+    fn filter_grad_program_validates() {
+        let mp = filter_grad_program(11, 11, 5, 5, 2);
+        assert!(mp.validate(24).is_empty());
+        assert_eq!((mp.out_rows, mp.out_cols), (3, 3));
+    }
+
+    #[test]
+    fn u_chunk_bounds() {
+        // wide error map: labels/u = sx (+1 for the wrapped twin)
+        assert_eq!(u_chunk(3, 2, 8, 24), 3); // fits whole filter
+        assert!(u_chunk(11, 4, 8, 24) * labels_per_u(11, 4, 8) <= 24);
+        assert!(u_chunk(11, 8, 8, 24) * labels_per_u(11, 8, 8) <= 24);
+        assert!(u_chunk(1, 1, 1, 24) >= 1);
+        // degenerate 1-wide error map: every v is its own label
+        assert_eq!(labels_per_u(5, 1, 1), 5);
+        assert!(u_chunk(5, 1, 1, 24) * 5 <= 24);
+    }
+
+    #[test]
+    fn wrap_sub_behaviour() {
+        assert_eq!(wrap_sub(0, 1, 4), 3);
+        assert_eq!(wrap_sub(2, 2, 4), 0);
+        assert_eq!(wrap_sub(0, 5, 3), 1);
+    }
+}

@@ -1,0 +1,73 @@
+//! Convolution-to-matmul lowering (im2col), the TPU path (paper §2.3).
+
+use crate::tensor::Mat;
+
+/// im2col: lower a strided VALID convolution of `x` with a `k x k` filter
+/// into a `(E*F) x K^2` patch matrix, so that `patches · vec(w)` equals
+/// the flattened convolution output.
+pub fn im2col(x: &Mat, k: usize, s: usize) -> Mat {
+    assert!(x.rows >= k && x.cols >= k);
+    let e = (x.rows - k) / s + 1;
+    let f = (x.cols - k) / s + 1;
+    Mat::from_fn(e * f, k * k, |row, col| {
+        let (i, j) = (row / f, row % f);
+        let (u, v) = (col / k, col % k);
+        x.at(i * s + u, j * s + v)
+    })
+}
+
+/// Flatten a filter into a `K^2 x 1` column vector (row-major order,
+/// matching [`im2col`]'s column layout).
+pub fn filter_col(w: &Mat) -> Mat {
+    Mat::from_slice(w.rows * w.cols, 1, &w.data)
+}
+
+/// Reshape a `(E*F) x 1` matmul result back into the `E x F` output map.
+pub fn col2out(c: &Mat, e: usize, f: usize) -> Mat {
+    assert_eq!(c.rows, e * f);
+    assert_eq!(c.cols, 1);
+    Mat::from_slice(e, f, &c.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::systolic::matmul_ref;
+    use crate::tensor::conv;
+    use crate::util::prng::{for_each_case, Prng};
+
+    #[test]
+    fn im2col_reproduces_convolution() {
+        for_each_case(30, 0x10c, |rng| {
+            let k = rng.range(1, 4);
+            let s = rng.range(1, 3);
+            let ho = rng.range(1, 6);
+            let hx = s * (ho - 1) + k;
+            let x = Mat::random(hx, hx + 2, rng);
+            let w = Mat::random(k, k, rng);
+            let patches = im2col(&x, k, s);
+            let out = matmul_ref(&patches, &filter_col(&w));
+            let e = (x.rows - k) / s + 1;
+            let f = (x.cols - k) / s + 1;
+            col2out(&out, e, f).assert_close(&conv::direct_conv(&x, &w, s), 1e-4);
+        });
+    }
+
+    #[test]
+    fn im2col_dimensions() {
+        let mut rng = Prng::new(1);
+        let x = Mat::random(7, 9, &mut rng);
+        let p = im2col(&x, 3, 2);
+        assert_eq!((p.rows, p.cols), (3 * 4, 9));
+    }
+
+    #[test]
+    fn patch_matrix_duplicates_overlap() {
+        // stride 1 with K>1 duplicates input elements across patches —
+        // the data-inflation cost of lowering.
+        let mut rng = Prng::new(2);
+        let x = Mat::random(5, 5, &mut rng);
+        let p = im2col(&x, 3, 1);
+        assert!(p.data.len() > x.data.len() * 2);
+    }
+}

@@ -1,0 +1,52 @@
+//! The SASiML compiler (paper §5.2): turns a convolution description +
+//! dataflow choice into the microprogrammed FSMs, broadcast/multicast
+//! schedules and register preloads the simulator executes.
+//!
+//! * [`ecoflow`]  — the paper's contribution (§4): zero-free transposed
+//!   and dilated convolution dataflows.
+//! * [`rs`]       — row-stationary (Eyeriss) baseline; transposed/dilated
+//!   convs execute over explicitly padded operands.
+//! * [`lowering`] + [`tpu`] — im2col lowering onto the output-stationary
+//!   systolic matmul array (TPU baseline).
+//! * [`ganax`]    — behavioural GANAX comparator (§6.3).
+//! * [`tiling`]   — processing-pass tiling and the layer-level cost model
+//!   (§4.3: PE sets, processing passes, the n/r/t/q/p parameters).
+
+pub mod ecoflow;
+pub mod ganax;
+pub mod lowering;
+pub mod rs;
+pub mod tiling;
+pub mod tpu;
+
+/// The dataflows SASiML models (paper §6.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Row-stationary (Eyeriss) — padded operands for backward convs.
+    RowStationary,
+    /// Lowering + output-stationary systolic matmul (TPU).
+    Tpu,
+    /// EcoFlow zero-free dataflows (this paper).
+    EcoFlow,
+    /// GANAX behavioural model (zero-free fwd/input-grad, padded
+    /// filter-grad) — §6.3 comparator.
+    Ganax,
+}
+
+impl Dataflow {
+    pub const ALL: [Dataflow; 4] = [
+        Dataflow::RowStationary,
+        Dataflow::Tpu,
+        Dataflow::EcoFlow,
+        Dataflow::Ganax,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataflow::RowStationary => "RS",
+            Dataflow::Tpu => "TPU",
+            Dataflow::EcoFlow => "EcoFlow",
+            Dataflow::Ganax => "GANAX",
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Row-stationary (Eyeriss) dataflow compiler (paper §2.3).
+//!
+//! PE set: `K` rows x `E` columns (E = output rows). PE `(r, e)` holds
+//! filter row `r` in its weight registers, holds ifmap row `eS + r` in its
+//! input registers, and produces the 1-D convolution psums for output row
+//! `e`; psums accumulate up each PE-set column through the local links and
+//! the top PE writes output row `e` to the GON — exactly Eyeriss's
+//! "each PE performs a 1-D convolution, psums accumulated vertically".
+//!
+//! Transposed and dilated convolutions execute on this dataflow by
+//! materializing the padded operands ([`transpose_via_padding`],
+//! [`dilated_via_padding`]): the padding zeros flow through the array
+//! (clock-gated — energy saved, latency not; paper §3.1).
+
+use crate::config::ArchConfig;
+use crate::sim::microprogram::{Microprogram, Operands, PeInstr, SrcRef, WSrc, XSrc};
+use crate::sim::stats::PassStats;
+use crate::sim::{ArraySim, SimError};
+use crate::tensor::Mat;
+
+/// Compile a direct convolution (`hx x wx` input, `k x k` filter, stride
+/// `s`) onto the RS dataflow. Operand A is the input, B the filter.
+pub fn direct_program(hx: usize, wx: usize, k: usize, s: usize) -> Microprogram {
+    assert!(hx >= k && wx >= k);
+    let e_rows = (hx - k) / s + 1; // output rows
+    let f_cols = (wx - k) / s + 1; // output cols
+    let mut mp = Microprogram::new(k, e_rows, e_rows, f_cols, "rs-direct");
+    for r in 0..k {
+        for e in 0..e_rows {
+            let pe = mp.pe_id(r, e);
+            // weight-stationary: filter row r
+            mp.w_preload[pe] = (0..k).map(|v| SrcRef::B((r * k + v) as u32)).collect();
+            // row-stationary: ifmap row eS + r
+            let row = e * s + r;
+            mp.x_preload[pe] = (0..wx).map(|b| SrcRef::A((row * wx + b) as u32)).collect();
+            let mut prog = Vec::with_capacity(f_cols * (k + 2));
+            for j in 0..f_cols {
+                for v in 0..k {
+                    prog.push(PeInstr::Mac {
+                        acc: 0,
+                        w: WSrc::Reg(v as u16),
+                        x: XSrc::Reg((j * s + v) as u16),
+                    });
+                }
+                // vertical psum chain for output (e, j): bottom (r=k-1)
+                // passes up; middle receive+pass; top receives and writes.
+                let is_bottom = r == k - 1;
+                let is_top = r == 0;
+                if !is_bottom {
+                    prog.push(PeInstr::RecvAdd { acc: 0 });
+                }
+                if is_top {
+                    prog.push(PeInstr::WriteOut {
+                        acc: 0,
+                        out_idx: (e * f_cols + j) as u32,
+                    });
+                } else {
+                    prog.push(PeInstr::PassUp { acc: 0 });
+                }
+            }
+            mp.programs[pe] = prog;
+        }
+    }
+    // ifmap rows are multicast: adjacent PE-set columns share rows when
+    // S < K, so the GIN/GB cost is the unique footprint, not the copies.
+    mp.x_preload_unique = Some(hx * wx);
+    mp
+}
+
+/// Run an RS direct-convolution pass, tiling output rows to the physical
+/// array height when the PE set exceeds it.
+pub fn direct_pass(
+    arch: &ArchConfig,
+    x: &Mat,
+    w: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
+    let k = w.rows;
+    let e_rows = (x.rows - k) / s + 1;
+    let f_cols = (x.cols - k) / s + 1;
+    // PE-set columns = output rows; tile them to the array width, and the
+    // filter rows (set rows = K) must fit the array height.
+    let col_tile = arch.array_cols.max(1);
+    let mut out = Mat::zeros(e_rows, f_cols);
+    let mut stats = PassStats::default();
+    let mut e0 = 0;
+    while e0 < e_rows {
+        let te = col_tile.min(e_rows - e0);
+        // sub-input covering output rows [e0, e0+te)
+        let row0 = e0 * s;
+        let rows = (te - 1) * s + k;
+        let sub = Mat::from_fn(rows, x.cols, |r, c| x.at(row0 + r, c));
+        let mp = direct_program(rows, x.cols, k, s);
+        let ops = Operands {
+            a: sub,
+            b: w.clone(),
+        };
+        let (local, st) = ArraySim::new(arch, &mp).run(&ops)?;
+        stats.accumulate(&st);
+        for r in 0..local.rows {
+            for c in 0..local.cols {
+                *out.at_mut(e0 + r, c) = local.at(r, c);
+            }
+        }
+        e0 += te;
+    }
+    Ok((out, stats))
+}
+
+/// Transposed conv on RS: dilate + border-pad the error, rotate the
+/// filter, run a stride-1 direct conv (paper Fig. 1 (2)).
+pub fn transpose_via_padding(
+    arch: &ArchConfig,
+    err: &Mat,
+    w: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
+    let padded = err.dilate(s).pad_border(w.rows - 1);
+    direct_pass(arch, &padded, &w.rot180(), 1)
+}
+
+/// Dilated conv (filter gradients) on RS: dilate the error into a padded
+/// kernel, slide it over the ifmap (paper Fig. 1 (3)).
+pub fn dilated_via_padding(
+    arch: &ArchConfig,
+    x: &Mat,
+    err: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
+    let kernel = err.dilate(s);
+    direct_pass(arch, x, &kernel, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv;
+    use crate::util::prng::{for_each_case, Prng};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::eyeriss()
+    }
+
+    #[test]
+    fn direct_matches_oracle_sweep() {
+        let arch = arch();
+        for_each_case(40, 0x125, |rng| {
+            let k = rng.range(1, 5);
+            let s = rng.range(1, 3);
+            let ho = rng.range(1, 8);
+            let hx = s * (ho - 1) + k;
+            let wx = rng.range(k, k + 9);
+            let x = Mat::random(hx, wx, rng);
+            let w = Mat::random(k, k, rng);
+            let (got, _) = direct_pass(&arch, &x, &w, s).unwrap();
+            got.assert_close(&conv::direct_conv(&x, &w, s), 1e-3);
+        });
+    }
+
+    #[test]
+    fn direct_tiles_outputs_beyond_array_width() {
+        let arch = arch(); // 15 columns
+        let mut rng = Prng::new(7);
+        let x = Mat::random(40, 10, &mut rng); // 38 output rows > 15
+        let w = Mat::random(3, 3, &mut rng);
+        let (got, _) = direct_pass(&arch, &x, &w, 1).unwrap();
+        got.assert_close(&conv::direct_conv(&x, &w, 1), 1e-3);
+    }
+
+    #[test]
+    fn transpose_via_padding_matches_oracle() {
+        let arch = arch();
+        for_each_case(25, 0x126, |rng| {
+            let he = rng.range(1, 5);
+            let k = rng.range(1, 4);
+            let s = rng.range(1, 3);
+            let e = Mat::random(he, he, rng);
+            let w = Mat::random(k, k, rng);
+            let (got, _) = transpose_via_padding(&arch, &e, &w, s).unwrap();
+            got.assert_close(&conv::transposed_conv(&e, &w, s), 1e-3);
+        });
+    }
+
+    #[test]
+    fn dilated_via_padding_matches_oracle() {
+        let arch = arch();
+        for_each_case(25, 0x127, |rng| {
+            let he = rng.range(1, 4);
+            let k = rng.range(1, 4);
+            let s = rng.range(1, 3);
+            let hx = s * (he - 1) + k;
+            let x = Mat::random(hx, hx, rng);
+            let e = Mat::random(he, he, rng);
+            let (got, _) = dilated_via_padding(&arch, &x, &e, s).unwrap();
+            got.assert_close(&conv::dilated_conv(&x, &e, s), 1e-3);
+        });
+    }
+
+    #[test]
+    fn padding_zeros_are_gated_on_rs() {
+        // stride-2 transposed conv on RS: >70% of MACs hit padding zeros
+        // and are clock-gated (paper Fig. 3 / §3.1) — but they still
+        // occupy cycles.
+        let arch = arch();
+        let mut rng = Prng::new(9);
+        let e = Mat::from_fn(6, 6, |_, _| 1.0 + rng.f32());
+        let w = Mat::from_fn(3, 3, |_, _| 1.0 + rng.f32());
+        let (_, stats) = transpose_via_padding(&arch, &e, &w, 2).unwrap();
+        let total = stats.macs + stats.gated_macs;
+        let frac = stats.gated_macs as f64 / total as f64;
+        assert!(frac > 0.6, "gated fraction {frac}");
+    }
+
+    #[test]
+    fn rs_program_validates_and_uses_one_psum_reg() {
+        let mp = direct_program(9, 9, 3, 2);
+        assert!(mp.validate(24).is_empty());
+        assert_eq!(mp.acc_registers_used(), 1);
+    }
+
+    #[test]
+    fn rs_slower_than_ecoflow_for_strided_transpose() {
+        // the paper's headline at pass level: same result, far fewer
+        // cycles for EcoFlow at stride 2 (zero padding eliminated).
+        let arch_rs = ArchConfig::eyeriss();
+        let arch_ef = ArchConfig::ecoflow();
+        let mut rng = Prng::new(21);
+        let e = Mat::random(8, 8, &mut rng);
+        let w = Mat::random(3, 3, &mut rng);
+        let (o1, rs) = transpose_via_padding(&arch_rs, &e, &w, 2).unwrap();
+        let (o2, ef) =
+            crate::compiler::ecoflow::transpose_pass(&arch_ef, &e, &w, 2).unwrap();
+        o1.assert_close(&o2, 1e-3);
+        assert!(
+            (rs.macs + rs.gated_macs) > 3 * (ef.macs + ef.gated_macs),
+            "RS {} vs EcoFlow {}",
+            rs.macs + rs.gated_macs,
+            ef.macs + ef.gated_macs
+        );
+    }
+}

@@ -1,0 +1,126 @@
+//! TPU dataflow: im2col lowering + output-stationary systolic matmul
+//! (paper §2.3 "Matrix Multiplication Dataflows", §6.1).
+//!
+//! Transposed and dilated convolutions lower their *padded* operands, so
+//! the patch matrix carries the zero padding through the array (the §3.1
+//! inefficiency this paper eliminates with EcoFlow).
+
+use super::lowering::{col2out, filter_col, im2col};
+use crate::config::ArchConfig;
+use crate::sim::stats::PassStats;
+use crate::sim::systolic::systolic_matmul;
+use crate::tensor::Mat;
+
+/// Direct convolution on the TPU dataflow.
+pub fn direct_pass(arch: &ArchConfig, x: &Mat, w: &Mat, s: usize) -> (Mat, PassStats) {
+    let k = w.rows;
+    let e = (x.rows - k) / s + 1;
+    let f = (x.cols - k) / s + 1;
+    let patches = im2col(x, k, s);
+    let (out, stats) = systolic_matmul(arch, &patches, &filter_col(w));
+    (col2out(&out, e, f), stats)
+}
+
+/// Multi-filter lowering: convolve one input plane with `nf` filters in a
+/// single matmul whose `B` operand has `nf` columns — this is how real
+/// lowering keeps the systolic array's width occupied. Returns the stats
+/// of the whole batch; divide by `nf` for per-plane costs.
+pub fn direct_pass_multi(
+    arch: &ArchConfig,
+    x: &Mat,
+    ws: &[Mat],
+    s: usize,
+) -> (Vec<Mat>, PassStats) {
+    assert!(!ws.is_empty());
+    let k = ws[0].rows;
+    let e = (x.rows - k) / s + 1;
+    let f = (x.cols - k) / s + 1;
+    let patches = im2col(x, k, s);
+    let b = Mat::from_fn(k * k, ws.len(), |row, col| ws[col].data[row]);
+    let (out, stats) = systolic_matmul(arch, &patches, &b);
+    let outs = (0..ws.len())
+        .map(|c| {
+            let col = Mat::from_fn(e * f, 1, |r, _| out.at(r, c));
+            col2out(&col, e, f)
+        })
+        .collect();
+    (outs, stats)
+}
+
+/// Transposed conv: lower the dilated + border-padded error (§3.1.1).
+pub fn transpose_pass(arch: &ArchConfig, err: &Mat, w: &Mat, s: usize) -> (Mat, PassStats) {
+    let padded = err.dilate(s).pad_border(w.rows - 1);
+    direct_pass(arch, &padded, &w.rot180(), 1)
+}
+
+/// Dilated conv (filter gradients): lower with the dilated error kernel.
+pub fn dilated_pass(arch: &ArchConfig, x: &Mat, err: &Mat, s: usize) -> (Mat, PassStats) {
+    let kernel = err.dilate(s);
+    direct_pass(arch, x, &kernel, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv;
+    use crate::util::prng::{for_each_case, Prng};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::tpu()
+    }
+
+    #[test]
+    fn direct_matches_oracle() {
+        let arch = arch();
+        for_each_case(25, 0x791, |rng| {
+            let k = rng.range(1, 4);
+            let s = rng.range(1, 3);
+            let ho = rng.range(1, 6);
+            let hx = s * (ho - 1) + k;
+            let x = Mat::random(hx, hx, rng);
+            let w = Mat::random(k, k, rng);
+            let (got, _) = direct_pass(&arch, &x, &w, s);
+            got.assert_close(&conv::direct_conv(&x, &w, s), 1e-3);
+        });
+    }
+
+    #[test]
+    fn transpose_matches_oracle() {
+        let arch = arch();
+        for_each_case(20, 0x792, |rng| {
+            let he = rng.range(1, 5);
+            let k = rng.range(1, 4);
+            let s = rng.range(1, 3);
+            let e = Mat::random(he, he, rng);
+            let w = Mat::random(k, k, rng);
+            let (got, _) = transpose_pass(&arch, &e, &w, s);
+            got.assert_close(&conv::transposed_conv(&e, &w, s), 1e-3);
+        });
+    }
+
+    #[test]
+    fn dilated_matches_oracle() {
+        let arch = arch();
+        for_each_case(20, 0x793, |rng| {
+            let he = rng.range(1, 4);
+            let k = rng.range(1, 4);
+            let s = rng.range(1, 3);
+            let hx = s * (he - 1) + k;
+            let x = Mat::random(hx, hx, rng);
+            let e = Mat::random(he, he, rng);
+            let (got, _) = dilated_pass(&arch, &x, &e, s);
+            got.assert_close(&conv::dilated_conv(&x, &e, s), 1e-3);
+        });
+    }
+
+    #[test]
+    fn padded_transpose_mostly_gated_at_stride2() {
+        let arch = arch();
+        let mut rng = Prng::new(3);
+        let e = Mat::from_fn(8, 8, |_, _| 1.0 + rng.f32());
+        let w = Mat::from_fn(3, 3, |_, _| 1.0 + rng.f32());
+        let (_, stats) = transpose_pass(&arch, &e, &w, 2);
+        let frac = stats.gated_macs as f64 / (stats.macs + stats.gated_macs) as f64;
+        assert!(frac > 0.6, "{frac}");
+    }
+}

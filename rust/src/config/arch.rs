@@ -1,0 +1,280 @@
+//! Accelerator architecture description.
+//!
+//! Defaults reproduce the paper's Table 3 ("Configuration of the base CNN
+//! accelerator") and Table 1 (per-dataflow NoC bus widths). All values are
+//! overridable from a TOML-subset file (see `configs/eyeriss.toml`).
+
+use super::toml::Doc;
+
+/// NoC bus widths in bits (paper Table 1). With 16-bit operands the
+/// filter/ifmap words-per-cycle of the GIN follow directly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NocConfig {
+    /// Global input network, filter portion (bits/cycle).
+    pub gin_filter_bits: usize,
+    /// Global input network, ifmap/error portion (bits/cycle).
+    pub gin_ifmap_bits: usize,
+    /// Global output network (bits/cycle).
+    pub gon_bits: usize,
+    /// Local inter-PE (vertical psum) links (bits/cycle).
+    pub local_bits: usize,
+    /// On-chip network hop latency in cycles (Table 3).
+    pub hop_latency: usize,
+}
+
+impl NocConfig {
+    /// Eyeriss row of Table 1: GIN 64+16, GON 64, Local 64.
+    pub fn eyeriss() -> Self {
+        Self {
+            gin_filter_bits: 64,
+            gin_ifmap_bits: 16,
+            gon_bits: 64,
+            local_bits: 64,
+            hop_latency: 1,
+        }
+    }
+
+    /// EcoFlow row of Table 1: GIN 80+32 (40% wider), GON/Local unchanged.
+    pub fn ecoflow() -> Self {
+        Self {
+            gin_filter_bits: 80,
+            gin_ifmap_bits: 32,
+            gon_bits: 64,
+            local_bits: 64,
+            hop_latency: 1,
+        }
+    }
+
+    /// TPU-style: two unidirectional neighbour links, psums local.
+    /// Modelled as a GIN that feeds only the array edges.
+    pub fn tpu() -> Self {
+        Self {
+            gin_filter_bits: 64,
+            gin_ifmap_bits: 64,
+            gon_bits: 64,
+            local_bits: 64,
+            hop_latency: 1,
+        }
+    }
+
+    /// Filter words deliverable per cycle (16-bit operands).
+    pub fn filter_words_per_cycle(&self, word_bits: usize) -> usize {
+        (self.gin_filter_bits / word_bits).max(1)
+    }
+
+    /// Ifmap/error words deliverable per cycle.
+    pub fn ifmap_words_per_cycle(&self, word_bits: usize) -> usize {
+        (self.gin_ifmap_bits / word_bits).max(1)
+    }
+
+    /// Output (psum/gradient) words per cycle on the GON.
+    pub fn output_words_per_cycle(&self, word_bits: usize) -> usize {
+        (self.gon_bits / word_bits).max(1)
+    }
+
+    /// GIN bandwidth increase vs. Eyeriss (paper: "+40%").
+    pub fn gin_overhead_vs_eyeriss(&self) -> f64 {
+        let base = NocConfig::eyeriss();
+        let a = (self.gin_filter_bits + self.gin_ifmap_bits) as f64;
+        let b = (base.gin_filter_bits + base.gin_ifmap_bits) as f64;
+        a / b - 1.0
+    }
+}
+
+/// Full accelerator configuration (paper Table 3 defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchConfig {
+    /// PE array rows (13 in Table 3).
+    pub array_rows: usize,
+    /// PE array columns (15 in Table 3).
+    pub array_cols: usize,
+    /// PE array clock in MHz (200 in Table 3).
+    pub clock_mhz: f64,
+    /// PE register file capacities in 16-bit words: ifmap, filter, psum
+    /// (75 / 224 / 24 in Table 3).
+    pub rf_ifmap: usize,
+    pub rf_filter: usize,
+    pub rf_psum: usize,
+    /// PE register access latency in cycles.
+    pub rf_latency: usize,
+    /// Global buffer size in bytes (108 KB) and bank count (27).
+    pub gbuf_bytes: usize,
+    pub gbuf_banks: usize,
+    /// DRAM capacity in bytes (4 GB DDR4-1866) and peak bandwidth.
+    pub dram_bytes: usize,
+    pub dram_gbps: f64,
+    /// Clock-gate PEs on zero operands (Table 3: "Zero Operations").
+    pub clock_gating: bool,
+    /// Multiplier / accumulator pipeline depths (2-stage / 1-stage).
+    pub mul_stages: usize,
+    pub add_stages: usize,
+    /// PE input/output queue depth (8 entries).
+    pub queue_depth: usize,
+    /// Operand width in bits (paper trains in 16-bit / BFLOAT16).
+    pub word_bits: usize,
+    /// NoC widths.
+    pub noc: NocConfig,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            array_rows: 13,
+            array_cols: 15,
+            clock_mhz: 200.0,
+            rf_ifmap: 75,
+            rf_filter: 224,
+            rf_psum: 24,
+            rf_latency: 1,
+            gbuf_bytes: 108 * 1024,
+            gbuf_banks: 27,
+            dram_bytes: 4 << 30,
+            dram_gbps: 14.93, // DDR4-1866 x64
+            clock_gating: true,
+            mul_stages: 2,
+            add_stages: 1,
+            queue_depth: 8,
+            word_bits: 16,
+            noc: NocConfig::eyeriss(),
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Table 3 baseline with the Eyeriss NoC (RS dataflow).
+    pub fn eyeriss() -> Self {
+        Self::default()
+    }
+
+    /// Table 3 baseline with the EcoFlow NoC extensions.
+    pub fn ecoflow() -> Self {
+        Self {
+            noc: NocConfig::ecoflow(),
+            ..Self::default()
+        }
+    }
+
+    /// Table 3 baseline with the TPU-style NoC.
+    pub fn tpu() -> Self {
+        Self {
+            noc: NocConfig::tpu(),
+            ..Self::default()
+        }
+    }
+
+    /// Total PEs in the array.
+    pub fn num_pes(&self) -> usize {
+        self.array_rows * self.array_cols
+    }
+
+    /// Cycle time in nanoseconds.
+    pub fn cycle_ns(&self) -> f64 {
+        1e3 / self.clock_mhz
+    }
+
+    /// DRAM bytes transferable per array clock cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_gbps * 1e9 / (self.clock_mhz * 1e6)
+    }
+
+    /// Load from a parsed TOML doc; missing keys keep Table 3 defaults.
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = ArchConfig::default();
+        let noc_preset = doc
+            .get("noc", "preset")
+            .and_then(|v| v.as_str().map(str::to_string));
+        let mut noc = match noc_preset.as_deref() {
+            Some("ecoflow") => NocConfig::ecoflow(),
+            Some("tpu") => NocConfig::tpu(),
+            _ => NocConfig::eyeriss(),
+        };
+        noc.gin_filter_bits = doc.usize_or("noc", "gin_filter_bits", noc.gin_filter_bits);
+        noc.gin_ifmap_bits = doc.usize_or("noc", "gin_ifmap_bits", noc.gin_ifmap_bits);
+        noc.gon_bits = doc.usize_or("noc", "gon_bits", noc.gon_bits);
+        noc.local_bits = doc.usize_or("noc", "local_bits", noc.local_bits);
+        noc.hop_latency = doc.usize_or("noc", "hop_latency", noc.hop_latency);
+        Self {
+            array_rows: doc.usize_or("pe_array", "rows", d.array_rows),
+            array_cols: doc.usize_or("pe_array", "cols", d.array_cols),
+            clock_mhz: doc.f64_or("pe_array", "clock_mhz", d.clock_mhz),
+            rf_ifmap: doc.usize_or("pe", "rf_ifmap", d.rf_ifmap),
+            rf_filter: doc.usize_or("pe", "rf_filter", d.rf_filter),
+            rf_psum: doc.usize_or("pe", "rf_psum", d.rf_psum),
+            rf_latency: doc.usize_or("pe", "rf_latency", d.rf_latency),
+            gbuf_bytes: doc.usize_or("memory", "gbuf_bytes", d.gbuf_bytes),
+            gbuf_banks: doc.usize_or("memory", "gbuf_banks", d.gbuf_banks),
+            dram_bytes: doc.usize_or("memory", "dram_bytes", d.dram_bytes),
+            dram_gbps: doc.f64_or("memory", "dram_gbps", d.dram_gbps),
+            clock_gating: doc
+                .get("pe", "clock_gating")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.clock_gating),
+            mul_stages: doc.usize_or("pe", "mul_stages", d.mul_stages),
+            add_stages: doc.usize_or("pe", "add_stages", d.add_stages),
+            queue_depth: doc.usize_or("pe", "queue_depth", d.queue_depth),
+            word_bits: doc.usize_or("pe", "word_bits", d.word_bits),
+            noc,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn table3_defaults() {
+        let a = ArchConfig::default();
+        assert_eq!(a.num_pes(), 195); // 13 x 15
+        assert_eq!(a.gbuf_banks, 27);
+        assert_eq!(a.rf_ifmap, 75);
+        assert_eq!(a.rf_filter, 224);
+        assert_eq!(a.rf_psum, 24);
+        assert_eq!(a.queue_depth, 8);
+        assert!((a.cycle_ns() - 5.0).abs() < 1e-9); // 200 MHz
+    }
+
+    #[test]
+    fn table1_noc_widths() {
+        let e = NocConfig::eyeriss();
+        assert_eq!((e.gin_filter_bits, e.gin_ifmap_bits), (64, 16));
+        let f = NocConfig::ecoflow();
+        assert_eq!((f.gin_filter_bits, f.gin_ifmap_bits), (80, 32));
+        assert_eq!(f.gon_bits, e.gon_bits);
+        assert_eq!(f.local_bits, e.local_bits);
+        // paper: "40% more bandwidth for the GIN network"
+        assert!((f.gin_overhead_vs_eyeriss() - 0.40).abs() < 1e-9);
+    }
+
+    #[test]
+    fn words_per_cycle_16bit() {
+        let e = NocConfig::eyeriss();
+        assert_eq!(e.filter_words_per_cycle(16), 4);
+        assert_eq!(e.ifmap_words_per_cycle(16), 1);
+        let f = NocConfig::ecoflow();
+        assert_eq!(f.filter_words_per_cycle(16), 5);
+        assert_eq!(f.ifmap_words_per_cycle(16), 2);
+    }
+
+    #[test]
+    fn from_doc_overrides_and_defaults() {
+        let doc = toml::parse(
+            "[pe_array]\nrows = 8\n[noc]\npreset = \"ecoflow\"\ngon_bits = 128\n",
+        )
+        .unwrap();
+        let a = ArchConfig::from_doc(&doc);
+        assert_eq!(a.array_rows, 8);
+        assert_eq!(a.array_cols, 15); // default retained
+        assert_eq!(a.noc.gin_filter_bits, 80);
+        assert_eq!(a.noc.gon_bits, 128);
+    }
+
+    #[test]
+    fn dram_bandwidth_per_cycle() {
+        let a = ArchConfig::default();
+        // ~14.93 GB/s at 200MHz -> ~74.7 B/cycle
+        let b = a.dram_bytes_per_cycle();
+        assert!((74.0..76.0).contains(&b), "{b}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Configuration system: a minimal TOML-subset parser ([`toml`]) and the
+//! accelerator architecture description ([`arch`]) whose defaults are the
+//! paper's Table 3 configuration.
+
+pub mod arch;
+pub mod toml;
+
+pub use arch::{ArchConfig, NocConfig};

@@ -1,0 +1,211 @@
+//! Minimal TOML-subset parser (the real `toml` crate is unavailable in
+//! this offline image).
+//!
+//! Supported: `[section]` headers, `key = value` pairs with integer,
+//! float, boolean and double-quoted string values, `#` comments, blank
+//! lines. This covers everything the accelerator / sweep config files
+//! need; anything else is a parse error, not silent misbehaviour.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|v| usize::try_from(v).ok())
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section name ("" for the root) → key → value.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// `section.key` as usize with a default.
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(Value::as_usize)
+            .unwrap_or(default)
+    }
+
+    /// `section.key` as f64 with a default.
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(Value::as_float)
+            .unwrap_or(default)
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn parse_value(raw: &str) -> Result<Value, String> {
+    let t = raw.trim();
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if t.starts_with('"') {
+        if t.len() >= 2 && t.ends_with('"') {
+            return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+        }
+        return Err(format!("unterminated string: {t}"));
+    }
+    if let Ok(v) = t.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = t.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("unrecognized value: {t}"))
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line = idx + 1;
+        let err = |msg: String| ParseError { line, msg };
+        // strip comments (not inside strings — strings may not contain '#')
+        let code = match raw_line.find('#') {
+            Some(i) => &raw_line[..i],
+            None => raw_line,
+        };
+        let code = code.trim();
+        if code.is_empty() {
+            continue;
+        }
+        if let Some(rest) = code.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated section header".into()))?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = code
+            .find('=')
+            .ok_or_else(|| err(format!("expected key = value, got: {code}")))?;
+        let key = code[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err(err("empty key".into()));
+        }
+        let value = parse_value(&code[eq + 1..]).map_err(err)?;
+        doc.sections
+            .get_mut(&section)
+            .expect("section exists")
+            .insert(key, value);
+    }
+    Ok(doc)
+}
+
+/// Parse a file.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Doc> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+            # accelerator
+            top = 1
+            [pe_array]
+            rows = 13
+            cols = 15            # Table 3
+            clock_mhz = 200.0
+            gated = true
+            name = "eyeriss"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(doc.usize_or("pe_array", "rows", 0), 13);
+        assert_eq!(doc.f64_or("pe_array", "clock_mhz", 0.0), 200.0);
+        assert_eq!(doc.get("pe_array", "gated").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("pe_array", "name").unwrap().as_str(),
+            Some("eyeriss")
+        );
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.usize_or("a", "missing", 7), 7);
+        assert_eq!(doc.usize_or("nosection", "x", 9), 9);
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn rejects_bad_value() {
+        assert!(parse("x = $$$\n").is_err());
+        assert!(parse("x = \"unterminated\n").is_err());
+        assert!(parse("[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn int_vs_float_coercion() {
+        let doc = parse("x = 3\ny = 3.5\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float(), Some(3.0));
+        assert_eq!(doc.get("", "y").unwrap().as_int(), None);
+    }
+}

@@ -1,0 +1,9 @@
+//! The sweep coordinator: schedules (layer x pass x dataflow) simulation
+//! jobs over a `std::thread` scoped pool, collects [`LayerCost`]s, and
+//! composes end-to-end network estimates (paper §6.1's methodology).
+
+pub mod e2e;
+pub mod scheduler;
+
+pub use e2e::{gan_e2e, network_e2e, E2eResult};
+pub use scheduler::{run_sweep, SweepJob, SweepResult};

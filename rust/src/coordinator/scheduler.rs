@@ -1,0 +1,144 @@
+//! Multi-threaded sweep scheduler.
+//!
+//! Jobs are independent (each simulates one (layer, pass, dataflow)
+//! proxy and extends it analytically), so the scheduler is a simple
+//! work-stealing-by-index pool over scoped threads (tokio is unavailable
+//! in this offline image — see Cargo.toml).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::compiler::{tiling, Dataflow};
+use crate::config::ArchConfig;
+use crate::energy::{DramModel, EnergyParams};
+use crate::model::{ConvLayer, TrainingPass};
+
+/// One simulation job.
+#[derive(Clone, Debug)]
+pub struct SweepJob {
+    pub layer: ConvLayer,
+    pub pass: TrainingPass,
+    pub flow: Dataflow,
+    pub batch: usize,
+}
+
+/// Job result (or the simulator error it died with).
+#[derive(Debug)]
+pub struct SweepResult {
+    pub job: SweepJob,
+    pub cost: Result<tiling::LayerCost, String>,
+}
+
+/// The architecture each dataflow runs on (its Table 1 NoC row).
+pub fn arch_for(flow: Dataflow) -> ArchConfig {
+    match flow {
+        Dataflow::RowStationary => ArchConfig::eyeriss(),
+        Dataflow::Tpu => ArchConfig::tpu(),
+        Dataflow::EcoFlow | Dataflow::Ganax => ArchConfig::ecoflow(),
+    }
+}
+
+/// Run all jobs on `threads` workers; results keep job order.
+pub fn run_sweep(
+    params: &EnergyParams,
+    dram: &DramModel,
+    jobs: Vec<SweepJob>,
+    threads: usize,
+) -> Vec<SweepResult> {
+    let n = jobs.len();
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<SweepResult>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    let jobs_ref = &jobs;
+    std::thread::scope(|s| {
+        for _ in 0..threads.max(1) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs_ref[i].clone();
+                let arch = arch_for(job.flow);
+                let cost = tiling::layer_cost(
+                    &arch, params, dram, &job.layer, job.pass, job.flow, job.batch,
+                )
+                .map_err(|e| e.to_string());
+                results.lock().unwrap()[i] = Some(SweepResult { job, cost });
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("job completed"))
+        .collect()
+}
+
+/// Build the full (layers x passes x flows) job matrix.
+pub fn job_matrix(
+    layers: &[ConvLayer],
+    flows: &[Dataflow],
+    batch: usize,
+) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for layer in layers {
+        for pass in TrainingPass::ALL {
+            for flow in flows {
+                jobs.push(SweepJob {
+                    layer: layer.clone(),
+                    pass,
+                    flow: *flow,
+                    batch,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+/// Reasonable worker count for this host.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn sweep_runs_and_preserves_order() {
+        let layers: Vec<ConvLayer> = zoo::table5_layers()
+            .into_iter()
+            .filter(|l| l.net == "ShuffleNet")
+            .collect();
+        let jobs = job_matrix(&layers, &[Dataflow::RowStationary, Dataflow::EcoFlow], 1);
+        let n = jobs.len();
+        let p = EnergyParams::default();
+        let d = DramModel::default();
+        let results = run_sweep(&p, &d, jobs.clone(), 4);
+        assert_eq!(results.len(), n);
+        for (r, j) in results.iter().zip(&jobs) {
+            assert_eq!(r.job.layer.name, j.layer.name);
+            assert_eq!(r.job.flow, j.flow);
+            assert!(r.cost.is_ok(), "{:?}: {:?}", r.job, r.cost);
+        }
+    }
+
+    #[test]
+    fn job_matrix_cardinality() {
+        let layers = zoo::table5_layers();
+        let jobs = job_matrix(&layers, &Dataflow::ALL, 4);
+        assert_eq!(jobs.len(), layers.len() * 3 * 4);
+    }
+
+    #[test]
+    fn arch_for_maps_noc() {
+        assert_eq!(arch_for(Dataflow::EcoFlow).noc.gin_filter_bits, 80);
+        assert_eq!(arch_for(Dataflow::RowStationary).noc.gin_filter_bits, 64);
+    }
+}

@@ -1,0 +1,113 @@
+//! Energy breakdown by component — the decomposition reported in the
+//! paper's Fig. 10 (CNN layers) and Fig. 12 (GAN layers):
+//! DRAM / global buffer / PE scratchpads / ALU / NoC.
+
+use std::ops::{Add, AddAssign};
+
+/// Energy per component, in picojoules.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub dram_pj: f64,
+    pub gbuf_pj: f64,
+    pub spad_pj: f64,
+    pub alu_pj: f64,
+    pub noc_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.dram_pj + self.gbuf_pj + self.spad_pj + self.alu_pj + self.noc_pj
+    }
+
+    /// Total in microjoules (the natural magnitude for layer-level plots).
+    pub fn total_uj(&self) -> f64 {
+        self.total_pj() * 1e-6
+    }
+
+    /// Scale every component (e.g. passes multiplier).
+    pub fn scaled(&self, f: f64) -> Self {
+        Self {
+            dram_pj: self.dram_pj * f,
+            gbuf_pj: self.gbuf_pj * f,
+            spad_pj: self.spad_pj * f,
+            alu_pj: self.alu_pj * f,
+            noc_pj: self.noc_pj * f,
+        }
+    }
+
+    /// Average power in mW given a duration in seconds.
+    pub fn power_mw(&self, seconds: f64) -> f64 {
+        (self.total_pj() * 1e-12) / seconds * 1e3
+    }
+
+    /// Component shares (fractions of total), in Fig. 10 order.
+    pub fn shares(&self) -> [f64; 5] {
+        let t = self.total_pj().max(1e-30);
+        [
+            self.dram_pj / t,
+            self.gbuf_pj / t,
+            self.spad_pj / t,
+            self.alu_pj / t,
+            self.noc_pj / t,
+        ]
+    }
+
+    pub const COMPONENTS: [&'static str; 5] = ["DRAM", "GBUFF", "SPAD", "ALU", "NoC"];
+}
+
+impl Add for EnergyBreakdown {
+    type Output = Self;
+    fn add(self, o: Self) -> Self {
+        Self {
+            dram_pj: self.dram_pj + o.dram_pj,
+            gbuf_pj: self.gbuf_pj + o.gbuf_pj,
+            spad_pj: self.spad_pj + o.spad_pj,
+            alu_pj: self.alu_pj + o.alu_pj,
+            noc_pj: self.noc_pj + o.noc_pj,
+        }
+    }
+}
+
+impl AddAssign for EnergyBreakdown {
+    fn add_assign(&mut self, o: Self) {
+        *self = *self + o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EnergyBreakdown {
+        EnergyBreakdown {
+            dram_pj: 50.0,
+            gbuf_pj: 20.0,
+            spad_pj: 15.0,
+            alu_pj: 10.0,
+            noc_pj: 5.0,
+        }
+    }
+
+    #[test]
+    fn total_and_shares() {
+        let e = sample();
+        assert_eq!(e.total_pj(), 100.0);
+        let s = e.shares();
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(s[0], 0.5);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let e = sample() + sample();
+        assert_eq!(e.total_pj(), 200.0);
+        assert_eq!(e.scaled(0.5).total_pj(), 100.0);
+    }
+
+    #[test]
+    fn power_conversion() {
+        let e = sample(); // 100 pJ over 1 ns = 0.1 W = 100 mW
+        let p = e.power_mw(1e-9);
+        assert!((p - 100.0).abs() < 1e-6);
+    }
+}

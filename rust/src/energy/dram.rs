@@ -1,0 +1,91 @@
+//! Simplified DRAMPower-style DDR4-1866 model (paper ref [151]).
+//!
+//! The paper models DRAM energy with DRAMPower and reports that EcoFlow
+//! leaves DRAM energy essentially unchanged (Figs. 10/12) — the dataflow
+//! changes on-chip behaviour, not off-chip traffic. This model therefore
+//! needs (a) traffic-proportional access energy, (b) background power,
+//! and (c) a bandwidth/latency cost for the timing side.
+
+/// DDR4-1866 x64 channel model.
+#[derive(Clone, Copy, Debug)]
+pub struct DramModel {
+    /// Peak channel bandwidth, bytes/second.
+    pub peak_bw: f64,
+    /// Access energy per byte, pJ (activate+rd/wr+precharge+I/O averaged).
+    pub access_pj_per_byte: f64,
+    /// Background (standby+refresh) power in mW.
+    pub background_mw: f64,
+    /// First-word latency in nanoseconds.
+    pub latency_ns: f64,
+}
+
+impl Default for DramModel {
+    fn default() -> Self {
+        Self::ddr4_1866()
+    }
+}
+
+impl DramModel {
+    /// DDR4-1866: 14.93 GB/s peak, ≈ 10 pJ/byte end-to-end, ≈ 100 mW
+    /// background for a 4 GB single-rank module, ≈ 50 ns latency.
+    pub fn ddr4_1866() -> Self {
+        Self {
+            peak_bw: 14.93e9,
+            access_pj_per_byte: 10.0,
+            background_mw: 100.0,
+            latency_ns: 50.0,
+        }
+    }
+
+    /// Energy (pJ) for moving `bytes` plus background over `seconds`.
+    pub fn energy_pj(&self, bytes: f64, seconds: f64) -> f64 {
+        bytes * self.access_pj_per_byte + self.background_mw * 1e-3 * seconds * 1e12
+    }
+
+    /// Minimum transfer time in seconds for `bytes` (bandwidth-bound).
+    pub fn transfer_seconds(&self, bytes: f64) -> f64 {
+        self.latency_ns * 1e-9 + bytes / self.peak_bw
+    }
+
+    /// Cycles at `clock_mhz` to stream `bytes` (bandwidth-bound).
+    pub fn transfer_cycles(&self, bytes: f64, clock_mhz: f64) -> u64 {
+        (self.transfer_seconds(bytes) * clock_mhz * 1e6).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_scales_with_traffic() {
+        let d = DramModel::ddr4_1866();
+        let e1 = d.energy_pj(1e6, 0.0);
+        let e2 = d.energy_pj(2e6, 0.0);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn background_dominates_idle() {
+        let d = DramModel::ddr4_1866();
+        let idle = d.energy_pj(0.0, 1.0);
+        assert!((idle - 100e9).abs() / 100e9 < 1e-9); // 100 mW * 1 s = 0.1 J
+    }
+
+    #[test]
+    fn transfer_time_includes_latency() {
+        let d = DramModel::ddr4_1866();
+        let t0 = d.transfer_seconds(0.0);
+        assert!((t0 - 50e-9).abs() < 1e-12);
+        let t = d.transfer_seconds(14.93e9);
+        assert!((t - 1.0).abs() < 1e-3); // ~1s for peak-BW worth of bytes
+    }
+
+    #[test]
+    fn cycles_at_200mhz() {
+        let d = DramModel::ddr4_1866();
+        // 74.65 bytes/cycle at 200 MHz
+        let c = d.transfer_cycles(74650.0, 200.0);
+        assert!((1000..=1100).contains(&c), "{c}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Energy modelling.
+//!
+//! * [`params`] — per-operation energies from Horowitz's 45 nm survey
+//!   (ISSCC'14, paper ref [149]) with the 65 nm scaling factor the paper
+//!   uses for its Eyeriss validation, and the clock-network share it adds
+//!   back via Amdahl's law.
+//! * [`dram`] — a simplified DRAMPower-style DDR4-1866 energy/bandwidth
+//!   model (paper ref [151]).
+//! * [`breakdown`] — the DRAM / GBUFF / SPAD / ALU / NoC decomposition the
+//!   paper's Fig. 10 and Fig. 12 report.
+
+pub mod breakdown;
+pub mod dram;
+pub mod params;
+
+pub use breakdown::EnergyBreakdown;
+pub use dram::DramModel;
+pub use params::EnergyParams;

@@ -1,0 +1,115 @@
+//! Per-operation energy parameters (45 nm, Horowitz ISSCC'14 — paper
+//! ref [149]), in picojoules, for 16-bit operands (the paper trains with
+//! BFLOAT16, §6.2).
+
+/// Per-event energies in pJ.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyParams {
+    /// 16-bit floating multiply.
+    pub mul_pj: f64,
+    /// 16-bit floating add.
+    pub add_pj: f64,
+    /// PE scratchpad (register-file) access, per word.
+    pub spad_pj: f64,
+    /// Global buffer access (108 KB SRAM), per word.
+    pub gbuf_pj: f64,
+    /// NoC delivery per word per destination PE (bus drive + mcast ctrl).
+    pub noc_pj: f64,
+    /// DRAM access per word (device + I/O; DRAMPower-style average).
+    pub dram_pj: f64,
+    /// Idle (clock-gated) PE per cycle.
+    pub gated_pe_pj: f64,
+    /// Active PE control overhead per cycle (FSM, clocking inside PE).
+    pub pe_ctrl_pj: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        Self::horowitz_45nm()
+    }
+}
+
+impl EnergyParams {
+    /// 45 nm values (Horowitz ISSCC'14): fp16 mul ≈ 1.1 pJ, fp16 add ≈
+    /// 0.4 pJ; small SRAM (≤8 KB) ≈ 1.2 pJ/16b word; 108 KB SRAM ≈
+    /// 6 pJ/word; DRAM ≈ 160 pJ/16b word.
+    pub fn horowitz_45nm() -> Self {
+        Self {
+            mul_pj: 1.1,
+            add_pj: 0.4,
+            spad_pj: 1.2,
+            gbuf_pj: 6.0,
+            noc_pj: 2.0,
+            dram_pj: 160.0,
+            gated_pe_pj: 0.05,
+            pe_ctrl_pj: 0.25,
+        }
+    }
+
+    /// Scale all on-chip energies by the 45 nm → 65 nm factor (×1.4) the
+    /// paper uses when validating against the 65 nm Eyeriss chip
+    /// (§5.3, refs [149,150]). DRAM energy is off-chip and unscaled.
+    pub fn scaled_to_65nm(&self) -> Self {
+        const F: f64 = 1.4;
+        Self {
+            mul_pj: self.mul_pj * F,
+            add_pj: self.add_pj * F,
+            spad_pj: self.spad_pj * F,
+            gbuf_pj: self.gbuf_pj * F,
+            noc_pj: self.noc_pj * F,
+            dram_pj: self.dram_pj,
+            gated_pe_pj: self.gated_pe_pj * F,
+            pe_ctrl_pj: self.pe_ctrl_pj * F,
+        }
+    }
+
+    /// Energy of one MAC (multiply + accumulate).
+    pub fn mac_pj(&self) -> f64 {
+        self.mul_pj + self.add_pj
+    }
+
+    /// The paper (§5.3) notes the clock network consumes 33–45% of chip
+    /// power and adds it back via Amdahl's law when comparing to the real
+    /// chip: `total = modelled / (1 - clock_share)`.
+    pub fn with_clock_network(modelled_pj: f64, clock_share: f64) -> f64 {
+        assert!((0.0..1.0).contains(&clock_share));
+        modelled_pj / (1.0 - clock_share)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_of_memory_hierarchy_costs() {
+        let p = EnergyParams::horowitz_45nm();
+        // the paper's entire argument rests on this ordering
+        assert!(p.spad_pj < p.gbuf_pj);
+        assert!(p.gbuf_pj < p.dram_pj);
+        assert!(p.mac_pj() < p.gbuf_pj);
+    }
+
+    #[test]
+    fn scaling_to_65nm_leaves_dram_alone() {
+        let p = EnergyParams::horowitz_45nm();
+        let s = p.scaled_to_65nm();
+        assert!((s.mul_pj / p.mul_pj - 1.4).abs() < 1e-9);
+        assert_eq!(s.dram_pj, p.dram_pj);
+    }
+
+    #[test]
+    fn clock_network_amdahl() {
+        // 33..45% clock share inflates modelled power by 1.49x..1.82x
+        let lo = EnergyParams::with_clock_network(100.0, 0.33);
+        let hi = EnergyParams::with_clock_network(100.0, 0.45);
+        assert!((lo - 149.25).abs() < 0.1);
+        assert!((hi - 181.8).abs() < 0.1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn clock_share_must_be_fraction() {
+        EnergyParams::with_clock_network(1.0, 1.0);
+    }
+}

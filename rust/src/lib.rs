@@ -1,0 +1,38 @@
+//! # EcoFlow / SASiML
+//!
+//! A reproduction of *EcoFlow: Efficient Convolutional Dataflows for
+//! Low-Power Neural Network Accelerators* (Orosa et al., 2022), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — SASiML, a cycle-accurate, functional
+//!   (value-propagating) spatial-architecture simulator ([`sim`]); the
+//!   dataflow compiler for row-stationary, TPU-lowering and EcoFlow
+//!   dataflows ([`compiler`]); energy models ([`energy`]); the paper's
+//!   analytic models ([`analysis`]); the CNN/GAN model zoo ([`model`]); a
+//!   multi-threaded sweep coordinator ([`coordinator`]); and report
+//!   generators for every table and figure in the paper ([`report`]).
+//! * **L2 (JAX, build-time)** — golden conv fwd/bwd graphs and a small-CNN
+//!   train step, AOT-lowered to HLO text (`python/compile/aot.py`) and
+//!   executed from Rust through PJRT ([`runtime`]).
+//! * **L1 (Pallas, build-time)** — the zero-free transposed / dilated
+//!   convolution kernels (`python/compile/kernels/`).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index.
+
+pub mod analysis;
+pub mod cli;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

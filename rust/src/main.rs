@@ -1,0 +1,15 @@
+//! `ecoflow` — leader entrypoint: regenerate the paper's tables/figures,
+//! validate the simulator against the AOT JAX artifacts, or drive the
+//! end-to-end training example. See `ecoflow --help` / `cli::usage()`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        println!("{}", ecoflow::cli::usage());
+        return;
+    }
+    if let Err(e) = ecoflow::cli::run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

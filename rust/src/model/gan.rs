@@ -1,0 +1,146 @@
+//! GAN workloads (paper §6.3, Table 7): CycleGAN and pix2pix layers.
+//!
+//! Discriminator layers are regular direct convolutions; generator layers
+//! are transposed convolutions. EcoFlow accelerates the backward pass of
+//! the discriminator and the forward pass of the generator.
+
+use super::layer::ConvLayer;
+use super::zoo::RepeatedLayer;
+
+/// The four sample layers of Table 7.
+pub fn table7_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::conv("CycleGAN", "Disc-CONV3", 64, 114, 56, 4, 128, 2),
+        ConvLayer::tconv("CycleGAN", "Gen-TCONV1", 256, 56, 113, 3, 128, 2),
+        ConvLayer::conv("pix2pix", "Disc-CONV6", 128, 130, 64, 4, 256, 2),
+        ConvLayer::tconv("pix2pix", "Gen-TCONV41", 512, 64, 130, 4, 128, 2),
+    ]
+}
+
+/// GAN networks with full stacks available via [`full_gan`].
+pub const GANS: [&str; 2] = ["CycleGAN", "pix2pix"];
+
+/// Full (collapsed) conv stack for one of [`GANS`]: PatchGAN discriminator
+/// + encoder-decoder generator, strides > 1 throughout (GANs use strided
+/// convs instead of pooling — paper §6.3.2).
+pub fn full_gan(net: &str) -> Vec<RepeatedLayer> {
+    let c = ConvLayer::conv;
+    let t = ConvLayer::tconv;
+    let rl = |layer: ConvLayer, count: usize| RepeatedLayer {
+        layer,
+        count,
+        followed_by_pool: false,
+    };
+    match net {
+        "CycleGAN" => vec![
+            // discriminator (70x70 PatchGAN on 256px)
+            rl(c("CycleGAN", "Disc-CONV1", 3, 258, 128, 4, 64, 2), 1),
+            rl(c("CycleGAN", "Disc-CONV2", 64, 130, 64, 4, 128, 2), 1),
+            rl(c("CycleGAN", "Disc-CONV3", 64, 114, 56, 4, 128, 2), 1),
+            rl(c("CycleGAN", "Disc-CONV4", 128, 66, 32, 4, 256, 2), 1),
+            rl(c("CycleGAN", "Disc-CONV5", 256, 34, 31, 4, 512, 1), 1),
+            // generator: downsampling convs + residual blocks + upsampling
+            rl(c("CycleGAN", "Gen-CONV1", 3, 262, 256, 7, 64, 1), 1),
+            rl(c("CycleGAN", "Gen-CONV2", 64, 257, 128, 3, 128, 2), 1),
+            rl(c("CycleGAN", "Gen-CONV3", 128, 129, 64, 3, 256, 2), 1),
+            rl(c("CycleGAN", "Gen-RES", 256, 66, 64, 3, 256, 1), 18),
+            rl(t("CycleGAN", "Gen-TCONV1", 256, 56, 113, 3, 128, 2), 1),
+            rl(t("CycleGAN", "Gen-TCONV2", 128, 113, 227, 3, 64, 2), 1),
+            rl(c("CycleGAN", "Gen-CONV4", 64, 262, 256, 7, 3, 1), 1),
+        ],
+        "pix2pix" => vec![
+            // discriminator
+            rl(c("pix2pix", "Disc-CONV1", 6, 258, 128, 4, 64, 2), 1),
+            rl(c("pix2pix", "Disc-CONV2", 64, 130, 64, 4, 128, 2), 1),
+            rl(c("pix2pix", "Disc-CONV6", 128, 130, 64, 4, 256, 2), 1),
+            rl(c("pix2pix", "Disc-CONV4", 256, 34, 31, 4, 512, 1), 1),
+            // U-Net generator encoder
+            rl(c("pix2pix", "Gen-CONV1", 3, 258, 128, 4, 64, 2), 1),
+            rl(c("pix2pix", "Gen-CONV2", 64, 130, 64, 4, 128, 2), 1),
+            rl(c("pix2pix", "Gen-CONV3", 128, 66, 32, 4, 256, 2), 1),
+            rl(c("pix2pix", "Gen-CONV4", 256, 34, 16, 4, 512, 2), 4),
+            // U-Net generator decoder (transposed convs)
+            rl(t("pix2pix", "Gen-TCONV1", 512, 16, 34, 4, 512, 2), 4),
+            rl(t("pix2pix", "Gen-TCONV2", 512, 32, 66, 4, 256, 2), 1),
+            rl(t("pix2pix", "Gen-TCONV41", 512, 64, 130, 4, 128, 2), 1),
+            rl(t("pix2pix", "Gen-TCONV5", 128, 128, 258, 4, 3, 2), 1),
+        ],
+        other => panic!("unknown GAN: {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{LayerKind, TrainingPass};
+
+    #[test]
+    fn table7_matches_paper() {
+        let v = table7_layers();
+        assert_eq!(v.len(), 4);
+        assert!(v.iter().all(|l| l.stride == 2));
+        let gen = v.iter().filter(|l| l.kind == LayerKind::TransposedConv);
+        assert_eq!(gen.count(), 2);
+        // CycleGAN Gen-TCONV1 geometry: 56 -> 113 = 2*(56-1)+3
+        let g = &v[1];
+        assert_eq!(2 * (g.ifm - 1) + g.k, g.ofm);
+    }
+
+    #[test]
+    fn tconv_geometry_consistent_everywhere() {
+        for net in GANS {
+            for rl in full_gan(net) {
+                let l = &rl.layer;
+                match l.kind {
+                    LayerKind::TransposedConv => {
+                        assert_eq!(
+                            l.stride * (l.ifm - 1) + l.k,
+                            l.ofm,
+                            "{} {}",
+                            net,
+                            l.name
+                        );
+                    }
+                    LayerKind::Conv => {
+                        assert_eq!(
+                            (l.ifm - l.k) / l.stride + 1,
+                            l.ofm,
+                            "{} {}",
+                            net,
+                            l.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gans_mostly_strided_by_layer_count() {
+        // paper: "GANs use larger strides instead of pooling layers, so
+        // most of the layers ... benefit from EcoFlow" — a statement
+        // about layer population (the stride-1 residual body repeats one
+        // shape; the distinct sampling layers are all strided).
+        for net in GANS {
+            let stack = full_gan(net);
+            let strided = stack.iter().filter(|rl| rl.layer.stride > 1).count();
+            assert!(
+                strided * 2 > stack.len(),
+                "{net}: {strided}/{} strided shapes",
+                stack.len()
+            );
+        }
+    }
+
+    #[test]
+    fn gan_backward_padded_cost_dominates_forward() {
+        // For the strided layers the padded backward is ~S^2 heavier than
+        // the forward — the source of the Table 8 end-to-end gains.
+        for l in table7_layers() {
+            let fwd = l.padded_macs(TrainingPass::Forward, 1);
+            let igrad = l.padded_macs(TrainingPass::InputGrad, 1);
+            let fgrad = l.padded_macs(TrainingPass::FilterGrad, 1);
+            assert!(igrad + fgrad > fwd, "{}", l.full_name());
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Convolutional layer descriptor and its training-pass geometry.
+
+/// What the layer computes in its *forward* pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Standard direct convolution (CNNs, GAN discriminators).
+    Conv,
+    /// Transposed convolution (GAN generators / upsampling layers).
+    TransposedConv,
+}
+
+/// The three computations of CNN training (paper Fig. 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrainingPass {
+    /// Direct convolution (forward).
+    Forward,
+    /// Input-gradient calculation — a transposed convolution.
+    InputGrad,
+    /// Filter-gradient calculation — a dilated convolution.
+    FilterGrad,
+}
+
+impl TrainingPass {
+    pub const ALL: [TrainingPass; 3] = [
+        TrainingPass::Forward,
+        TrainingPass::InputGrad,
+        TrainingPass::FilterGrad,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainingPass::Forward => "forward",
+            TrainingPass::InputGrad => "input_grad",
+            TrainingPass::FilterGrad => "filter_grad",
+        }
+    }
+}
+
+/// A (square-geometry) convolutional layer, as in the paper's Tables 5/7.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvLayer {
+    /// Network the layer belongs to (e.g. "AlexNet").
+    pub net: &'static str,
+    /// Layer name within the network (e.g. "CONV1").
+    pub name: String,
+    /// Input channels.
+    pub in_ch: usize,
+    /// Input feature-map side (square).
+    pub ifm: usize,
+    /// Output feature-map side (square).
+    pub ofm: usize,
+    /// Filter side (square).
+    pub k: usize,
+    /// Number of filters (output channels).
+    pub num_filters: usize,
+    /// Stride (== dilation rate of the filter-gradient conv).
+    pub stride: usize,
+    /// Forward operation.
+    pub kind: LayerKind,
+    /// True for the "opt" larger-stride variants of §6.1.1.
+    pub optimized: bool,
+}
+
+impl ConvLayer {
+    /// Direct-conv layer shorthand.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        net: &'static str,
+        name: &str,
+        in_ch: usize,
+        ifm: usize,
+        ofm: usize,
+        k: usize,
+        num_filters: usize,
+        stride: usize,
+    ) -> Self {
+        Self {
+            net,
+            name: name.to_string(),
+            in_ch,
+            ifm,
+            ofm,
+            k,
+            num_filters,
+            stride,
+            kind: LayerKind::Conv,
+            optimized: false,
+        }
+    }
+
+    /// Transposed-conv layer shorthand (GAN generator).
+    #[allow(clippy::too_many_arguments)]
+    pub fn tconv(
+        net: &'static str,
+        name: &str,
+        in_ch: usize,
+        ifm: usize,
+        ofm: usize,
+        k: usize,
+        num_filters: usize,
+        stride: usize,
+    ) -> Self {
+        Self {
+            net,
+            name: name.to_string(),
+            in_ch,
+            ifm,
+            ofm,
+            k,
+            num_filters,
+            stride,
+            kind: LayerKind::TransposedConv,
+            optimized: false,
+        }
+    }
+
+    /// The §6.1.1 optimization: fold a following 2x2 pooling layer into
+    /// the conv by doubling its stride (output side halves).
+    pub fn optimized_variant(&self) -> Self {
+        Self {
+            name: format!("o-{}", self.name),
+            stride: self.stride * 2,
+            ofm: self.ofm.div_ceil(2),
+            optimized: true,
+            ..self.clone()
+        }
+    }
+
+    /// Full display name, e.g. "AlexNet CONV1".
+    pub fn full_name(&self) -> String {
+        format!("{} {}", self.net, self.name)
+    }
+
+    /// Error-map side for the backward pass (== ofm for direct conv; for
+    /// a transposed-conv layer the roles of ifm/ofm swap, so its forward
+    /// *is* the transposed conv of an `ofm→ifm` direct layer).
+    pub fn err_side(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv => self.ofm,
+            LayerKind::TransposedConv => self.ifm,
+        }
+    }
+
+    /// Number of 2-D (channel, filter) plane-pairs per image.
+    pub fn plane_pairs(&self) -> usize {
+        self.in_ch * self.num_filters
+    }
+
+    /// Useful (non-padding) MACs per plane-pair for a training pass.
+    pub fn useful_macs_per_plane(&self, pass: TrainingPass) -> usize {
+        let e = self.err_side();
+        match pass {
+            TrainingPass::Forward => match self.kind {
+                LayerKind::Conv => self.ofm * self.ofm * self.k * self.k,
+                // forward of a transposed-conv layer == transposed conv
+                LayerKind::TransposedConv => self.ifm * self.ifm * self.k * self.k,
+            },
+            TrainingPass::InputGrad => e * e * self.k * self.k,
+            TrainingPass::FilterGrad => self.k * self.k * e * e,
+        }
+    }
+
+    /// MACs a dense (padding-materializing) dataflow issues per plane-pair.
+    pub fn padded_macs_per_plane(&self, pass: TrainingPass) -> usize {
+        let e = self.err_side();
+        let s = self.stride;
+        let k = self.k;
+        match pass {
+            TrainingPass::Forward => match self.kind {
+                LayerKind::Conv => self.useful_macs_per_plane(pass),
+                LayerKind::TransposedConv => {
+                    // padded input side: S(N-1)+1 + 2(K-1); dense conv
+                    let d = s * (self.ifm - 1) + 1 + 2 * (k - 1);
+                    let out = d - k + 1;
+                    out * out * k * k
+                }
+            },
+            TrainingPass::InputGrad => {
+                let d = s * (e - 1) + 1 + 2 * (k - 1);
+                let out = d - k + 1;
+                out * out * k * k
+            }
+            TrainingPass::FilterGrad => {
+                let d = s * (e - 1) + 1;
+                k * k * d * d
+            }
+        }
+    }
+
+    /// Total useful MACs for a pass across channels/filters and batch.
+    pub fn useful_macs(&self, pass: TrainingPass, batch: usize) -> u64 {
+        self.useful_macs_per_plane(pass) as u64 * self.plane_pairs() as u64 * batch as u64
+    }
+
+    /// Total dense-dataflow MACs for a pass.
+    pub fn padded_macs(&self, pass: TrainingPass, batch: usize) -> u64 {
+        self.padded_macs_per_plane(pass) as u64 * self.plane_pairs() as u64 * batch as u64
+    }
+
+    /// Fraction of zero MACs a dense dataflow performs for this pass
+    /// (the paper's Fig. 3 metric).
+    pub fn zero_mac_fraction(&self, pass: TrainingPass) -> f64 {
+        let padded = self.padded_macs_per_plane(pass) as f64;
+        let useful = self.useful_macs_per_plane(pass) as f64;
+        (1.0 - useful / padded).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resnet_conv3() -> ConvLayer {
+        // Table 5: ResNet-50 CONV3 128x57x57 -> 28x28, 3x3, 128 filts, S2
+        ConvLayer::conv("ResNet-50", "CONV3", 128, 57, 28, 3, 128, 2)
+    }
+
+    #[test]
+    fn geometry_and_names() {
+        let l = resnet_conv3();
+        assert_eq!(l.full_name(), "ResNet-50 CONV3");
+        assert_eq!(l.err_side(), 28);
+        assert_eq!(l.plane_pairs(), 128 * 128);
+    }
+
+    #[test]
+    fn useful_macs_forward() {
+        let l = resnet_conv3();
+        assert_eq!(
+            l.useful_macs_per_plane(TrainingPass::Forward),
+            28 * 28 * 9
+        );
+    }
+
+    #[test]
+    fn stride2_zero_fraction_over_70pct() {
+        // paper Fig. 3: >70% zero multiplications for 2-stride convs
+        let l = resnet_conv3();
+        assert!(l.zero_mac_fraction(TrainingPass::InputGrad) > 0.70);
+        assert!(l.zero_mac_fraction(TrainingPass::FilterGrad) > 0.70);
+    }
+
+    #[test]
+    fn stride1_low_zero_fraction() {
+        let l = ConvLayer::conv("AlexNet", "CONV2", 64, 31, 27, 5, 192, 1);
+        // stride 1: no inner padding; only the transposed conv's border
+        assert_eq!(l.zero_mac_fraction(TrainingPass::FilterGrad), 0.0);
+        assert!(l.zero_mac_fraction(TrainingPass::InputGrad) < 0.5);
+    }
+
+    #[test]
+    fn optimized_variant_doubles_stride() {
+        let l = ConvLayer::conv("AlexNet", "CONV1", 3, 224, 55, 11, 64, 4);
+        let o = l.optimized_variant();
+        assert_eq!(o.stride, 8);
+        assert_eq!(o.ofm, 28);
+        assert!(o.optimized);
+        assert_eq!(o.name, "o-CONV1");
+    }
+
+    #[test]
+    fn zero_fraction_grows_with_stride() {
+        let mk = |s| ConvLayer::conv("X", "L", 1, 64, 16, 3, 1, s);
+        let f2 = mk(2).zero_mac_fraction(TrainingPass::FilterGrad);
+        let f4 = mk(4).zero_mac_fraction(TrainingPass::FilterGrad);
+        assert!(f4 > f2);
+        // quadratic-with-stride trend: 1-1/S^2 asymptote
+        assert!(f4 > 0.9);
+    }
+
+    #[test]
+    fn tconv_forward_counts_match_transpose() {
+        // CycleGAN Gen-TCONV1: 256x56x56 -> 113x113, 3x3, 128, S2
+        let l = ConvLayer::tconv("CycleGAN", "Gen-TCONV1", 256, 56, 113, 3, 128, 2);
+        assert_eq!(
+            l.useful_macs_per_plane(TrainingPass::Forward),
+            56 * 56 * 9
+        );
+        assert!(l.padded_macs_per_plane(TrainingPass::Forward)
+            > 3 * l.useful_macs_per_plane(TrainingPass::Forward));
+    }
+
+    #[test]
+    fn batch_multiplies_totals() {
+        let l = resnet_conv3();
+        assert_eq!(
+            l.useful_macs(TrainingPass::Forward, 4),
+            4 * l.useful_macs(TrainingPass::Forward, 1)
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload descriptions: convolutional layers, the CNN model zoo of the
+//! paper's Table 5 evaluation, the GAN layers of Table 7, and per-network
+//! execution-time profiles used by the Amdahl end-to-end estimator.
+
+pub mod gan;
+pub mod layer;
+pub mod profile;
+pub mod zoo;
+
+pub use layer::{ConvLayer, LayerKind, TrainingPass};

@@ -1,0 +1,178 @@
+//! Per-network execution-time profiles for the end-to-end estimator.
+//!
+//! The paper (§6.1) profiles each model on GPU/CPU to get the per-layer
+//! share of end-to-end training time, then applies Amdahl's law. We do not
+//! have their GPU testbed; the substitution (DESIGN.md §5) derives the
+//! share vector from per-layer MAC counts (compute-proportional), which is
+//! what a saturated accelerator converges to, plus a fixed share for the
+//! non-convolutional remainder (FC layers, optimizer, data movement).
+
+use super::layer::TrainingPass;
+use super::zoo::RepeatedLayer;
+
+/// Fraction of end-to-end training time spent outside conv layers
+/// (FC/BN/optimizer/host). AlexNet's big FC head gets a larger share.
+pub fn non_conv_share(net: &str) -> f64 {
+    match net {
+        "AlexNet" => 0.12,
+        "ResNet-50" => 0.05,
+        "CycleGAN" | "pix2pix" => 0.05,
+        _ => 0.08,
+    }
+}
+
+/// One phase of one layer with its share of end-to-end training time.
+#[derive(Clone, Debug)]
+pub struct PhaseShare {
+    pub layer_idx: usize,
+    pub pass: TrainingPass,
+    /// Fraction of end-to-end time under the baseline dataflow.
+    pub share: f64,
+}
+
+/// Compute per-(layer, pass) shares of end-to-end training time for a
+/// conv stack, given the baseline dataflow's per-pass MACs (dense —
+/// including padding zeros, since that is what the baseline executes).
+///
+/// Returns (shares, non_conv_share); shares + non_conv sum to 1.
+pub fn training_time_shares(
+    net: &str,
+    stack: &[RepeatedLayer],
+    batch: usize,
+) -> (Vec<PhaseShare>, f64) {
+    let nc = non_conv_share(net);
+    let mut weights = Vec::new();
+    let mut total = 0.0f64;
+    for (idx, rl) in stack.iter().enumerate() {
+        for pass in TrainingPass::ALL {
+            let macs =
+                rl.layer.padded_macs(pass, batch) as f64 * rl.count as f64;
+            weights.push((idx, pass, macs));
+            total += macs;
+        }
+    }
+    let shares = weights
+        .into_iter()
+        .map(|(layer_idx, pass, macs)| PhaseShare {
+            layer_idx,
+            pass,
+            share: (1.0 - nc) * macs / total,
+        })
+        .collect();
+    (shares, nc)
+}
+
+/// GAN end-to-end time categories (paper §6.3, Table 8 composition).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GanCategory {
+    /// Strided discriminator convs, forward (direct conv — no padding).
+    DiscForward,
+    /// Discriminator input gradients (transposed conv, padded baseline).
+    DiscInputGrad,
+    /// Discriminator filter gradients (dilated conv, padded baseline).
+    DiscFilterGrad,
+    /// Generator transposed-conv layers, forward (padded baseline).
+    GenForward,
+    /// Generator input gradients.
+    GenInputGrad,
+    /// Generator filter gradients.
+    GenFilterGrad,
+    /// Stride-1 generator body (residual / U-Net middle) — no padding
+    /// inefficiency, not meaningfully accelerable by any dataflow.
+    Body,
+    /// Non-conv remainder (losses, optimizer, host).
+    Other,
+}
+
+/// Measured-style GAN training-time shares (DESIGN.md §5 substitution for
+/// the paper's GPU/CPU profiling): strided/transposed layers carry a large
+/// share of baseline time because the baseline dataflow executes their
+/// padding zeros (~S²x inflation at stride 2).
+pub fn gan_time_shares(net: &str) -> Vec<(GanCategory, f64)> {
+    use GanCategory::*;
+    match net {
+        // CycleGAN: resnet body is heavier; pix2pix U-Net is tconv-heavier.
+        "CycleGAN" => vec![
+            (DiscForward, 0.06),
+            (DiscInputGrad, 0.12),
+            (DiscFilterGrad, 0.12),
+            (GenForward, 0.14),
+            (GenInputGrad, 0.08),
+            (GenFilterGrad, 0.12),
+            (Body, 0.31),
+            (Other, 0.05),
+        ],
+        "pix2pix" => vec![
+            (DiscForward, 0.06),
+            (DiscInputGrad, 0.11),
+            (DiscFilterGrad, 0.11),
+            (GenForward, 0.16),
+            (GenInputGrad, 0.09),
+            (GenFilterGrad, 0.12),
+            (Body, 0.30),
+            (Other, 0.05),
+        ],
+        other => panic!("unknown GAN: {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::full_network;
+
+    #[test]
+    fn gan_shares_sum_to_one_and_are_majority_accelerable() {
+        for net in ["CycleGAN", "pix2pix"] {
+            let shares = gan_time_shares(net);
+            let sum: f64 = shares.iter().map(|(_, s)| s).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{net}: {sum}");
+            let accel: f64 = shares
+                .iter()
+                .filter(|(c, _)| {
+                    !matches!(c, GanCategory::Body | GanCategory::Other)
+                })
+                .map(|(_, s)| s)
+                .sum();
+            // GANs use strides instead of pooling (paper §6.3.2), so the
+            // padded-baseline time is majority zero-inflated work.
+            assert!(accel > 0.5, "{net}: accelerable {accel}");
+        }
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        for net in ["AlexNet", "ResNet-50"] {
+            let stack = full_network(net);
+            let (shares, nc) = training_time_shares(net, &stack, 4);
+            let sum: f64 = shares.iter().map(|s| s.share).sum::<f64>() + nc;
+            assert!((sum - 1.0).abs() < 1e-9, "{net}: {sum}");
+        }
+    }
+
+    #[test]
+    fn backward_dominates_for_strided_nets() {
+        // padded backward passes cost ~S^2 more than forward for strided
+        // layers, so backward share > forward share in AlexNet
+        let stack = full_network("AlexNet");
+        let (shares, _) = training_time_shares("AlexNet", &stack, 4);
+        let fwd: f64 = shares
+            .iter()
+            .filter(|s| s.pass == TrainingPass::Forward)
+            .map(|s| s.share)
+            .sum();
+        let bwd: f64 = shares
+            .iter()
+            .filter(|s| s.pass != TrainingPass::Forward)
+            .map(|s| s.share)
+            .sum();
+        assert!(bwd > fwd);
+    }
+
+    #[test]
+    fn every_phase_present() {
+        let stack = full_network("MobileNet");
+        let (shares, _) = training_time_shares("MobileNet", &stack, 4);
+        assert_eq!(shares.len(), stack.len() * 3);
+    }
+}

@@ -1,0 +1,281 @@
+//! The CNN model zoo.
+//!
+//! [`table5_layers`] returns the eight sample layers of the paper's
+//! Table 5 verbatim; [`evaluation_layers`] extends them to the broader
+//! per-network sweeps (the paper evaluates 72 layers in total across six
+//! CNNs); `full_network(..)` returns complete per-network conv stacks used
+//! by the end-to-end Amdahl estimator (Table 6).
+
+use super::layer::ConvLayer;
+
+/// The eight sample layers of Table 5 (plus their `opt` variants where the
+/// table marks Opt = Yes).
+pub fn table5_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::conv("AlexNet", "CONV1", 3, 224, 55, 11, 64, 4),
+        ConvLayer::conv("AlexNet", "CONV2", 64, 31, 27, 5, 192, 1),
+        ConvLayer::conv("ResNet-50", "CONV3", 128, 57, 28, 3, 128, 2),
+        ConvLayer::conv("ShuffleNet", "CONV2", 58, 57, 28, 3, 58, 2),
+        ConvLayer::conv("ShuffleNet", "CONV5", 232, 7, 7, 1, 232, 1),
+        ConvLayer::conv("Inception", "CONV3", 192, 17, 8, 3, 320, 2),
+        ConvLayer::conv("Xception", "CONV3", 728, 29, 14, 3, 1, 2),
+        ConvLayer::conv("MobileNet", "CONV5", 512, 15, 7, 3, 1, 2),
+    ]
+}
+
+/// Table 5 layers with the §6.1.1 `opt` variants appended for the layers
+/// the table marks as optimizable (AlexNet CONV1/CONV2).
+pub fn table5_with_opt() -> Vec<ConvLayer> {
+    let base = table5_layers();
+    let mut out = base.clone();
+    for l in &base {
+        if l.net == "AlexNet" {
+            out.push(l.optimized_variant());
+        }
+    }
+    out
+}
+
+/// Broader per-network evaluation sweep (a representative subset of the
+/// paper's 72 layers: every distinct conv shape of each network).
+pub fn evaluation_layers() -> Vec<ConvLayer> {
+    let mut v = table5_with_opt();
+    v.extend([
+        ConvLayer::conv("AlexNet", "CONV3", 192, 15, 13, 3, 384, 1),
+        ConvLayer::conv("AlexNet", "CONV4", 384, 15, 13, 3, 256, 1),
+        ConvLayer::conv("AlexNet", "CONV5", 256, 15, 13, 3, 256, 1),
+        ConvLayer::conv("ResNet-50", "CONV1", 3, 230, 112, 7, 64, 2),
+        ConvLayer::conv("ResNet-50", "CONV2", 64, 56, 56, 3, 64, 1),
+        ConvLayer::conv("ResNet-50", "CONV4", 256, 29, 14, 3, 256, 2),
+        ConvLayer::conv("ResNet-50", "CONV5", 512, 15, 7, 3, 512, 2),
+        ConvLayer::conv("ShuffleNet", "CONV1", 3, 225, 112, 3, 24, 2),
+        ConvLayer::conv("ShuffleNet", "CONV3", 116, 29, 14, 3, 116, 2),
+        ConvLayer::conv("Inception", "CONV1", 3, 299, 149, 3, 32, 2),
+        ConvLayer::conv("Inception", "CONV2", 80, 73, 71, 3, 192, 1),
+        ConvLayer::conv("Xception", "CONV1", 3, 299, 149, 3, 32, 2),
+        ConvLayer::conv("Xception", "CONV2", 64, 147, 147, 3, 128, 1),
+        ConvLayer::conv("MobileNet", "CONV1", 3, 225, 112, 3, 32, 2),
+        ConvLayer::conv("MobileNet", "CONV3", 128, 57, 28, 3, 128, 2),
+    ]);
+    v
+}
+
+/// Networks with full conv stacks available via [`full_network`].
+pub const NETWORKS: [&str; 6] = [
+    "AlexNet",
+    "ResNet-50",
+    "ShuffleNet",
+    "Inception",
+    "Xception",
+    "MobileNet",
+];
+
+/// A layer plus its repeat count within the network (bottleneck blocks
+/// etc. repeat the same conv shape many times).
+#[derive(Clone, Debug)]
+pub struct RepeatedLayer {
+    pub layer: ConvLayer,
+    pub count: usize,
+    /// True if the layer is followed by a pooling layer in the original
+    /// topology (candidate for the §6.1.1 stride optimization).
+    pub followed_by_pool: bool,
+}
+
+impl RepeatedLayer {
+    fn new(layer: ConvLayer, count: usize, followed_by_pool: bool) -> Self {
+        Self {
+            layer,
+            count,
+            followed_by_pool,
+        }
+    }
+}
+
+/// Full (collapsed) conv stack for one of [`NETWORKS`].
+///
+/// Shapes follow the published topologies with repeated block shapes
+/// collapsed into `count`; spatial sides are the standard ImageNet ones.
+pub fn full_network(net: &str) -> Vec<RepeatedLayer> {
+    let c = ConvLayer::conv;
+    match net {
+        "AlexNet" => vec![
+            // 227-pixel exact-fit framing of the canonical 224+pad layer
+            RepeatedLayer::new(c("AlexNet", "CONV1", 3, 227, 55, 11, 64, 4), 1, true),
+            RepeatedLayer::new(c("AlexNet", "CONV2", 64, 31, 27, 5, 192, 1), 1, true),
+            RepeatedLayer::new(c("AlexNet", "CONV3", 192, 15, 13, 3, 384, 1), 1, false),
+            RepeatedLayer::new(c("AlexNet", "CONV4", 384, 15, 13, 3, 256, 1), 1, false),
+            RepeatedLayer::new(c("AlexNet", "CONV5", 256, 15, 13, 3, 256, 1), 1, true),
+        ],
+        "ResNet-50" => vec![
+            RepeatedLayer::new(c("ResNet-50", "CONV1", 3, 230, 112, 7, 64, 2), 1, true),
+            // stage 1: 3 bottlenecks at 56x56
+            RepeatedLayer::new(c("ResNet-50", "S1-1x1a", 64, 56, 56, 1, 64, 1), 3, false),
+            RepeatedLayer::new(c("ResNet-50", "S1-3x3", 64, 58, 56, 3, 64, 1), 3, false),
+            RepeatedLayer::new(c("ResNet-50", "S1-1x1b", 64, 56, 56, 1, 256, 1), 3, false),
+            // stage 2: 4 bottlenecks at 28x28 (first 3x3 has stride 2)
+            RepeatedLayer::new(c("ResNet-50", "S2-3x3s2", 128, 57, 28, 3, 128, 2), 1, false),
+            RepeatedLayer::new(c("ResNet-50", "S2-3x3", 128, 30, 28, 3, 128, 1), 3, false),
+            RepeatedLayer::new(c("ResNet-50", "S2-1x1", 128, 28, 28, 1, 512, 1), 4, false),
+            // stage 3: 6 bottlenecks at 14x14
+            RepeatedLayer::new(c("ResNet-50", "S3-3x3s2", 256, 29, 14, 3, 256, 2), 1, false),
+            RepeatedLayer::new(c("ResNet-50", "S3-3x3", 256, 16, 14, 3, 256, 1), 5, false),
+            RepeatedLayer::new(c("ResNet-50", "S3-1x1", 256, 14, 14, 1, 1024, 1), 6, false),
+            // stage 4: 3 bottlenecks at 7x7
+            RepeatedLayer::new(c("ResNet-50", "S4-3x3s2", 512, 15, 7, 3, 512, 2), 1, false),
+            RepeatedLayer::new(c("ResNet-50", "S4-3x3", 512, 9, 7, 3, 512, 1), 2, false),
+            RepeatedLayer::new(c("ResNet-50", "S4-1x1", 512, 7, 7, 1, 2048, 1), 3, false),
+        ],
+        "ShuffleNet" => vec![
+            RepeatedLayer::new(c("ShuffleNet", "CONV1", 3, 225, 112, 3, 24, 2), 1, true),
+            RepeatedLayer::new(c("ShuffleNet", "CONV2", 58, 57, 28, 3, 58, 2), 1, false),
+            RepeatedLayer::new(c("ShuffleNet", "S2", 58, 30, 28, 3, 58, 1), 3, false),
+            RepeatedLayer::new(c("ShuffleNet", "CONV3", 116, 29, 14, 3, 116, 2), 1, false),
+            RepeatedLayer::new(c("ShuffleNet", "S3", 116, 16, 14, 3, 116, 1), 7, false),
+            RepeatedLayer::new(c("ShuffleNet", "CONV4", 232, 15, 7, 3, 232, 2), 1, false),
+            RepeatedLayer::new(c("ShuffleNet", "S4", 232, 9, 7, 3, 232, 1), 3, false),
+            RepeatedLayer::new(c("ShuffleNet", "CONV5", 232, 7, 7, 1, 232, 1), 1, false),
+        ],
+        "Inception" => vec![
+            RepeatedLayer::new(c("Inception", "CONV1", 3, 299, 149, 3, 32, 2), 1, false),
+            RepeatedLayer::new(c("Inception", "CONV2a", 32, 149, 147, 3, 32, 1), 1, false),
+            RepeatedLayer::new(c("Inception", "CONV2b", 32, 149, 147, 3, 64, 1), 1, true),
+            RepeatedLayer::new(c("Inception", "CONV2c", 80, 73, 71, 3, 192, 1), 1, true),
+            RepeatedLayer::new(c("Inception", "MIX5", 192, 37, 35, 3, 64, 1), 9, false),
+            RepeatedLayer::new(c("Inception", "CONV3", 192, 17, 8, 3, 320, 2), 1, false),
+            RepeatedLayer::new(c("Inception", "MIX6", 768, 17, 17, 1, 192, 1), 12, false),
+            RepeatedLayer::new(c("Inception", "MIX7", 1280, 8, 8, 1, 320, 1), 6, false),
+        ],
+        "Xception" => vec![
+            RepeatedLayer::new(c("Xception", "CONV1", 3, 299, 149, 3, 32, 2), 1, false),
+            RepeatedLayer::new(c("Xception", "CONV2", 32, 149, 147, 3, 64, 1), 1, false),
+            // depthwise-separable entry blocks (depthwise: 1 filter/channel)
+            RepeatedLayer::new(c("Xception", "SEP-DW1", 128, 149, 147, 3, 1, 1), 2, true),
+            RepeatedLayer::new(c("Xception", "SEP-PW1", 128, 74, 74, 1, 128, 1), 2, false),
+            RepeatedLayer::new(c("Xception", "CONV3", 728, 29, 14, 3, 1, 2), 1, false),
+            RepeatedLayer::new(c("Xception", "MID-DW", 728, 21, 19, 3, 1, 1), 24, false),
+            RepeatedLayer::new(c("Xception", "MID-PW", 728, 19, 19, 1, 728, 1), 24, false),
+        ],
+        "MobileNet" => vec![
+            RepeatedLayer::new(c("MobileNet", "CONV1", 3, 225, 112, 3, 32, 2), 1, false),
+            RepeatedLayer::new(c("MobileNet", "DW2", 32, 114, 112, 3, 1, 1), 1, false),
+            RepeatedLayer::new(c("MobileNet", "PW2", 32, 112, 112, 1, 64, 1), 1, false),
+            RepeatedLayer::new(c("MobileNet", "DW3", 64, 113, 56, 3, 1, 2), 1, false),
+            RepeatedLayer::new(c("MobileNet", "PW3", 64, 56, 56, 1, 128, 1), 1, false),
+            RepeatedLayer::new(c("MobileNet", "DW4", 128, 57, 28, 3, 1, 2), 1, false),
+            RepeatedLayer::new(c("MobileNet", "PW4", 128, 28, 28, 1, 256, 1), 2, false),
+            RepeatedLayer::new(c("MobileNet", "CONV3", 128, 57, 28, 3, 128, 2), 1, false),
+            RepeatedLayer::new(c("MobileNet", "DW5", 256, 29, 14, 3, 1, 2), 1, false),
+            RepeatedLayer::new(c("MobileNet", "PW5", 256, 14, 14, 1, 512, 1), 5, false),
+            RepeatedLayer::new(c("MobileNet", "CONV5", 512, 15, 7, 3, 1, 2), 1, false),
+            RepeatedLayer::new(c("MobileNet", "PW6", 512, 7, 7, 1, 1024, 1), 1, false),
+        ],
+        other => panic!("unknown network: {other}"),
+    }
+}
+
+/// Apply the §6.1.1 optimization to a full network: layers followed by a
+/// pooling layer get their stride doubled (and the pool removed).
+pub fn optimized_network(net: &str) -> Vec<RepeatedLayer> {
+    full_network(net)
+        .into_iter()
+        .map(|mut rl| {
+            if rl.followed_by_pool {
+                rl.layer = rl.layer.optimized_variant();
+                rl.followed_by_pool = false;
+            }
+            rl
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::TrainingPass;
+
+    #[test]
+    fn table5_has_eight_layers_matching_paper() {
+        let v = table5_layers();
+        assert_eq!(v.len(), 8);
+        let a = &v[0];
+        assert_eq!((a.ifm, a.ofm, a.k, a.num_filters, a.stride), (224, 55, 11, 64, 4));
+        let x = v.iter().find(|l| l.net == "Xception").unwrap();
+        assert_eq!(x.num_filters, 1); // depthwise
+    }
+
+    #[test]
+    fn opt_variants_only_for_alexnet() {
+        let v = table5_with_opt();
+        assert_eq!(v.len(), 10);
+        assert!(v.iter().filter(|l| l.optimized).all(|l| l.net == "AlexNet"));
+    }
+
+    #[test]
+    fn all_networks_build() {
+        for net in NETWORKS {
+            let stack = full_network(net);
+            assert!(!stack.is_empty(), "{net}");
+            for rl in &stack {
+                assert!(rl.count >= 1);
+                assert!(rl.layer.ifm >= rl.layer.k);
+                // geometry sanity: ofm consistent with VALID strided conv
+                let derived = (rl.layer.ifm - rl.layer.k) / rl.layer.stride + 1;
+                assert_eq!(
+                    derived,
+                    rl.layer.ofm,
+                    "{} {}: ifm={} k={} s={} -> {} != {}",
+                    net,
+                    rl.layer.name,
+                    rl.layer.ifm,
+                    rl.layer.k,
+                    rl.layer.stride,
+                    derived,
+                    rl.layer.ofm
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn alexnet_dominated_by_strided_after_opt() {
+        // Paper §6.2.1: >80% of AlexNet's baseline execution time goes to
+        // layers followed by pooling or with stride > 1. The baseline
+        // dataflow executes the *padded* MACs, so weight by those, summed
+        // over all three training passes.
+        let opt = optimized_network("AlexNet");
+        let time = |rl: &RepeatedLayer| -> u64 {
+            TrainingPass::ALL
+                .iter()
+                .map(|p| rl.layer.padded_macs(*p, 1) * rl.count as u64)
+                .sum()
+        };
+        let total: u64 = opt.iter().map(time).sum();
+        let strided: u64 = opt.iter().filter(|rl| rl.layer.stride > 1).map(time).sum();
+        assert!(
+            strided as f64 / total as f64 > 0.7,
+            "{}",
+            strided as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn resnet_mostly_stride1() {
+        let stack = full_network("ResNet-50");
+        let total: u64 = stack
+            .iter()
+            .map(|rl| rl.layer.useful_macs(TrainingPass::Forward, 1) * rl.count as u64)
+            .sum();
+        let s1: u64 = stack
+            .iter()
+            .filter(|rl| rl.layer.stride == 1)
+            .map(|rl| rl.layer.useful_macs(TrainingPass::Forward, 1) * rl.count as u64)
+            .sum();
+        assert!(s1 as f64 / total as f64 > 0.7);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown network")]
+    fn unknown_network_panics() {
+        full_network("VGG-19");
+    }
+}

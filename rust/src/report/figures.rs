@@ -1,0 +1,176 @@
+//! Figure regenerators (Figs. 3, 8, 9, 10, 11, 12).
+
+use crate::analysis::zeros;
+use crate::compiler::Dataflow;
+use crate::coordinator::scheduler::{job_matrix, run_sweep, SweepJob, SweepResult};
+use crate::energy::{DramModel, EnergyParams};
+use crate::model::{gan, zoo, ConvLayer, TrainingPass};
+use crate::util::table::{pct, ratio, Table};
+
+/// Paper batch size (§6.2).
+pub const BATCH: usize = 4;
+
+/// Fig. 3: padding-induced zero multiplications vs stride.
+pub fn fig3_zero_mults() -> Table {
+    let mut t = Table::new(
+        "Fig 3 — zero multiplications in transpose/dilated convolutions",
+        &["layer (re-strided)", "stride", "input-grad zeros", "filter-grad zeros"],
+    );
+    for (label, s, ig, fg) in zeros::fig3_rows() {
+        t.row(vec![label, s.to_string(), pct(ig), pct(fg)]);
+    }
+    t
+}
+
+fn speedup_table(
+    title: &str,
+    layers: &[ConvLayer],
+    pass: TrainingPass,
+    threads: usize,
+) -> Table {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let flows = [Dataflow::Tpu, Dataflow::RowStationary, Dataflow::EcoFlow];
+    let jobs: Vec<SweepJob> = layers
+        .iter()
+        .flat_map(|l| {
+            flows.map(|flow| SweepJob {
+                layer: l.clone(),
+                pass,
+                flow,
+                batch: BATCH,
+            })
+        })
+        .collect();
+    let results = run_sweep(&params, &dram, jobs, threads);
+    let mut t = Table::new(
+        title,
+        &["layer", "stride", "TPU (ms)", "RS vs TPU", "EcoFlow vs TPU"],
+    );
+    for chunk in results.chunks(3) {
+        let tpu = chunk[0].cost.as_ref().expect("tpu cost");
+        let rs = chunk[1].cost.as_ref().expect("rs cost");
+        let ef = chunk[2].cost.as_ref().expect("ecoflow cost");
+        t.row(vec![
+            chunk[0].job.layer.full_name(),
+            chunk[0].job.layer.stride.to_string(),
+            format!("{:.2}", tpu.millis()),
+            ratio(tpu.seconds / rs.seconds),
+            ratio(tpu.seconds / ef.seconds),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8: input-gradient speedups over the Table 5 layer set.
+pub fn fig8_input_grad(threads: usize) -> Table {
+    speedup_table(
+        "Fig 8 — input-gradient speedup (normalized to TPU)",
+        &zoo::table5_with_opt(),
+        TrainingPass::InputGrad,
+        threads,
+    )
+}
+
+/// Fig. 9: filter-gradient speedups.
+pub fn fig9_filter_grad(threads: usize) -> Table {
+    speedup_table(
+        "Fig 9 — filter-gradient speedup (normalized to TPU)",
+        &zoo::table5_with_opt(),
+        TrainingPass::FilterGrad,
+        threads,
+    )
+}
+
+fn energy_rows(t: &mut Table, results: &[SweepResult]) {
+    for r in results {
+        let c = r.cost.as_ref().expect("cost");
+        let e = c.energy;
+        t.row(vec![
+            format!("{} [{}]", r.job.layer.full_name(), r.job.pass.name()),
+            r.job.flow.name().to_string(),
+            format!("{:.1}", e.total_uj()),
+            format!("{:.1}", e.dram_pj * 1e-6),
+            format!("{:.1}", e.gbuf_pj * 1e-6),
+            format!("{:.1}", e.spad_pj * 1e-6),
+            format!("{:.1}", e.alu_pj * 1e-6),
+            format!("{:.1}", e.noc_pj * 1e-6),
+        ]);
+    }
+}
+
+/// Fig. 10: energy breakdown of the CNN gradient calculations.
+pub fn fig10_energy(threads: usize) -> Table {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let layers = zoo::table5_with_opt();
+    let mut jobs = Vec::new();
+    for pass in [TrainingPass::InputGrad, TrainingPass::FilterGrad] {
+        for l in &layers {
+            for flow in [Dataflow::Tpu, Dataflow::RowStationary, Dataflow::EcoFlow] {
+                jobs.push(SweepJob {
+                    layer: l.clone(),
+                    pass,
+                    flow,
+                    batch: BATCH,
+                });
+            }
+        }
+    }
+    let results = run_sweep(&params, &dram, jobs, threads);
+    let mut t = Table::new(
+        "Fig 10 — energy breakdown (uJ): DRAM/GBUFF/SPAD/ALU/NoC",
+        &["layer [pass]", "flow", "total", "DRAM", "GBUFF", "SPAD", "ALU", "NoC"],
+    );
+    energy_rows(&mut t, &results);
+    t
+}
+
+/// Fig. 11: GAN layer execution time across RS/TPU/GANAX/EcoFlow.
+pub fn fig11_gan_time(threads: usize) -> Table {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let jobs = job_matrix(&gan::table7_layers(), &Dataflow::ALL, BATCH);
+    let results = run_sweep(&params, &dram, jobs, threads);
+    let mut t = Table::new(
+        "Fig 11 — GAN layer execution time (normalized to RS)",
+        &["layer [pass]", "RS (ms)", "TPU", "GANAX", "EcoFlow"],
+    );
+    for chunk in results.chunks(4) {
+        // job_matrix flow order == Dataflow::ALL = [RS, TPU, EcoFlow, GANAX]
+        let rs = chunk[0].cost.as_ref().expect("rs");
+        let tpu = chunk[1].cost.as_ref().expect("tpu");
+        let ef = chunk[2].cost.as_ref().expect("ef");
+        let gx = chunk[3].cost.as_ref().expect("gx");
+        t.row(vec![
+            format!(
+                "{} [{}]",
+                chunk[0].job.layer.full_name(),
+                chunk[0].job.pass.name()
+            ),
+            format!("{:.2}", rs.millis()),
+            ratio(rs.seconds / tpu.seconds),
+            ratio(rs.seconds / gx.seconds),
+            ratio(rs.seconds / ef.seconds),
+        ]);
+    }
+    t
+}
+
+/// Fig. 12: GAN layer energy breakdown.
+pub fn fig12_gan_energy(threads: usize) -> Table {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let jobs = job_matrix(
+        &gan::table7_layers(),
+        &[Dataflow::Tpu, Dataflow::RowStationary, Dataflow::EcoFlow],
+        BATCH,
+    );
+    let results = run_sweep(&params, &dram, jobs, threads);
+    let mut t = Table::new(
+        "Fig 12 — GAN layer energy breakdown (uJ)",
+        &["layer [pass]", "flow", "total", "DRAM", "GBUFF", "SPAD", "ALU", "NoC"],
+    );
+    energy_rows(&mut t, &results);
+    t
+}

@@ -1,0 +1,9 @@
+//! Report generators: every table and figure of the paper's evaluation,
+//! regenerated from the simulator and analytic models as ASCII tables
+//! (and CSV via [`crate::util::table::Table::to_csv`]).
+//!
+//! Each `figN_*` / `tableN_*` function corresponds to one entry of the
+//! DESIGN.md experiment index and is wrapped by a same-named bench target.
+
+pub mod figures;
+pub mod tables;

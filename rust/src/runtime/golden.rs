@@ -1,0 +1,100 @@
+//! Cross-language golden validation: the SASiML dataflows, the in-process
+//! Rust oracles, and the AOT-compiled JAX/Pallas kernels (through PJRT)
+//! must all agree on the same inputs.
+//!
+//! This is the three-layer composition proof: L1 Pallas kernels lowered
+//! into L2 JAX graphs, executed by L3 Rust, checked against the L3
+//! simulator's functional output.
+
+use anyhow::Result;
+
+use super::pjrt::Engine;
+use crate::compiler::{ecoflow, rs, tpu};
+use crate::config::ArchConfig;
+use crate::tensor::{conv, Mat};
+use crate::util::prng::Prng;
+
+/// A golden configuration baked into the artifacts (see aot.py GOLDEN).
+#[derive(Clone, Copy, Debug)]
+pub struct GoldenCfg {
+    pub tag: &'static str,
+    pub h: usize,
+    pub k: usize,
+    pub s: usize,
+}
+
+/// The configurations aot.py emits.
+pub const GOLDEN_CFGS: [GoldenCfg; 5] = [
+    GoldenCfg { tag: "15_3_2", h: 15, k: 3, s: 2 },
+    GoldenCfg { tag: "13_3_1", h: 13, k: 3, s: 1 },
+    GoldenCfg { tag: "13_5_4", h: 13, k: 5, s: 4 },
+    GoldenCfg { tag: "11_4_1", h: 11, k: 4, s: 1 },
+    GoldenCfg { tag: "19_5_2", h: 19, k: 5, s: 2 },
+];
+
+/// Result of validating one golden config.
+#[derive(Clone, Debug)]
+pub struct GoldenReport {
+    pub tag: &'static str,
+    pub direct_max_err: f32,
+    pub tconv_max_err: f32,
+    pub fgrad_max_err: f32,
+}
+
+/// Validate one config: JAX-through-PJRT vs Rust oracle vs every SASiML
+/// dataflow. Returns the max abs deviation of the JAX outputs from the
+/// oracle (sim outputs are asserted with the same tolerance).
+pub fn validate_cfg(
+    engine: &mut Engine,
+    arch: &ArchConfig,
+    cfg: GoldenCfg,
+    seed: u64,
+) -> Result<GoldenReport> {
+    let mut rng = Prng::new(seed);
+    let he = (cfg.h - cfg.k) / cfg.s + 1;
+    let x = Mat::random(cfg.h, cfg.h, &mut rng);
+    let w = Mat::random(cfg.k, cfg.k, &mut rng);
+    let e = Mat::random(he, he, &mut rng);
+    let tol = 1e-3;
+
+    // direct conv
+    let want_d = conv::direct_conv(&x, &w, cfg.s);
+    let jax_d = &engine.run_mats(&format!("golden_direct_{}", cfg.tag), &[x.clone(), w.clone()])?[0];
+    jax_d.assert_close(&want_d, tol);
+    let (sim_rs, _) = rs::direct_pass(arch, &x, &w, cfg.s)?;
+    sim_rs.assert_close(&want_d, tol);
+    let (sim_tpu, _) = tpu::direct_pass(arch, &x, &w, cfg.s);
+    sim_tpu.assert_close(&want_d, tol);
+
+    // transposed conv (input gradients)
+    let want_t = conv::transposed_conv(&e, &w, cfg.s);
+    let jax_t = &engine.run_mats(&format!("golden_tconv_{}", cfg.tag), &[e.clone(), w.clone()])?[0];
+    jax_t.assert_close(&want_t, tol);
+    let (sim_et, _) = ecoflow::transpose_pass(arch, &e, &w, cfg.s)?;
+    sim_et.assert_close(&want_t, tol);
+    let (sim_rt, _) = rs::transpose_via_padding(arch, &e, &w, cfg.s)?;
+    sim_rt.assert_close(&want_t, tol);
+
+    // dilated conv (filter gradients)
+    let want_f = conv::dilated_conv(&x, &e, cfg.s);
+    let jax_f = &engine.run_mats(&format!("golden_fgrad_{}", cfg.tag), &[x.clone(), e.clone()])?[0];
+    jax_f.assert_close(&want_f, tol);
+    let (sim_ef, _) = ecoflow::filter_grad_pass(arch, &x, &e, cfg.s)?;
+    sim_ef.assert_close(&want_f, tol);
+
+    Ok(GoldenReport {
+        tag: cfg.tag,
+        direct_max_err: jax_d.max_abs_diff(&want_d),
+        tconv_max_err: jax_t.max_abs_diff(&want_t),
+        fgrad_max_err: jax_f.max_abs_diff(&want_f),
+    })
+}
+
+/// Validate every golden config; returns per-config reports.
+pub fn validate_all(engine: &mut Engine, arch: &ArchConfig) -> Result<Vec<GoldenReport>> {
+    GOLDEN_CFGS
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| validate_cfg(engine, arch, *cfg, 0x60_1D + i as u64))
+        .collect()
+}

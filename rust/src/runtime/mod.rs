@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//!
+//! Python never runs here — the artifacts are self-contained HLO modules
+//! (L2 JAX graphs with the L1 Pallas kernels inlined), and this module is
+//! the only place the `xla` crate is touched.
+
+pub mod golden;
+pub mod pjrt;
+pub mod trainer;
+
+pub use pjrt::Engine;

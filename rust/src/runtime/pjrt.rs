@@ -1,0 +1,198 @@
+//! Thin wrapper over the `xla` crate: manifest-driven loading of HLO-text
+//! artifacts, lazy compilation, execution with `Mat`-friendly helpers.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Mat;
+
+/// One manifest entry: artifact name, file, input arity and shapes.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub arity: usize,
+    pub shapes: Vec<String>,
+}
+
+/// Parse `artifacts/manifest.txt` (written by aot.py).
+pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt"))
+        .with_context(|| format!("reading manifest in {}", dir.display()))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() != 4 {
+            return Err(anyhow!("bad manifest line: {line}"));
+        }
+        out.push(ManifestEntry {
+            name: parts[0].to_string(),
+            file: parts[1].to_string(),
+            arity: parts[2].parse()?,
+            shapes: parts[3].split(';').map(str::to_string).collect(),
+        });
+    }
+    Ok(out)
+}
+
+/// The PJRT execution engine: one CPU client, lazily compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ManifestEntry>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = read_manifest(dir)?
+            .into_iter()
+            .map(|e| (e.name.clone(), e))
+            .collect();
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// PJRT platform (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on literal inputs; returns the flattened tuple
+    /// of outputs (aot.py lowers with return_tuple=True).
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let entry = &self.manifest[name];
+        if inputs.len() != entry.arity {
+            return Err(anyhow!(
+                "{name}: got {} inputs, expected {}",
+                inputs.len(),
+                entry.arity
+            ));
+        }
+        let exe = &self.compiled[name];
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute on 2-D matrices, returning 2-D matrices (shape metadata
+    /// from the result literals).
+    pub fn run_mats(&mut self, name: &str, inputs: &[Mat]) -> Result<Vec<Mat>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(mat_to_literal)
+            .collect::<Result<_>>()?;
+        let outs = self.run(name, &lits)?;
+        outs.iter().map(literal_to_mat).collect()
+    }
+}
+
+/// Convert a [`Mat`] to an f32 XLA literal of the same 2-D shape.
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// Convert an f32 literal (rank <= 2) to a [`Mat`].
+pub fn literal_to_mat(l: &xla::Literal) -> Result<Mat> {
+    let shape = l.array_shape()?;
+    let dims = shape.dims();
+    let data: Vec<f32> = l.to_vec()?;
+    let (rows, cols) = match dims.len() {
+        0 => (1, 1),
+        1 => (1, dims[0] as usize),
+        2 => (dims[0] as usize, dims[1] as usize),
+        n => return Err(anyhow!("rank-{n} literal is not a Mat")),
+    };
+    Ok(Mat::from_slice(rows, cols, &data))
+}
+
+/// Build an f32 literal of arbitrary rank from flat data.
+pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch");
+    let dims: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of arbitrary rank from flat data.
+pub fn literal_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch");
+    let dims: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Default artifacts directory: `$ECOFLOW_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("ECOFLOW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let m = read_manifest(&dir).unwrap();
+        assert!(m.iter().any(|e| e.name.starts_with("golden_direct")));
+        assert!(m.iter().any(|e| e.name == "train_step_stride"));
+        let g = m.iter().find(|e| e.name == "golden_direct_15_3_2").unwrap();
+        assert_eq!(g.arity, 2);
+    }
+
+    #[test]
+    fn literal_mat_round_trip() {
+        let m = Mat::from_fn(3, 4, |r, c| (r * 4 + c) as f32);
+        let l = mat_to_literal(&m).unwrap();
+        let back = literal_to_mat(&l).unwrap();
+        assert_eq!(m, back);
+    }
+}

@@ -1,0 +1,184 @@
+//! AOT training driver: runs the small-CNN SGD step (an HLO artifact
+//! whose forward uses the Pallas direct-conv kernel and whose backward
+//! uses the EcoFlow transposed/dilated kernels — see python/compile/) from
+//! Rust through PJRT, on Rust-generated synthetic data.
+//!
+//! Used by the end-to-end example (examples/cnn_training_e2e.rs) and the
+//! Table 4 bench (pooling vs larger-stride accuracy comparison).
+
+use anyhow::{anyhow, Result};
+
+use super::pjrt::{literal_f32, literal_i32, Engine};
+use crate::util::prng::Prng;
+
+pub const IMG: usize = 15;
+pub const IN_CH: usize = 3;
+pub const NUM_CLASSES: usize = 4;
+pub const BATCH_TRAIN: usize = 16;
+pub const BATCH_EVAL: usize = 64;
+
+/// Model topology variant (paper Table 4): stride-downsampling vs pooling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Stride,
+    Pool,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Stride => "stride",
+            Variant::Pool => "pool",
+        }
+    }
+
+    fn feature_dim(&self) -> usize {
+        match self {
+            Variant::Stride => 16 * 3 * 3,
+            Variant::Pool => 16 * 2 * 2,
+        }
+    }
+}
+
+/// Synthetic class-conditional dataset (mirrors model.synthetic_batch in
+/// spirit; exact pixels differ — only learnability matters).
+pub fn synthetic_batch(
+    rng: &mut Prng,
+    batch: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = vec![0.0f32; batch * IN_CH * IMG * IMG];
+    let mut ys = vec![0i32; batch];
+    for b in 0..batch {
+        let y = rng.below(NUM_CLASSES);
+        ys[b] = y as i32;
+        for c in 0..IN_CH {
+            for i in 0..IMG {
+                for j in 0..IMG {
+                    let base = match y {
+                        0 => i as f32 / IMG as f32,
+                        1 => j as f32 / IMG as f32,
+                        2 => (-(((i as f32 - 7.0).powi(2)
+                            + (j as f32 - 7.0).powi(2))
+                            / 18.0))
+                            .exp(),
+                        _ => ((i + j) % 2) as f32,
+                    };
+                    let idx = ((b * IN_CH + c) * IMG + i) * IMG + j;
+                    xs[idx] = base + 0.35 * rng.normal();
+                }
+            }
+        }
+    }
+    (xs, ys)
+}
+
+/// Model parameters held as Rust-side f32 buffers.
+pub struct Trainer {
+    pub variant: Variant,
+    params: Vec<(Vec<usize>, Vec<f32>)>,
+    pub losses: Vec<f32>,
+}
+
+impl Trainer {
+    /// He-style init (deterministic from the seed).
+    pub fn new(variant: Variant, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let feat = variant.feature_dim();
+        let mut init = |dims: Vec<usize>, scale: f32| {
+            let n: usize = dims.iter().product();
+            let data = (0..n).map(|_| scale * rng.normal()).collect();
+            (dims, data)
+        };
+        let params = vec![
+            init(vec![8, IN_CH, 3, 3], 0.35),
+            (vec![8], vec![0.0; 8]),
+            init(vec![16, 8, 3, 3], 0.18),
+            (vec![16], vec![0.0; 16]),
+            init(vec![feat, NUM_CLASSES], 0.2),
+            (vec![NUM_CLASSES], vec![0.0; NUM_CLASSES]),
+        ];
+        Self {
+            variant,
+            params,
+            losses: Vec::new(),
+        }
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .map(|(dims, data)| literal_f32(dims, data))
+            .collect()
+    }
+
+    /// One SGD step on a synthetic batch; records and returns the loss.
+    pub fn step(&mut self, engine: &mut Engine, rng: &mut Prng) -> Result<f32> {
+        let (xs, ys) = synthetic_batch(rng, BATCH_TRAIN);
+        let mut inputs = self.param_literals()?;
+        inputs.push(literal_f32(&[BATCH_TRAIN, IN_CH, IMG, IMG], &xs)?);
+        inputs.push(literal_i32(&[BATCH_TRAIN], &ys)?);
+        let name = format!("train_step_{}", self.variant.name());
+        let outs = engine.run(&name, &inputs)?;
+        if outs.len() != self.params.len() + 1 {
+            return Err(anyhow!(
+                "train step returned {} outputs, expected {}",
+                outs.len(),
+                self.params.len() + 1
+            ));
+        }
+        for (i, lit) in outs[..self.params.len()].iter().enumerate() {
+            self.params[i].1 = lit.to_vec::<f32>()?;
+        }
+        let loss: f32 = outs[self.params.len()].to_vec::<f32>()?[0];
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Accuracy on a fresh synthetic eval batch via the logits artifact.
+    pub fn eval_accuracy(&self, engine: &mut Engine, rng: &mut Prng) -> Result<f64> {
+        let (xs, ys) = synthetic_batch(rng, BATCH_EVAL);
+        let mut inputs = self.param_literals()?;
+        inputs.push(literal_f32(&[BATCH_EVAL, IN_CH, IMG, IMG], &xs)?);
+        let name = format!("logits_{}", self.variant.name());
+        let outs = engine.run(&name, &inputs)?;
+        let logits: Vec<f32> = outs[0].to_vec()?;
+        let mut correct = 0usize;
+        for b in 0..BATCH_EVAL {
+            let row = &logits[b * NUM_CLASSES..(b + 1) * NUM_CLASSES];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap();
+            if pred as i32 == ys[b] {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / BATCH_EVAL as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_batch_shapes_and_labels() {
+        let mut rng = Prng::new(1);
+        let (xs, ys) = synthetic_batch(&mut rng, 8);
+        assert_eq!(xs.len(), 8 * IN_CH * IMG * IMG);
+        assert_eq!(ys.len(), 8);
+        assert!(ys.iter().all(|y| (0..NUM_CLASSES as i32).contains(y)));
+    }
+
+    #[test]
+    fn trainer_param_shapes() {
+        let t = Trainer::new(Variant::Stride, 0);
+        assert_eq!(t.params.len(), 6);
+        assert_eq!(t.params[0].0, vec![8, IN_CH, 3, 3]);
+        assert_eq!(t.params[4].0, vec![16 * 9, NUM_CLASSES]);
+        let p = Trainer::new(Variant::Pool, 0);
+        assert_eq!(p.params[4].0, vec![16 * 4, NUM_CLASSES]);
+    }
+}

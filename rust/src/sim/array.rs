@@ -1,0 +1,533 @@
+//! The microprogrammed PE-array simulator (Eyeriss/EcoFlow PE variant).
+//!
+//! Synchronous digital model: every cycle, each PE tries to execute its
+//! next micro-instruction (stalling on empty operand queues, full
+//! downstream queues, or GON arbitration), then the buses deliver the next
+//! scheduled words (filter broadcast + ifmap/error multicast) subject to
+//! the Table 1 bandwidths. NoC hop latency is one cycle: a word delivered
+//! in cycle *t* is consumable in cycle *t+1*.
+//!
+//! The simulator is functional: real f32 values flow, and the assembled
+//! output matrix is returned for comparison against the golden
+//! convolutions — this is how a dataflow implementation is validated "at
+//! microprogramming level" (paper §5.1).
+
+use std::collections::VecDeque;
+
+use super::microprogram::{Microprogram, Operands, PeInstr, WSrc, XSrc};
+use super::stats::PassStats;
+use crate::config::ArchConfig;
+use crate::tensor::Mat;
+
+/// Simulation failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("microprogram invalid: {0:?}")]
+    Invalid(Vec<String>),
+    #[error("deadlock at cycle {cycle}: {detail}")]
+    Deadlock { cycle: u64, detail: String },
+    #[error("cycle limit {0} exceeded")]
+    CycleLimit(u64),
+    #[error("output element {0} never written")]
+    IncompleteOutput(usize),
+}
+
+struct PeState {
+    ip: usize,
+    acc: Vec<f32>,
+    w_queue: VecDeque<f32>,
+    x_queue: VecDeque<f32>,
+    south_in: VecDeque<f32>,
+    w_hold: f32,
+    x_hold: f32,
+    w_regs: Vec<f32>,
+    x_regs: Vec<f32>,
+}
+
+/// The array simulator. Construct once per (arch, program) and [`run`]
+/// with concrete operands.
+pub struct ArraySim<'a> {
+    pub arch: &'a ArchConfig,
+    pub mp: &'a Microprogram,
+    /// Hard cap on simulated cycles (deadlock/bug backstop).
+    pub max_cycles: u64,
+}
+
+impl<'a> ArraySim<'a> {
+    pub fn new(arch: &'a ArchConfig, mp: &'a Microprogram) -> Self {
+        Self {
+            arch,
+            mp,
+            max_cycles: 50_000_000,
+        }
+    }
+
+    /// Run the pass. Returns the assembled output matrix and the stats.
+    pub fn run(&self, ops: &Operands) -> Result<(Mat, PassStats), SimError> {
+        let problems = self.mp.validate(self.arch.rf_psum);
+        if !problems.is_empty() {
+            return Err(SimError::Invalid(problems));
+        }
+        let mp = self.mp;
+        let arch = self.arch;
+        let n = mp.num_pes();
+        let wb = arch.word_bits;
+        let fw = arch.noc.filter_words_per_cycle(wb);
+        let iw = arch.noc.ifmap_words_per_cycle(wb);
+        let ow = arch.noc.output_words_per_cycle(wb);
+        let qd = arch.queue_depth;
+
+        let mut stats = PassStats::default();
+
+        // --- preload phase (weight-stationary register files) ---------
+        let w_pre: usize = mp.w_preload.iter().map(Vec::len).sum();
+        let x_pre: usize = mp.x_preload.iter().map(Vec::len).sum();
+        // multicast coalescing: bus transactions / GB fetches are per
+        // unique word; register writes and per-PE NoC deliveries per copy
+        let x_uni = mp.x_preload_unique.unwrap_or(x_pre).min(x_pre);
+        stats.cycles += (w_pre.div_ceil(fw) + x_uni.div_ceil(iw)) as u64;
+        stats.spad_writes += (w_pre + x_pre) as u64;
+        stats.noc_words += (w_pre + x_pre) as u64;
+        stats.gbuf_reads += x_uni as u64; // inputs come from the GB
+                                          // (weights stream from DRAM, §4.3)
+
+        let mut pes: Vec<PeState> = (0..n)
+            .map(|i| PeState {
+                ip: 0,
+                acc: vec![0.0; arch.rf_psum],
+                w_queue: VecDeque::new(),
+                x_queue: VecDeque::new(),
+                south_in: VecDeque::new(),
+                w_hold: 0.0,
+                x_hold: 0.0,
+                w_regs: mp.w_preload[i].iter().map(|r| ops.fetch(*r)).collect(),
+                x_regs: mp.x_preload[i].iter().map(|r| ops.fetch(*r)).collect(),
+            })
+            .collect();
+
+        let out_len = mp.out_rows * mp.out_cols;
+        let mut out: Vec<Option<f32>> = vec![None; out_len];
+        let mut w_cursor = 0usize;
+        let mut x_cursor = 0usize;
+        // capacity of the streaming weight queue: the filter RF
+        let wq_cap = arch.rf_filter.max(qd);
+        let xq_cap = arch.rf_ifmap.max(qd);
+
+        let mut cycle: u64 = 0;
+        loop {
+            if cycle >= self.max_cycles {
+                return Err(SimError::CycleLimit(self.max_cycles));
+            }
+            let all_done = pes
+                .iter()
+                .enumerate()
+                .all(|(i, p)| p.ip >= mp.programs[i].len());
+            if all_done {
+                break;
+            }
+
+            let mut progress = false;
+
+            // --- PE execute phase (row-major order; PassUp targets the
+            //     north neighbour, already executed this cycle, so pushed
+            //     psums become visible next cycle) -----------------------
+            let mut gon_issued = 0usize;
+            for i in 0..n {
+                let prog = &mp.programs[i];
+                if pes[i].ip >= prog.len() {
+                    // program complete: the PE is off (not a structural
+                    // bubble — do not count towards idle-slot overhead)
+                    continue;
+                }
+                let instr = prog[pes[i].ip];
+                match instr {
+                    PeInstr::Mac { acc, w, x } => {
+                        let w_ready = match w {
+                            WSrc::Pop => !pes[i].w_queue.is_empty(),
+                            _ => true,
+                        };
+                        let x_ready = match x {
+                            XSrc::Pop => !pes[i].x_queue.is_empty(),
+                            _ => true,
+                        };
+                        if !(w_ready && x_ready) {
+                            stats.pe_stall += 1;
+                            continue;
+                        }
+                        let p = &mut pes[i];
+                        let wv = match w {
+                            WSrc::Pop => {
+                                let v = p.w_queue.pop_front().unwrap();
+                                p.w_hold = v;
+                                v
+                            }
+                            WSrc::Hold => p.w_hold,
+                            WSrc::Reg(r) => {
+                                stats.spad_reads += 1;
+                                p.w_regs[r as usize]
+                            }
+                        };
+                        let xv = match x {
+                            XSrc::Pop => {
+                                let v = p.x_queue.pop_front().unwrap();
+                                p.x_hold = v;
+                                v
+                            }
+                            XSrc::Hold => p.x_hold,
+                            XSrc::Reg(r) => {
+                                stats.spad_reads += 1;
+                                p.x_regs[r as usize]
+                            }
+                        };
+                        if arch.clock_gating && (wv == 0.0 || xv == 0.0) {
+                            stats.gated_macs += 1;
+                        } else {
+                            stats.macs += 1;
+                        }
+                        p.acc[acc as usize] += wv * xv;
+                        stats.spad_reads += 1; // acc read
+                        stats.spad_writes += 1; // acc write
+                        stats.pe_busy += 1;
+                        p.ip += 1;
+                        progress = true;
+                    }
+                    PeInstr::PassUp { acc } => {
+                        let north = i - mp.cols; // validated: not top row
+                        if pes[north].south_in.len() >= qd {
+                            stats.pe_stall += 1;
+                            continue;
+                        }
+                        let v = pes[i].acc[acc as usize];
+                        pes[i].acc[acc as usize] = 0.0;
+                        pes[north].south_in.push_back(v);
+                        stats.local_words += 1;
+                        stats.pe_busy += 1;
+                        pes[i].ip += 1;
+                        progress = true;
+                    }
+                    PeInstr::RecvAdd { acc } => {
+                        if pes[i].south_in.is_empty() {
+                            stats.pe_stall += 1;
+                            continue;
+                        }
+                        let v = pes[i].south_in.pop_front().unwrap();
+                        pes[i].acc[acc as usize] += v;
+                        stats.spad_reads += 1;
+                        stats.spad_writes += 1;
+                        stats.pe_busy += 1;
+                        pes[i].ip += 1;
+                        progress = true;
+                    }
+                    PeInstr::WriteOut { acc, out_idx } => {
+                        if gon_issued >= ow {
+                            stats.pe_stall += 1;
+                            continue;
+                        }
+                        gon_issued += 1;
+                        let v = pes[i].acc[acc as usize];
+                        pes[i].acc[acc as usize] = 0.0;
+                        out[out_idx as usize] = Some(v);
+                        stats.gon_words += 1;
+                        stats.gbuf_writes += 1;
+                        stats.pe_busy += 1;
+                        pes[i].ip += 1;
+                        progress = true;
+                    }
+                    PeInstr::Nop => {
+                        stats.pe_idle += 1;
+                        pes[i].ip += 1;
+                        progress = true;
+                    }
+                }
+            }
+
+            // --- bus delivery phase (visible next cycle: 1-cycle hop) ---
+            // filter broadcast: fw words/cycle, each pushed to every
+            // subscribed PE; blocks if any subscriber's queue is full.
+            for _ in 0..fw {
+                if w_cursor >= mp.w_stream.len() {
+                    break;
+                }
+                let subscribers: Vec<usize> = (0..n).filter(|i| mp.uses_w[*i]).collect();
+                if subscribers.iter().any(|i| pes[*i].w_queue.len() >= wq_cap) {
+                    break; // head-of-line blocking
+                }
+                let v = ops.fetch(mp.w_stream[w_cursor]);
+                w_cursor += 1;
+                for i in &subscribers {
+                    pes[*i].w_queue.push_back(v);
+                    stats.noc_words += 1;
+                }
+                progress = true;
+            }
+            // ifmap/error multicast: iw transactions/cycle.
+            for _ in 0..iw {
+                if x_cursor >= mp.x_stream.len() {
+                    break;
+                }
+                let (src, group) = mp.x_stream[x_cursor];
+                let members = &mp.groups[group as usize];
+                if members
+                    .iter()
+                    .any(|m| pes[*m as usize].x_queue.len() >= xq_cap)
+                {
+                    break;
+                }
+                let v = ops.fetch(src);
+                x_cursor += 1;
+                stats.gbuf_reads += 1;
+                for m in members {
+                    pes[*m as usize].x_queue.push_back(v);
+                    stats.noc_words += 1;
+                }
+                progress = true;
+            }
+
+            if !progress {
+                let stuck: Vec<String> = pes
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, p)| p.ip < mp.programs[*i].len())
+                    .take(4)
+                    .map(|(i, p)| {
+                        format!("PE{}@{}:{:?}", i, p.ip, mp.programs[i][p.ip])
+                    })
+                    .collect();
+                return Err(SimError::Deadlock {
+                    cycle,
+                    detail: format!(
+                        "w_cursor={w_cursor}/{} x_cursor={x_cursor}/{} stuck={stuck:?}",
+                        mp.w_stream.len(),
+                        mp.x_stream.len()
+                    ),
+                });
+            }
+            cycle += 1;
+        }
+
+        // pipeline fill latency of the 2-stage multiplier + 1-stage adder
+        stats.cycles += cycle + (arch.mul_stages + arch.add_stages) as u64;
+
+        let mut data = Vec::with_capacity(out_len);
+        for (i, v) in out.iter().enumerate() {
+            match v {
+                Some(x) => data.push(*x),
+                None if mp.zero_unwritten => data.push(0.0),
+                None => return Err(SimError::IncompleteOutput(i)),
+            }
+        }
+        Ok((
+            Mat::from_slice(mp.out_rows, mp.out_cols, &data),
+            stats,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::microprogram::SrcRef;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    /// out[0] = a0*b0 + a1*b1 on a single PE.
+    fn dot2_program() -> Microprogram {
+        let mut mp = Microprogram::new(1, 1, 1, 1, "dot2");
+        mp.uses_w[0] = true;
+        mp.w_stream = vec![SrcRef::B(0), SrcRef::B(1)];
+        mp.groups = vec![vec![0]];
+        mp.x_stream = vec![(SrcRef::A(0), 0), (SrcRef::A(1), 0)];
+        mp.programs[0] = vec![
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Pop,
+                x: XSrc::Pop,
+            },
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Pop,
+                x: XSrc::Pop,
+            },
+            PeInstr::WriteOut { acc: 0, out_idx: 0 },
+        ];
+        mp
+    }
+
+    fn ops2() -> Operands {
+        Operands {
+            a: Mat::from_slice(1, 2, &[2.0, 3.0]),
+            b: Mat::from_slice(1, 2, &[10.0, 100.0]),
+        }
+    }
+
+    #[test]
+    fn dot_product_functional() {
+        let arch = arch();
+        let mp = dot2_program();
+        let (out, stats) = ArraySim::new(&arch, &mp).run(&ops2()).unwrap();
+        assert_eq!(out.at(0, 0), 2.0 * 10.0 + 3.0 * 100.0);
+        assert_eq!(stats.macs, 2);
+        assert_eq!(stats.gon_words, 1);
+        assert!(stats.cycles >= 3);
+    }
+
+    #[test]
+    fn zero_operand_is_clock_gated() {
+        let arch = arch();
+        let mp = dot2_program();
+        let ops = Operands {
+            a: Mat::from_slice(1, 2, &[0.0, 3.0]),
+            b: Mat::from_slice(1, 2, &[10.0, 100.0]),
+        };
+        let (out, stats) = ArraySim::new(&arch, &mp).run(&ops).unwrap();
+        assert_eq!(out.at(0, 0), 300.0);
+        assert_eq!(stats.macs, 1);
+        assert_eq!(stats.gated_macs, 1);
+    }
+
+    #[test]
+    fn vertical_passup_accumulates() {
+        // 2x1 PEs: bottom computes a0*b0 and passes up; top computes a1*b1,
+        // receives, adds, writes out.
+        let mut mp = Microprogram::new(2, 1, 1, 1, "chain");
+        mp.uses_w = vec![true, true];
+        mp.w_stream = vec![SrcRef::B(0)];
+        mp.groups = vec![vec![0], vec![1]];
+        mp.x_stream = vec![(SrcRef::A(0), 0), (SrcRef::A(1), 1)];
+        mp.programs[0] = vec![
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Pop,
+                x: XSrc::Pop,
+            },
+            PeInstr::RecvAdd { acc: 0 },
+            PeInstr::WriteOut { acc: 0, out_idx: 0 },
+        ];
+        mp.programs[1] = vec![
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Pop,
+                x: XSrc::Pop,
+            },
+            PeInstr::PassUp { acc: 0 },
+        ];
+        let arch = arch();
+        let ops = Operands {
+            a: Mat::from_slice(1, 2, &[5.0, 7.0]),
+            b: Mat::from_slice(1, 1, &[2.0]),
+        };
+        let (out, stats) = ArraySim::new(&arch, &mp).run(&ops).unwrap();
+        assert_eq!(out.at(0, 0), 5.0 * 2.0 + 7.0 * 2.0);
+        assert_eq!(stats.local_words, 1);
+    }
+
+    #[test]
+    fn preloaded_registers_work() {
+        let mut mp = Microprogram::new(1, 1, 1, 1, "preload");
+        mp.w_preload[0] = vec![SrcRef::B(0)];
+        mp.x_preload[0] = vec![SrcRef::A(0)];
+        mp.programs[0] = vec![
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Reg(0),
+                x: XSrc::Reg(0),
+            },
+            PeInstr::WriteOut { acc: 0, out_idx: 0 },
+        ];
+        let arch = arch();
+        let ops = Operands {
+            a: Mat::from_slice(1, 1, &[4.0]),
+            b: Mat::from_slice(1, 1, &[6.0]),
+        };
+        let (out, stats) = ArraySim::new(&arch, &mp).run(&ops).unwrap();
+        assert_eq!(out.at(0, 0), 24.0);
+        assert!(stats.spad_writes >= 2); // two preloads
+    }
+
+    #[test]
+    fn hold_reuses_operand() {
+        // out = b0*a0 + b0*a1 using WSrc::Hold on the second MAC
+        let mut mp = Microprogram::new(1, 1, 1, 1, "hold");
+        mp.uses_w[0] = true;
+        mp.w_stream = vec![SrcRef::B(0)];
+        mp.groups = vec![vec![0]];
+        mp.x_stream = vec![(SrcRef::A(0), 0), (SrcRef::A(1), 0)];
+        mp.programs[0] = vec![
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Pop,
+                x: XSrc::Pop,
+            },
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Hold,
+                x: XSrc::Pop,
+            },
+            PeInstr::WriteOut { acc: 0, out_idx: 0 },
+        ];
+        let arch = arch();
+        let (out, _) = ArraySim::new(&arch, &mp).run(&ops2()).unwrap();
+        assert_eq!(out.at(0, 0), 10.0 * 2.0 + 10.0 * 3.0);
+    }
+
+    #[test]
+    fn missing_output_detected() {
+        let mut mp = dot2_program();
+        mp.out_cols = 2; // second output never written
+        let arch = arch();
+        let err = ArraySim::new(&arch, &mp).run(&ops2()).unwrap_err();
+        assert!(matches!(err, SimError::IncompleteOutput(1)));
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        // RecvAdd with nothing ever arriving from the south
+        let mut mp = Microprogram::new(1, 1, 1, 1, "dead");
+        mp.programs[0] = vec![PeInstr::RecvAdd { acc: 0 }];
+        let arch = arch();
+        let ops = ops2();
+        let err = ArraySim::new(&arch, &mp).run(&ops).unwrap_err();
+        assert!(matches!(err, SimError::Deadlock { .. }));
+    }
+
+    #[test]
+    fn invalid_program_rejected_before_running() {
+        let mut mp = dot2_program();
+        mp.w_stream.push(SrcRef::B(0)); // nobody pops it
+        let arch = arch();
+        let err = ArraySim::new(&arch, &mp).run(&ops2()).unwrap_err();
+        assert!(matches!(err, SimError::Invalid(_)));
+    }
+
+    #[test]
+    fn bandwidth_throttles_cycles() {
+        // 20 weights at 4/cycle (Eyeriss GIN) needs >= 5 delivery cycles.
+        let mut mp = Microprogram::new(1, 1, 1, 1, "bw");
+        mp.uses_w[0] = true;
+        for _ in 0..20 {
+            mp.w_stream.push(SrcRef::B(0));
+        }
+        mp.groups = vec![vec![0]];
+        mp.x_stream = vec![(SrcRef::A(0), 0)];
+        let mut prog = vec![PeInstr::Mac {
+            acc: 0,
+            w: WSrc::Pop,
+            x: XSrc::Pop,
+        }];
+        for _ in 1..20 {
+            prog.push(PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Pop,
+                x: XSrc::Hold,
+            });
+        }
+        prog.push(PeInstr::WriteOut { acc: 0, out_idx: 0 });
+        mp.programs[0] = prog;
+        let arch = arch();
+        let (_, stats) = ArraySim::new(&arch, &mp).run(&ops2()).unwrap();
+        // 20 MACs at 1/cycle dominate: >= 20 cycles + drain
+        assert!(stats.cycles >= 20, "{}", stats.cycles);
+    }
+}

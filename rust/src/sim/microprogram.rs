@@ -1,0 +1,386 @@
+//! The microprogram interchange format between the SASiML compiler and
+//! the simulator.
+//!
+//! A [`Microprogram`] is everything a processing pass needs: per-PE
+//! instruction streams (the FSMs the paper's compiler loads into the PEs,
+//! §4.4), the filter-broadcast stream, the ifmap/error multicast stream
+//! with its multicast groups (§4.1.2), and optional register preloads
+//! (weight-stationary dataflows). Values are referenced symbolically
+//! ([`SrcRef`]) into the runtime [`Operands`], so one compiled program can
+//! run on any concrete data of the same geometry — exactly how the
+//! compile-once / run-many split works on the real accelerator.
+
+use crate::tensor::Mat;
+
+/// Symbolic reference to an operand element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SrcRef {
+    /// Flat index into operand A (the ifmap / error matrix).
+    A(u32),
+    /// Flat index into operand B (the filter / error-as-filter matrix).
+    B(u32),
+}
+
+/// Where a MAC's weight operand comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WSrc {
+    /// Pop the next word from the broadcast weight queue.
+    Pop,
+    /// Reuse the most recently popped broadcast word.
+    Hold,
+    /// Read a preloaded weight register.
+    Reg(u16),
+}
+
+/// Where a MAC's input operand comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XSrc {
+    /// Pop the next word from the multicast input queue.
+    Pop,
+    /// Reuse the most recently popped input word.
+    Hold,
+    /// Read a preloaded input register.
+    Reg(u16),
+}
+
+/// One micro-instruction of a PE's FSM. Each instruction nominally takes
+/// one cycle; operand unavailability or full downstream queues stall it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PeInstr {
+    /// acc[r] += w * x.
+    Mac { acc: u8, w: WSrc, x: XSrc },
+    /// Push acc[r] to the north neighbour's south-in queue; clear acc[r].
+    PassUp { acc: u8 },
+    /// Pop the south-in queue and add into acc[r].
+    RecvAdd { acc: u8 },
+    /// Send acc[r] to the GON tagged with a flat output index; clear it.
+    WriteOut { acc: u8, out_idx: u32 },
+    /// Idle (scheduling bubble).
+    Nop,
+}
+
+/// Concrete runtime operands for a compiled pass.
+#[derive(Clone, Debug)]
+pub struct Operands {
+    /// Ifmap or error matrix.
+    pub a: Mat,
+    /// Filter (or error-acting-as-filter) matrix.
+    pub b: Mat,
+}
+
+impl Operands {
+    pub fn fetch(&self, r: SrcRef) -> f32 {
+        match r {
+            SrcRef::A(i) => self.a.data[i as usize],
+            SrcRef::B(i) => self.b.data[i as usize],
+        }
+    }
+}
+
+/// A compiled processing pass.
+#[derive(Clone, Debug)]
+pub struct Microprogram {
+    /// PE-set geometry (rows x cols), row-major PE ids.
+    pub rows: usize,
+    pub cols: usize,
+    /// Per-PE instruction streams (rows*cols entries).
+    pub programs: Vec<Vec<PeInstr>>,
+    /// Broadcast weight stream (delivered to every PE that `uses_w`).
+    pub w_stream: Vec<SrcRef>,
+    /// PEs subscribed to the weight broadcast.
+    pub uses_w: Vec<bool>,
+    /// Multicast input stream: (value, multicast-group id), in issue order.
+    pub x_stream: Vec<(SrcRef, u16)>,
+    /// Multicast groups: group id -> member PE ids.
+    pub groups: Vec<Vec<u16>>,
+    /// Per-PE weight-register preloads (index i -> w_reg[i]).
+    pub w_preload: Vec<Vec<SrcRef>>,
+    /// Per-PE input-register preloads.
+    pub x_preload: Vec<Vec<SrcRef>>,
+    /// Unique words behind `x_preload` when rows are multicast to several
+    /// PEs (Eyeriss GIN): the bus/GB cost is per unique word; per-PE
+    /// register writes remain per copy. None = every word distinct.
+    pub x_preload_unique: Option<usize>,
+    /// Output geometry; WriteOut indices are row-major into this.
+    pub out_rows: usize,
+    pub out_cols: usize,
+    /// Treat never-written outputs as structural zeros instead of an
+    /// error (transposed convs with stride > K have all-zero rows/cols
+    /// that no PE ever computes).
+    pub zero_unwritten: bool,
+    /// Human-readable dataflow tag (for traces / reports).
+    pub tag: &'static str,
+}
+
+impl Microprogram {
+    /// Empty program over a PE set.
+    pub fn new(rows: usize, cols: usize, out_rows: usize, out_cols: usize,
+               tag: &'static str) -> Self {
+        let n = rows * cols;
+        Self {
+            rows,
+            cols,
+            programs: vec![Vec::new(); n],
+            w_stream: Vec::new(),
+            uses_w: vec![false; n],
+            x_stream: Vec::new(),
+            groups: Vec::new(),
+            w_preload: vec![Vec::new(); n],
+            x_preload: vec![Vec::new(); n],
+            x_preload_unique: None,
+            out_rows,
+            out_cols,
+            zero_unwritten: false,
+            tag,
+        }
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// PE id from (row, col).
+    pub fn pe_id(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.rows && c < self.cols);
+        r * self.cols + c
+    }
+
+    /// Total MAC instructions across all PEs (work accounting).
+    pub fn total_macs(&self) -> usize {
+        self.programs
+            .iter()
+            .flatten()
+            .filter(|i| matches!(i, PeInstr::Mac { .. }))
+            .count()
+    }
+
+    /// Highest acc register referenced + 1 (for RF-capacity checks).
+    pub fn acc_registers_used(&self) -> usize {
+        self.programs
+            .iter()
+            .flatten()
+            .filter_map(|i| match i {
+                PeInstr::Mac { acc, .. }
+                | PeInstr::PassUp { acc }
+                | PeInstr::RecvAdd { acc }
+                | PeInstr::WriteOut { acc, .. } => Some(*acc as usize + 1),
+                PeInstr::Nop => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Structural validation: register bounds, group ids, output indices,
+    /// stream consumption matching. Returns a list of problems (empty =
+    /// valid). The simulator also enforces these dynamically; validating
+    /// statically gives compilers fast feedback in tests.
+    pub fn validate(&self, rf_psum: usize) -> Vec<String> {
+        let mut problems = Vec::new();
+        let n = self.num_pes();
+        if self.programs.len() != n
+            || self.uses_w.len() != n
+            || self.w_preload.len() != n
+            || self.x_preload.len() != n
+        {
+            problems.push("per-PE vector arity mismatch".into());
+            return problems;
+        }
+        if self.acc_registers_used() > rf_psum {
+            problems.push(format!(
+                "uses {} acc registers > rf_psum {}",
+                self.acc_registers_used(),
+                rf_psum
+            ));
+        }
+        for (g, members) in self.groups.iter().enumerate() {
+            for m in members {
+                if *m as usize >= n {
+                    problems.push(format!("group {g} member {m} out of range"));
+                }
+            }
+        }
+        for (_, g) in &self.x_stream {
+            if *g as usize >= self.groups.len() {
+                problems.push(format!("x_stream references unknown group {g}"));
+            }
+        }
+        // every PE's Pop counts must match deliveries
+        let mut x_deliveries = vec![0usize; n];
+        for (_, g) in &self.x_stream {
+            for m in &self.groups[*g as usize] {
+                x_deliveries[*m as usize] += 1;
+            }
+        }
+        for (pe, prog) in self.programs.iter().enumerate() {
+            let mut w_pops = 0usize;
+            let mut x_pops = 0usize;
+            let mut seen_any_w = false;
+            let mut seen_any_x = false;
+            for ins in prog {
+                match ins {
+                    PeInstr::Mac { w, x, .. } => {
+                        match w {
+                            WSrc::Pop => {
+                                w_pops += 1;
+                                seen_any_w = true;
+                            }
+                            WSrc::Hold => {
+                                if !seen_any_w {
+                                    problems.push(format!(
+                                        "PE {pe}: WSrc::Hold before any Pop"
+                                    ));
+                                }
+                            }
+                            WSrc::Reg(r) => {
+                                if *r as usize >= self.w_preload[pe].len() {
+                                    problems.push(format!(
+                                        "PE {pe}: w reg {r} not preloaded"
+                                    ));
+                                }
+                            }
+                        }
+                        match x {
+                            XSrc::Pop => {
+                                x_pops += 1;
+                                seen_any_x = true;
+                            }
+                            XSrc::Hold => {
+                                if !seen_any_x {
+                                    problems.push(format!(
+                                        "PE {pe}: XSrc::Hold before any Pop"
+                                    ));
+                                }
+                            }
+                            XSrc::Reg(r) => {
+                                if *r as usize >= self.x_preload[pe].len() {
+                                    problems.push(format!(
+                                        "PE {pe}: x reg {r} not preloaded"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    PeInstr::PassUp { .. } => {
+                        if pe < self.cols {
+                            problems.push(format!("PE {pe}: PassUp from top row"));
+                        }
+                    }
+                    PeInstr::WriteOut { out_idx, .. } => {
+                        if *out_idx as usize >= self.out_rows * self.out_cols {
+                            problems.push(format!(
+                                "PE {pe}: out_idx {out_idx} out of range"
+                            ));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if self.uses_w[pe] {
+                if w_pops != self.w_stream.len() {
+                    problems.push(format!(
+                        "PE {pe}: pops {} weight words, stream has {}",
+                        w_pops,
+                        self.w_stream.len()
+                    ));
+                }
+            } else if w_pops != 0 {
+                problems.push(format!("PE {pe}: pops weights but !uses_w"));
+            }
+            if x_pops != x_deliveries[pe] {
+                problems.push(format!(
+                    "PE {pe}: pops {x_pops} x words, receives {}",
+                    x_deliveries[pe]
+                ));
+            }
+        }
+        problems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trivial_program() -> Microprogram {
+        // 1x1 PE computing out[0] = a[0]*b[0]
+        let mut mp = Microprogram::new(1, 1, 1, 1, "test");
+        mp.uses_w[0] = true;
+        mp.w_stream.push(SrcRef::B(0));
+        mp.groups.push(vec![0]);
+        mp.x_stream.push((SrcRef::A(0), 0));
+        mp.programs[0] = vec![
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Pop,
+                x: XSrc::Pop,
+            },
+            PeInstr::WriteOut { acc: 0, out_idx: 0 },
+        ];
+        mp
+    }
+
+    #[test]
+    fn trivial_program_validates() {
+        assert!(trivial_program().validate(24).is_empty());
+    }
+
+    #[test]
+    fn pop_mismatch_detected() {
+        let mut mp = trivial_program();
+        mp.w_stream.push(SrcRef::B(0)); // extra word nobody pops
+        let problems = mp.validate(24);
+        assert!(problems.iter().any(|p| p.contains("weight words")));
+    }
+
+    #[test]
+    fn hold_before_pop_detected() {
+        let mut mp = trivial_program();
+        mp.programs[0].insert(
+            0,
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Hold,
+                x: XSrc::Hold,
+            },
+        );
+        let problems = mp.validate(24);
+        assert!(problems.iter().any(|p| p.contains("Hold before")));
+    }
+
+    #[test]
+    fn acc_overflow_detected() {
+        let mut mp = trivial_program();
+        mp.programs[0].push(PeInstr::Mac {
+            acc: 30,
+            w: WSrc::Hold,
+            x: XSrc::Hold,
+        });
+        let problems = mp.validate(24);
+        assert!(problems.iter().any(|p| p.contains("acc registers")));
+    }
+
+    #[test]
+    fn passup_from_top_row_detected() {
+        let mut mp = trivial_program();
+        mp.programs[0].push(PeInstr::PassUp { acc: 0 });
+        let problems = mp.validate(24);
+        assert!(problems.iter().any(|p| p.contains("top row")));
+    }
+
+    #[test]
+    fn mac_counting() {
+        let mp = trivial_program();
+        assert_eq!(mp.total_macs(), 1);
+        assert_eq!(mp.acc_registers_used(), 1);
+    }
+
+    #[test]
+    fn operands_fetch() {
+        let ops = Operands {
+            a: Mat::from_slice(1, 2, &[1.0, 2.0]),
+            b: Mat::from_slice(1, 1, &[3.0]),
+        };
+        assert_eq!(ops.fetch(SrcRef::A(1)), 2.0);
+        assert_eq!(ops.fetch(SrcRef::B(0)), 3.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! SASiML — the Spatial Architecture Simulator for Machine Learning
+//! (paper §5).
+//!
+//! SASiML models the on-chip hardware of a spatial architecture at a
+//! microprogramming (RTL-ish) level of detail: a PE array whose elements
+//! execute per-PE instruction streams ([`microprogram`]), interconnected
+//! by a filter-broadcast network, an ifmap/error multicast network (GIN),
+//! vertical psum links, and a global output network (GON), all with
+//! configurable bandwidths (Table 1) and queue depths (Table 3).
+//!
+//! It is simultaneously a **timing** simulator (every component updates
+//! state cycle by cycle; stalls arise from queue backpressure and bus
+//! bandwidth) and a **functional** simulator (real f32 values propagate
+//! through the array, so a dataflow implementation is *proven* correct by
+//! comparing its assembled output against the golden convolutions in
+//! [`crate::tensor::conv`] and — through PJRT — against the AOT-compiled
+//! JAX graphs).
+//!
+//! Two PE-array variants are modelled, as in the paper: the
+//! Eyeriss/EcoFlow microprogrammed array ([`array`]) and a TPU-style
+//! output-stationary systolic array for lowered matmuls ([`systolic`]).
+
+pub mod array;
+pub mod microprogram;
+pub mod stats;
+pub mod systolic;
+
+pub use array::{ArraySim, SimError};
+pub use microprogram::{Microprogram, Operands, PeInstr, SrcRef, WSrc, XSrc};
+pub use stats::PassStats;

@@ -1,0 +1,190 @@
+//! Per-pass simulation statistics and their conversion to energy.
+
+use crate::config::ArchConfig;
+use crate::energy::{DramModel, EnergyBreakdown, EnergyParams};
+
+/// Event counts and timing of one simulated processing pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PassStats {
+    /// Total cycles from first issue to last output drain.
+    pub cycles: u64,
+    /// MACs actually multiplied (ALU energy).
+    pub macs: u64,
+    /// MACs skipped by zero clock-gating (Table 3: "Zero Operations") —
+    /// they still occupy the cycle, but burn only gating energy.
+    pub gated_macs: u64,
+    /// PE scratchpad (RF) reads/writes, in words.
+    pub spad_reads: u64,
+    pub spad_writes: u64,
+    /// Global-buffer reads/writes, in words.
+    pub gbuf_reads: u64,
+    pub gbuf_writes: u64,
+    /// GIN multicast deliveries (words x destination PEs).
+    pub noc_words: u64,
+    /// GON words (outputs to the global buffer).
+    pub gon_words: u64,
+    /// Local inter-PE link words (vertical psum movement).
+    pub local_words: u64,
+    /// PE-cycles spent doing useful work / stalled / idle-gated.
+    pub pe_busy: u64,
+    pub pe_stall: u64,
+    pub pe_idle: u64,
+}
+
+impl PassStats {
+    /// Merge another pass's stats (sequential composition: cycles add).
+    pub fn accumulate(&mut self, o: &PassStats) {
+        self.cycles += o.cycles;
+        self.macs += o.macs;
+        self.gated_macs += o.gated_macs;
+        self.spad_reads += o.spad_reads;
+        self.spad_writes += o.spad_writes;
+        self.gbuf_reads += o.gbuf_reads;
+        self.gbuf_writes += o.gbuf_writes;
+        self.noc_words += o.noc_words;
+        self.gon_words += o.gon_words;
+        self.local_words += o.local_words;
+        self.pe_busy += o.pe_busy;
+        self.pe_stall += o.pe_stall;
+        self.pe_idle += o.pe_idle;
+    }
+
+    /// Multiply all event counts and cycles (identical repeated passes).
+    pub fn scaled(&self, n: u64) -> PassStats {
+        PassStats {
+            cycles: self.cycles * n,
+            macs: self.macs * n,
+            gated_macs: self.gated_macs * n,
+            spad_reads: self.spad_reads * n,
+            spad_writes: self.spad_writes * n,
+            gbuf_reads: self.gbuf_reads * n,
+            gbuf_writes: self.gbuf_writes * n,
+            noc_words: self.noc_words * n,
+            gon_words: self.gon_words * n,
+            local_words: self.local_words * n,
+            pe_busy: self.pe_busy * n,
+            pe_stall: self.pe_stall * n,
+            pe_idle: self.pe_idle * n,
+        }
+    }
+
+    /// PE utilization: busy / (busy + stall + idle).
+    pub fn utilization(&self) -> f64 {
+        let total = self.pe_busy + self.pe_stall + self.pe_idle;
+        if total == 0 {
+            0.0
+        } else {
+            self.pe_busy as f64 / total as f64
+        }
+    }
+
+    /// On-chip energy breakdown (DRAM filled in by the layer-level model,
+    /// which knows the off-chip traffic).
+    pub fn energy(&self, p: &EnergyParams) -> EnergyBreakdown {
+        EnergyBreakdown {
+            dram_pj: 0.0,
+            gbuf_pj: (self.gbuf_reads + self.gbuf_writes) as f64 * p.gbuf_pj,
+            spad_pj: (self.spad_reads + self.spad_writes) as f64 * p.spad_pj,
+            alu_pj: self.macs as f64 * p.mac_pj()
+                + self.gated_macs as f64 * p.gated_pe_pj
+                + self.pe_busy as f64 * p.pe_ctrl_pj,
+            noc_pj: (self.noc_words + self.gon_words + self.local_words) as f64
+                * p.noc_pj,
+        }
+    }
+
+    /// Wall-clock seconds at the configured array clock.
+    pub fn seconds(&self, arch: &ArchConfig) -> f64 {
+        self.cycles as f64 * arch.cycle_ns() * 1e-9
+    }
+
+    /// Full energy including DRAM traffic (`dram_bytes` moved during the
+    /// pass) using the DRAM model.
+    pub fn energy_with_dram(
+        &self,
+        p: &EnergyParams,
+        dram: &DramModel,
+        arch: &ArchConfig,
+        dram_bytes: f64,
+    ) -> EnergyBreakdown {
+        let mut e = self.energy(p);
+        e.dram_pj = dram.energy_pj(dram_bytes, self.seconds(arch));
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PassStats {
+        PassStats {
+            cycles: 100,
+            macs: 50,
+            gated_macs: 10,
+            spad_reads: 120,
+            spad_writes: 60,
+            gbuf_reads: 30,
+            gbuf_writes: 8,
+            noc_words: 40,
+            gon_words: 8,
+            local_words: 12,
+            pe_busy: 60,
+            pe_stall: 30,
+            pe_idle: 10,
+        }
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        assert!((sample().utilization() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulate_adds_cycles() {
+        let mut a = sample();
+        a.accumulate(&sample());
+        assert_eq!(a.cycles, 200);
+        assert_eq!(a.macs, 100);
+    }
+
+    #[test]
+    fn scaled_multiplies_everything() {
+        let s = sample().scaled(3);
+        assert_eq!(s.cycles, 300);
+        assert_eq!(s.gon_words, 24);
+    }
+
+    #[test]
+    fn energy_components_populate() {
+        let p = EnergyParams::default();
+        let e = sample().energy(&p);
+        assert!(e.gbuf_pj > 0.0 && e.spad_pj > 0.0 && e.alu_pj > 0.0 && e.noc_pj > 0.0);
+        assert_eq!(e.dram_pj, 0.0);
+    }
+
+    #[test]
+    fn dram_energy_added() {
+        let p = EnergyParams::default();
+        let arch = ArchConfig::default();
+        let d = DramModel::default();
+        let e = sample().energy_with_dram(&p, &d, &arch, 1000.0);
+        assert!(e.dram_pj > 0.0);
+    }
+
+    #[test]
+    fn gating_cheaper_than_mac() {
+        let p = EnergyParams::default();
+        let mut gated = PassStats {
+            gated_macs: 100,
+            ..Default::default()
+        };
+        let mut active = PassStats {
+            macs: 100,
+            ..Default::default()
+        };
+        gated.pe_busy = 0;
+        active.pe_busy = 0;
+        assert!(gated.energy(&p).total_pj() < active.energy(&p).total_pj());
+    }
+}

@@ -1,0 +1,323 @@
+//! Golden convolutions (single 2-D plane) — the in-process oracles.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` exactly:
+//!
+//! * [`direct_conv`]      `out[i,j] = Σ_{u,v} x[iS+u, jS+v] · w[u,v]`
+//! * [`transposed_conv`]  input gradients, output side `S(He−1)+K`
+//! * [`dilated_conv`]     filter gradients, `dw[u,v] = Σ e[i,j]·x[iS+u,jS+v]`
+//!
+//! The `naive_*` variants materialize the zero padding the way a dense
+//! direct-conv dataflow does (paper Fig. 1/4) and additionally report the
+//! number of multiply operands that were padding zeros — the Fig. 3 metric.
+
+use super::Mat;
+
+/// Strided VALID direct convolution (cross-correlation).
+pub fn direct_conv(x: &Mat, w: &Mat, stride: usize) -> Mat {
+    assert!(stride >= 1);
+    assert!(x.rows >= w.rows && x.cols >= w.cols, "filter larger than input");
+    let ho = (x.rows - w.rows) / stride + 1;
+    let wo = (x.cols - w.cols) / stride + 1;
+    Mat::from_fn(ho, wo, |i, j| {
+        let mut acc = 0.0f32;
+        for u in 0..w.rows {
+            for v in 0..w.cols {
+                acc += x.at(i * stride + u, j * stride + v) * w.at(u, v);
+            }
+        }
+        acc
+    })
+}
+
+/// Transposed convolution (input gradients):
+/// `din[y,x] = Σ_{i,j} e[i,j] · w[y−iS, x−jS]`, output `S(He−1)+K` square.
+pub fn transposed_conv(err: &Mat, w: &Mat, stride: usize) -> Mat {
+    assert!(stride >= 1);
+    let k_r = w.rows;
+    let k_c = w.cols;
+    let hin = stride * (err.rows - 1) + k_r;
+    let win = stride * (err.cols - 1) + k_c;
+    let mut out = Mat::zeros(hin, win);
+    for i in 0..err.rows {
+        for j in 0..err.cols {
+            let e = err.at(i, j);
+            if e == 0.0 {
+                continue;
+            }
+            for u in 0..k_r {
+                for v in 0..k_c {
+                    *out.at_mut(i * stride + u, j * stride + v) += e * w.at(u, v);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dilated convolution (filter gradients):
+/// `dw[u,v] = Σ_{i,j} e[i,j] · x[iS+u, jS+v]`, K derived from geometry.
+pub fn dilated_conv(x: &Mat, err: &Mat, stride: usize) -> Mat {
+    assert!(stride >= 1);
+    let k_r = x
+        .rows
+        .checked_sub(stride * (err.rows - 1))
+        .expect("inconsistent geometry (rows)");
+    let k_c = x
+        .cols
+        .checked_sub(stride * (err.cols - 1))
+        .expect("inconsistent geometry (cols)");
+    assert!(k_r >= 1 && k_c >= 1);
+    Mat::from_fn(k_r, k_c, |u, v| {
+        let mut acc = 0.0f32;
+        for i in 0..err.rows {
+            for j in 0..err.cols {
+                acc += err.at(i, j) * x.at(i * stride + u, j * stride + v);
+            }
+        }
+        acc
+    })
+}
+
+/// Result of a naive (padding-materializing) dataflow run.
+#[derive(Clone, Debug)]
+pub struct NaiveRun {
+    pub out: Mat,
+    /// Total multiply operations performed.
+    pub total_macs: usize,
+    /// Multiplies where at least one operand was a padding zero.
+    pub zero_macs: usize,
+}
+
+impl NaiveRun {
+    pub fn zero_fraction(&self) -> f64 {
+        self.zero_macs as f64 / self.total_macs.max(1) as f64
+    }
+}
+
+fn counted_direct_conv(x: &Mat, w: &Mat, x_real: &Mat) -> NaiveRun {
+    // Dense stride-1 VALID conv over a padded input, counting MACs whose
+    // input operand is a materialized padding zero (mask given by x_real).
+    let ho = x.rows - w.rows + 1;
+    let wo = x.cols - w.cols + 1;
+    let mut total = 0usize;
+    let mut zeros = 0usize;
+    let out = Mat::from_fn(ho, wo, |i, j| {
+        let mut acc = 0.0f32;
+        for u in 0..w.rows {
+            for v in 0..w.cols {
+                acc += x.at(i + u, j + v) * w.at(u, v);
+                total += 1;
+                if x_real.at(i + u, j + v) == 0.0 {
+                    zeros += 1;
+                }
+            }
+        }
+        acc
+    });
+    NaiveRun {
+        out,
+        total_macs: total,
+        zero_macs: zeros,
+    }
+}
+
+/// Naive transposed conv: dilate + border-pad the error, dense conv with
+/// rot180(w). Matches [`transposed_conv`] numerically.
+pub fn naive_transposed_conv(err: &Mat, w: &Mat, stride: usize) -> NaiveRun {
+    let padded = err.dilate(stride).pad_border(w.rows - 1);
+    // mask of "real" (non-padding) positions: 1 where a true error lives
+    let ones = Mat::from_fn(err.rows, err.cols, |_, _| 1.0);
+    let mask = ones.dilate(stride).pad_border(w.rows - 1);
+    counted_direct_conv(&padded, &w.rot180(), &mask)
+}
+
+/// Naive dilated conv: dilate the error ("padded filter"), slide it over
+/// the ifmap. Matches [`dilated_conv`] numerically.
+pub fn naive_dilated_conv(x: &Mat, err: &Mat, stride: usize) -> NaiveRun {
+    let kernel = err.dilate(stride);
+    let ones = Mat::from_fn(err.rows, err.cols, |_, _| 1.0);
+    let kmask = ones.dilate(stride);
+    // count MACs whose *kernel* operand is a padding zero
+    let ho = x.rows - kernel.rows + 1;
+    let wo = x.cols - kernel.cols + 1;
+    let mut total = 0usize;
+    let mut zeros = 0usize;
+    let out = Mat::from_fn(ho, wo, |i, j| {
+        let mut acc = 0.0f32;
+        for u in 0..kernel.rows {
+            for v in 0..kernel.cols {
+                acc += x.at(i + u, j + v) * kernel.at(u, v);
+                total += 1;
+                if kmask.at(u, v) == 0.0 {
+                    zeros += 1;
+                }
+            }
+        }
+        acc
+    });
+    NaiveRun {
+        out,
+        total_macs: total,
+        zero_macs: zeros,
+    }
+}
+
+/// MACs a zero-free dataflow needs for each operation (paper §4).
+pub fn useful_macs_direct(ho: usize, wo: usize, k: usize) -> usize {
+    ho * wo * k * k
+}
+pub fn useful_macs_transpose(err_h: usize, err_w: usize, k: usize) -> usize {
+    err_h * err_w * k * k
+}
+pub fn useful_macs_dilated(err_h: usize, err_w: usize, k: usize) -> usize {
+    k * k * err_h * err_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::{for_each_case, Prng};
+
+    fn rand_geom(rng: &mut Prng) -> (usize, usize, usize) {
+        let he = rng.range(1, 8);
+        let k = rng.range(1, 6);
+        let s = rng.range(1, 4);
+        (he, k, s)
+    }
+
+    #[test]
+    fn direct_conv_known_value() {
+        // 3x3 ones * 2x2 ones, stride 1 -> all 4.0 in a 2x2 output
+        let x = Mat::from_fn(3, 3, |_, _| 1.0);
+        let w = Mat::from_fn(2, 2, |_, _| 1.0);
+        let o = direct_conv(&x, &w, 1);
+        assert_eq!((o.rows, o.cols), (2, 2));
+        assert!(o.data.iter().all(|v| *v == 4.0));
+    }
+
+    #[test]
+    fn direct_conv_stride_subsamples() {
+        let x = Mat::from_fn(5, 5, |r, c| (r * 5 + c) as f32);
+        let w = Mat::from_slice(1, 1, &[1.0]);
+        let o = direct_conv(&x, &w, 2);
+        assert_eq!((o.rows, o.cols), (3, 3));
+        assert_eq!(o.at(1, 1), x.at(2, 2));
+    }
+
+    #[test]
+    fn transpose_equals_naive() {
+        for_each_case(40, 0x71, |rng| {
+            let (he, k, s) = rand_geom(rng);
+            let e = Mat::random(he, he, rng);
+            let w = Mat::random(k, k, rng);
+            let fast = transposed_conv(&e, &w, s);
+            let naive = naive_transposed_conv(&e, &w, s);
+            fast.assert_close(&naive.out, 1e-4);
+        });
+    }
+
+    #[test]
+    fn dilated_equals_naive() {
+        for_each_case(40, 0x72, |rng| {
+            let (he, k, s) = rand_geom(rng);
+            let h = s * (he - 1) + k;
+            let x = Mat::random(h, h, rng);
+            let e = Mat::random(he, he, rng);
+            let fast = dilated_conv(&x, &e, s);
+            let naive = naive_dilated_conv(&x, &e, s);
+            assert_eq!((fast.rows, fast.cols), (k, k));
+            fast.assert_close(&naive.out, 1e-4);
+        });
+    }
+
+    #[test]
+    fn forward_backward_adjoint_property() {
+        // <conv(x,w), e> == <x, tconv(e,w)> — the defining adjoint identity
+        // between the forward direct conv and the input-gradient transposed
+        // conv (exact-fit geometry).
+        for_each_case(40, 0x73, |rng| {
+            let (he, k, s) = rand_geom(rng);
+            let h = s * (he - 1) + k;
+            let x = Mat::random(h, h, rng);
+            let w = Mat::random(k, k, rng);
+            let e = Mat::random(he, he, rng);
+            let fwd = direct_conv(&x, &w, s);
+            assert_eq!((fwd.rows, fwd.cols), (he, he));
+            let lhs: f32 = fwd
+                .data
+                .iter()
+                .zip(&e.data)
+                .map(|(a, b)| a * b)
+                .sum();
+            let din = transposed_conv(&e, &w, s);
+            let rhs: f32 = din
+                .data
+                .iter()
+                .zip(&x.data)
+                .map(|(a, b)| a * b)
+                .sum();
+            assert!(
+                (lhs - rhs).abs() <= 1e-3 * (1.0 + lhs.abs()),
+                "adjoint mismatch: {lhs} vs {rhs}"
+            );
+        });
+    }
+
+    #[test]
+    fn filter_grad_is_derivative_of_forward() {
+        // dw = dilated_conv(x, e) must satisfy
+        // d/dw <conv(x,w), e> = dw  (linearity in w).
+        for_each_case(20, 0x74, |rng| {
+            let (he, k, s) = rand_geom(rng);
+            let h = s * (he - 1) + k;
+            let x = Mat::random(h, h, rng);
+            let e = Mat::random(he, he, rng);
+            let dw = dilated_conv(&x, &e, s);
+            // check a few taps by direct summation
+            for _ in 0..3 {
+                let u = rng.below(k);
+                let v = rng.below(k);
+                let mut want = 0.0f32;
+                for i in 0..he {
+                    for j in 0..he {
+                        want += e.at(i, j) * x.at(i * s + u, j * s + v);
+                    }
+                }
+                assert!((dw.at(u, v) - want).abs() < 1e-4 * (1.0 + want.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn naive_zero_fraction_matches_analytic() {
+        // stride 2, 28x28 error, 3x3 filter: >70% zeros (paper Fig. 3)
+        let e = Mat::from_fn(28, 28, |_, _| 1.0);
+        let w = Mat::from_fn(3, 3, |_, _| 1.0);
+        let run = naive_transposed_conv(&e, &w, 2);
+        assert!(run.zero_fraction() > 0.70, "{}", run.zero_fraction());
+    }
+
+    #[test]
+    fn naive_dilated_zero_fraction_stride2() {
+        let x = Mat::from_fn(57, 57, |_, _| 1.0);
+        let e = Mat::from_fn(28, 28, |_, _| 1.0);
+        let run = naive_dilated_conv(&x, &e, 2);
+        // dilated error is 55x55 with 28^2 useful -> ~74% zeros
+        assert!(run.zero_fraction() > 0.70);
+    }
+
+    #[test]
+    fn stride1_has_no_inner_padding_zero_macs_in_dilated() {
+        let x = Mat::from_fn(10, 10, |_, _| 1.0);
+        let e = Mat::from_fn(8, 8, |_, _| 1.0);
+        let run = naive_dilated_conv(&x, &e, 1);
+        assert_eq!(run.zero_macs, 0);
+    }
+
+    #[test]
+    fn useful_mac_counters() {
+        assert_eq!(useful_macs_direct(7, 7, 3), 441);
+        assert_eq!(useful_macs_transpose(4, 4, 3), 144);
+        assert_eq!(useful_macs_dilated(4, 4, 3), 144);
+    }
+}

@@ -1,0 +1,208 @@
+//! Dense 2-D matrices and golden convolution implementations.
+//!
+//! [`Mat`] is the value type that flows through the SASiML simulator; the
+//! functions in [`conv`] are the in-process oracles (mirroring
+//! `python/compile/kernels/ref.py`) that every dataflow's functional
+//! output is checked against. Cross-language agreement with the JAX
+//! oracles is verified through PJRT in `rust/tests/runtime_golden.rs`.
+
+pub mod conv;
+
+/// A row-major 2-D matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Build from a flat row-major slice.
+    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self {
+            rows,
+            cols,
+            data: data.to_vec(),
+        }
+    }
+
+    /// Random matrix in [-1, 1) from the given PRNG.
+    pub fn random(rows: usize, cols: usize, rng: &mut crate::util::prng::Prng) -> Self {
+        Self {
+            rows,
+            cols,
+            data: rng.fill_sf32(rows * cols),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Rotate 180 degrees (filter rotation for transposed conv).
+    pub fn rot180(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |r, c| {
+            self.at(self.rows - 1 - r, self.cols - 1 - c)
+        })
+    }
+
+    /// Insert `stride-1` zero rows/cols between elements (inner padding).
+    pub fn dilate(&self, stride: usize) -> Mat {
+        assert!(stride >= 1);
+        if stride == 1 {
+            return self.clone();
+        }
+        let mut out = Mat::zeros(
+            stride * (self.rows - 1) + 1,
+            stride * (self.cols - 1) + 1,
+        );
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(r * stride, c * stride) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Zero-pad all four borders by `amount`.
+    pub fn pad_border(&self, amount: usize) -> Mat {
+        let mut out = Mat::zeros(self.rows + 2 * amount, self.cols + 2 * amount);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(r + amount, c + amount) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Count exact zeros (padding accounting).
+    pub fn count_zeros(&self) -> usize {
+        self.data.iter().filter(|v| **v == 0.0).count()
+    }
+
+    /// Max |a-b| across elements; panics on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Assert element-wise closeness with combined abs+rel tolerance.
+    pub fn assert_close(&self, other: &Mat, tol: f32) {
+        assert_eq!(
+            (self.rows, self.cols),
+            (other.rows, other.cols),
+            "shape mismatch: {}x{} vs {}x{}",
+            self.rows,
+            self.cols,
+            other.rows,
+            other.cols
+        );
+        for i in 0..self.data.len() {
+            let (a, b) = (self.data[i], other.data[i]);
+            let lim = tol * (1.0 + a.abs().max(b.abs()));
+            assert!(
+                (a - b).abs() <= lim,
+                "mismatch at flat index {i} (r={}, c={}): {a} vs {b}",
+                i / self.cols,
+                i % self.cols
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn from_fn_and_at() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.at(1, 2), 12.0);
+        assert_eq!(m.data.len(), 6);
+    }
+
+    #[test]
+    fn rot180_involution() {
+        let mut rng = Prng::new(1);
+        let m = Mat::random(4, 5, &mut rng);
+        assert_eq!(m.rot180().rot180(), m);
+    }
+
+    #[test]
+    fn dilate_geometry_and_zeros() {
+        let m = Mat::from_fn(3, 3, |r, c| (r + c + 1) as f32);
+        let d = m.dilate(2);
+        assert_eq!((d.rows, d.cols), (5, 5));
+        assert_eq!(d.at(2, 2), m.at(1, 1));
+        assert_eq!(d.at(1, 1), 0.0);
+        // paper §3.1.1 inner-padding count: [S(N-1)+1]^2 - N^2
+        assert_eq!(d.count_zeros(), 25 - 9);
+    }
+
+    #[test]
+    fn dilate_stride1_is_identity() {
+        let m = Mat::from_fn(2, 2, |r, c| (r * 2 + c) as f32);
+        assert_eq!(m.dilate(1), m);
+    }
+
+    #[test]
+    fn pad_border_geometry() {
+        let m = Mat::from_fn(2, 2, |_, _| 1.0);
+        let p = m.pad_border(2);
+        assert_eq!((p.rows, p.cols), (6, 6));
+        assert_eq!(p.at(0, 0), 0.0);
+        assert_eq!(p.at(2, 2), 1.0);
+        // paper §3.1.1 outer-padding count: 4(K-1)[S(N-1)+1]+4(K-1)^2
+        // with K-1 = 2, inner size 2: 4*2*2 + 4*4 = 32
+        assert_eq!(p.count_zeros(), 32);
+    }
+
+    #[test]
+    fn assert_close_accepts_small_error() {
+        let a = Mat::from_slice(1, 2, &[1.0, 2.0]);
+        let b = Mat::from_slice(1, 2, &[1.0 + 1e-6, 2.0 - 1e-6]);
+        a.assert_close(&b, 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn assert_close_rejects_large_error() {
+        let a = Mat::from_slice(1, 1, &[1.0]);
+        let b = Mat::from_slice(1, 1, &[1.5]);
+        a.assert_close(&b, 1e-4);
+    }
+}

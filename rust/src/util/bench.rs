@@ -1,0 +1,117 @@
+//! Minimal timing harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that calls
+//! [`bench_case`] / [`BenchSet`] and prints median / mean / min wall-times
+//! plus whatever paper-table rows the target reproduces.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    /// Nanoseconds of the median iteration.
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Time `f` adaptively: warm up, then run enough iterations to cover
+/// ~`target_ms` of wall-time (at least `min_iters`).
+pub fn bench_case<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> Measurement {
+    // Warm-up + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let budget = Duration::from_millis(target_ms);
+    let iters = ((budget.as_nanos() / once.as_nanos()).clamp(1, 10_000)) as usize;
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let min = samples[0];
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        median,
+        mean,
+        min,
+    };
+    println!(
+        "bench {:<42} iters={:<6} median={:>12?} mean={:>12?} min={:>12?}",
+        m.name, m.iters, m.median, m.mean, m.min
+    );
+    m
+}
+
+/// A named collection of measurements with a summary printer.
+#[derive(Default)]
+pub struct BenchSet {
+    pub measurements: Vec<Measurement>,
+}
+
+impl BenchSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, target_ms: u64, f: F) -> &Measurement {
+        let m = bench_case(name, target_ms, f);
+        self.measurements.push(m);
+        self.measurements.last().unwrap()
+    }
+
+    /// Speedup of `base` over `other` by median time (>1 means base wins).
+    pub fn speedup(&self, base: &str, other: &str) -> Option<f64> {
+        let t = |n: &str| {
+            self.measurements
+                .iter()
+                .find(|m| m.name == n)
+                .map(|m| m.median_ns())
+        };
+        Some(t(other)? / t(base)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_case_measures_something() {
+        let m = bench_case("noop-ish", 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(m.iters >= 1);
+        assert!(m.min <= m.median);
+    }
+
+    #[test]
+    fn speedup_ratio_direction() {
+        let mut set = BenchSet::new();
+        // black_box each element so LLVM cannot close-form the sums
+        set.run("fast", 5, || {
+            let n = std::hint::black_box(8u64);
+            std::hint::black_box((0..n).map(std::hint::black_box).sum::<u64>());
+        });
+        set.run("slow", 5, || {
+            let n = std::hint::black_box(50_000u64);
+            std::hint::black_box((0..n).map(std::hint::black_box).sum::<u64>());
+        });
+        let s = set.speedup("fast", "slow").unwrap();
+        assert!(s > 1.0, "expected fast to win, got {s}");
+    }
+}

@@ -1,0 +1,53 @@
+//! Cross-cutting utilities.
+//!
+//! The build environment is offline (see Cargo.toml), so this module
+//! provides the small substitutes for crates that would normally come from
+//! crates.io: a deterministic PRNG + property-test driver ([`prng`]), a
+//! micro-benchmark timing harness ([`bench`]), and ASCII table / CSV
+//! rendering for the report generators ([`table`]).
+
+pub mod bench;
+pub mod prng;
+pub mod table;
+
+/// Ceiling division for unsigned sizes.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// `log2(ceil)` of a count — number of bits needed to address `n` items.
+#[inline]
+pub fn bits_for(n: usize) -> u32 {
+    if n <= 1 {
+        1
+    } else {
+        usize::BITS - (n - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn bits_for_basics() {
+        assert_eq!(bits_for(0), 1);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(4), 2);
+        assert_eq!(bits_for(5), 3);
+        assert_eq!(bits_for(32), 5);
+        assert_eq!(bits_for(33), 6);
+    }
+}

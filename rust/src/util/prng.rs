@@ -1,0 +1,157 @@
+//! Deterministic xorshift64* PRNG and a tiny property-test driver.
+//!
+//! proptest is not available in this offline image; [`for_each_case`]
+//! provides the shrinking-free core of what the test-suite needs: many
+//! deterministic random cases per invariant, with the failing seed printed
+//! so a case can be replayed exactly.
+
+/// xorshift64* — fast, deterministic, good-enough statistical quality for
+/// test-case generation and synthetic workloads.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Create a PRNG from a seed. Seed 0 is remapped (xorshift fixpoint).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    pub fn sf32(&mut self) -> f32 {
+        2.0 * self.f32() - 1.0
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f32().max(1e-12);
+        let u2 = self.f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Fill a vector with uniform values in `[-1, 1)`.
+    pub fn fill_sf32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.sf32()).collect()
+    }
+
+    /// Random boolean with probability `p` of being true.
+    pub fn chance(&mut self, p: f32) -> bool {
+        self.f32() < p
+    }
+}
+
+/// Run `cases` deterministic random cases of a property; panics with the
+/// case index + seed on failure so the case is replayable.
+pub fn for_each_case<F: FnMut(&mut Prng)>(cases: usize, base_seed: u64, mut f: F) {
+    for i in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(i as u64 + 1);
+        let mut rng = Prng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Prng::new(7);
+        for _ in 0..10_000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn range_inclusive_bounds_hit() {
+        let mut r = Prng::new(9);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..1_000 {
+            let v = r.range(3, 5);
+            assert!((3..=5).contains(&v));
+            lo_seen |= v == 3;
+            hi_seen |= v == 5;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = Prng::new(11);
+        let n = 20_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn for_each_case_runs_all() {
+        let mut count = 0;
+        for_each_case(17, 0xABC, |_| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    fn seed_zero_not_stuck() {
+        let mut r = Prng::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+}

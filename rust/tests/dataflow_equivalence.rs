@@ -1,0 +1,113 @@
+//! Integration: every dataflow implementation computes the same function.
+//!
+//! For random geometries, RS (padded), TPU (lowered) and EcoFlow
+//! (zero-free) must produce identical transposed/dilated/direct
+//! convolution results, all matching the golden oracle — the paper's
+//! functional-simulator validation story (§5.1).
+
+use ecoflow::compiler::{ecoflow as ef, ganax, rs, tpu};
+use ecoflow::config::ArchConfig;
+use ecoflow::tensor::{conv, Mat};
+use ecoflow::util::prng::for_each_case;
+
+#[test]
+fn all_dataflows_agree_on_transposed_conv() {
+    let eye = ArchConfig::eyeriss();
+    let eco = ArchConfig::ecoflow();
+    let tpu_a = ArchConfig::tpu();
+    for_each_case(25, 0xA11, |rng| {
+        let he = rng.range(1, 8);
+        let k = rng.range(1, 5);
+        let s = rng.range(1, 4);
+        let e = Mat::random(he, he, rng);
+        let w = Mat::random(k, k, rng);
+        let golden = conv::transposed_conv(&e, &w, s);
+        let (o_rs, _) = rs::transpose_via_padding(&eye, &e, &w, s).unwrap();
+        let (o_ef, _) = ef::transpose_pass(&eco, &e, &w, s).unwrap();
+        let (o_tpu, _) = tpu::transpose_pass(&tpu_a, &e, &w, s);
+        let (o_gx, _) = ganax::transpose_pass(&eco, &e, &w, s).unwrap();
+        o_rs.assert_close(&golden, 1e-3);
+        o_ef.assert_close(&golden, 1e-3);
+        o_tpu.assert_close(&golden, 1e-3);
+        o_gx.assert_close(&golden, 1e-3);
+    });
+}
+
+#[test]
+fn all_dataflows_agree_on_dilated_conv() {
+    let eye = ArchConfig::eyeriss();
+    let eco = ArchConfig::ecoflow();
+    let tpu_a = ArchConfig::tpu();
+    for_each_case(25, 0xA12, |rng| {
+        let he = rng.range(1, 6);
+        let k = rng.range(1, 5);
+        let s = rng.range(1, 4);
+        let hx = s * (he - 1) + k;
+        let x = Mat::random(hx, hx, rng);
+        let e = Mat::random(he, he, rng);
+        let golden = conv::dilated_conv(&x, &e, s);
+        let (o_rs, _) = rs::dilated_via_padding(&eye, &x, &e, s).unwrap();
+        let (o_ef, _) = ef::filter_grad_pass(&eco, &x, &e, s).unwrap();
+        let (o_tpu, _) = tpu::dilated_pass(&tpu_a, &x, &e, s);
+        o_rs.assert_close(&golden, 1e-3);
+        o_ef.assert_close(&golden, 1e-3);
+        o_tpu.assert_close(&golden, 1e-3);
+    });
+}
+
+#[test]
+fn all_dataflows_agree_on_direct_conv() {
+    let eye = ArchConfig::eyeriss();
+    let tpu_a = ArchConfig::tpu();
+    for_each_case(25, 0xA13, |rng| {
+        let ho = rng.range(1, 8);
+        let k = rng.range(1, 5);
+        let s = rng.range(1, 4);
+        let hx = s * (ho - 1) + k;
+        let x = Mat::random(hx, hx, rng);
+        let w = Mat::random(k, k, rng);
+        let golden = conv::direct_conv(&x, &w, s);
+        let (o_rs, _) = rs::direct_pass(&eye, &x, &w, s).unwrap();
+        let (o_tpu, _) = tpu::direct_pass(&tpu_a, &x, &w, s);
+        o_rs.assert_close(&golden, 1e-3);
+        o_tpu.assert_close(&golden, 1e-3);
+    });
+}
+
+#[test]
+fn ecoflow_issues_only_useful_macs_rs_issues_padded() {
+    // paper invariant, across the sweep: EcoFlow's MAC-slot count equals
+    // the useful count exactly; RS's equals the padded closed form.
+    let eye = ArchConfig::eyeriss();
+    let eco = ArchConfig::ecoflow();
+    for_each_case(20, 0xA14, |rng| {
+        let he = rng.range(1, 7);
+        let k = rng.range(1, 5);
+        let s = rng.range(1, 4);
+        let e = Mat::from_fn(he, he, |_, _| 1.0 + rng.f32());
+        let w = Mat::from_fn(k, k, |_, _| 1.0 + rng.f32());
+        let (_, st_ef) = ef::transpose_pass(&eco, &e, &w, s).unwrap();
+        assert_eq!(st_ef.macs + st_ef.gated_macs, (he * he * k * k) as u64);
+        assert_eq!(st_ef.gated_macs, 0, "EcoFlow must be zero-free");
+        let (_, st_rs) = rs::transpose_via_padding(&eye, &e, &w, s).unwrap();
+        let d = s * (he - 1) + 1 + 2 * (k - 1);
+        let out = d - k + 1;
+        assert_eq!(st_rs.macs + st_rs.gated_macs, (out * out * k * k) as u64);
+    });
+}
+
+#[test]
+fn linearity_property_of_all_dataflows() {
+    // conv(a*x) == a*conv(x): scaling inputs scales outputs — catches
+    // routing bugs that a single fixed input might miss.
+    let eco = ArchConfig::ecoflow();
+    for_each_case(10, 0xA15, |rng| {
+        let e = Mat::random(4, 5, rng);
+        let w = Mat::random(3, 3, rng);
+        let e2 = Mat::from_fn(4, 5, |r, c| 2.5 * e.at(r, c));
+        let (o1, _) = ef::transpose_pass(&eco, &e, &w, 2).unwrap();
+        let (o2, _) = ef::transpose_pass(&eco, &e2, &w, 2).unwrap();
+        let scaled = Mat::from_fn(o1.rows, o1.cols, |r, c| 2.5 * o1.at(r, c));
+        o2.assert_close(&scaled, 1e-3);
+    });
+}

@@ -1,0 +1,85 @@
+//! Integration: the full three-layer round trip.
+//!
+//! The AOT HLO artifacts (L1 Pallas kernels inlined into L2 JAX graphs)
+//! are loaded and executed through PJRT by L3 Rust, and must agree with
+//! both the in-process oracles and the SASiML dataflows on the same
+//! inputs. Requires `make artifacts`; tests skip (with a notice) when the
+//! artifacts are absent so `cargo test` stays runnable pre-build.
+
+use ecoflow::config::ArchConfig;
+use ecoflow::runtime::trainer::{Trainer, Variant};
+use ecoflow::runtime::{golden, pjrt, Engine};
+use ecoflow::util::prng::Prng;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = pjrt::artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&dir).expect("engine"))
+}
+
+#[test]
+fn golden_configs_validate_against_jax() {
+    let Some(mut engine) = engine_or_skip() else {
+        return;
+    };
+    let arch = ArchConfig::ecoflow();
+    let reports = golden::validate_all(&mut engine, &arch).expect("validation");
+    assert_eq!(reports.len(), golden::GOLDEN_CFGS.len());
+    for r in reports {
+        assert!(r.direct_max_err < 1e-3, "{}: {}", r.tag, r.direct_max_err);
+        assert!(r.tconv_max_err < 1e-3, "{}: {}", r.tag, r.tconv_max_err);
+        assert!(r.fgrad_max_err < 1e-3, "{}: {}", r.tag, r.fgrad_max_err);
+    }
+}
+
+#[test]
+fn train_step_decreases_loss_through_pjrt() {
+    let Some(mut engine) = engine_or_skip() else {
+        return;
+    };
+    let mut trainer = Trainer::new(Variant::Stride, 7);
+    let mut rng = Prng::new(3);
+    for _ in 0..60 {
+        trainer.step(&mut engine, &mut rng).expect("step");
+    }
+    let first = trainer.losses[0];
+    let last = *trainer.losses.last().unwrap();
+    assert!(
+        last < 0.8 * first,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn pool_variant_also_trains() {
+    let Some(mut engine) = engine_or_skip() else {
+        return;
+    };
+    let mut trainer = Trainer::new(Variant::Pool, 9);
+    let mut rng = Prng::new(4);
+    for _ in 0..60 {
+        trainer.step(&mut engine, &mut rng).expect("step");
+    }
+    assert!(*trainer.losses.last().unwrap() < 0.9 * trainer.losses[0]);
+}
+
+#[test]
+fn manifest_covers_all_golden_configs() {
+    let Some(engine) = engine_or_skip() else {
+        return;
+    };
+    let names = engine.names();
+    for cfg in golden::GOLDEN_CFGS {
+        for kind in ["direct", "tconv", "fgrad"] {
+            let want = format!("golden_{kind}_{}", cfg.tag);
+            assert!(names.contains(&want), "missing artifact {want}");
+        }
+    }
+    for v in ["stride", "pool"] {
+        assert!(names.contains(&format!("train_step_{v}")));
+        assert!(names.contains(&format!("logits_{v}")));
+    }
+}
