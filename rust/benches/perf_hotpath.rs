@@ -4,8 +4,12 @@
 //! array loop (EXPERIMENTS.md §Perf target: >= 50M/s release) and the
 //! per-op cost of the three dataflow passes + the systolic array.
 
-use ecoflow::compiler::{ecoflow as ef, rs, tpu};
+use ecoflow::compiler::{ecoflow as ef, rs, tiling, tpu};
 use ecoflow::config::ArchConfig;
+use ecoflow::coordinator::cache::CostCache;
+use ecoflow::coordinator::scheduler::{arch_for, job_matrix, run_sweep_cached};
+use ecoflow::energy::{DramModel, EnergyParams};
+use ecoflow::model::zoo;
 use ecoflow::sim::systolic::systolic_matmul;
 use ecoflow::tensor::Mat;
 use ecoflow::util::bench::BenchSet;
@@ -55,5 +59,57 @@ fn main() {
     if let Some(s) = set.speedup("golden_conv_oracle/25x25_k3_s2", "rs_direct_pass/25x25_k3_s2")
     {
         println!("  sim-vs-oracle overhead: cycle-accurate RS pass is {s:.0}x the plain conv");
+    }
+
+    // -- sweep engine: dedup + memoization on a repeated-layer matrix ----
+    // ResNet-50-style stacks repeat shapes heavily; the naive loop below
+    // simulates every job, the engine simulates each canonical CostKey
+    // once (cold) or zero times (warm).
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    // expand RepeatedLayer counts back into per-instance jobs, the way
+    // the hardware would see the network
+    let stack: Vec<_> = zoo::full_network("ResNet-50")
+        .into_iter()
+        .flat_map(|rl| std::iter::repeat(rl.layer).take(rl.count))
+        .collect();
+    let flows = [ecoflow::compiler::Dataflow::EcoFlow];
+    let jobs = job_matrix(&stack, &flows, 4);
+    println!(
+        "sweep matrix: {} jobs ({} ResNet-50 layer instances x 3 passes x EcoFlow)",
+        jobs.len(),
+        stack.len()
+    );
+
+    set.run("sweep_naive_loop/resnet50", 1500, || {
+        for j in &jobs {
+            std::hint::black_box(
+                tiling::layer_cost(
+                    &arch_for(j.flow),
+                    &params,
+                    &dram,
+                    &j.layer,
+                    j.pass,
+                    j.flow,
+                    j.batch,
+                )
+                .unwrap(),
+            );
+        }
+    });
+    set.run("sweep_engine_cold/resnet50", 1500, || {
+        let cache = CostCache::new();
+        std::hint::black_box(run_sweep_cached(&params, &dram, jobs.clone(), 1, &cache));
+    });
+    let warm = CostCache::new();
+    let _ = run_sweep_cached(&params, &dram, jobs.clone(), 1, &warm);
+    set.run("sweep_engine_warm/resnet50", 1500, || {
+        std::hint::black_box(run_sweep_cached(&params, &dram, jobs.clone(), 1, &warm));
+    });
+    if let Some(s) = set.speedup("sweep_engine_cold/resnet50", "sweep_naive_loop/resnet50") {
+        println!("  dedup speedup (cold cache) over naive loop: {s:.2}x");
+    }
+    if let Some(s) = set.speedup("sweep_engine_warm/resnet50", "sweep_naive_loop/resnet50") {
+        println!("  memoized speedup (warm cache) over naive loop: {s:.2}x");
     }
 }

@@ -5,18 +5,25 @@
 //! ```text
 //! ecoflow fig3|fig8|fig9|fig10|fig11|fig12       regenerate a figure
 //! ecoflow table1|table2|table5|table6|table7|table8
+//! ecoflow report                                 all tables + figures
 //! ecoflow validate [--artifacts DIR]             golden JAX-vs-sim check
 //! ecoflow train [--steps N] [--variant stride|pool]
 //! ecoflow sweep [--csv]                          full layer sweep
 //! ecoflow version
 //! ```
+//!
+//! One [`CostCache`] is created per invocation and shared by every sweep
+//! the command triggers, so e.g. `report` regenerates fig10 almost
+//! entirely from fig8/fig9's memoized simulations. `--cache-stats`
+//! appends the hit/miss/eviction counters to any command's output.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
 use crate::compiler::Dataflow;
-use crate::coordinator::scheduler::{default_threads, job_matrix, run_sweep};
+use crate::coordinator::cache::CostCache;
+use crate::coordinator::scheduler::{default_threads, job_matrix, run_sweep_cached};
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::zoo;
 use crate::report::{figures, tables};
@@ -58,11 +65,12 @@ pub fn usage() -> &'static str {
      commands:\n\
      \u{20}  fig3|fig8|fig9|fig10|fig11|fig12   regenerate a paper figure\n\
      \u{20}  table1|table2|table5|table6|table7|table8\n\
+     \u{20}  report                             all tables + figures, one shared cache\n\
      \u{20}  validate [--artifacts DIR]         golden JAX-vs-simulator check\n\
      \u{20}  train [--steps N] [--variant stride|pool] [--artifacts DIR]\n\
      \u{20}  sweep [--csv]                      full layer x dataflow sweep\n\
      \u{20}  version\n\
-     options: --threads N, --csv"
+     options: --threads N, --csv, --cache-stats"
 }
 
 impl Args {
@@ -91,20 +99,39 @@ pub fn run(args: &[String]) -> Result<()> {
     let parsed = parse_args(args)?;
     let threads = parsed.usize_or("threads", default_threads());
     let csv = parsed.flag("csv");
+    // One memo table per invocation: every sweep this command triggers
+    // shares it, and `--cache-stats` reports it at the end.
+    let cache = CostCache::new();
     match parsed.command.as_str() {
         "version" => println!("ecoflow {}", crate::version()),
         "fig3" => emit(figures::fig3_zero_mults(), csv),
-        "fig8" => emit(figures::fig8_input_grad(threads), csv),
-        "fig9" => emit(figures::fig9_filter_grad(threads), csv),
-        "fig10" => emit(figures::fig10_energy(threads), csv),
-        "fig11" => emit(figures::fig11_gan_time(threads), csv),
-        "fig12" => emit(figures::fig12_gan_energy(threads), csv),
+        "fig8" => emit(figures::fig8_input_grad_cached(threads, &cache), csv),
+        "fig9" => emit(figures::fig9_filter_grad_cached(threads, &cache), csv),
+        "fig10" => emit(figures::fig10_energy_cached(threads, &cache), csv),
+        "fig11" => emit(figures::fig11_gan_time_cached(threads, &cache), csv),
+        "fig12" => emit(figures::fig12_gan_energy_cached(threads, &cache), csv),
         "table1" => emit(tables::table1_noc(), csv),
         "table2" => emit(tables::table2_validation(), csv),
         "table5" => emit(tables::table5_layers(), csv),
-        "table6" => emit(tables::table6_cnn_e2e(threads), csv),
+        "table6" => emit(tables::table6_cnn_e2e_cached(threads, &cache), csv),
         "table7" => emit(tables::table7_layers(), csv),
-        "table8" => emit(tables::table8_gan_e2e(threads), csv),
+        "table8" => emit(tables::table8_gan_e2e_cached(threads, &cache), csv),
+        "report" => {
+            // Every table and figure, in paper order, over one cache —
+            // the repeated-layer/repeated-figure sweeps collapse.
+            emit(tables::table1_noc(), csv);
+            emit(tables::table2_validation(), csv);
+            emit(tables::table5_layers(), csv);
+            emit(tables::table6_cnn_e2e_cached(threads, &cache), csv);
+            emit(tables::table7_layers(), csv);
+            emit(tables::table8_gan_e2e_cached(threads, &cache), csv);
+            emit(figures::fig3_zero_mults(), csv);
+            emit(figures::fig8_input_grad_cached(threads, &cache), csv);
+            emit(figures::fig9_filter_grad_cached(threads, &cache), csv);
+            emit(figures::fig10_energy_cached(threads, &cache), csv);
+            emit(figures::fig11_gan_time_cached(threads, &cache), csv);
+            emit(figures::fig12_gan_energy_cached(threads, &cache), csv);
+        }
         "validate" => {
             let dir = parsed
                 .options
@@ -149,7 +176,7 @@ pub fn run(args: &[String]) -> Result<()> {
             let params = EnergyParams::default();
             let dram = DramModel::default();
             let jobs = job_matrix(&zoo::evaluation_layers(), &Dataflow::ALL, 4);
-            let results = run_sweep(&params, &dram, jobs, threads);
+            let results = run_sweep_cached(&params, &dram, jobs, threads, &cache);
             let mut t = crate::util::table::Table::new(
                 "Full layer sweep",
                 &["layer", "pass", "flow", "ms", "uJ", "util"],
@@ -168,6 +195,10 @@ pub fn run(args: &[String]) -> Result<()> {
             emit(t, csv);
         }
         other => return Err(anyhow!("unknown command {other}\n{}", usage())),
+    }
+    if parsed.flag("cache-stats") {
+        // stderr, so `--csv --cache-stats` keeps stdout machine-readable
+        eprintln!("{}", cache.stats().render_line());
     }
     Ok(())
 }
@@ -188,6 +219,13 @@ mod tests {
         assert_eq!(a.command, "fig8");
         assert_eq!(a.usize_or("threads", 0), 4);
         assert!(a.flag("csv"));
+    }
+
+    #[test]
+    fn cache_stats_flag_parses() {
+        let a = parse_args(&["table6".into(), "--cache-stats".into()]).unwrap();
+        assert!(a.flag("cache-stats"));
+        assert!(!a.flag("csv"));
     }
 
     #[test]

@@ -190,7 +190,12 @@ pub fn simulate_plane(
 }
 
 /// Full cost of one layer's training pass under a dataflow.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares every field exactly (floats included): the cost
+/// model is deterministic, so two computations of the same [`CostKey`]
+/// must be bit-identical — which is what the memoization layer
+/// ([`crate::coordinator::cache`]) and its property tests rely on.
+#[derive(Clone, Debug, PartialEq)]
 pub struct LayerCost {
     pub cycles: u64,
     pub seconds: f64,
@@ -207,6 +212,174 @@ impl LayerCost {
     /// Execution time in milliseconds.
     pub fn millis(&self) -> f64 {
         self.seconds * 1e3
+    }
+}
+
+/// Bit-exact fingerprint of everything *besides* the layer geometry that
+/// feeds [`layer_cost`]: the architecture (Table 3 + Table 1 NoC), the
+/// per-event energies, and the DRAM model. Floats are keyed by their bit
+/// patterns, so two configs compare equal iff the cost model cannot tell
+/// them apart.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct EnvKey {
+    arch: [u64; 21],
+    energy: [u64; 8],
+    dram: [u64; 4],
+}
+
+impl EnvKey {
+    pub fn of(arch: &ArchConfig, params: &EnergyParams, dram: &DramModel) -> Self {
+        // Exhaustive destructuring (no `..` rest patterns): adding a field
+        // to any of these structs is a compile error here, so the cache
+        // key can never silently under-discriminate.
+        let ArchConfig {
+            array_rows,
+            array_cols,
+            clock_mhz,
+            rf_ifmap,
+            rf_filter,
+            rf_psum,
+            rf_latency,
+            gbuf_bytes,
+            gbuf_banks,
+            dram_bytes,
+            dram_gbps,
+            clock_gating,
+            mul_stages,
+            add_stages,
+            queue_depth,
+            word_bits,
+            noc,
+        } = arch.clone(); // ArchConfig is Clone, not Copy
+        let crate::config::NocConfig {
+            gin_filter_bits,
+            gin_ifmap_bits,
+            gon_bits,
+            local_bits,
+            hop_latency,
+        } = noc;
+        let EnergyParams {
+            mul_pj,
+            add_pj,
+            spad_pj,
+            gbuf_pj,
+            noc_pj,
+            dram_pj,
+            gated_pe_pj,
+            pe_ctrl_pj,
+        } = *params;
+        let DramModel {
+            peak_bw,
+            access_pj_per_byte,
+            background_mw,
+            latency_ns,
+        } = *dram;
+        Self {
+            arch: [
+                array_rows as u64,
+                array_cols as u64,
+                clock_mhz.to_bits(),
+                rf_ifmap as u64,
+                rf_filter as u64,
+                rf_psum as u64,
+                rf_latency as u64,
+                gbuf_bytes as u64,
+                gbuf_banks as u64,
+                dram_bytes as u64,
+                dram_gbps.to_bits(),
+                clock_gating as u64,
+                mul_stages as u64,
+                add_stages as u64,
+                queue_depth as u64,
+                word_bits as u64,
+                gin_filter_bits as u64,
+                gin_ifmap_bits as u64,
+                gon_bits as u64,
+                local_bits as u64,
+                hop_latency as u64,
+            ],
+            energy: [
+                mul_pj.to_bits(),
+                add_pj.to_bits(),
+                spad_pj.to_bits(),
+                gbuf_pj.to_bits(),
+                noc_pj.to_bits(),
+                dram_pj.to_bits(),
+                gated_pe_pj.to_bits(),
+                pe_ctrl_pj.to_bits(),
+            ],
+            dram: [
+                peak_bw.to_bits(),
+                access_pj_per_byte.to_bits(),
+                background_mw.to_bits(),
+                latency_ns.to_bits(),
+            ],
+        }
+    }
+}
+
+/// Canonical content address of one [`layer_cost`] evaluation.
+///
+/// Two (layer, pass, flow, batch, environment) tuples get the same key
+/// iff [`layer_cost`] is guaranteed to return the same result for both:
+/// the layer's *geometry* is keyed, its `net`/`name` labels and the
+/// `optimized` provenance flag (which never enter the cost model) are
+/// not. Repeated layers across networks — ResNet-50 `S2-3x3s2` and
+/// MobileNet `CONV3` share a shape, for example — therefore collapse to
+/// one simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CostKey {
+    pub kind: LayerKind,
+    pub in_ch: usize,
+    pub ifm: usize,
+    pub ofm: usize,
+    pub k: usize,
+    pub num_filters: usize,
+    pub stride: usize,
+    pub pass: TrainingPass,
+    pub flow: Dataflow,
+    pub batch: usize,
+    pub env: EnvKey,
+}
+
+impl CostKey {
+    /// Key for the evaluation `layer_cost(arch, params, dram, layer,
+    /// pass, flow, batch)` — same argument order as [`layer_cost`].
+    pub fn of(
+        arch: &ArchConfig,
+        params: &EnergyParams,
+        dram: &DramModel,
+        layer: &ConvLayer,
+        pass: TrainingPass,
+        flow: Dataflow,
+        batch: usize,
+    ) -> Self {
+        Self::with_env(EnvKey::of(arch, params, dram), layer, pass, flow, batch)
+    }
+
+    /// [`CostKey::of`] with a precomputed environment fingerprint — for
+    /// bulk keying where the (arch, params, dram) triple is shared by
+    /// many jobs and fingerprinting it per job would dominate.
+    pub fn with_env(
+        env: EnvKey,
+        layer: &ConvLayer,
+        pass: TrainingPass,
+        flow: Dataflow,
+        batch: usize,
+    ) -> Self {
+        Self {
+            kind: layer.kind,
+            in_ch: layer.in_ch,
+            ifm: layer.ifm,
+            ofm: layer.ofm,
+            k: layer.k,
+            num_filters: layer.num_filters,
+            stride: layer.stride,
+            pass,
+            flow,
+            batch,
+            env,
+        }
     }
 }
 
@@ -502,6 +675,96 @@ mod tests {
         let rs = layer_cost(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::RowStationary, 4).unwrap();
         let ef = layer_cost(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::EcoFlow, 4).unwrap();
         assert!(ef.energy.total_pj() < rs.energy.total_pj());
+    }
+
+    #[test]
+    fn cost_key_ignores_layer_names_and_provenance() {
+        let (arch, p, d) = env();
+        let a = ConvLayer::conv("ResNet-50", "S2-3x3s2", 128, 57, 28, 3, 128, 2);
+        let mut b = ConvLayer::conv("MobileNet", "CONV3", 128, 57, 28, 3, 128, 2);
+        b.optimized = true; // provenance flag never enters the cost model
+        let ka = CostKey::of(&arch, &p, &d, &a, TrainingPass::InputGrad, Dataflow::EcoFlow, 4);
+        let kb = CostKey::of(&arch, &p, &d, &b, TrainingPass::InputGrad, Dataflow::EcoFlow, 4);
+        assert_eq!(ka, kb);
+    }
+
+    #[test]
+    fn cost_key_distinct_across_pass_flow_batch_and_arch() {
+        let (arch, p, d) = env();
+        let l = resnet_conv3();
+        let base = CostKey::of(&arch, &p, &d, &l, TrainingPass::Forward, Dataflow::EcoFlow, 4);
+        assert_ne!(
+            base,
+            CostKey::of(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::EcoFlow, 4)
+        );
+        assert_ne!(
+            base,
+            CostKey::of(&arch, &p, &d, &l, TrainingPass::Forward, Dataflow::RowStationary, 4)
+        );
+        assert_ne!(
+            base,
+            CostKey::of(&arch, &p, &d, &l, TrainingPass::Forward, Dataflow::EcoFlow, 8)
+        );
+        let eyeriss = ArchConfig::eyeriss();
+        assert_ne!(
+            base,
+            CostKey::of(&eyeriss, &p, &d, &l, TrainingPass::Forward, Dataflow::EcoFlow, 4)
+        );
+        let p65 = p.scaled_to_65nm();
+        assert_ne!(
+            base,
+            CostKey::of(&arch, &p65, &d, &l, TrainingPass::Forward, Dataflow::EcoFlow, 4)
+        );
+    }
+
+    #[test]
+    fn cost_key_geometry_fields_all_discriminate() {
+        let (arch, p, d) = env();
+        let base = resnet_conv3();
+        let key = |l: &ConvLayer| {
+            CostKey::of(&arch, &p, &d, l, TrainingPass::Forward, Dataflow::EcoFlow, 4)
+        };
+        let k0 = key(&base);
+        let mutations: [fn(&mut ConvLayer); 7] = [
+            |l| l.in_ch += 1,
+            |l| l.ifm += 1,
+            |l| l.ofm += 1,
+            |l| l.k += 1,
+            |l| l.num_filters += 1,
+            |l| l.stride += 1,
+            |l| l.kind = LayerKind::TransposedConv,
+        ];
+        for mutate in mutations {
+            let mut m = base.clone();
+            mutate(&mut m);
+            assert_ne!(k0, key(&m), "mutated layer must get a fresh key: {m:?}");
+        }
+    }
+
+    #[test]
+    fn cost_key_no_collisions_over_table5_matrix() {
+        // Smoke test: the full (Table 5 layers x passes x flows x batches)
+        // matrix maps to pairwise-distinct keys (all geometries differ).
+        let (arch, p, d) = env();
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0usize;
+        for l in zoo::table5_layers() {
+            for pass in TrainingPass::ALL {
+                for flow in Dataflow::ALL {
+                    for batch in [1usize, 4] {
+                        total += 1;
+                        assert!(
+                            seen.insert(CostKey::of(&arch, &p, &d, &l, pass, flow, batch)),
+                            "collision at {} {} {pass:?} {flow:?} b{batch}",
+                            l.net,
+                            l.name
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len(), total);
+        assert_eq!(total, 8 * 3 * 4 * 2);
     }
 
     #[test]

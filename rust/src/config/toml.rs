@@ -76,12 +76,20 @@ impl Doc {
 }
 
 /// Parse error with 1-based line number.
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+// Hand-written (thiserror is unavailable in this offline image).
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn parse_value(raw: &str) -> Result<Value, String> {
     let t = raw.trim();

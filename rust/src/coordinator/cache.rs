@@ -1,0 +1,301 @@
+//! Content-addressed memoization of [`tiling::layer_cost`] evaluations.
+//!
+//! The paper's evaluation methodology (§6.1, Tables 6/8, Figs. 8–12)
+//! sweeps every (layer, pass, dataflow, batch) combination, and the
+//! networks are stacks of repeated layer shapes — so identical
+//! simulations recur both *within* one sweep (AlexNet/GAN stacks repeat
+//! shapes heavily) and *across* report targets (Fig. 10 re-evaluates
+//! Fig. 8's and Fig. 9's whole job set). [`CostCache`] is the shared memo
+//! table that collapses those: a thread-safe map from the canonical
+//! [`CostKey`] (normalized layer geometry + architecture/energy/DRAM
+//! fingerprint + pass + flow + batch) to the finished
+//! [`LayerCost`](tiling::LayerCost), with hit/miss/eviction counters
+//! surfaced the same way [`PassStats`](crate::sim::stats::PassStats)
+//! surfaces simulator counters.
+//!
+//! Correctness note: [`tiling::layer_cost`] is deterministic (fixed PRNG
+//! seeds, no wall-clock inputs), so memoized results are bit-identical to
+//! recomputation — asserted by the property tests in
+//! `tests/sweep_cache.rs`. Two threads racing on the same missing key may
+//! both compute it; both arrive at the same value and the second insert
+//! is a no-op overwrite, so no cross-thread coordination beyond the map
+//! lock is needed.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::compiler::tiling::{self, CostKey};
+use crate::util::table::Table;
+
+/// A memoized evaluation outcome — exactly what a
+/// [`SweepResult`](super::scheduler::SweepResult) carries.
+pub type CachedCost = Result<tiling::LayerCost, String>;
+
+/// Counter snapshot of a [`CostCache`] (PassStats-style reporting).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the memo table.
+    pub hits: u64,
+    /// Lookups that fell through to simulation.
+    pub misses: u64,
+    /// Entries dropped to stay under the capacity bound.
+    pub evictions: u64,
+    /// Live entries at snapshot time.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups answered from the table.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// One-line summary for CLI `--cache-stats` output.
+    pub fn render_line(&self) -> String {
+        format!(
+            "layer-cost cache: {} hits, {} misses ({:.1}% hit rate), {} entries, {} evictions",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate(),
+            self.entries,
+            self.evictions
+        )
+    }
+
+    /// Tabular form (same shape as the report tables).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "Layer-cost cache statistics",
+            &["hits", "misses", "hit rate", "entries", "evictions"],
+        );
+        t.row(vec![
+            self.hits.to_string(),
+            self.misses.to_string(),
+            format!("{:.1}%", 100.0 * self.hit_rate()),
+            self.entries.to_string(),
+            self.evictions.to_string(),
+        ]);
+        t
+    }
+}
+
+struct Inner {
+    map: HashMap<CostKey, CachedCost>,
+    /// Insertion order for FIFO eviction at the capacity bound.
+    order: VecDeque<CostKey>,
+}
+
+/// Thread-safe, capacity-bounded memo table for layer costs.
+///
+/// One cache is created per CLI invocation (see [`crate::cli::run`]) so
+/// every table/figure generated in that invocation reuses each other's
+/// simulations; library users can scope caches however they like —
+/// results are identical either way, only the hit counters move.
+pub struct CostCache {
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    capacity: usize,
+}
+
+/// Default capacity: comfortably above the full evaluation matrix
+/// (~25 distinct geometries x 3 passes x 4 flows x a few batch sizes),
+/// small enough that a runaway sweep cannot hold the heap hostage.
+pub const DEFAULT_CAPACITY: usize = 16_384;
+
+impl Default for CostCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CostCache {
+    /// Cache with [`DEFAULT_CAPACITY`].
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// Cache bounded to `capacity` entries (FIFO eviction; min 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Look up a key, counting the outcome as a hit or miss.
+    pub fn get(&self, key: &CostKey) -> Option<CachedCost> {
+        let found = self.inner.lock().unwrap().map.get(key).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert (or overwrite) an entry, evicting FIFO at capacity.
+    pub fn insert(&self, key: CostKey, value: CachedCost) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(key, value).is_none() {
+            // `order` and the map keys stay in bijection: a key enters
+            // `order` exactly on first insert and leaves with its entry.
+            inner.order.push_back(key);
+            if inner.map.len() > self.capacity {
+                let old = inner.order.pop_front().expect("order tracks map");
+                inner.map.remove(&old);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Memoized evaluation: returns the cached value or computes,
+    /// stores and returns it.
+    pub fn get_or_compute<F: FnOnce() -> CachedCost>(&self, key: CostKey, f: F) -> CachedCost {
+        if let Some(v) = self.get(&key) {
+            return v;
+        }
+        let v = f();
+        self.insert(key, v.clone());
+        v
+    }
+
+    /// Credit `n` extra hits to the counters. The scheduler uses this to
+    /// account for within-sweep dedup: duplicate jobs never perform a map
+    /// lookup (they share their first occurrence's result slot), but each
+    /// one *was* answered from memoized work and should read as a hit in
+    /// `--cache-stats`.
+    pub fn record_extra_hits(&self, n: u64) {
+        self.hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when nothing has been memoized yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::Dataflow;
+    use crate::config::ArchConfig;
+    use crate::energy::{DramModel, EnergyParams};
+    use crate::model::{zoo, TrainingPass};
+
+    fn keys(n: usize) -> Vec<CostKey> {
+        // Distinct keys via distinct batch sizes.
+        let arch = ArchConfig::ecoflow();
+        let p = EnergyParams::default();
+        let d = DramModel::default();
+        let layers = zoo::table5_layers();
+        (1..=n)
+            .map(|b| {
+                CostKey::of(
+                    &arch,
+                    &p,
+                    &d,
+                    &layers[0],
+                    TrainingPass::Forward,
+                    Dataflow::EcoFlow,
+                    b,
+                )
+            })
+            .collect()
+    }
+
+    fn dummy(cycles: u64) -> CachedCost {
+        Err(format!("dummy-{cycles}"))
+    }
+
+    #[test]
+    fn hit_and_miss_counters_track_lookups() {
+        let cache = CostCache::new();
+        let k = keys(1)[0];
+        assert!(cache.get(&k).is_none());
+        cache.insert(k, dummy(1));
+        assert!(cache.get(&k).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_fifo() {
+        let cache = CostCache::with_capacity(2);
+        let ks = keys(3);
+        for (i, k) in ks.iter().enumerate() {
+            cache.insert(*k, dummy(i as u64));
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        // the first-inserted key is the one that left
+        assert!(cache.get(&ks[0]).is_none());
+        assert!(cache.get(&ks[2]).is_some());
+    }
+
+    #[test]
+    fn get_or_compute_runs_closure_once_per_key() {
+        let cache = CostCache::new();
+        let k = keys(1)[0];
+        let mut calls = 0;
+        for _ in 0..3 {
+            let _ = cache.get_or_compute(k, || {
+                calls += 1;
+                dummy(9)
+            });
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(cache.stats().hits, 2);
+    }
+
+    #[test]
+    fn overwrite_does_not_grow_the_table() {
+        let cache = CostCache::with_capacity(4);
+        let k = keys(1)[0];
+        cache.insert(k, dummy(1));
+        cache.insert(k, dummy(2));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().evictions, 0);
+    }
+
+    #[test]
+    fn render_line_mentions_all_counters() {
+        let line = CacheStats {
+            hits: 3,
+            misses: 1,
+            evictions: 0,
+            entries: 1,
+        }
+        .render_line();
+        assert!(line.contains("3 hits") && line.contains("75.0% hit rate"), "{line}");
+    }
+}

@@ -1,9 +1,40 @@
-//! The sweep coordinator: schedules (layer x pass x dataflow) simulation
-//! jobs over a `std::thread` scoped pool, collects [`LayerCost`]s, and
-//! composes end-to-end network estimates (paper §6.1's methodology).
+//! The sweep coordinator: turns (layer x pass x dataflow) job matrices
+//! into [`LayerCost`](crate::compiler::tiling::LayerCost)s and composes
+//! end-to-end network estimates (paper §6.1's methodology).
+//!
+//! # The dedup → shard → fan-out pipeline
+//!
+//! The report targets submit heavily redundant job matrices: networks
+//! are stacks of repeated layer shapes, figures re-sweep each other's
+//! layer sets, and the GAN estimator re-baselines against TPU for every
+//! compared flow. The [`scheduler`] therefore never simulates a job
+//! list verbatim; it
+//!
+//! 1. **dedups** jobs by their canonical
+//!    [`CostKey`](crate::compiler::tiling::CostKey) (normalized layer
+//!    geometry + architecture/energy/DRAM fingerprint + pass + flow +
+//!    batch — layer *names* are irrelevant), consulting the
+//!    [`cache::CostCache`] memo table for keys already evaluated;
+//! 2. **shards** the remaining unique jobs across scoped worker threads
+//!    (atomic-cursor work stealing, one lock-free `OnceLock` result slot
+//!    per unique job — no shared results mutex);
+//! 3. **fans out** the unique results onto the original submission
+//!    order, so callers observe exactly the naive semantics.
+//!
+//! Simulation is deterministic, so cached, deduplicated and multi-thread
+//! runs are bit-identical to the naive single-thread loop — property
+//! tests in `tests/sweep_cache.rs` pin this.
+//!
+//! Cache scope is the caller's choice: the CLI shares one
+//! [`cache::CostCache`] per invocation (`--cache-stats` prints its
+//! hit/miss/eviction counters), while the plain `run_sweep` /
+//! `network_e2e` / `gan_e2e` entry points scope a private cache to one
+//! call.
 
+pub mod cache;
 pub mod e2e;
 pub mod scheduler;
 
-pub use e2e::{gan_e2e, network_e2e, E2eResult};
-pub use scheduler::{run_sweep, SweepJob, SweepResult};
+pub use cache::{CacheStats, CostCache};
+pub use e2e::{gan_e2e, gan_e2e_cached, network_e2e, network_e2e_cached, E2eResult};
+pub use scheduler::{run_sweep, run_sweep_cached, SweepJob, SweepResult};

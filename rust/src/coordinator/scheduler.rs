@@ -1,17 +1,37 @@
-//! Multi-threaded sweep scheduler.
+//! Sharded sweep engine: dedup → shard → fan-out.
 //!
 //! Jobs are independent (each simulates one (layer, pass, dataflow)
-//! proxy and extends it analytically), so the scheduler is a simple
-//! work-stealing-by-index pool over scoped threads (tokio is unavailable
-//! in this offline image — see Cargo.toml).
+//! proxy and extends it analytically), but the job matrices the report
+//! targets build are highly redundant — repeated-layer networks submit
+//! the same canonical [`CostKey`] many times. The engine therefore runs
+//! in three stages:
+//!
+//! 1. **dedup** — every job is keyed by [`CostKey::of`]; only the first
+//!    occurrence of each key becomes a *unique* job. Keys already in the
+//!    [`CostCache`] are resolved immediately without dispatch.
+//! 2. **shard** — the unique jobs are distributed across `threads`
+//!    scoped workers via an atomic cursor (work stealing by index;
+//!    tokio is unavailable in this offline image — see Cargo.toml).
+//!    Each worker writes its result into a dedicated [`OnceLock`] slot:
+//!    no shared `Mutex<Vec<_>>`, no cross-worker contention on results.
+//! 3. **fan-out** — results are cloned back onto the original job list,
+//!    preserving submission order exactly, so callers that index or
+//!    `chunks()` the result vector are unaffected by the dedup.
+//!
+//! Determinism: `tiling::layer_cost` is seed-fixed, so the sweep output
+//! is bit-identical regardless of thread count, cache state, or dedup —
+//! property-tested in `tests/sweep_cache.rs`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::OnceLock;
 
-use crate::compiler::{tiling, Dataflow};
+use crate::compiler::tiling::{self, CostKey, EnvKey};
+use crate::compiler::Dataflow;
 use crate::config::ArchConfig;
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::{ConvLayer, TrainingPass};
+
+use super::cache::{CachedCost, CostCache};
 
 /// One simulation job.
 #[derive(Clone, Debug)]
@@ -20,6 +40,21 @@ pub struct SweepJob {
     pub pass: TrainingPass,
     pub flow: Dataflow,
     pub batch: usize,
+}
+
+impl SweepJob {
+    /// Canonical cache key of this job under its per-flow architecture.
+    pub fn cost_key(&self, params: &EnergyParams, dram: &DramModel) -> CostKey {
+        CostKey::of(
+            &arch_for(self.flow),
+            params,
+            dram,
+            &self.layer,
+            self.pass,
+            self.flow,
+            self.batch,
+        )
+    }
 }
 
 /// Job result (or the simulator error it died with).
@@ -38,40 +73,108 @@ pub fn arch_for(flow: Dataflow) -> ArchConfig {
     }
 }
 
-/// Run all jobs on `threads` workers; results keep job order.
+/// Run all jobs with a private single-use cache; results keep job order.
+///
+/// Identical jobs within `jobs` are still simulated only once (the
+/// dedup stage needs no pre-warmed cache) — use [`run_sweep_cached`] to
+/// additionally reuse work across sweeps.
 pub fn run_sweep(
     params: &EnergyParams,
     dram: &DramModel,
     jobs: Vec<SweepJob>,
     threads: usize,
 ) -> Vec<SweepResult> {
-    let n = jobs.len();
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<SweepResult>>> =
-        Mutex::new((0..n).map(|_| None).collect());
-    let jobs_ref = &jobs;
-    std::thread::scope(|s| {
-        for _ in 0..threads.max(1) {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let job = jobs_ref[i].clone();
-                let arch = arch_for(job.flow);
-                let cost = tiling::layer_cost(
-                    &arch, params, dram, &job.layer, job.pass, job.flow, job.batch,
-                )
-                .map_err(|e| e.to_string());
-                results.lock().unwrap()[i] = Some(SweepResult { job, cost });
-            });
+    let cache = CostCache::new();
+    run_sweep_cached(params, dram, jobs, threads, &cache)
+}
+
+/// Run all jobs against a shared memo table; results keep job order.
+pub fn run_sweep_cached(
+    params: &EnergyParams,
+    dram: &DramModel,
+    jobs: Vec<SweepJob>,
+    threads: usize,
+    cache: &CostCache,
+) -> Vec<SweepResult> {
+    // -- dedup: map each job onto the slot of its first occurrence -------
+    // Environment fingerprints depend only on the flow (via arch_for),
+    // so compute them once per flow instead of once per job — on a
+    // fully-warm sweep the keying IS the hot path.
+    let mut env_by_flow: std::collections::HashMap<Dataflow, EnvKey> =
+        std::collections::HashMap::new();
+    let keys: Vec<CostKey> = jobs
+        .iter()
+        .map(|j| {
+            let env = *env_by_flow
+                .entry(j.flow)
+                .or_insert_with(|| EnvKey::of(&arch_for(j.flow), params, dram));
+            CostKey::with_env(env, &j.layer, j.pass, j.flow, j.batch)
+        })
+        .collect();
+    let mut slot_by_key: std::collections::HashMap<CostKey, usize> = std::collections::HashMap::new();
+    let mut unique_job: Vec<usize> = Vec::new(); // slot -> index of first job
+    let mut slot_of: Vec<usize> = Vec::with_capacity(jobs.len());
+    for (i, key) in keys.iter().enumerate() {
+        let slot = *slot_by_key.entry(*key).or_insert_with(|| {
+            unique_job.push(i);
+            unique_job.len() - 1
+        });
+        slot_of.push(slot);
+    }
+
+    // Duplicate jobs are answered from their first occurrence's slot;
+    // surface that reuse in the counters so --cache-stats reflects it.
+    cache.record_extra_hits((jobs.len() - unique_job.len()) as u64);
+
+    // -- resolve cache hits up front; queue only true misses -------------
+    let slots: Vec<OnceLock<CachedCost>> =
+        (0..unique_job.len()).map(|_| OnceLock::new()).collect();
+    let mut pending: Vec<usize> = Vec::new(); // slots that need simulation
+    for (slot, &ji) in unique_job.iter().enumerate() {
+        match cache.get(&keys[ji]) {
+            Some(v) => {
+                let _ = slots[slot].set(v);
+            }
+            None => pending.push(slot),
         }
-    });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("job completed"))
+    }
+
+    // -- shard: atomic-cursor work stealing over the pending slots -------
+    if !pending.is_empty() {
+        let cursor = AtomicUsize::new(0);
+        let workers = threads.max(1).min(pending.len());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let p = cursor.fetch_add(1, Ordering::Relaxed);
+                    if p >= pending.len() {
+                        break;
+                    }
+                    let slot = pending[p];
+                    let ji = unique_job[slot];
+                    let job = &jobs[ji];
+                    let arch = arch_for(job.flow);
+                    let cost = tiling::layer_cost(
+                        &arch, params, dram, &job.layer, job.pass, job.flow, job.batch,
+                    )
+                    .map_err(|e| e.to_string());
+                    cache.insert(keys[ji], cost.clone());
+                    let _ = slots[slot].set(cost);
+                });
+            }
+        });
+    }
+
+    // -- fan-out: clone unique results back onto the original order ------
+    jobs.into_iter()
+        .zip(slot_of)
+        .map(|(job, slot)| SweepResult {
+            job,
+            cost: slots[slot]
+                .get()
+                .cloned()
+                .expect("every slot is either cache-resolved or simulated"),
+        })
         .collect()
 }
 
@@ -126,6 +229,58 @@ mod tests {
             assert_eq!(r.job.layer.name, j.layer.name);
             assert_eq!(r.job.flow, j.flow);
             assert!(r.cost.is_ok(), "{:?}: {:?}", r.job, r.cost);
+        }
+    }
+
+    #[test]
+    fn duplicate_jobs_simulated_once() {
+        // Three copies of the same geometry under different names: the
+        // dedup stage must collapse them to one simulation per
+        // (pass, flow), and the fan-out must still return all copies.
+        let layers: Vec<ConvLayer> = ["A", "B", "C"]
+            .iter()
+            .map(|n| ConvLayer::conv("Zoo", n, 58, 57, 28, 3, 58, 2))
+            .collect();
+        let jobs = job_matrix(&layers, &[Dataflow::EcoFlow], 1);
+        assert_eq!(jobs.len(), 9); // 3 layers x 3 passes
+        let p = EnergyParams::default();
+        let d = DramModel::default();
+        let cache = CostCache::new();
+        let results = run_sweep_cached(&p, &d, jobs, 4, &cache);
+        assert_eq!(results.len(), 9);
+        // only 3 unique (geometry, pass) pairs were ever simulated
+        assert_eq!(cache.len(), 3);
+        let s = cache.stats();
+        assert_eq!(s.misses, 3, "{s:?}");
+        // job_matrix order is (layer, pass): results i, i+3, i+6 are the
+        // three name-only copies of pass i — they must be bit-identical.
+        for pass_idx in 0..3 {
+            let c0 = results[pass_idx].cost.as_ref().unwrap();
+            for copy in 1..3 {
+                let c = results[pass_idx + 3 * copy].cost.as_ref().unwrap();
+                assert_eq!(c0, c);
+            }
+        }
+    }
+
+    #[test]
+    fn warm_cache_answers_without_simulation() {
+        let layers: Vec<ConvLayer> = zoo::table5_layers()
+            .into_iter()
+            .filter(|l| l.net == "MobileNet")
+            .collect();
+        let jobs = job_matrix(&layers, &[Dataflow::EcoFlow], 2);
+        let p = EnergyParams::default();
+        let d = DramModel::default();
+        let cache = CostCache::new();
+        let first = run_sweep_cached(&p, &d, jobs.clone(), 2, &cache);
+        let miss_after_first = cache.stats().misses;
+        let second = run_sweep_cached(&p, &d, jobs, 2, &cache);
+        let s = cache.stats();
+        assert_eq!(s.misses, miss_after_first, "second run must be all hits");
+        assert!(s.hits >= first.len() as u64 / 3, "{s:?}");
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.cost.as_ref().unwrap(), b.cost.as_ref().unwrap());
         }
     }
 

@@ -1,8 +1,15 @@
 //! Figure regenerators (Figs. 3, 8, 9, 10, 11, 12).
+//!
+//! Every sweep-backed figure has a `*_cached` variant taking a shared
+//! [`CostCache`]; Fig. 10 in particular re-evaluates the exact job sets
+//! of Figs. 8 and 9, so a cache spanning the figures (the CLI `report`
+//! command, or one invocation's `--cache-stats` run) answers most of it
+//! from the memo table.
 
 use crate::analysis::zeros;
 use crate::compiler::Dataflow;
-use crate::coordinator::scheduler::{job_matrix, run_sweep, SweepJob, SweepResult};
+use crate::coordinator::cache::CostCache;
+use crate::coordinator::scheduler::{job_matrix, run_sweep_cached, SweepJob, SweepResult};
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::{gan, zoo, ConvLayer, TrainingPass};
 use crate::util::table::{pct, ratio, Table};
@@ -27,6 +34,7 @@ fn speedup_table(
     layers: &[ConvLayer],
     pass: TrainingPass,
     threads: usize,
+    cache: &CostCache,
 ) -> Table {
     let params = EnergyParams::default();
     let dram = DramModel::default();
@@ -42,7 +50,7 @@ fn speedup_table(
             })
         })
         .collect();
-    let results = run_sweep(&params, &dram, jobs, threads);
+    let results = run_sweep_cached(&params, &dram, jobs, threads, cache);
     let mut t = Table::new(
         title,
         &["layer", "stride", "TPU (ms)", "RS vs TPU", "EcoFlow vs TPU"],
@@ -64,21 +72,33 @@ fn speedup_table(
 
 /// Fig. 8: input-gradient speedups over the Table 5 layer set.
 pub fn fig8_input_grad(threads: usize) -> Table {
+    fig8_input_grad_cached(threads, &CostCache::new())
+}
+
+/// Fig. 8 against a shared layer-cost cache.
+pub fn fig8_input_grad_cached(threads: usize, cache: &CostCache) -> Table {
     speedup_table(
         "Fig 8 — input-gradient speedup (normalized to TPU)",
         &zoo::table5_with_opt(),
         TrainingPass::InputGrad,
         threads,
+        cache,
     )
 }
 
 /// Fig. 9: filter-gradient speedups.
 pub fn fig9_filter_grad(threads: usize) -> Table {
+    fig9_filter_grad_cached(threads, &CostCache::new())
+}
+
+/// Fig. 9 against a shared layer-cost cache.
+pub fn fig9_filter_grad_cached(threads: usize, cache: &CostCache) -> Table {
     speedup_table(
         "Fig 9 — filter-gradient speedup (normalized to TPU)",
         &zoo::table5_with_opt(),
         TrainingPass::FilterGrad,
         threads,
+        cache,
     )
 }
 
@@ -101,6 +121,13 @@ fn energy_rows(t: &mut Table, results: &[SweepResult]) {
 
 /// Fig. 10: energy breakdown of the CNN gradient calculations.
 pub fn fig10_energy(threads: usize) -> Table {
+    fig10_energy_cached(threads, &CostCache::new())
+}
+
+/// Fig. 10 against a shared layer-cost cache. Its job set is exactly
+/// Fig. 8's plus Fig. 9's, so after those figures a shared cache answers
+/// this one entirely from the memo table.
+pub fn fig10_energy_cached(threads: usize, cache: &CostCache) -> Table {
     let params = EnergyParams::default();
     let dram = DramModel::default();
     let layers = zoo::table5_with_opt();
@@ -117,7 +144,7 @@ pub fn fig10_energy(threads: usize) -> Table {
             }
         }
     }
-    let results = run_sweep(&params, &dram, jobs, threads);
+    let results = run_sweep_cached(&params, &dram, jobs, threads, cache);
     let mut t = Table::new(
         "Fig 10 — energy breakdown (uJ): DRAM/GBUFF/SPAD/ALU/NoC",
         &["layer [pass]", "flow", "total", "DRAM", "GBUFF", "SPAD", "ALU", "NoC"],
@@ -128,10 +155,15 @@ pub fn fig10_energy(threads: usize) -> Table {
 
 /// Fig. 11: GAN layer execution time across RS/TPU/GANAX/EcoFlow.
 pub fn fig11_gan_time(threads: usize) -> Table {
+    fig11_gan_time_cached(threads, &CostCache::new())
+}
+
+/// Fig. 11 against a shared layer-cost cache.
+pub fn fig11_gan_time_cached(threads: usize, cache: &CostCache) -> Table {
     let params = EnergyParams::default();
     let dram = DramModel::default();
     let jobs = job_matrix(&gan::table7_layers(), &Dataflow::ALL, BATCH);
-    let results = run_sweep(&params, &dram, jobs, threads);
+    let results = run_sweep_cached(&params, &dram, jobs, threads, cache);
     let mut t = Table::new(
         "Fig 11 — GAN layer execution time (normalized to RS)",
         &["layer [pass]", "RS (ms)", "TPU", "GANAX", "EcoFlow"],
@@ -159,6 +191,12 @@ pub fn fig11_gan_time(threads: usize) -> Table {
 
 /// Fig. 12: GAN layer energy breakdown.
 pub fn fig12_gan_energy(threads: usize) -> Table {
+    fig12_gan_energy_cached(threads, &CostCache::new())
+}
+
+/// Fig. 12 against a shared layer-cost cache (a subset of Fig. 11's
+/// sweep plus the shared-shape overlaps with the Table 8 estimator).
+pub fn fig12_gan_energy_cached(threads: usize, cache: &CostCache) -> Table {
     let params = EnergyParams::default();
     let dram = DramModel::default();
     let jobs = job_matrix(
@@ -166,7 +204,7 @@ pub fn fig12_gan_energy(threads: usize) -> Table {
         &[Dataflow::Tpu, Dataflow::RowStationary, Dataflow::EcoFlow],
         BATCH,
     );
-    let results = run_sweep(&params, &dram, jobs, threads);
+    let results = run_sweep_cached(&params, &dram, jobs, threads, cache);
     let mut t = Table::new(
         "Fig 12 — GAN layer energy breakdown (uJ)",
         &["layer [pass]", "flow", "total", "DRAM", "GBUFF", "SPAD", "ALU", "NoC"],

@@ -20,17 +20,29 @@ use crate::config::ArchConfig;
 use crate::tensor::Mat;
 
 /// Simulation failure modes.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("microprogram invalid: {0:?}")]
     Invalid(Vec<String>),
-    #[error("deadlock at cycle {cycle}: {detail}")]
     Deadlock { cycle: u64, detail: String },
-    #[error("cycle limit {0} exceeded")]
     CycleLimit(u64),
-    #[error("output element {0} never written")]
     IncompleteOutput(usize),
 }
+
+// Hand-written (thiserror is unavailable in this offline image).
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Invalid(problems) => write!(f, "microprogram invalid: {problems:?}"),
+            SimError::Deadlock { cycle, detail } => {
+                write!(f, "deadlock at cycle {cycle}: {detail}")
+            }
+            SimError::CycleLimit(limit) => write!(f, "cycle limit {limit} exceeded"),
+            SimError::IncompleteOutput(i) => write!(f, "output element {i} never written"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 struct PeState {
     ip: usize,

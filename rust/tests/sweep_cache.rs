@@ -1,0 +1,140 @@
+//! Integration: the memoized, deduplicated, sharded sweep engine is
+//! observationally identical to the naive per-job simulation loop —
+//! the §5.1 functional-equivalence story applied to the scheduler
+//! refactor itself.
+
+use ecoflow::compiler::{tiling, Dataflow};
+use ecoflow::coordinator::cache::CostCache;
+use ecoflow::coordinator::e2e::network_e2e_cached;
+use ecoflow::coordinator::scheduler::{
+    arch_for, job_matrix, run_sweep, run_sweep_cached, SweepJob,
+};
+use ecoflow::energy::{DramModel, EnergyParams};
+use ecoflow::model::{zoo, ConvLayer};
+use ecoflow::util::prng::{for_each_case, Prng};
+
+fn naive_costs(
+    params: &EnergyParams,
+    dram: &DramModel,
+    jobs: &[SweepJob],
+) -> Vec<tiling::LayerCost> {
+    jobs.iter()
+        .map(|j| {
+            tiling::layer_cost(
+                &arch_for(j.flow),
+                params,
+                dram,
+                &j.layer,
+                j.pass,
+                j.flow,
+                j.batch,
+            )
+            .expect("layer cost")
+        })
+        .collect()
+}
+
+/// A random subset (1..=max_layers, distinct) of the evaluation zoo.
+fn random_layers(rng: &mut Prng, max_layers: usize) -> Vec<ConvLayer> {
+    let pool = zoo::evaluation_layers();
+    let n = rng.range(1, max_layers);
+    let mut picked: Vec<usize> = Vec::new();
+    while picked.len() < n {
+        let i = rng.below(pool.len());
+        if !picked.contains(&i) {
+            picked.push(i);
+        }
+    }
+    picked.into_iter().map(|i| pool[i].clone()).collect()
+}
+
+#[test]
+fn property_cached_sweep_equals_uncached_loop() {
+    // For random zoo layer subsets, flows and batch sizes, the engine's
+    // results are *bit-identical* (full-field PartialEq, floats exact)
+    // to a naive uncached loop, in the same order.
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    for_each_case(3, 0x5EED_CA57, |rng| {
+        let layers = random_layers(rng, 2);
+        let flow = Dataflow::ALL[rng.below(Dataflow::ALL.len())];
+        let batch = [1usize, 2, 4][rng.below(3)];
+        let jobs = job_matrix(&layers, &[flow], batch);
+        let expected = naive_costs(&params, &dram, &jobs);
+        let results = run_sweep(&params, &dram, jobs.clone(), 4);
+        assert_eq!(results.len(), expected.len());
+        for ((r, j), e) in results.iter().zip(&jobs).zip(&expected) {
+            assert_eq!(r.job.layer.name, j.layer.name, "order must be preserved");
+            assert_eq!(r.job.pass, j.pass);
+            let got = r.cost.as_ref().expect("cost");
+            assert_eq!(got, e, "cached/deduped result diverged for {j:?}");
+        }
+    });
+}
+
+#[test]
+fn property_thread_count_is_unobservable() {
+    // threads=1 and threads=8 produce bit-identical, order-preserving
+    // results (fresh caches on both sides, so nothing is pre-answered).
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    for_each_case(2, 0x7412_EAD5, |rng| {
+        let layers = random_layers(rng, 2);
+        let jobs = job_matrix(&layers, &[Dataflow::RowStationary, Dataflow::EcoFlow], 2);
+        let one = run_sweep(&params, &dram, jobs.clone(), 1);
+        let eight = run_sweep(&params, &dram, jobs.clone(), 8);
+        assert_eq!(one.len(), eight.len());
+        for (a, b) in one.iter().zip(&eight) {
+            assert_eq!(a.job.layer.name, b.job.layer.name);
+            assert_eq!(a.job.pass, b.job.pass);
+            assert_eq!(a.job.flow, b.job.flow);
+            assert_eq!(
+                a.cost.as_ref().expect("cost"),
+                b.cost.as_ref().expect("cost"),
+                "thread count changed a result"
+            );
+        }
+    });
+}
+
+#[test]
+fn warm_cache_is_invisible_to_results() {
+    // Answering from the memo table returns the same values the
+    // simulation produced.
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let layers: Vec<ConvLayer> = zoo::table5_layers()
+        .into_iter()
+        .filter(|l| l.net == "ShuffleNet")
+        .collect();
+    let jobs = job_matrix(&layers, &[Dataflow::EcoFlow, Dataflow::Tpu], 4);
+    let cache = CostCache::new();
+    let cold = run_sweep_cached(&params, &dram, jobs.clone(), 4, &cache);
+    let warm = run_sweep_cached(&params, &dram, jobs, 4, &cache);
+    for (a, b) in cold.iter().zip(&warm) {
+        assert_eq!(a.cost.as_ref().unwrap(), b.cost.as_ref().unwrap());
+    }
+    let s = cache.stats();
+    assert!(s.hits >= cold.len() as u64, "warm pass must hit: {s:?}");
+}
+
+#[test]
+fn table6_style_shared_cache_reuses_across_networks() {
+    // The --cache-stats acceptance path for Table 6: ResNet-50 and
+    // MobileNet share conv geometries (e.g. S2-3x3s2 == CONV3), so a
+    // shared cache spanning the table's networks must report hits.
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let cache = CostCache::new();
+    let r1 = network_e2e_cached(&params, &dram, "ResNet-50", 4, 8, &cache);
+    let after_first = cache.stats();
+    let r2 = network_e2e_cached(&params, &dram, "MobileNet", 4, 8, &cache);
+    let s = cache.stats();
+    assert!(
+        s.hits > after_first.hits,
+        "MobileNet must reuse ResNet-50 simulations: {s:?}"
+    );
+    // sanity: both estimates are well-formed
+    assert!(r1.speedup[&Dataflow::EcoFlow] > 0.5);
+    assert!(r2.speedup[&Dataflow::EcoFlow] > 0.5);
+}

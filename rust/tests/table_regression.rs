@@ -1,0 +1,106 @@
+//! Regression: the scheduler/cache refactor must not move paper numbers.
+//!
+//! Two guarantees, from strongest to most convenient:
+//!
+//! 1. **Refactor invariance (always checked):** Table 6 / Table 8
+//!    speedup rows computed with `threads=1` + private caches equal the
+//!    rows computed with `threads=8` + one shared cache spanning every
+//!    network, to full 3-decimal row formatting.
+//! 2. **Golden snapshot:** the formatted rows are compared against
+//!    `tests/golden/e2e_speedups.txt`. The file is bootstrapped on first
+//!    run (fresh checkouts and CI start empty — the simulator's absolute
+//!    numbers are host-independent, so a committed snapshot survives);
+//!    any later drift fails with a diff-friendly message. Delete the
+//!    file to re-baseline after an *intentional* cost-model change.
+
+use std::path::PathBuf;
+
+use ecoflow::compiler::Dataflow;
+use ecoflow::coordinator::cache::CostCache;
+use ecoflow::coordinator::e2e::{gan_e2e_cached, network_e2e_cached, E2eResult};
+use ecoflow::energy::{DramModel, EnergyParams};
+
+/// Networks pinned by the snapshot: the paper's headline CNN rows plus
+/// one GAN (the full six-network Table 6 is exercised by the benches).
+const CNNS: [&str; 2] = ["AlexNet", "ShuffleNet"];
+const GANS: [&str; 1] = ["CycleGAN"];
+const BATCH: usize = 4;
+
+fn fmt_cnn_row(r: &E2eResult) -> String {
+    format!(
+        "table6 {:<12} rs_speedup={:.3} ef_speedup={:.3} rs_energy={:.3} ef_energy={:.3}",
+        r.net,
+        r.speedup[&Dataflow::RowStationary],
+        r.speedup[&Dataflow::EcoFlow],
+        r.energy_savings[&Dataflow::RowStationary],
+        r.energy_savings[&Dataflow::EcoFlow],
+    )
+}
+
+fn fmt_gan_row(r: &E2eResult) -> String {
+    format!(
+        "table8 {:<12} rs_speedup={:.3} gx_speedup={:.3} ef_speedup={:.3} \
+         rs_energy={:.3} gx_energy={:.3} ef_energy={:.3}",
+        r.net,
+        r.speedup[&Dataflow::RowStationary],
+        r.speedup[&Dataflow::Ganax],
+        r.speedup[&Dataflow::EcoFlow],
+        r.energy_savings[&Dataflow::RowStationary],
+        r.energy_savings[&Dataflow::Ganax],
+        r.energy_savings[&Dataflow::EcoFlow],
+    )
+}
+
+/// All snapshot rows under one scheduling configuration.
+fn rows(threads: usize, shared_cache: bool) -> Vec<String> {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let shared = CostCache::new();
+    let mut out = Vec::new();
+    for net in CNNS {
+        let cache = CostCache::new();
+        let c = if shared_cache { &shared } else { &cache };
+        out.push(fmt_cnn_row(&network_e2e_cached(&params, &dram, net, BATCH, threads, c)));
+    }
+    for net in GANS {
+        let cache = CostCache::new();
+        let c = if shared_cache { &shared } else { &cache };
+        out.push(fmt_gan_row(&gan_e2e_cached(&params, &dram, net, BATCH, threads, c)));
+    }
+    out
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("e2e_speedups.txt")
+}
+
+#[test]
+fn table6_table8_rows_survive_the_scheduler_refactor() {
+    let serial = rows(1, false);
+    let sharded = rows(8, true);
+    assert_eq!(
+        serial, sharded,
+        "dedup/sharding/shared-cache changed a Table 6/8 row"
+    );
+
+    let snapshot = serial.join("\n") + "\n";
+    let path = golden_path();
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => {
+            assert_eq!(
+                golden, snapshot,
+                "Table 6/8 rows moved vs {}; if the cost model changed \
+                 intentionally, delete the file to re-baseline",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir");
+            std::fs::write(&path, &snapshot).expect("write golden");
+            eprintln!("bootstrapped golden snapshot at {}", path.display());
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Offline shim for the subset of the `anyhow` API this workspace uses.
+//!
+//! The build image has no network access, so the real crates.io `anyhow`
+//! cannot be fetched. This vendored replacement provides the same calling
+//! conventions for the surface the codebase touches:
+//!
+//! * [`Error`] — an erased error with an optional source chain,
+//! * [`Result`] — `Result<T, Error>` with a defaulted error parameter,
+//! * [`anyhow!`] / [`ensure!`] — message-formatting constructors,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on results.
+//!
+//! Swapping the real crate back in is a one-line change in
+//! `rust/Cargo.toml`; no call sites depend on shim-only behaviour.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error parameter defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An erased error: a display message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap an underlying error, keeping it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Self {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Prepend a context message, demoting `self`'s message to the chain.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// The root-cause chain below the message, if any.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source
+            .as_ref()
+            .map(|e| e.as_ref() as &(dyn StdError + 'static))
+    }
+}
+
+// NOTE: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes the blanket `From` below
+// coherent (no overlap with `impl From<T> for T`).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        // `{:#}` renders the whole cause chain, as anyhow does. `msg`
+        // already folds in the Display of the chain head (see `new` /
+        // `context`), so start one level below it.
+        if f.alternate() {
+            let mut cause = self.source.as_deref().and_then(|e| e.source());
+            while let Some(e) = cause {
+                write!(f, ": {e}")?;
+                cause = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cause {
+            write!(f, "\n    {e}")?;
+            cause = e.source();
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait: attach context to the error branch of a `Result`.
+pub trait Context<T> {
+    /// Replace/prefix the error with `context`.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    /// Lazily-built variant of [`Context::context`].
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`anyhow!`]-formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let _ = std::str::from_utf8(&[0xFF])?;
+            Ok(1)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 7;
+        let b = anyhow!("x = {x}");
+        assert_eq!(b.to_string(), "x = 7");
+        let c = anyhow!("{} and {}", 1, 2);
+        assert_eq!(c.to_string(), "1 and 2");
+        let s = String::from("owned message");
+        let d = anyhow!(s);
+        assert_eq!(d.to_string(), "owned message");
+    }
+
+    #[test]
+    fn ensure_returns_error() {
+        fn f(v: usize) -> Result<usize> {
+            ensure!(v > 2, "too small: {v}");
+            Ok(v)
+        }
+        assert!(f(3).is_ok());
+        assert_eq!(f(1).unwrap_err().to_string(), "too small: 1");
+    }
+
+    #[test]
+    fn context_prefixes_message() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        let e = Error::new(io_err()).context("top");
+        let rendered = format!("{e:#}");
+        assert!(rendered.contains("top"));
+        assert!(rendered.contains("gone"));
+    }
+}

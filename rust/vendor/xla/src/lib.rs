@@ -1,0 +1,254 @@
+//! Offline stub of the `xla` (PJRT) crate surface used by
+//! `ecoflow::runtime`.
+//!
+//! The real crate links the XLA runtime, which is not present in this
+//! image. This stub keeps the whole workspace compiling and testable:
+//!
+//! * [`Literal`] is fully functional (host-side typed buffers with
+//!   shapes) — the `Mat <-> Literal` round-trip helpers and their tests
+//!   work against it unchanged.
+//! * [`PjRtClient::cpu`] fails with a clear "unavailable" error, so every
+//!   execution path (CLI `validate`/`train`, artifact-gated tests) reports
+//!   the missing backend instead of crashing; those tests already skip
+//!   when the AOT artifacts are absent.
+//!
+//! Swap the real crate back in via `rust/Cargo.toml` to restore PJRT
+//! execution; no call sites depend on stub-only behaviour.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (implements `std::error::Error`,
+/// so it converts into `anyhow::Error` through `?`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what} unavailable: this build uses the offline XLA stub \
+             (vendor/xla); link the real xla crate to enable PJRT execution"
+        ))
+    }
+}
+
+/// Result alias used throughout the stub.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the host-side [`Literal`] can carry. Public only so it
+/// can appear in the [`NativeType`] trait; not part of the mirrored API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Sealed-ish conversion trait for the element types [`Literal`] supports.
+pub trait NativeType: Sized + Copy {
+    fn wrap(v: &[Self]) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: &[Self]) -> Data {
+        Data::F32(v.to_vec())
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            Data::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: &[Self]) -> Data {
+        Data::I32(v.to_vec())
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            Data::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side typed buffer with a shape — functional in the stub.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Array shape of a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::wrap(v),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret the flat buffer under a new shape.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape: {} elements cannot take shape {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Shape metadata.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("element type mismatch".to_string()))
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples
+    /// (execution is unavailable), so this only errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("tuple literals"))
+    }
+}
+
+/// Parsed HLO module handle (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact. Parsing is deferred to `compile`, which
+    /// the stub cannot perform; reading succeeds so missing-file errors
+    /// stay distinguishable from missing-backend errors.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(Self { _text: text })
+    }
+}
+
+/// Computation handle built from a module proto.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self {
+            _proto: proto.clone(),
+        }
+    }
+}
+
+/// Device-side buffer produced by an execution (never constructed here).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("buffer readback"))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub client).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execution"))
+    }
+}
+
+/// PJRT client. In the stub, construction fails up front so callers get
+/// one clear error instead of a partially-working engine.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let v = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let l = Literal::vec1(&v).reshape(&[2, 3]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), v.to_vec());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("unavailable"), "{err}");
+    }
+}
