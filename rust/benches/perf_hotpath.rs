@@ -10,7 +10,9 @@ use ecoflow::coordinator::cache::CostCache;
 use ecoflow::coordinator::scheduler::{arch_for, job_matrix, run_sweep_cached};
 use ecoflow::energy::{DramModel, EnergyParams};
 use ecoflow::model::zoo;
+use ecoflow::sim::batch::{BatchSim, LANES};
 use ecoflow::sim::systolic::systolic_matmul;
+use ecoflow::sim::{ArraySim, Operands};
 use ecoflow::tensor::Mat;
 use ecoflow::util::bench::BenchSet;
 use ecoflow::util::prng::Prng;
@@ -55,6 +57,42 @@ fn main() {
     set.run("golden_conv_oracle/25x25_k3_s2", 400, || {
         std::hint::black_box(ecoflow::tensor::conv::direct_conv(&x, &w, 2));
     });
+
+    // -- batched lane-parallel engine vs scalar ArraySim -----------------
+    // LANES operand sets through one microprogram: scalar pays the full
+    // control loop per set, BatchSim pays it once and widens the MACs.
+    let mp = ef::transpose_program(12, 12, 3, 2, arch.rf_psum);
+    let sets: Vec<Operands> = (0..LANES)
+        .map(|_| Operands {
+            a: Mat::random(12, 12, &mut rng),
+            b: Mat::random(3, 3, &mut rng),
+        })
+        .collect();
+    let scalar_m = set
+        .run("array_scalar_x8/12x12_k3_s2", 800, || {
+            for ops in &sets {
+                std::hint::black_box(ArraySim::new(&arch, &mp).run(ops).unwrap());
+            }
+        })
+        .clone();
+    let batched_m = set
+        .run("array_batched_x8/12x12_k3_s2", 800, || {
+            std::hint::black_box(BatchSim::new(&arch, &mp).run(&sets).unwrap());
+        })
+        .clone();
+    // PE-slot updates: cycles x PEs x operand sets, per wall second
+    let (_, st0) = ArraySim::new(&arch, &mp).run(&sets[0]).unwrap();
+    let slot_updates = st0.cycles as f64 * mp.num_pes() as f64 * LANES as f64;
+    let scalar_mps = slot_updates / scalar_m.median_ns() * 1e3;
+    let batched_mps = slot_updates / batched_m.median_ns() * 1e3;
+    // machine-readable line for the bench trajectory
+    println!(
+        "{{\"bench\":\"pe_slot_updates\",\"unit\":\"M/s\",\"scalar\":{:.1},\"batched\":{:.1},\"lanes\":{},\"speedup\":{:.2}}}",
+        scalar_mps,
+        batched_mps,
+        LANES,
+        batched_mps / scalar_mps.max(1e-9)
+    );
 
     if let Some(s) = set.speedup("golden_conv_oracle/25x25_k3_s2", "rs_direct_pass/25x25_k3_s2")
     {

@@ -16,6 +16,12 @@
 //! the command triggers, so e.g. `report` regenerates fig10 almost
 //! entirely from fig8/fig9's memoized simulations. `--cache-stats`
 //! appends the hit/miss/eviction counters to any command's output.
+//! `--cache-file PATH` persists that table across invocations through
+//! the versioned on-disk [`store`](crate::coordinator::store): the file
+//! is loaded (or, when corrupt/stale, logged and rebuilt) before the
+//! command runs and saved after it succeeds, so a `report` following a
+//! `sweep` answers >90% of its lookups from disk. `--max-sim-cycles N`
+//! tightens the simulator's cycle backstop for the whole invocation.
 
 use std::collections::HashMap;
 
@@ -24,6 +30,7 @@ use anyhow::{anyhow, Result};
 use crate::compiler::Dataflow;
 use crate::coordinator::cache::CostCache;
 use crate::coordinator::scheduler::{default_threads, job_matrix, run_sweep_cached};
+use crate::coordinator::store;
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::zoo;
 use crate::report::{figures, tables};
@@ -70,7 +77,9 @@ pub fn usage() -> &'static str {
      \u{20}  train [--steps N] [--variant stride|pool] [--artifacts DIR]\n\
      \u{20}  sweep [--csv]                      full layer x dataflow sweep\n\
      \u{20}  version\n\
-     options: --threads N, --csv, --cache-stats"
+     options: --threads N, --csv, --cache-stats,\n\
+     \u{20}        --cache-file PATH (persist the layer-cost cache across runs),\n\
+     \u{20}        --max-sim-cycles N (tighten the simulator cycle backstop)"
 }
 
 impl Args {
@@ -102,6 +111,38 @@ pub fn run(args: &[String]) -> Result<()> {
     // One memo table per invocation: every sweep this command triggers
     // shares it, and `--cache-stats` reports it at the end.
     let cache = CostCache::new();
+    // The cycle-cap override is process-wide: set it explicitly on every
+    // invocation (0 = cleared) so an earlier in-process run's cap cannot
+    // leak into this one.
+    let cap = match parsed.options.get("max-sim-cycles") {
+        Some(v) => {
+            // the flag exists to make runaway simulations fail fast; a
+            // typo silently falling back to the 50M default would defeat
+            // it — and 0 is the internal "no override" sentinel
+            let n: u64 = v
+                .parse()
+                .map_err(|_| anyhow!("invalid --max-sim-cycles value: {v}"))?;
+            if n == 0 {
+                return Err(anyhow!("--max-sim-cycles must be >= 1"));
+            }
+            n
+        }
+        None => 0,
+    };
+    crate::sim::array::set_max_cycles_override(cap);
+    // Warm-start from a persisted store; anything wrong with the file is
+    // logged and the store is rebuilt on save rather than failing the
+    // command or poisoning results.
+    let cache_file = match parsed.options.get("cache-file") {
+        // a bare `--cache-file` parses to the flag sentinel — reject it
+        // rather than silently persisting to a file named "true"
+        Some(v) if v == "true" => return Err(anyhow!("--cache-file requires a path")),
+        Some(v) => Some(std::path::PathBuf::from(v)),
+        None => None,
+    };
+    if let Some(path) = &cache_file {
+        eprintln!("{}", store::load_into(path, &cache).render_line(path));
+    }
     match parsed.command.as_str() {
         "version" => println!("ecoflow {}", crate::version()),
         "fig3" => emit(figures::fig3_zero_mults(), csv),
@@ -140,7 +181,9 @@ pub fn run(args: &[String]) -> Result<()> {
                 .unwrap_or_else(crate::runtime::pjrt::artifacts_dir);
             let mut engine = Engine::new(&dir)?;
             println!("platform: {}", engine.platform());
-            let arch = crate::config::ArchConfig::ecoflow();
+            // fold in the cycle-cap override, as arch_for does for sweeps
+            let mut arch = crate::config::ArchConfig::ecoflow();
+            arch.max_sim_cycles = crate::sim::array::effective_max_cycles(&arch);
             for r in golden::validate_all(&mut engine, &arch)? {
                 println!(
                     "golden {:<8} direct={:.2e} tconv={:.2e} fgrad={:.2e}  OK",
@@ -196,6 +239,12 @@ pub fn run(args: &[String]) -> Result<()> {
         }
         other => return Err(anyhow!("unknown command {other}\n{}", usage())),
     }
+    if let Some(path) = &cache_file {
+        match store::save(path, &cache) {
+            Ok(n) => eprintln!("cost store {}: saved {n} entries", path.display()),
+            Err(e) => eprintln!("cost store {}: save failed: {e}", path.display()),
+        }
+    }
     if parsed.flag("cache-stats") {
         // stderr, so `--csv --cache-stats` keeps stdout machine-readable
         eprintln!("{}", cache.stats().render_line());
@@ -226,6 +275,55 @@ mod tests {
         let a = parse_args(&["table6".into(), "--cache-stats".into()]).unwrap();
         assert!(a.flag("cache-stats"));
         assert!(!a.flag("csv"));
+    }
+
+    #[test]
+    fn cache_file_and_max_cycles_options_parse() {
+        let a = parse_args(&[
+            "sweep".into(),
+            "--cache-file".into(),
+            "/tmp/x.cache".into(),
+            "--max-sim-cycles".into(),
+            "123".into(),
+        ])
+        .unwrap();
+        assert_eq!(a.options.get("cache-file").unwrap(), "/tmp/x.cache");
+        assert_eq!(a.usize_or("max-sim-cycles", 0), 123);
+    }
+
+    #[test]
+    fn bare_cache_file_flag_is_a_usage_error() {
+        let err = run(&["version".into(), "--cache-file".into()]).unwrap_err();
+        assert!(err.to_string().contains("cache-file"), "{err}");
+    }
+
+    #[test]
+    fn invalid_max_sim_cycles_is_a_usage_error() {
+        // must error out, not silently fall back to the 50M default
+        // (and must not set the process-wide override)
+        for bad in ["50k", "0"] {
+            let err = run(&[
+                "version".into(),
+                "--max-sim-cycles".into(),
+                bad.into(),
+            ])
+            .unwrap_err();
+            assert!(err.to_string().contains("max-sim-cycles"), "{err}");
+        }
+    }
+
+    #[test]
+    fn cache_file_round_trip_plumbing() {
+        // fig3 is analytic (no sweeps): exercises load-missing → save →
+        // load-loaded without paying for simulations.
+        let path = std::env::temp_dir()
+            .join(format!("ecoflow-cli-store-{}.cache", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let p = path.to_string_lossy().to_string();
+        run(&["fig3".into(), "--cache-file".into(), p.clone()]).unwrap();
+        assert!(path.exists());
+        run(&["fig3".into(), "--cache-file".into(), p]).unwrap();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -36,6 +36,7 @@
 use crate::config::ArchConfig;
 use crate::sim::microprogram::{Microprogram, Operands, PeInstr, SrcRef, WSrc, XSrc};
 use crate::sim::stats::PassStats;
+use crate::sim::batch::run_shared_program_chunked;
 use crate::sim::{ArraySim, SimError};
 use crate::tensor::Mat;
 
@@ -184,39 +185,68 @@ pub fn transpose_pass(
     let (he, we) = (err.rows, err.cols);
     let hin = s * (he - 1) + k;
     let win = s * (we - 1) + k;
-    let mut out = Mat::zeros(hin, win);
-    let mut written = Mat::zeros(hin, win); // overlap tracking
-    let mut stats = PassStats::default();
     let (tr, tc) = (arch.array_rows, arch.array_cols);
+
+    // enumerate the grid of error tiles in row-major submission order
+    let mut tiles: Vec<(usize, usize, usize, usize)> = Vec::new(); // (p0, th, q0, tw)
     let mut p0 = 0;
     while p0 < he {
         let th = tr.min(he - p0);
         let mut q0 = 0;
         while q0 < we {
             let tw = tc.min(we - q0);
-            let tile = Mat::from_fn(th, tw, |r, c| err.at(p0 + r, q0 + c));
-            let mp = transpose_program(th, tw, k, s, arch.rf_psum);
-            let ops = Operands {
-                a: tile,
-                b: w.clone(),
-            };
-            let (local, st) = ArraySim::new(arch, &mp).run(&ops)?;
-            stats.accumulate(&st);
-            for r in 0..local.rows {
-                for c in 0..local.cols {
-                    let (gy, gx) = (p0 * s + r, q0 * s + c);
-                    if written.at(gy, gx) != 0.0 {
-                        // halo accumulation: read-modify-write in the GB
-                        stats.gbuf_reads += 1;
-                        stats.gbuf_writes += 1;
-                    }
-                    *out.at_mut(gy, gx) += local.at(r, c);
-                    *written.at_mut(gy, gx) = 1.0;
-                }
-            }
+            tiles.push((p0, th, q0, tw));
             q0 += tw;
         }
         p0 += th;
+    }
+
+    // Tiles of equal geometry share one microprogram (the error values
+    // differ, the FSMs do not): interior tiles — the bulk of a large
+    // error map — fuse into lane-parallel batched runs; geometry
+    // singletons (edges, corners) take the scalar path. Bit-identical
+    // either way (see `run_shared_program`).
+    let mut groups: Vec<((usize, usize), Vec<usize>)> = Vec::new();
+    for (i, &(_, th, _, tw)) in tiles.iter().enumerate() {
+        match groups.iter().position(|(g, _)| *g == (th, tw)) {
+            Some(p) => groups[p].1.push(i),
+            None => groups.push(((th, tw), vec![i])),
+        }
+    }
+    let mut results: Vec<Option<(Mat, PassStats)>> = (0..tiles.len()).map(|_| None).collect();
+    for ((th, tw), members) in groups {
+        let mp = transpose_program(th, tw, k, s, arch.rf_psum);
+        let outs = run_shared_program_chunked(arch, &mp, members.len(), |j| {
+            let (p0, _, q0, _) = tiles[members[j]];
+            Operands {
+                a: Mat::from_fn(th, tw, |r, c| err.at(p0 + r, q0 + c)),
+                b: w.clone(),
+            }
+        })?;
+        for (&i, r) in members.iter().zip(outs) {
+            results[i] = Some(r);
+        }
+    }
+
+    // stitch tile outputs with halo accumulation, in submission order
+    let mut out = Mat::zeros(hin, win);
+    let mut written = Mat::zeros(hin, win); // overlap tracking
+    let mut stats = PassStats::default();
+    for (&(p0, _, q0, _), r) in tiles.iter().zip(results) {
+        let (local, st) = r.expect("every tile simulated");
+        stats.accumulate(&st);
+        for r in 0..local.rows {
+            for c in 0..local.cols {
+                let (gy, gx) = (p0 * s + r, q0 * s + c);
+                if written.at(gy, gx) != 0.0 {
+                    // halo accumulation: read-modify-write in the GB
+                    stats.gbuf_reads += 1;
+                    stats.gbuf_writes += 1;
+                }
+                *out.at_mut(gy, gx) += local.at(r, c);
+                *written.at_mut(gy, gx) = 1.0;
+            }
+        }
     }
     Ok((out, stats))
 }

@@ -13,9 +13,10 @@
 //! (clock-gated — energy saved, latency not; paper §3.1).
 
 use crate::config::ArchConfig;
+use crate::sim::batch::{run_shared_program, run_shared_program_chunked};
 use crate::sim::microprogram::{Microprogram, Operands, PeInstr, SrcRef, WSrc, XSrc};
 use crate::sim::stats::PassStats;
-use crate::sim::{ArraySim, SimError};
+use crate::sim::SimError;
 use crate::tensor::Mat;
 
 /// Compile a direct convolution (`hx x wx` input, `k x k` filter, stride
@@ -69,6 +70,12 @@ pub fn direct_program(hx: usize, wx: usize, k: usize, s: usize) -> Microprogram 
 
 /// Run an RS direct-convolution pass, tiling output rows to the physical
 /// array height when the PE set exceeds it.
+///
+/// Full-height tiles all share one microprogram (only the operand values
+/// differ), so they run lane-parallel through the batched engine; a
+/// remainder tile with its own geometry takes the scalar path. Results
+/// are bit-identical either way (the batch engine's equivalence
+/// contract, see [`run_shared_program`]).
 pub fn direct_pass(
     arch: &ArchConfig,
     x: &Mat,
@@ -81,28 +88,55 @@ pub fn direct_pass(
     // PE-set columns = output rows; tile them to the array width, and the
     // filter rows (set rows = K) must fit the array height.
     let col_tile = arch.array_cols.max(1);
-    let mut out = Mat::zeros(e_rows, f_cols);
-    let mut stats = PassStats::default();
+    let mut tiles: Vec<(usize, usize)> = Vec::new(); // (e0, te)
     let mut e0 = 0;
     while e0 < e_rows {
         let te = col_tile.min(e_rows - e0);
-        // sub-input covering output rows [e0, e0+te)
+        tiles.push((e0, te));
+        e0 += te;
+    }
+    // sub-input covering output rows [e0, e0+te)
+    let tile_ops = |&(e0, te): &(usize, usize)| {
         let row0 = e0 * s;
         let rows = (te - 1) * s + k;
-        let sub = Mat::from_fn(rows, x.cols, |r, c| x.at(row0 + r, c));
-        let mp = direct_program(rows, x.cols, k, s);
-        let ops = Operands {
-            a: sub,
+        Operands {
+            a: Mat::from_fn(rows, x.cols, |r, c| x.at(row0 + r, c)),
             b: w.clone(),
-        };
-        let (local, st) = ArraySim::new(arch, &mp).run(&ops)?;
+        }
+    };
+
+    let mut results: Vec<Option<(Mat, PassStats)>> = (0..tiles.len()).map(|_| None).collect();
+    let full: Vec<usize> = (0..tiles.len()).filter(|i| tiles[*i].1 == col_tile).collect();
+    if !full.is_empty() {
+        let rows = (col_tile - 1) * s + k;
+        let mp = direct_program(rows, x.cols, k, s);
+        let outs =
+            run_shared_program_chunked(arch, &mp, full.len(), |j| tile_ops(&tiles[full[j]]))?;
+        for (&i, r) in full.iter().zip(outs) {
+            results[i] = Some(r);
+        }
+    }
+    for (i, t) in tiles.iter().enumerate() {
+        if results[i].is_none() {
+            // the remainder tile: its own geometry, hence its own program
+            let rows = (t.1 - 1) * s + k;
+            let mp = direct_program(rows, x.cols, k, s);
+            let ops = [tile_ops(t)];
+            results[i] = run_shared_program(arch, &mp, &ops)?.pop();
+        }
+    }
+
+    // stitch outputs and accumulate stats in submission order
+    let mut out = Mat::zeros(e_rows, f_cols);
+    let mut stats = PassStats::default();
+    for (t, r) in tiles.iter().zip(results) {
+        let (local, st) = r.expect("every tile simulated");
         stats.accumulate(&st);
         for r in 0..local.rows {
             for c in 0..local.cols {
-                *out.at_mut(e0 + r, c) = local.at(r, c);
+                *out.at_mut(t.0 + r, c) = local.at(r, c);
             }
         }
-        e0 += te;
     }
     Ok((out, stats))
 }

@@ -32,7 +32,7 @@ use crate::util::prng::Prng;
 pub const SIM_CAP: usize = 12;
 
 /// A single-plane (channel x filter) convolution operation, square.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PlaneOp {
     /// Strided VALID direct conv: input side, filter, stride.
     Direct { hx: usize, k: usize, s: usize },
@@ -220,11 +220,18 @@ impl LayerCost {
 /// per-event energies, and the DRAM model. Floats are keyed by their bit
 /// patterns, so two configs compare equal iff the cost model cannot tell
 /// them apart.
+// Segment widths of the EnvKey fingerprint; growing a keyed struct means
+// touching exactly one of these (the array literal in `of` then fails to
+// compile until updated).
+const ARCH_WORDS: usize = 22;
+const ENERGY_WORDS: usize = 8;
+const DRAM_WORDS: usize = 4;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct EnvKey {
-    arch: [u64; 21],
-    energy: [u64; 8],
-    dram: [u64; 4],
+    arch: [u64; ARCH_WORDS],
+    energy: [u64; ENERGY_WORDS],
+    dram: [u64; DRAM_WORDS],
 }
 
 impl EnvKey {
@@ -249,6 +256,7 @@ impl EnvKey {
             add_stages,
             queue_depth,
             word_bits,
+            max_sim_cycles,
             noc,
         } = arch.clone(); // ArchConfig is Clone, not Copy
         let crate::config::NocConfig {
@@ -292,6 +300,10 @@ impl EnvKey {
                 add_stages as u64,
                 queue_depth as u64,
                 word_bits as u64,
+                // the cycle cap discriminates: a run that aborted with
+                // CycleLimit under a tight cap must not answer for a
+                // generous one
+                max_sim_cycles,
                 gin_filter_bits as u64,
                 gin_ifmap_bits as u64,
                 gon_bits as u64,
@@ -314,6 +326,77 @@ impl EnvKey {
                 background_mw.to_bits(),
                 latency_ns.to_bits(),
             ],
+        }
+    }
+
+    /// Flat word count of the fingerprint (the persistent cost store's
+    /// on-disk encoding). Changing any keyed struct changes this, which
+    /// in turn invalidates stored entries via the token-count check.
+    pub const WORDS: usize = ARCH_WORDS + ENERGY_WORDS + DRAM_WORDS;
+
+    /// Flatten to words for the on-disk cost store.
+    pub fn to_words(&self) -> [u64; Self::WORDS] {
+        let mut w = [0u64; Self::WORDS];
+        w[..ARCH_WORDS].copy_from_slice(&self.arch);
+        w[ARCH_WORDS..ARCH_WORDS + ENERGY_WORDS].copy_from_slice(&self.energy);
+        w[ARCH_WORDS + ENERGY_WORDS..].copy_from_slice(&self.dram);
+        w
+    }
+
+    /// Rebuild from [`EnvKey::to_words`] output; `None` on a length
+    /// mismatch (a store written by an older schema).
+    pub fn from_words(words: &[u64]) -> Option<Self> {
+        if words.len() != Self::WORDS {
+            return None;
+        }
+        let mut arch = [0u64; ARCH_WORDS];
+        arch.copy_from_slice(&words[..ARCH_WORDS]);
+        let mut energy = [0u64; ENERGY_WORDS];
+        energy.copy_from_slice(&words[ARCH_WORDS..ARCH_WORDS + ENERGY_WORDS]);
+        let mut dram = [0u64; DRAM_WORDS];
+        dram.copy_from_slice(&words[ARCH_WORDS + ENERGY_WORDS..]);
+        Some(Self { arch, energy, dram })
+    }
+}
+
+/// Fingerprint of one proxy-plane simulation: two jobs with equal
+/// `ProxyKey`s are guaranteed identical [`proxy_stats`] results, so the
+/// scheduler fuses them into one batched run and each member extends the
+/// shared measurement analytically. This is strictly coarser than
+/// [`CostKey`] — layers that differ only in channel/filter counts (or in
+/// any geometry the [`PlaneOp::proxy`] cap absorbs) collapse to one
+/// simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProxyKey {
+    /// The spatially-capped proxy op actually simulated.
+    pub op: PlaneOp,
+    pub flow: Dataflow,
+    /// Filter columns lowered per TPU matmul tile (1 for other flows).
+    pub nf_tile: usize,
+    pub env: EnvKey,
+}
+
+impl ProxyKey {
+    /// Key of the proxy simulation behind `layer_cost(arch, .., layer,
+    /// pass, flow, ..)`. `env` is passed in precomputed because bulk
+    /// keying shares it across many jobs (see [`CostKey::with_env`]).
+    pub fn of(
+        arch: &ArchConfig,
+        env: EnvKey,
+        layer: &ConvLayer,
+        pass: TrainingPass,
+        flow: Dataflow,
+    ) -> Self {
+        let nf_tile = if flow == Dataflow::Tpu {
+            layer.num_filters.clamp(1, arch.array_cols)
+        } else {
+            1
+        };
+        Self {
+            op: PlaneOp::from_layer(layer, pass).proxy(),
+            flow,
+            nf_tile,
+            env,
         }
     }
 }
@@ -412,6 +495,10 @@ pub fn dram_traffic_bytes(
 }
 
 /// Compute the cost of (layer, pass) under `flow` (paper §6.1 method).
+///
+/// Equivalent to `proxy_stats` + [`layer_cost_from_proxy`]; the split
+/// exists so the scheduler can share one proxy simulation across every
+/// job with the same [`ProxyKey`].
 pub fn layer_cost(
     arch: &ArchConfig,
     params: &EnergyParams,
@@ -421,17 +508,52 @@ pub fn layer_cost(
     flow: Dataflow,
     batch: usize,
 ) -> Result<LayerCost, SimError> {
-    let op = PlaneOp::from_layer(layer, pass);
-    let proxy = op.proxy();
+    let stats = proxy_stats(arch, layer, pass, flow)?;
+    Ok(layer_cost_from_proxy(
+        arch, params, dram, layer, pass, flow, batch, &stats,
+    ))
+}
+
+/// Cycle-accurate statistics of the proxy plane behind `(layer, pass,
+/// flow)` — the *simulated* (expensive) part of [`layer_cost`]. The
+/// result depends only on the job's [`ProxyKey`]: the architecture, the
+/// capped proxy op, the flow and (for the TPU) the filter tile width —
+/// never on channel counts, batch, or energy/DRAM parameters.
+pub fn proxy_stats(
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    pass: TrainingPass,
+    flow: Dataflow,
+) -> Result<PassStats, SimError> {
+    let proxy = PlaneOp::from_layer(layer, pass).proxy();
     // The TPU keeps its array width busy with multiple filter columns per
     // lowered matmul; its per-plane proxy divides a multi-filter tile.
-    let proxy_stats = if flow == Dataflow::Tpu {
+    if flow == Dataflow::Tpu {
         let nf_tile = layer.num_filters.clamp(1, arch.array_cols);
-        tpu_multi_proxy(arch, proxy, nf_tile)
+        Ok(tpu_multi_proxy(arch, proxy, nf_tile))
     } else {
-        simulate_plane(arch, proxy, flow, 0xC0FFEE)?.1
-    };
+        simulate_plane(arch, proxy, flow, 0xC0FFEE).map(|(_, st)| st)
+    }
+}
 
+/// Extend a measured proxy pass to the full (layer, pass, flow, batch)
+/// cost — the analytic (cheap) part of [`layer_cost`]. `proxy_stats`
+/// must be the [`proxy_stats`] result for the same (arch, layer, pass,
+/// flow); the scheduler guarantees this by grouping jobs on
+/// [`ProxyKey`].
+#[allow(clippy::too_many_arguments)]
+pub fn layer_cost_from_proxy(
+    arch: &ArchConfig,
+    params: &EnergyParams,
+    dram: &DramModel,
+    layer: &ConvLayer,
+    pass: TrainingPass,
+    flow: Dataflow,
+    batch: usize,
+    proxy_stats: &PassStats,
+) -> LayerCost {
+    let op = PlaneOp::from_layer(layer, pass);
+    let proxy = op.proxy();
     let zero_free = op.zero_free(flow);
     let real_slots = op.mac_slots(zero_free);
     let proxy_slots = proxy.mac_slots(zero_free);
@@ -452,7 +574,7 @@ pub fn layer_cost(
         TrainingPass::FilterGrad => batch,
     };
     let q_acc = (contrib as u64).clamp(1, p_reuse);
-    let per_plane = scale_stats(&proxy_stats, scale);
+    let per_plane = scale_stats(proxy_stats, scale);
     let mut total = per_plane.scaled(n_pairs);
     total.gbuf_reads /= p_reuse;
     total.gon_words /= q_acc;
@@ -495,7 +617,7 @@ pub fn layer_cost(
     // independent — asserted in tests).
     energy.dram_pj = dram.energy_pj(dram_bytes, 0.0);
 
-    Ok(LayerCost {
+    LayerCost {
         cycles,
         seconds,
         energy,
@@ -504,7 +626,7 @@ pub fn layer_cost(
         utilization: util,
         mac_slots: slots_total,
         dram_bound: cycles == dram_cycles && dram_cycles > compute_cycles,
-    })
+    }
 }
 
 /// Per-plane stats of a TPU pass that lowers `nf_tile` filters into one
@@ -765,6 +887,85 @@ mod tests {
         }
         assert_eq!(seen.len(), total);
         assert_eq!(total, 8 * 3 * 4 * 2);
+    }
+
+    #[test]
+    fn proxy_key_groups_layers_sharing_a_proxy() {
+        // Channel/filter counts never enter the proxy simulation: layers
+        // differing only there share a ProxyKey for non-TPU flows, and a
+        // shared proxy measurement reproduces layer_cost bit-exactly.
+        let (arch, p, d) = env();
+        let env = EnvKey::of(&arch, &p, &d);
+        let a = ConvLayer::conv("X", "A", 128, 57, 28, 3, 128, 2);
+        let b = ConvLayer::conv("Y", "B", 64, 57, 28, 3, 32, 2);
+        let pass = TrainingPass::InputGrad;
+        let flow = Dataflow::EcoFlow;
+        let ka = ProxyKey::of(&arch, env, &a, pass, flow);
+        let kb = ProxyKey::of(&arch, env, &b, pass, flow);
+        assert_eq!(ka, kb);
+        // one member's proxy stats serve the other's extension
+        let shared = proxy_stats(&arch, &a, pass, flow).unwrap();
+        let via_group =
+            layer_cost_from_proxy(&arch, &p, &d, &b, pass, flow, 4, &shared);
+        let direct = layer_cost(&arch, &p, &d, &b, pass, flow, 4).unwrap();
+        assert_eq!(via_group, direct);
+    }
+
+    #[test]
+    fn proxy_key_discriminates_flow_geometry_and_tpu_tile() {
+        let (arch, p, d) = env();
+        let env = EnvKey::of(&arch, &p, &d);
+        let l = resnet_conv3();
+        let base = ProxyKey::of(&arch, env, &l, TrainingPass::InputGrad, Dataflow::EcoFlow);
+        assert_ne!(
+            base,
+            ProxyKey::of(&arch, env, &l, TrainingPass::InputGrad, Dataflow::RowStationary)
+        );
+        assert_ne!(
+            base,
+            ProxyKey::of(&arch, env, &l, TrainingPass::FilterGrad, Dataflow::EcoFlow)
+        );
+        let mut wider = l.clone();
+        wider.k += 1;
+        assert_ne!(
+            base,
+            ProxyKey::of(&arch, env, &wider, TrainingPass::InputGrad, Dataflow::EcoFlow)
+        );
+        // TPU: the lowered filter-tile width discriminates...
+        let mut few = l.clone();
+        few.num_filters = 2;
+        assert_ne!(
+            ProxyKey::of(&arch, env, &l, TrainingPass::Forward, Dataflow::Tpu),
+            ProxyKey::of(&arch, env, &few, TrainingPass::Forward, Dataflow::Tpu)
+        );
+        // ...but is clamped to the array width, so saturated counts fuse
+        let mut many = l.clone();
+        many.num_filters = 500;
+        assert_eq!(
+            ProxyKey::of(&arch, env, &l, TrainingPass::Forward, Dataflow::Tpu),
+            ProxyKey::of(&arch, env, &many, TrainingPass::Forward, Dataflow::Tpu)
+        );
+    }
+
+    #[test]
+    fn env_key_words_round_trip() {
+        let (arch, p, d) = env();
+        let k = EnvKey::of(&arch, &p, &d);
+        let words = k.to_words();
+        assert_eq!(words.len(), EnvKey::WORDS);
+        assert_eq!(EnvKey::from_words(&words), Some(k));
+        assert_eq!(EnvKey::from_words(&words[1..]), None);
+        // a different arch produces different words
+        let k2 = EnvKey::of(&ArchConfig::eyeriss(), &p, &d);
+        assert_ne!(k.to_words(), k2.to_words());
+    }
+
+    #[test]
+    fn cycle_cap_is_keyed() {
+        let (arch, p, d) = env();
+        let mut tight = arch.clone();
+        tight.max_sim_cycles = 1_000;
+        assert_ne!(EnvKey::of(&arch, &p, &d), EnvKey::of(&tight, &p, &d));
     }
 
     #[test]

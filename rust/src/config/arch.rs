@@ -112,6 +112,10 @@ pub struct ArchConfig {
     pub queue_depth: usize,
     /// Operand width in bits (paper trains in 16-bit / BFLOAT16).
     pub word_bits: usize,
+    /// Hard cap on simulated cycles per pass — a deadlock/bug backstop,
+    /// not a performance parameter. CI and tests can tighten it so a
+    /// runaway simulation fails in milliseconds instead of minutes.
+    pub max_sim_cycles: u64,
     /// NoC widths.
     pub noc: NocConfig,
 }
@@ -135,6 +139,7 @@ impl Default for ArchConfig {
             add_stages: 1,
             queue_depth: 8,
             word_bits: 16,
+            max_sim_cycles: 50_000_000,
             noc: NocConfig::eyeriss(),
         }
     }
@@ -213,6 +218,8 @@ impl ArchConfig {
             add_stages: doc.usize_or("pe", "add_stages", d.add_stages),
             queue_depth: doc.usize_or("pe", "queue_depth", d.queue_depth),
             word_bits: doc.usize_or("pe", "word_bits", d.word_bits),
+            max_sim_cycles: doc.usize_or("sim", "max_cycles", d.max_sim_cycles as usize)
+                as u64,
             noc,
         }
     }
@@ -268,6 +275,13 @@ mod tests {
         assert_eq!(a.array_cols, 15); // default retained
         assert_eq!(a.noc.gin_filter_bits, 80);
         assert_eq!(a.noc.gon_bits, 128);
+    }
+
+    #[test]
+    fn max_sim_cycles_defaults_and_overrides() {
+        assert_eq!(ArchConfig::default().max_sim_cycles, 50_000_000);
+        let doc = toml::parse("[sim]\nmax_cycles = 1000\n").unwrap();
+        assert_eq!(ArchConfig::from_doc(&doc).max_sim_cycles, 1000);
     }
 
     #[test]

@@ -181,6 +181,18 @@ impl CostCache {
         self.hits.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Deterministic snapshot of the live entries, in insertion order
+    /// (the persistent [`store`](super::store) serializes this, so two
+    /// saves of the same run produce byte-identical files).
+    pub fn snapshot(&self) -> Vec<(CostKey, CachedCost)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .order
+            .iter()
+            .filter_map(|k| inner.map.get(k).map(|v| (*k, v.clone())))
+            .collect()
+    }
+
     /// Live entry count.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()

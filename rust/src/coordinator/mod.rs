@@ -2,7 +2,7 @@
 //! into [`LayerCost`](crate::compiler::tiling::LayerCost)s and composes
 //! end-to-end network estimates (paper §6.1's methodology).
 //!
-//! # The dedup → shard → fan-out pipeline
+//! # The dedup → group → shard → fan-out pipeline
 //!
 //! The report targets submit heavily redundant job matrices: networks
 //! are stacks of repeated layer shapes, figures re-sweep each other's
@@ -15,10 +15,15 @@
 //!    geometry + architecture/energy/DRAM fingerprint + pass + flow +
 //!    batch — layer *names* are irrelevant), consulting the
 //!    [`cache::CostCache`] memo table for keys already evaluated;
-//! 2. **shards** the remaining unique jobs across scoped worker threads
+//! 2. **groups** the remaining unique jobs by their
+//!    [`ProxyKey`](crate::compiler::tiling::ProxyKey) — jobs whose
+//!    cycle-accurate proxy plane is identical (same architecture,
+//!    capped geometry and flow) fuse into one simulation, each member
+//!    extending the shared measurement analytically;
+//! 3. **shards** the groups across scoped worker threads
 //!    (atomic-cursor work stealing, one lock-free `OnceLock` result slot
 //!    per unique job — no shared results mutex);
-//! 3. **fans out** the unique results onto the original submission
+//! 4. **fans out** the unique results onto the original submission
 //!    order, so callers observe exactly the naive semantics.
 //!
 //! Simulation is deterministic, so cached, deduplicated and multi-thread
@@ -29,12 +34,16 @@
 //! [`cache::CostCache`] per invocation (`--cache-stats` prints its
 //! hit/miss/eviction counters), while the plain `run_sweep` /
 //! `network_e2e` / `gan_e2e` entry points scope a private cache to one
-//! call.
+//! call. With `--cache-file` the CLI additionally persists the table
+//! through the versioned on-disk [`store`], so repeated invocations
+//! warm-start from each other's simulations.
 
 pub mod cache;
 pub mod e2e;
 pub mod scheduler;
+pub mod store;
 
 pub use cache::{CacheStats, CostCache};
 pub use e2e::{gan_e2e, gan_e2e_cached, network_e2e, network_e2e_cached, E2eResult};
 pub use scheduler::{run_sweep, run_sweep_cached, SweepJob, SweepResult};
+pub use store::{load_into, save, LoadOutcome};

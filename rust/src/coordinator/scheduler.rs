@@ -1,26 +1,35 @@
-//! Sharded sweep engine: dedup → shard → fan-out.
+//! Sharded sweep engine: dedup → group → shard → fan-out.
 //!
 //! Jobs are independent (each simulates one (layer, pass, dataflow)
 //! proxy and extends it analytically), but the job matrices the report
 //! targets build are highly redundant — repeated-layer networks submit
 //! the same canonical [`CostKey`] many times. The engine therefore runs
-//! in three stages:
+//! in four stages:
 //!
 //! 1. **dedup** — every job is keyed by [`CostKey::of`]; only the first
 //!    occurrence of each key becomes a *unique* job. Keys already in the
 //!    [`CostCache`] are resolved immediately without dispatch.
-//! 2. **shard** — the unique jobs are distributed across `threads`
-//!    scoped workers via an atomic cursor (work stealing by index;
-//!    tokio is unavailable in this offline image — see Cargo.toml).
-//!    Each worker writes its result into a dedicated [`OnceLock`] slot:
-//!    no shared `Mutex<Vec<_>>`, no cross-worker contention on results.
-//! 3. **fan-out** — results are cloned back onto the original job list,
+//! 2. **group** — unique jobs that share a
+//!    [`ProxyKey`](tiling::ProxyKey) (same architecture, capped proxy
+//!    plane and flow) are fused into one run: the cycle-accurate proxy
+//!    is simulated once per group and every member job extends that
+//!    shared measurement analytically
+//!    ([`tiling::layer_cost_from_proxy`]). Distinct [`CostKey`]s often
+//!    collapse here — layers differing only in channel/filter counts
+//!    or in geometry the `SIM_CAP` proxy absorbs.
+//! 3. **shard** — the groups are distributed across `threads` scoped
+//!    workers via an atomic cursor (work stealing by index; tokio is
+//!    unavailable in this offline image — see Cargo.toml). Each member
+//!    job writes its result into a dedicated [`OnceLock`] slot: no
+//!    shared `Mutex<Vec<_>>`, no cross-worker contention on results.
+//! 4. **fan-out** — results are cloned back onto the original job list,
 //!    preserving submission order exactly, so callers that index or
 //!    `chunks()` the result vector are unaffected by the dedup.
 //!
-//! Determinism: `tiling::layer_cost` is seed-fixed, so the sweep output
-//! is bit-identical regardless of thread count, cache state, or dedup —
-//! property-tested in `tests/sweep_cache.rs`.
+//! Determinism: `tiling::layer_cost` is seed-fixed and exactly equal to
+//! `proxy_stats` + `layer_cost_from_proxy`, so the sweep output is
+//! bit-identical regardless of thread count, cache state, dedup or
+//! grouping — property-tested in `tests/sweep_cache.rs`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
@@ -65,12 +74,19 @@ pub struct SweepResult {
 }
 
 /// The architecture each dataflow runs on (its Table 1 NoC row).
+///
+/// The process-wide `--max-sim-cycles` override is folded into the
+/// returned config here, so it reaches both the simulators *and* the
+/// [`EnvKey`] cache fingerprint — a cache/store entry produced under one
+/// cycle cap can never answer for a different one.
 pub fn arch_for(flow: Dataflow) -> ArchConfig {
-    match flow {
+    let mut arch = match flow {
         Dataflow::RowStationary => ArchConfig::eyeriss(),
         Dataflow::Tpu => ArchConfig::tpu(),
         Dataflow::EcoFlow | Dataflow::Ganax => ArchConfig::ecoflow(),
-    }
+    };
+    arch.max_sim_cycles = crate::sim::array::effective_max_cycles(&arch);
+    arch
 }
 
 /// Run all jobs with a private single-use cache; results keep job order.
@@ -139,27 +155,55 @@ pub fn run_sweep_cached(
         }
     }
 
-    // -- shard: atomic-cursor work stealing over the pending slots -------
-    if !pending.is_empty() {
+    // -- group: pending slots sharing a proxy fingerprint are fused ------
+    // into one batched run (the proxy plane is simulated once; members
+    // extend it analytically).
+    let mut group_index: std::collections::HashMap<tiling::ProxyKey, usize> =
+        std::collections::HashMap::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new(); // group -> member slots
+    for &slot in &pending {
+        let ji = unique_job[slot];
+        let job = &jobs[ji];
+        let env = env_by_flow[&job.flow]; // populated during keying above
+        let pk = tiling::ProxyKey::of(&arch_for(job.flow), env, &job.layer, job.pass, job.flow);
+        let g = *group_index.entry(pk).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[g].push(slot);
+    }
+
+    // -- shard: atomic-cursor work stealing over the groups --------------
+    if !groups.is_empty() {
         let cursor = AtomicUsize::new(0);
-        let workers = threads.max(1).min(pending.len());
+        let workers = threads.max(1).min(groups.len());
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
-                    let p = cursor.fetch_add(1, Ordering::Relaxed);
-                    if p >= pending.len() {
+                    let g = cursor.fetch_add(1, Ordering::Relaxed);
+                    if g >= groups.len() {
                         break;
                     }
-                    let slot = pending[p];
-                    let ji = unique_job[slot];
-                    let job = &jobs[ji];
-                    let arch = arch_for(job.flow);
-                    let cost = tiling::layer_cost(
-                        &arch, params, dram, &job.layer, job.pass, job.flow, job.batch,
-                    )
-                    .map_err(|e| e.to_string());
-                    cache.insert(keys[ji], cost.clone());
-                    let _ = slots[slot].set(cost);
+                    let members = &groups[g];
+                    let j0 = &jobs[unique_job[members[0]]];
+                    let arch = arch_for(j0.flow);
+                    // one cycle-accurate proxy simulation per group
+                    let proxy =
+                        tiling::proxy_stats(&arch, &j0.layer, j0.pass, j0.flow)
+                            .map_err(|e| e.to_string());
+                    for &slot in members {
+                        let ji = unique_job[slot];
+                        let job = &jobs[ji];
+                        let cost = match &proxy {
+                            Ok(ps) => Ok(tiling::layer_cost_from_proxy(
+                                &arch, params, dram, &job.layer, job.pass, job.flow,
+                                job.batch, ps,
+                            )),
+                            Err(e) => Err(e.clone()),
+                        };
+                        cache.insert(keys[ji], cost.clone());
+                        let _ = slots[slot].set(cost);
+                    }
                 });
             }
         });
@@ -281,6 +325,28 @@ mod tests {
         assert!(s.hits >= first.len() as u64 / 3, "{s:?}");
         for (a, b) in first.iter().zip(&second) {
             assert_eq!(a.cost.as_ref().unwrap(), b.cost.as_ref().unwrap());
+        }
+    }
+
+    #[test]
+    fn proxy_grouped_jobs_match_ungrouped_costs() {
+        // Two layers that share a proxy fingerprint (they differ only in
+        // channel/filter counts) are fused into one proxy simulation; the
+        // fan-out must still give each job its own, exact layer cost.
+        let layers = vec![
+            ConvLayer::conv("Zoo", "A", 58, 57, 28, 3, 58, 2),
+            ConvLayer::conv("Zoo", "B", 32, 57, 28, 3, 16, 2),
+        ];
+        let jobs = job_matrix(&layers, &[Dataflow::EcoFlow], 1);
+        let p = EnergyParams::default();
+        let d = DramModel::default();
+        let results = run_sweep(&p, &d, jobs.clone(), 2);
+        for (r, j) in results.iter().zip(&jobs) {
+            let direct = tiling::layer_cost(
+                &arch_for(j.flow), &p, &d, &j.layer, j.pass, j.flow, j.batch,
+            )
+            .unwrap();
+            assert_eq!(r.cost.as_ref().unwrap(), &direct);
         }
     }
 

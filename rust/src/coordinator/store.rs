@@ -1,0 +1,454 @@
+//! Versioned on-disk persistence for the layer-cost memo table.
+//!
+//! The [`CostCache`] collapses repeated simulations *within* one process;
+//! this module carries that work *across* CLI invocations: `sweep` warms
+//! the store, a following `report` answers >90% of its lookups from disk
+//! (`--cache-file`, asserted in `tests/batch_engine.rs`).
+//!
+//! # Format
+//!
+//! A plain-text, line-oriented file:
+//!
+//! ```text
+//! ecoflow-cost-store v1
+//! checksum <fnv1a-64 of the entry lines, hex>
+//! <one entry per line: CostKey fields, EnvKey words, LayerCost fields>
+//! ```
+//!
+//! Every float is stored as its IEEE-754 bit pattern in hex, so a
+//! round-trip is **bit-exact** — a loaded entry is indistinguishable
+//! from a recomputed one, which is the same contract the in-memory memo
+//! table gives. Only `Ok` costs are persisted: error strings are cheap
+//! to recompute and would need escaping.
+//!
+//! # Robustness
+//!
+//! [`load_into`] never fails the caller and never partially poisons the
+//! cache: a missing file is a cold start, and *anything* wrong with an
+//! existing file — bad magic, a different format version, a checksum
+//! mismatch (truncation, bit rot, concurrent writers), a malformed
+//! entry — yields [`LoadOutcome::Rebuilt`] with the reason, loads
+//! nothing, and the next [`save`] rewrites the file wholesale. Saves go
+//! through a temp-file + rename so a crash mid-write cannot corrupt an
+//! existing store. Entries from a different architecture / energy /
+//! DRAM configuration need no special handling: their [`EnvKey`] words
+//! differ, so their keys simply never hit.
+
+use std::path::Path;
+
+use crate::compiler::tiling::{CostKey, EnvKey, LayerCost};
+use crate::compiler::Dataflow;
+use crate::model::{LayerKind, TrainingPass};
+use crate::sim::stats::PassStats;
+
+use super::cache::{CachedCost, CostCache};
+
+/// Bump on any change to the entry encoding below.
+pub const FORMAT_VERSION: u32 = 1;
+
+const MAGIC: &str = "ecoflow-cost-store";
+
+/// Tokens per entry line: 10 key scalars + the env words + 24 cost
+/// fields (cycles, seconds, 5 energy components, 13 stats counters,
+/// dram_bytes, utilization, mac_slots, dram_bound).
+const ENTRY_TOKENS: usize = 10 + EnvKey::WORDS + 24;
+
+/// What [`load_into`] found at the path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LoadOutcome {
+    /// No file yet (cold start) — nothing loaded.
+    Missing,
+    /// All entries loaded into the cache.
+    Loaded { entries: usize },
+    /// File present but unusable; nothing loaded, the cache is left
+    /// untouched, and the next [`save`] rewrites the file from scratch.
+    Rebuilt { reason: String },
+}
+
+impl LoadOutcome {
+    /// One-line summary for CLI stderr logging.
+    pub fn render_line(&self, path: &Path) -> String {
+        match self {
+            LoadOutcome::Missing => {
+                format!("cost store {}: not found (cold start)", path.display())
+            }
+            LoadOutcome::Loaded { entries } => {
+                format!("cost store {}: loaded {entries} entries", path.display())
+            }
+            LoadOutcome::Rebuilt { reason } => format!(
+                "cost store {}: rebuilding ({reason})",
+                path.display()
+            ),
+        }
+    }
+}
+
+/// Load a store into `cache`. Infallible by design — see [`LoadOutcome`].
+pub fn load_into(path: &Path, cache: &CostCache) -> LoadOutcome {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LoadOutcome::Missing,
+        Err(e) => {
+            return LoadOutcome::Rebuilt {
+                reason: format!("unreadable: {e}"),
+            }
+        }
+    };
+    match parse(&text) {
+        Ok(entries) => {
+            let n = entries.len();
+            for (k, v) in entries {
+                cache.insert(k, v);
+            }
+            LoadOutcome::Loaded { entries: n }
+        }
+        Err(reason) => LoadOutcome::Rebuilt { reason },
+    }
+}
+
+/// Write the cache's finished (`Ok`) entries to `path`, replacing any
+/// existing store atomically. Returns the number of entries written.
+pub fn save(path: &Path, cache: &CostCache) -> std::io::Result<usize> {
+    let mut body = String::new();
+    let mut n = 0usize;
+    for (key, value) in cache.snapshot() {
+        if let Ok(cost) = &value {
+            encode_entry(&mut body, &key, cost);
+            body.push('\n');
+            n += 1;
+        }
+    }
+    let checksum = fnv1a64(body.as_bytes());
+    let text = format!("{MAGIC} v{FORMAT_VERSION}\nchecksum {checksum:016x}\n{body}");
+    // per-process temp name: concurrent invocations sharing a store file
+    // each rename their own complete write (last one wins, never torn)
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(n)
+}
+
+fn parse(text: &str) -> Result<Vec<(CostKey, CachedCost)>, String> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or("empty file")?;
+    let mut hp = header.split_whitespace();
+    if hp.next() != Some(MAGIC) {
+        return Err("bad magic (not a cost store)".into());
+    }
+    let version = hp
+        .next()
+        .and_then(|v| v.strip_prefix('v'))
+        .and_then(|v| v.parse::<u32>().ok())
+        .ok_or("unparseable version")?;
+    if version != FORMAT_VERSION {
+        return Err(format!(
+            "stale format v{version}, this build writes v{FORMAT_VERSION}"
+        ));
+    }
+    let declared = lines
+        .next()
+        .and_then(|l| l.strip_prefix("checksum "))
+        .and_then(|h| u64::from_str_radix(h, 16).ok())
+        .ok_or("missing or unparseable checksum line")?;
+    let body: Vec<&str> = lines.collect();
+    let mut actual = Fnv::new();
+    for line in &body {
+        actual.update(line.as_bytes());
+        actual.update(b"\n");
+    }
+    if actual.finish() != declared {
+        return Err("checksum mismatch (corrupt or truncated)".into());
+    }
+    body.iter()
+        .enumerate()
+        .map(|(i, line)| {
+            parse_entry(line).ok_or_else(|| format!("malformed entry at line {}", i + 3))
+        })
+        .collect()
+}
+
+// --- entry encoding ----------------------------------------------------
+
+fn encode_entry(out: &mut String, k: &CostKey, c: &LayerCost) {
+    use std::fmt::Write;
+    let w = |out: &mut String, v: u64| write!(out, " {v}").unwrap();
+    let wf = |out: &mut String, v: f64| write!(out, " {:016x}", v.to_bits()).unwrap();
+    write!(
+        out,
+        "{} {} {} {} {} {} {} {} {} {}",
+        kind_code(k.kind),
+        pass_code(k.pass),
+        flow_code(k.flow),
+        k.in_ch,
+        k.ifm,
+        k.ofm,
+        k.k,
+        k.num_filters,
+        k.stride,
+        k.batch
+    )
+    .unwrap();
+    for word in k.env.to_words() {
+        write!(out, " {word:016x}").unwrap();
+    }
+    w(out, c.cycles);
+    wf(out, c.seconds);
+    wf(out, c.energy.dram_pj);
+    wf(out, c.energy.gbuf_pj);
+    wf(out, c.energy.spad_pj);
+    wf(out, c.energy.alu_pj);
+    wf(out, c.energy.noc_pj);
+    let s = &c.stats;
+    for v in [
+        s.cycles,
+        s.macs,
+        s.gated_macs,
+        s.spad_reads,
+        s.spad_writes,
+        s.gbuf_reads,
+        s.gbuf_writes,
+        s.noc_words,
+        s.gon_words,
+        s.local_words,
+        s.pe_busy,
+        s.pe_stall,
+        s.pe_idle,
+    ] {
+        w(out, v);
+    }
+    wf(out, c.dram_bytes);
+    wf(out, c.utilization);
+    w(out, c.mac_slots);
+    w(out, c.dram_bound as u64);
+}
+
+fn parse_entry(line: &str) -> Option<(CostKey, CachedCost)> {
+    let t: Vec<&str> = line.split(' ').collect();
+    if t.len() != ENTRY_TOKENS {
+        return None;
+    }
+    let dec = |s: &str| s.parse::<u64>().ok();
+    let hex = |s: &str| u64::from_str_radix(s, 16).ok();
+    let hexf = |s: &str| hex(s).map(f64::from_bits);
+
+    let env_words: Vec<u64> = t[10..10 + EnvKey::WORDS]
+        .iter()
+        .map(|s| hex(s))
+        .collect::<Option<_>>()?;
+    let key = CostKey {
+        kind: kind_from(dec(t[0])?)?,
+        pass: pass_from(dec(t[1])?)?,
+        flow: flow_from(dec(t[2])?)?,
+        in_ch: dec(t[3])? as usize,
+        ifm: dec(t[4])? as usize,
+        ofm: dec(t[5])? as usize,
+        k: dec(t[6])? as usize,
+        num_filters: dec(t[7])? as usize,
+        stride: dec(t[8])? as usize,
+        batch: dec(t[9])? as usize,
+        env: EnvKey::from_words(&env_words)?,
+    };
+
+    let c = &t[10 + EnvKey::WORDS..];
+    let stats = PassStats {
+        cycles: dec(c[7])?,
+        macs: dec(c[8])?,
+        gated_macs: dec(c[9])?,
+        spad_reads: dec(c[10])?,
+        spad_writes: dec(c[11])?,
+        gbuf_reads: dec(c[12])?,
+        gbuf_writes: dec(c[13])?,
+        noc_words: dec(c[14])?,
+        gon_words: dec(c[15])?,
+        local_words: dec(c[16])?,
+        pe_busy: dec(c[17])?,
+        pe_stall: dec(c[18])?,
+        pe_idle: dec(c[19])?,
+    };
+    let cost = LayerCost {
+        cycles: dec(c[0])?,
+        seconds: hexf(c[1])?,
+        energy: crate::energy::EnergyBreakdown {
+            dram_pj: hexf(c[2])?,
+            gbuf_pj: hexf(c[3])?,
+            spad_pj: hexf(c[4])?,
+            alu_pj: hexf(c[5])?,
+            noc_pj: hexf(c[6])?,
+        },
+        stats,
+        dram_bytes: hexf(c[20])?,
+        utilization: hexf(c[21])?,
+        mac_slots: dec(c[22])?,
+        dram_bound: match dec(c[23])? {
+            0 => false,
+            1 => true,
+            _ => return None,
+        },
+    };
+    Some((key, Ok(cost)))
+}
+
+// --- enum codes (exhaustive both ways: adding a variant is a compile ---
+// --- error here, and an unknown code on disk reads as corruption) ------
+
+fn kind_code(k: LayerKind) -> u64 {
+    match k {
+        LayerKind::Conv => 0,
+        LayerKind::TransposedConv => 1,
+    }
+}
+
+fn kind_from(c: u64) -> Option<LayerKind> {
+    match c {
+        0 => Some(LayerKind::Conv),
+        1 => Some(LayerKind::TransposedConv),
+        _ => None,
+    }
+}
+
+fn pass_code(p: TrainingPass) -> u64 {
+    match p {
+        TrainingPass::Forward => 0,
+        TrainingPass::InputGrad => 1,
+        TrainingPass::FilterGrad => 2,
+    }
+}
+
+fn pass_from(c: u64) -> Option<TrainingPass> {
+    match c {
+        0 => Some(TrainingPass::Forward),
+        1 => Some(TrainingPass::InputGrad),
+        2 => Some(TrainingPass::FilterGrad),
+        _ => None,
+    }
+}
+
+fn flow_code(f: Dataflow) -> u64 {
+    match f {
+        Dataflow::RowStationary => 0,
+        Dataflow::Tpu => 1,
+        Dataflow::EcoFlow => 2,
+        Dataflow::Ganax => 3,
+    }
+}
+
+fn flow_from(c: u64) -> Option<Dataflow> {
+    match c {
+        0 => Some(Dataflow::RowStationary),
+        1 => Some(Dataflow::Tpu),
+        2 => Some(Dataflow::EcoFlow),
+        3 => Some(Dataflow::Ganax),
+        _ => None,
+    }
+}
+
+// --- FNV-1a 64 (no external hashing crates in this offline image) ------
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::tiling;
+    use crate::config::ArchConfig;
+    use crate::energy::{DramModel, EnergyParams};
+    use crate::model::zoo;
+
+    fn sample_entry() -> (CostKey, LayerCost) {
+        let arch = ArchConfig::ecoflow();
+        let p = EnergyParams::default();
+        let d = DramModel::default();
+        let layer = &zoo::table5_layers()[0];
+        let key = CostKey::of(
+            &arch,
+            &p,
+            &d,
+            layer,
+            TrainingPass::InputGrad,
+            Dataflow::EcoFlow,
+            4,
+        );
+        let cost = tiling::layer_cost(
+            &arch,
+            &p,
+            &d,
+            layer,
+            TrainingPass::InputGrad,
+            Dataflow::EcoFlow,
+            4,
+        )
+        .unwrap();
+        (key, cost)
+    }
+
+    #[test]
+    fn entry_round_trip_is_bit_exact() {
+        let (key, cost) = sample_entry();
+        let mut line = String::new();
+        encode_entry(&mut line, &key, &cost);
+        let (k2, c2) = parse_entry(&line).unwrap();
+        assert_eq!(key, k2);
+        assert_eq!(Ok(cost), c2);
+    }
+
+    #[test]
+    fn malformed_entries_rejected() {
+        let (key, cost) = sample_entry();
+        let mut line = String::new();
+        encode_entry(&mut line, &key, &cost);
+        // wrong token count
+        assert!(parse_entry("").is_none());
+        assert!(parse_entry("1 2 3").is_none());
+        // unknown flow code
+        let mut toks: Vec<&str> = line.split(' ').collect();
+        toks[2] = "9";
+        assert!(parse_entry(&toks.join(" ")).is_none());
+        // non-numeric field
+        let mut toks: Vec<&str> = line.split(' ').collect();
+        toks[3] = "xyz";
+        assert!(parse_entry(&toks.join(" ")).is_none());
+    }
+
+    #[test]
+    fn enum_codes_round_trip() {
+        for f in Dataflow::ALL {
+            assert_eq!(flow_from(flow_code(f)), Some(f));
+        }
+        for p in TrainingPass::ALL {
+            assert_eq!(pass_from(pass_code(p)), Some(p));
+        }
+        for k in [LayerKind::Conv, LayerKind::TransposedConv] {
+            assert_eq!(kind_from(kind_code(k)), Some(k));
+        }
+        assert_eq!(flow_from(99), None);
+    }
+
+    #[test]
+    fn fnv_matches_reference_vector() {
+        // FNV-1a 64 of "hello" (published test vector)
+        assert_eq!(fnv1a64(b"hello"), 0xa430_d846_80aa_bd0b);
+    }
+}

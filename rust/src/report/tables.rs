@@ -69,7 +69,11 @@ pub const EYERISS_CHIP: [(&str, f64, f64, f64, f64); 5] = [
 pub fn table2_validation() -> Table {
     let params = EnergyParams::horowitz_45nm().scaled_to_65nm();
     let dram = DramModel::default();
-    let arch = ArchConfig::eyeriss();
+    // fold in the process-wide cycle-cap override (as arch_for does for
+    // sweep-driven simulations), so --max-sim-cycles bounds this table's
+    // simulations too
+    let mut arch = ArchConfig::eyeriss();
+    arch.max_sim_cycles = crate::sim::array::effective_max_cycles(&arch);
     let layers = zoo::full_network("AlexNet");
     let mut t = Table::new(
         "Table 2 — SASiML vs Eyeriss chip (AlexNet inference, RS)",

@@ -13,11 +13,36 @@
 //! microprogramming level" (paper §5.1).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::microprogram::{Microprogram, Operands, PeInstr, WSrc, XSrc};
 use super::stats::PassStats;
 use crate::config::ArchConfig;
 use crate::tensor::Mat;
+
+/// Process-wide override of [`ArchConfig::max_sim_cycles`] (0 = none).
+/// The CLI sets this from `--max-sim-cycles`; it takes effect solely by
+/// being folded into the configs the scheduler's `arch_for` mints, so
+/// the simulators themselves trust `arch.max_sim_cycles` (an explicitly
+/// configured cap is never silently overridden) and the cache
+/// fingerprint (`EnvKey`) always reflects the cap a result ran under.
+/// Library users and tests should prefer the config field, which
+/// composes without global state.
+static MAX_CYCLES_OVERRIDE: AtomicU64 = AtomicU64::new(0);
+
+/// Set (or, with 0, clear) the process-wide cycle-cap override.
+pub fn set_max_cycles_override(limit: u64) {
+    MAX_CYCLES_OVERRIDE.store(limit, Ordering::Relaxed);
+}
+
+/// The cycle cap in effect for a config being minted now: the CLI
+/// override when set, otherwise the config's own `max_sim_cycles`.
+pub fn effective_max_cycles(arch: &ArchConfig) -> u64 {
+    match MAX_CYCLES_OVERRIDE.load(Ordering::Relaxed) {
+        0 => arch.max_sim_cycles,
+        n => n,
+    }
+}
 
 /// Simulation failure modes.
 #[derive(Debug)]
@@ -70,7 +95,7 @@ impl<'a> ArraySim<'a> {
         Self {
             arch,
             mp,
-            max_cycles: 50_000_000,
+            max_cycles: arch.max_sim_cycles,
         }
     }
 
@@ -491,6 +516,15 @@ mod tests {
         let arch = arch();
         let err = ArraySim::new(&arch, &mp).run(&ops2()).unwrap_err();
         assert!(matches!(err, SimError::IncompleteOutput(1)));
+    }
+
+    #[test]
+    fn tight_cycle_cap_trips_cycle_limit() {
+        let mut a = arch();
+        a.max_sim_cycles = 1;
+        let mp = dot2_program(); // needs >= 3 execute cycles
+        let err = ArraySim::new(&a, &mp).run(&ops2()).unwrap_err();
+        assert!(matches!(err, SimError::CycleLimit(1)), "{err}");
     }
 
     #[test]

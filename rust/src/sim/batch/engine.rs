@@ -1,0 +1,478 @@
+//! The batched PE-array engine: one cycle loop, `B` operand sets.
+//!
+//! [`BatchSim`] executes the same synchronous digital model as the
+//! scalar [`ArraySim`](crate::sim::ArraySim), but carries a [`Lane`] of
+//! f32 values (one per operand set) through every PE register, queue
+//! slot and accumulator. This is sound because the scalar engine's
+//! *control* behaviour — which instruction issues in which cycle, queue
+//! occupancy, bus scheduling, stalls, deadlock and output completeness —
+//! depends only on the microprogram and the architecture, never on the
+//! operand **values**. (The single value-dependent branch in the scalar
+//! engine, zero-operand clock gating, splits a counter, not control
+//! flow.) All lanes therefore march in lockstep through one cycle loop:
+//! the program is validated once, control state is paid for once, and
+//! the arithmetic widens to `LANES` operand sets, with per-lane gating
+//! masks keeping the value-dependent `macs`/`gated_macs` split
+//! bit-identical to scalar per-job runs — property-tested in
+//! `tests/batch_engine.rs`.
+
+use std::collections::VecDeque;
+
+use super::lanes::{self, Lane, LANES, ZERO_LANE};
+use crate::config::ArchConfig;
+use crate::sim::array::{ArraySim, SimError};
+use crate::sim::microprogram::{Microprogram, Operands, PeInstr, WSrc, XSrc};
+use crate::sim::stats::PassStats;
+use crate::tensor::Mat;
+
+struct LanePe {
+    ip: usize,
+    acc: Vec<Lane>,
+    w_queue: VecDeque<Lane>,
+    x_queue: VecDeque<Lane>,
+    south_in: VecDeque<Lane>,
+    w_hold: Lane,
+    x_hold: Lane,
+    w_regs: Vec<Lane>,
+    x_regs: Vec<Lane>,
+}
+
+/// The batched array simulator. Construct once per (arch, program) and
+/// [`run`](BatchSim::run) with any number of concrete operand sets; they
+/// are processed in [`LANES`]-sized chunks.
+pub struct BatchSim<'a> {
+    pub arch: &'a ArchConfig,
+    pub mp: &'a Microprogram,
+    /// Hard cap on simulated cycles (deadlock/bug backstop).
+    pub max_cycles: u64,
+}
+
+impl<'a> BatchSim<'a> {
+    pub fn new(arch: &'a ArchConfig, mp: &'a Microprogram) -> Self {
+        Self {
+            arch,
+            mp,
+            max_cycles: arch.max_sim_cycles,
+        }
+    }
+
+    /// Run the pass for every operand set. Returns one `(output matrix,
+    /// stats)` pair per input, in input order — each pair bit-identical
+    /// to what `ArraySim::run` returns for that operand set alone.
+    ///
+    /// The program is validated once per call, not once per operand set.
+    pub fn run(&self, ops: &[Operands]) -> Result<Vec<(Mat, PassStats)>, SimError> {
+        let problems = self.mp.validate(self.arch.rf_psum);
+        if !problems.is_empty() {
+            return Err(SimError::Invalid(problems));
+        }
+        let mut results = Vec::with_capacity(ops.len());
+        for chunk in ops.chunks(LANES) {
+            results.extend(self.run_chunk(chunk)?);
+        }
+        Ok(results)
+    }
+
+    /// One lockstep pass over up to [`LANES`] operand sets. Chunks
+    /// shorter than `LANES` pad the spare lanes with the last operand
+    /// set; control flow is value-independent, so padding lanes are
+    /// inert copies whose results are simply dropped.
+    fn run_chunk(&self, chunk: &[Operands]) -> Result<Vec<(Mat, PassStats)>, SimError> {
+        let mp = self.mp;
+        let arch = self.arch;
+        let n = mp.num_pes();
+        let wb = arch.word_bits;
+        let fw = arch.noc.filter_words_per_cycle(wb);
+        let iw = arch.noc.ifmap_words_per_cycle(wb);
+        let ow = arch.noc.output_words_per_cycle(wb);
+        let qd = arch.queue_depth;
+        let ops: [&Operands; LANES] =
+            std::array::from_fn(|l| &chunk[l.min(chunk.len() - 1)]);
+
+        // Structural (value-independent) counters are shared by every
+        // lane; only the gating split below is tracked per lane.
+        let mut base = PassStats::default();
+        let mut lane_macs = [0u64; LANES];
+        let mut lane_gated = [0u64; LANES];
+
+        // --- preload phase (weight-stationary register files) ---------
+        let w_pre: usize = mp.w_preload.iter().map(Vec::len).sum();
+        let x_pre: usize = mp.x_preload.iter().map(Vec::len).sum();
+        let x_uni = mp.x_preload_unique.unwrap_or(x_pre).min(x_pre);
+        base.cycles += (w_pre.div_ceil(fw) + x_uni.div_ceil(iw)) as u64;
+        base.spad_writes += (w_pre + x_pre) as u64;
+        base.noc_words += (w_pre + x_pre) as u64;
+        base.gbuf_reads += x_uni as u64;
+
+        let mut pes: Vec<LanePe> = (0..n)
+            .map(|i| LanePe {
+                ip: 0,
+                acc: vec![ZERO_LANE; arch.rf_psum],
+                w_queue: VecDeque::new(),
+                x_queue: VecDeque::new(),
+                south_in: VecDeque::new(),
+                w_hold: ZERO_LANE,
+                x_hold: ZERO_LANE,
+                w_regs: mp.w_preload[i].iter().map(|r| lanes::fetch(&ops, *r)).collect(),
+                x_regs: mp.x_preload[i].iter().map(|r| lanes::fetch(&ops, *r)).collect(),
+            })
+            .collect();
+
+        let out_len = mp.out_rows * mp.out_cols;
+        let mut out: Vec<Option<Lane>> = vec![None; out_len];
+        let mut w_cursor = 0usize;
+        let mut x_cursor = 0usize;
+        let wq_cap = arch.rf_filter.max(qd);
+        let xq_cap = arch.rf_ifmap.max(qd);
+        // broadcast subscribers never change during a run: hoisted out of
+        // the cycle loop (unlike the scalar reference, this is the
+        // throughput path)
+        let subscribers: Vec<usize> = (0..n).filter(|i| mp.uses_w[*i]).collect();
+
+        let mut cycle: u64 = 0;
+        loop {
+            if cycle >= self.max_cycles {
+                return Err(SimError::CycleLimit(self.max_cycles));
+            }
+            let all_done = pes
+                .iter()
+                .enumerate()
+                .all(|(i, p)| p.ip >= mp.programs[i].len());
+            if all_done {
+                break;
+            }
+
+            let mut progress = false;
+
+            // --- PE execute phase (row-major order, as in ArraySim) ---
+            let mut gon_issued = 0usize;
+            for i in 0..n {
+                let prog = &mp.programs[i];
+                if pes[i].ip >= prog.len() {
+                    continue;
+                }
+                let instr = prog[pes[i].ip];
+                match instr {
+                    PeInstr::Mac { acc, w, x } => {
+                        let w_ready = match w {
+                            WSrc::Pop => !pes[i].w_queue.is_empty(),
+                            _ => true,
+                        };
+                        let x_ready = match x {
+                            XSrc::Pop => !pes[i].x_queue.is_empty(),
+                            _ => true,
+                        };
+                        if !(w_ready && x_ready) {
+                            base.pe_stall += 1;
+                            continue;
+                        }
+                        let p = &mut pes[i];
+                        let wv = match w {
+                            WSrc::Pop => {
+                                let v = p.w_queue.pop_front().unwrap();
+                                p.w_hold = v;
+                                v
+                            }
+                            WSrc::Hold => p.w_hold,
+                            WSrc::Reg(r) => {
+                                base.spad_reads += 1;
+                                p.w_regs[r as usize]
+                            }
+                        };
+                        let xv = match x {
+                            XSrc::Pop => {
+                                let v = p.x_queue.pop_front().unwrap();
+                                p.x_hold = v;
+                                v
+                            }
+                            XSrc::Hold => p.x_hold,
+                            XSrc::Reg(r) => {
+                                base.spad_reads += 1;
+                                p.x_regs[r as usize]
+                            }
+                        };
+                        if arch.clock_gating {
+                            lanes::tally_gating(&mut lane_gated, &mut lane_macs, &wv, &xv);
+                        } else {
+                            for m in &mut lane_macs {
+                                *m += 1;
+                            }
+                        }
+                        lanes::mac(&mut p.acc[acc as usize], &wv, &xv);
+                        base.spad_reads += 1; // acc read
+                        base.spad_writes += 1; // acc write
+                        base.pe_busy += 1;
+                        p.ip += 1;
+                        progress = true;
+                    }
+                    PeInstr::PassUp { acc } => {
+                        let north = i - mp.cols; // validated: not top row
+                        if pes[north].south_in.len() >= qd {
+                            base.pe_stall += 1;
+                            continue;
+                        }
+                        let v = pes[i].acc[acc as usize];
+                        pes[i].acc[acc as usize] = ZERO_LANE;
+                        pes[north].south_in.push_back(v);
+                        base.local_words += 1;
+                        base.pe_busy += 1;
+                        pes[i].ip += 1;
+                        progress = true;
+                    }
+                    PeInstr::RecvAdd { acc } => {
+                        if pes[i].south_in.is_empty() {
+                            base.pe_stall += 1;
+                            continue;
+                        }
+                        let v = pes[i].south_in.pop_front().unwrap();
+                        lanes::add(&mut pes[i].acc[acc as usize], &v);
+                        base.spad_reads += 1;
+                        base.spad_writes += 1;
+                        base.pe_busy += 1;
+                        pes[i].ip += 1;
+                        progress = true;
+                    }
+                    PeInstr::WriteOut { acc, out_idx } => {
+                        if gon_issued >= ow {
+                            base.pe_stall += 1;
+                            continue;
+                        }
+                        gon_issued += 1;
+                        let v = pes[i].acc[acc as usize];
+                        pes[i].acc[acc as usize] = ZERO_LANE;
+                        out[out_idx as usize] = Some(v);
+                        base.gon_words += 1;
+                        base.gbuf_writes += 1;
+                        base.pe_busy += 1;
+                        pes[i].ip += 1;
+                        progress = true;
+                    }
+                    PeInstr::Nop => {
+                        base.pe_idle += 1;
+                        pes[i].ip += 1;
+                        progress = true;
+                    }
+                }
+            }
+
+            // --- bus delivery phase (visible next cycle: 1-cycle hop) --
+            for _ in 0..fw {
+                if w_cursor >= mp.w_stream.len() {
+                    break;
+                }
+                if subscribers.iter().any(|i| pes[*i].w_queue.len() >= wq_cap) {
+                    break; // head-of-line blocking
+                }
+                let v = lanes::fetch(&ops, mp.w_stream[w_cursor]);
+                w_cursor += 1;
+                for i in &subscribers {
+                    pes[*i].w_queue.push_back(v);
+                    base.noc_words += 1;
+                }
+                progress = true;
+            }
+            for _ in 0..iw {
+                if x_cursor >= mp.x_stream.len() {
+                    break;
+                }
+                let (src, group) = mp.x_stream[x_cursor];
+                let members = &mp.groups[group as usize];
+                if members
+                    .iter()
+                    .any(|m| pes[*m as usize].x_queue.len() >= xq_cap)
+                {
+                    break;
+                }
+                let v = lanes::fetch(&ops, src);
+                x_cursor += 1;
+                base.gbuf_reads += 1;
+                for m in members {
+                    pes[*m as usize].x_queue.push_back(v);
+                    base.noc_words += 1;
+                }
+                progress = true;
+            }
+
+            if !progress {
+                let stuck: Vec<String> = pes
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, p)| p.ip < mp.programs[*i].len())
+                    .take(4)
+                    .map(|(i, p)| {
+                        format!("PE{}@{}:{:?}", i, p.ip, mp.programs[i][p.ip])
+                    })
+                    .collect();
+                return Err(SimError::Deadlock {
+                    cycle,
+                    detail: format!(
+                        "w_cursor={w_cursor}/{} x_cursor={x_cursor}/{} stuck={stuck:?}",
+                        mp.w_stream.len(),
+                        mp.x_stream.len()
+                    ),
+                });
+            }
+            cycle += 1;
+        }
+
+        base.cycles += cycle + (arch.mul_stages + arch.add_stages) as u64;
+
+        // --- de-interleave: one (matrix, stats) pair per live lane -----
+        let mut results = Vec::with_capacity(chunk.len());
+        for l in 0..chunk.len() {
+            let mut data = Vec::with_capacity(out_len);
+            for (i, v) in out.iter().enumerate() {
+                match v {
+                    Some(lane) => data.push(lane[l]),
+                    None if mp.zero_unwritten => data.push(0.0),
+                    None => return Err(SimError::IncompleteOutput(i)),
+                }
+            }
+            let mut stats = base;
+            stats.macs = lane_macs[l];
+            stats.gated_macs = lane_gated[l];
+            results.push((
+                Mat::from_slice(mp.out_rows, mp.out_cols, &data),
+                stats,
+            ));
+        }
+        Ok(results)
+    }
+}
+
+/// Run every operand set of `ops` through `mp`, choosing the engine by
+/// batch width: two or more sets amortize one lane-parallel cycle loop,
+/// a singleton takes the scalar engine (SoA lanes would waste most of
+/// the arithmetic on padding). Results are bit-identical either way —
+/// this is the single policy point the tiled compiler passes share, so
+/// the batched/scalar split cannot drift between call sites.
+pub fn run_shared_program(
+    arch: &ArchConfig,
+    mp: &Microprogram,
+    ops: &[Operands],
+) -> Result<Vec<(Mat, PassStats)>, SimError> {
+    if ops.len() >= 2 {
+        BatchSim::new(arch, mp).run(ops)
+    } else {
+        ops.iter().map(|o| ArraySim::new(arch, mp).run(o)).collect()
+    }
+}
+
+/// [`run_shared_program`] over `count` lazily-built operand sets,
+/// materializing at most [`LANES`] of them at a time — the same split
+/// the batched engine applies internally — so arbitrarily long tile
+/// lists run with a bounded operand footprint. Results come back in
+/// build order. This is the scaffold the tiled compiler passes share,
+/// so the chunking policy has exactly one home.
+pub fn run_shared_program_chunked(
+    arch: &ArchConfig,
+    mp: &Microprogram,
+    count: usize,
+    mut ops_for: impl FnMut(usize) -> Operands,
+) -> Result<Vec<(Mat, PassStats)>, SimError> {
+    let mut results = Vec::with_capacity(count);
+    let mut start = 0usize;
+    while start < count {
+        let end = (start + LANES).min(count);
+        let ops: Vec<Operands> = (start..end).map(&mut ops_for).collect();
+        results.extend(run_shared_program(arch, mp, &ops)?);
+        start = end;
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::microprogram::SrcRef;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    /// out[0] = a0*b0 + a1*b1 on a single PE (same as the scalar tests).
+    fn dot2_program() -> Microprogram {
+        let mut mp = Microprogram::new(1, 1, 1, 1, "dot2");
+        mp.uses_w[0] = true;
+        mp.w_stream = vec![SrcRef::B(0), SrcRef::B(1)];
+        mp.groups = vec![vec![0]];
+        mp.x_stream = vec![(SrcRef::A(0), 0), (SrcRef::A(1), 0)];
+        mp.programs[0] = vec![
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Pop,
+                x: XSrc::Pop,
+            },
+            PeInstr::Mac {
+                acc: 0,
+                w: WSrc::Pop,
+                x: XSrc::Pop,
+            },
+            PeInstr::WriteOut { acc: 0, out_idx: 0 },
+        ];
+        mp
+    }
+
+    fn ops(a0: f32, a1: f32) -> Operands {
+        Operands {
+            a: Mat::from_slice(1, 2, &[a0, a1]),
+            b: Mat::from_slice(1, 2, &[10.0, 100.0]),
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar_per_lane() {
+        let arch = arch();
+        let mp = dot2_program();
+        let sets: Vec<Operands> = (0..5).map(|i| ops(i as f32, -(i as f32))).collect();
+        let batched = BatchSim::new(&arch, &mp).run(&sets).unwrap();
+        assert_eq!(batched.len(), sets.len());
+        for (o, (m, st)) in sets.iter().zip(&batched) {
+            let (sm, sst) = ArraySim::new(&arch, &mp).run(o).unwrap();
+            assert_eq!(m, &sm);
+            assert_eq!(st, &sst);
+        }
+    }
+
+    #[test]
+    fn gating_diverges_per_lane() {
+        // lane 0 has a zero operand (one gated MAC), lane 1 does not —
+        // the per-lane masks must keep the counters distinct.
+        let arch = arch();
+        let mp = dot2_program();
+        let sets = vec![ops(0.0, 3.0), ops(2.0, 3.0)];
+        let r = BatchSim::new(&arch, &mp).run(&sets).unwrap();
+        assert_eq!((r[0].1.macs, r[0].1.gated_macs), (1, 1));
+        assert_eq!((r[1].1.macs, r[1].1.gated_macs), (2, 0));
+        assert_eq!(r[0].0.at(0, 0), 300.0);
+        assert_eq!(r[1].0.at(0, 0), 320.0);
+    }
+
+    #[test]
+    fn more_sets_than_lanes_chunk() {
+        let arch = arch();
+        let mp = dot2_program();
+        let sets: Vec<Operands> = (0..LANES + 3).map(|i| ops(i as f32, 1.0)).collect();
+        let r = BatchSim::new(&arch, &mp).run(&sets).unwrap();
+        assert_eq!(r.len(), LANES + 3);
+        for (i, (m, _)) in r.iter().enumerate() {
+            assert_eq!(m.at(0, 0), i as f32 * 10.0 + 100.0);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let arch = arch();
+        let mp = dot2_program();
+        assert!(BatchSim::new(&arch, &mp).run(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn invalid_program_rejected_once() {
+        let arch = arch();
+        let mut mp = dot2_program();
+        mp.w_stream.push(SrcRef::B(0)); // nobody pops it
+        let err = BatchSim::new(&arch, &mp).run(&[ops(1.0, 2.0)]).unwrap_err();
+        assert!(matches!(err, SimError::Invalid(_)));
+    }
+}

@@ -1,0 +1,104 @@
+//! Struct-of-arrays lane primitives for the batched PE-array engine.
+//!
+//! A [`Lane`] holds one value per batched operand set. The engine keeps
+//! every PE register, queue slot and accumulator as a `Lane` instead of
+//! an `f32`, so the inner MAC loop becomes a fixed-width element-wise
+//! fused multiply-add over `[f32; LANES]` — the shape LLVM's
+//! auto-vectorizer turns into packed SIMD on every target this crate
+//! builds for. No explicit intrinsics are used; determinism and
+//! bit-identity to the scalar engine come from performing exactly the
+//! same scalar operations per lane, in the same order.
+
+use crate::sim::microprogram::{Operands, SrcRef};
+
+/// Number of operand sets processed per batched cycle loop. Eight f32
+/// lanes fill one AVX2 register (or two NEON quads); larger batches are
+/// processed in [`LANES`]-sized chunks by the engine.
+pub const LANES: usize = 8;
+
+/// One value per batched operand set.
+pub type Lane = [f32; LANES];
+
+/// The all-zero lane (accumulator reset value).
+pub const ZERO_LANE: Lane = [0.0; LANES];
+
+/// Gather one symbolic operand reference across all lanes.
+#[inline]
+pub fn fetch(ops: &[&Operands; LANES], r: SrcRef) -> Lane {
+    std::array::from_fn(|l| ops[l].fetch(r))
+}
+
+/// `acc += w * x`, element-wise per lane (the MAC hot loop).
+#[inline]
+pub fn mac(acc: &mut Lane, w: &Lane, x: &Lane) {
+    for l in 0..LANES {
+        acc[l] += w[l] * x[l];
+    }
+}
+
+/// `acc += v`, element-wise per lane (psum chain accumulation).
+#[inline]
+pub fn add(acc: &mut Lane, v: &Lane) {
+    for l in 0..LANES {
+        acc[l] += v[l];
+    }
+}
+
+/// Per-lane clock-gating tally: for every lane, count the MAC as gated
+/// when either operand is exactly zero, as active otherwise — branchless,
+/// so the tally does not perturb the vectorized cycle loop.
+#[inline]
+pub fn tally_gating(gated: &mut [u64; LANES], active: &mut [u64; LANES], w: &Lane, x: &Lane) {
+    for l in 0..LANES {
+        let z = (w[l] == 0.0) | (x[l] == 0.0);
+        gated[l] += z as u64;
+        active[l] += !z as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn mac_and_add_are_elementwise() {
+        let mut acc = ZERO_LANE;
+        let w: Lane = std::array::from_fn(|l| l as f32);
+        let x: Lane = [2.0; LANES];
+        mac(&mut acc, &w, &x);
+        add(&mut acc, &w);
+        for l in 0..LANES {
+            assert_eq!(acc[l], l as f32 * 2.0 + l as f32);
+        }
+    }
+
+    #[test]
+    fn gating_tally_splits_per_lane() {
+        let mut gated = [0u64; LANES];
+        let mut active = [0u64; LANES];
+        let mut w: Lane = [1.0; LANES];
+        w[3] = 0.0;
+        let x: Lane = [1.0; LANES];
+        tally_gating(&mut gated, &mut active, &w, &x);
+        assert_eq!(gated[3], 1);
+        assert_eq!(active[3], 0);
+        assert_eq!(gated[0], 0);
+        assert_eq!(active[0], 1);
+    }
+
+    #[test]
+    fn fetch_gathers_per_lane_operands() {
+        let sets: Vec<Operands> = (0..LANES)
+            .map(|l| Operands {
+                a: Mat::from_slice(1, 1, &[l as f32]),
+                b: Mat::from_slice(1, 1, &[10.0]),
+            })
+            .collect();
+        let refs: [&Operands; LANES] = std::array::from_fn(|l| &sets[l]);
+        let lane = fetch(&refs, SrcRef::A(0));
+        for l in 0..LANES {
+            assert_eq!(lane[l], l as f32);
+        }
+    }
+}

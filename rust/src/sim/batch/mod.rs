@@ -1,0 +1,28 @@
+//! Batched lane-parallel PE-array simulation.
+//!
+//! The scalar [`ArraySim`](crate::sim::ArraySim) steps one operand set
+//! through the cycle-accurate array model. When several operand sets
+//! share a [`Microprogram`](crate::sim::Microprogram) — tiles of one
+//! processing pass, or scheduler jobs fused by their proxy fingerprint —
+//! re-running the scalar loop per set repays the full control cost
+//! (validation, queue bookkeeping, bus arbitration) for arithmetic that
+//! differs only in values. [`BatchSim`] amortizes that: the program is
+//! validated once, one cycle loop advances the control state, and every
+//! PE register/queue slot carries a struct-of-arrays [`Lane`] of
+//! `LANES` f32 values whose inner MAC loop auto-vectorizes.
+//!
+//! **Equivalence contract:** for every operand set in the batch, the
+//! returned `(Mat, PassStats)` is bit-identical to a scalar
+//! `ArraySim::run` on that set alone. This holds because the scalar
+//! engine's control flow is operand-value-independent (queue occupancy
+//! and stalls are structural); the only value-dependent behaviour —
+//! zero-operand clock gating — is tracked with per-lane masks. The
+//! contract is pinned by the property tests in `tests/batch_engine.rs`
+//! and relied on by the tiled passes in [`crate::compiler::rs`] and
+//! [`crate::compiler::ecoflow`].
+
+pub mod engine;
+pub mod lanes;
+
+pub use engine::{run_shared_program, run_shared_program_chunked, BatchSim};
+pub use lanes::{Lane, LANES};

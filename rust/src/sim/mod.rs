@@ -19,12 +19,18 @@
 //! Two PE-array variants are modelled, as in the paper: the
 //! Eyeriss/EcoFlow microprogrammed array ([`array`]) and a TPU-style
 //! output-stationary systolic array for lowered matmuls ([`systolic`]).
+//! The microprogrammed array has two execution engines: the scalar
+//! reference ([`array::ArraySim`]) and a batched lane-parallel engine
+//! ([`batch::BatchSim`]) that runs several operand sets through one
+//! cycle loop with bit-identical results.
 
 pub mod array;
+pub mod batch;
 pub mod microprogram;
 pub mod stats;
 pub mod systolic;
 
 pub use array::{ArraySim, SimError};
+pub use batch::{BatchSim, LANES};
 pub use microprogram::{Microprogram, Operands, PeInstr, SrcRef, WSrc, XSrc};
 pub use stats::PassStats;

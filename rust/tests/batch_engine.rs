@@ -1,0 +1,279 @@
+//! Integration: (1) the batched lane-parallel engine is bit-identical
+//! to per-job scalar `ArraySim` runs — output matrices *and* every
+//! `PassStats` counter, for mixed batches whose lanes diverge on
+//! zero-operand clock gating; (2) the persistent cost store round-trips
+//! bit-exactly (save → load → hit) and rejects corrupt or stale files
+//! by rebuilding instead of erroring or poisoning results.
+
+use ecoflow::compiler::{ecoflow as ef, rs, Dataflow};
+use ecoflow::config::ArchConfig;
+use ecoflow::coordinator::cache::CostCache;
+use ecoflow::coordinator::scheduler::{job_matrix, run_sweep_cached};
+use ecoflow::coordinator::store::{self, LoadOutcome};
+use ecoflow::energy::{DramModel, EnergyParams};
+use ecoflow::model::{zoo, ConvLayer};
+use ecoflow::sim::batch::{BatchSim, LANES};
+use ecoflow::sim::{ArraySim, Microprogram, Operands};
+use ecoflow::tensor::Mat;
+use ecoflow::util::prng::{for_each_case, Prng};
+
+/// A random matrix with exact zeros injected, so different lanes take
+/// different clock-gating decisions at the same MAC slot.
+fn zeroed_random(rows: usize, cols: usize, rng: &mut Prng, zero_frac: f32) -> Mat {
+    let mut m = Mat::random(rows, cols, rng);
+    for v in &mut m.data {
+        if rng.chance(zero_frac) {
+            *v = 0.0;
+        }
+    }
+    m
+}
+
+fn assert_batch_equals_scalar(arch: &ArchConfig, mp: &Microprogram, sets: &[Operands]) {
+    let batched = BatchSim::new(arch, mp).run(sets).expect("batched run");
+    assert_eq!(batched.len(), sets.len());
+    for (ops, (mat, stats)) in sets.iter().zip(&batched) {
+        let (smat, sstats) = ArraySim::new(arch, mp).run(ops).expect("scalar run");
+        assert_eq!(mat, &smat, "output matrix diverged from scalar");
+        assert_eq!(stats, &sstats, "PassStats diverged from scalar");
+    }
+}
+
+#[test]
+fn property_batched_equals_scalar_rs_direct() {
+    // B = 1..=LANES+2 mixed operand sets through the RS direct-conv
+    // program: every lane's matrix and stats must be bit-identical to a
+    // scalar run of that operand set alone.
+    let arch = ArchConfig::eyeriss();
+    for_each_case(8, 0xBA7C_0001, |rng| {
+        let k = rng.range(1, 4);
+        let s = rng.range(1, 3);
+        let ho = rng.range(1, 6);
+        let hx = s * (ho - 1) + k;
+        let wx = rng.range(k, k + 7);
+        let mp = rs::direct_program(hx, wx, k, s);
+        let b = rng.range(1, LANES + 2);
+        let sets: Vec<Operands> = (0..b)
+            .map(|_| Operands {
+                a: zeroed_random(hx, wx, rng, 0.3),
+                b: zeroed_random(k, k, rng, 0.3),
+            })
+            .collect();
+        assert_batch_equals_scalar(&arch, &mp, &sets);
+    });
+}
+
+#[test]
+fn property_batched_equals_scalar_ecoflow_transpose() {
+    let arch = ArchConfig::ecoflow();
+    for_each_case(8, 0xBA7C_0002, |rng| {
+        let he = rng.range(1, 6);
+        let we = rng.range(1, 6);
+        let k = rng.range(1, 5);
+        let s = rng.range(1, 3);
+        let mp = ef::transpose_program(he, we, k, s, arch.rf_psum);
+        let b = rng.range(1, LANES);
+        let sets: Vec<Operands> = (0..b)
+            .map(|_| Operands {
+                a: zeroed_random(he, we, rng, 0.25),
+                b: zeroed_random(k, k, rng, 0.25),
+            })
+            .collect();
+        assert_batch_equals_scalar(&arch, &mp, &sets);
+    });
+}
+
+#[test]
+fn property_batched_equals_scalar_ecoflow_filter_grad() {
+    let arch = ArchConfig::ecoflow();
+    for_each_case(6, 0xBA7C_0003, |rng| {
+        let he = rng.range(1, 4);
+        let k = rng.range(1, 4);
+        let s = rng.range(1, 3);
+        let hx = s * (he - 1) + k;
+        let mp = ef::filter_grad_program(hx, hx, he, he, s);
+        let b = rng.range(1, LANES + 3);
+        let sets: Vec<Operands> = (0..b)
+            .map(|_| Operands {
+                a: zeroed_random(hx, hx, rng, 0.2),
+                b: zeroed_random(he, he, rng, 0.2),
+            })
+            .collect();
+        assert_batch_equals_scalar(&arch, &mp, &sets);
+    });
+}
+
+#[test]
+fn tiled_passes_unchanged_by_batching() {
+    // rs::direct_pass and ecoflow::transpose_pass now route
+    // identical-geometry tiles through BatchSim; their functional
+    // outputs must still match the golden convolutions exactly where
+    // batching engages (>= 2 full tiles).
+    let arch = ArchConfig::eyeriss();
+    let mut rng = Prng::new(0xBA7C_0004);
+    // 40 input rows -> 38 output rows -> tiles of 15/15/8 at k=3, s=1:
+    // the two full tiles run lane-parallel.
+    let x = Mat::random(40, 9, &mut rng);
+    let w = Mat::random(3, 3, &mut rng);
+    let (got, _) = rs::direct_pass(&arch, &x, &w, 1).unwrap();
+    got.assert_close(&ecoflow::tensor::conv::direct_conv(&x, &w, 1), 1e-3);
+
+    // 28x32 error map on a 13x15 array: four interior tiles share the
+    // (13, 15) geometry and batch; edge/corner tiles stay scalar.
+    let arch = ArchConfig::ecoflow();
+    let e = Mat::random(28, 32, &mut rng);
+    let w = Mat::random(3, 3, &mut rng);
+    let (got, _) = ef::transpose_pass(&arch, &e, &w, 2).unwrap();
+    got.assert_close(&ecoflow::tensor::conv::transposed_conv(&e, &w, 2), 1e-3);
+}
+
+// --- persistent cost store --------------------------------------------
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ecoflow-{}-{}.cache", name, std::process::id()))
+}
+
+fn shufflenet_jobs() -> Vec<ecoflow::coordinator::scheduler::SweepJob> {
+    let layers: Vec<ConvLayer> = zoo::table5_layers()
+        .into_iter()
+        .filter(|l| l.net == "ShuffleNet")
+        .collect();
+    job_matrix(&layers, &[Dataflow::EcoFlow], 2)
+}
+
+#[test]
+fn store_round_trip_save_load_hit() {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let path = tmp_path("round-trip");
+    let _ = std::fs::remove_file(&path);
+
+    let jobs = shufflenet_jobs();
+    let cold_cache = CostCache::new();
+    let cold = run_sweep_cached(&params, &dram, jobs.clone(), 4, &cold_cache);
+    let saved = store::save(&path, &cold_cache).expect("save");
+    assert!(saved > 0, "a real sweep must persist entries");
+
+    // a fresh process would start here: load, re-sweep, observe 0 misses
+    let warm_cache = CostCache::new();
+    match store::load_into(&path, &warm_cache) {
+        LoadOutcome::Loaded { entries } => assert_eq!(entries, saved),
+        other => panic!("expected Loaded, got {other:?}"),
+    }
+    let warm = run_sweep_cached(&params, &dram, jobs, 4, &warm_cache);
+    let stats = warm_cache.stats();
+    assert_eq!(stats.misses, 0, "warm-start must answer everything: {stats:?}");
+    assert!(stats.hit_rate() > 0.9, "{stats:?}");
+    for (a, b) in cold.iter().zip(&warm) {
+        assert_eq!(
+            a.cost.as_ref().unwrap(),
+            b.cost.as_ref().unwrap(),
+            "store round-trip must be bit-exact"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn store_missing_file_is_cold_start() {
+    let cache = CostCache::new();
+    let path = tmp_path("never-created");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(store::load_into(&path, &cache), LoadOutcome::Missing);
+    assert!(cache.is_empty());
+}
+
+#[test]
+fn store_rejects_garbage_stale_and_corrupt_files() {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let path = tmp_path("robustness");
+
+    // (1) garbage content: rebuilt, nothing loaded
+    std::fs::write(&path, "definitely not a cost store\n").unwrap();
+    let cache = CostCache::new();
+    assert!(matches!(
+        store::load_into(&path, &cache),
+        LoadOutcome::Rebuilt { .. }
+    ));
+    assert!(cache.is_empty(), "a bad file must not poison the cache");
+
+    // build a small valid store to mutate
+    let jobs = shufflenet_jobs();
+    let seed_cache = CostCache::new();
+    let _ = run_sweep_cached(&params, &dram, jobs, 2, &seed_cache);
+    store::save(&path, &seed_cache).unwrap();
+    let good = std::fs::read_to_string(&path).unwrap();
+
+    // (2) stale version header: rebuilt with a reason naming it
+    std::fs::write(&path, good.replacen(" v1\n", " v999\n", 1)).unwrap();
+    match store::load_into(&path, &CostCache::new()) {
+        LoadOutcome::Rebuilt { reason } => {
+            assert!(reason.contains("v999"), "{reason}")
+        }
+        other => panic!("expected Rebuilt, got {other:?}"),
+    }
+
+    // (3) truncation: drop the last line -> checksum mismatch
+    let truncated: String = {
+        let mut lines: Vec<&str> = good.lines().collect();
+        lines.pop();
+        lines.join("\n") + "\n"
+    };
+    std::fs::write(&path, truncated).unwrap();
+    assert!(matches!(
+        store::load_into(&path, &CostCache::new()),
+        LoadOutcome::Rebuilt { .. }
+    ));
+
+    // (4) bit rot in the body: flip a digit inside an entry line
+    let mut rotted = good.clone().into_bytes();
+    let body_off = good.find('\n').unwrap() + 1;
+    let body_off = body_off + good[body_off..].find('\n').unwrap() + 1;
+    rotted[body_off] = if rotted[body_off] == b'0' { b'1' } else { b'0' };
+    std::fs::write(&path, rotted).unwrap();
+    assert!(matches!(
+        store::load_into(&path, &CostCache::new()),
+        LoadOutcome::Rebuilt { .. }
+    ));
+
+    // (5) after any rebuild, a save restores a loadable store
+    store::save(&path, &seed_cache).unwrap();
+    let restored = CostCache::new();
+    assert!(matches!(
+        store::load_into(&path, &restored),
+        LoadOutcome::Loaded { .. }
+    ));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn store_preserves_results_through_cli_style_reuse() {
+    // The acceptance flow: `sweep --cache-file F` then `report
+    // --cache-file F` — modelled here as two sweeps over overlapping
+    // job sets sharing one store file. The second invocation's misses
+    // are only the genuinely new keys.
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let path = tmp_path("cli-style");
+    let _ = std::fs::remove_file(&path);
+
+    let first = CostCache::new();
+    let _ = run_sweep_cached(&params, &dram, shufflenet_jobs(), 4, &first);
+    store::save(&path, &first).unwrap();
+
+    // second invocation: same layers plus one new geometry
+    let mut layers: Vec<ConvLayer> = zoo::table5_layers()
+        .into_iter()
+        .filter(|l| l.net == "ShuffleNet")
+        .collect();
+    layers.push(ConvLayer::conv("New", "X", 16, 30, 28, 3, 16, 1));
+    let jobs = job_matrix(&layers, &[Dataflow::EcoFlow], 2);
+    let second = CostCache::new();
+    store::load_into(&path, &second);
+    let _ = run_sweep_cached(&params, &dram, jobs, 4, &second);
+    let stats = second.stats();
+    assert_eq!(stats.misses, 3, "only the new layer's passes miss: {stats:?}");
+    assert!(stats.hit_rate() > 0.5, "{stats:?}");
+    std::fs::remove_file(&path).ok();
+}
