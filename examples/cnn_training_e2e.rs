@@ -15,8 +15,7 @@
 
 use ecoflow::compiler::Dataflow;
 use ecoflow::config::ArchConfig;
-use ecoflow::coordinator::e2e::network_e2e;
-use ecoflow::energy::{DramModel, EnergyParams};
+use ecoflow::coordinator::Session;
 use ecoflow::runtime::trainer::{Trainer, Variant};
 use ecoflow::runtime::{golden, pjrt, Engine};
 use ecoflow::util::prng::Prng;
@@ -64,11 +63,11 @@ fn main() -> anyhow::Result<()> {
     }
 
     // -- 3. headline metric -----------------------------------------------
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
+    // One session spans both networks, so repeated shapes simulate once.
+    let session = Session::builder().threads(8).build();
     println!("headline (Table 6 methodology, normalized to TPU dataflow):");
     for net in ["AlexNet", "ResNet-50"] {
-        let r = network_e2e(&params, &dram, net, 4, 8);
+        let r = session.network_e2e(net, 4);
         let sp = r.speedup[&Dataflow::EcoFlow];
         let es = r.energy_savings[&Dataflow::EcoFlow];
         println!(

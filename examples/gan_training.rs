@@ -2,19 +2,18 @@
 //! layer sets under all four dataflows, print the Fig. 11-style layer
 //! comparison and the Table 8 end-to-end estimate.
 
-use ecoflow::coordinator::e2e::gan_e2e;
 use ecoflow::compiler::Dataflow;
-use ecoflow::energy::{DramModel, EnergyParams};
+use ecoflow::coordinator::Session;
 use ecoflow::report::figures;
 
 fn main() {
-    let threads = 8;
-    print!("{}", figures::fig11_gan_time(threads).render());
+    // One session: Fig. 11's sweep warms the memo table the Table 8
+    // estimates then reuse.
+    let session = Session::builder().threads(8).build();
+    print!("{}", figures::fig11_gan_time(&session).render());
     println!();
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
     for net in ["CycleGAN", "pix2pix"] {
-        let r = gan_e2e(&params, &dram, net, 4, threads);
+        let r = session.gan_e2e(net, 4);
         println!(
             "{net:<9} end-to-end training vs TPU: Eyeriss {:.2}x, GANAX {:.2}x, EcoFlow {:.2}x",
             r.speedup[&Dataflow::RowStationary],

@@ -1,11 +1,13 @@
 //! Bench: regenerate paper Fig. 10 (CNN gradient energy breakdown).
+use ecoflow::coordinator::Session;
 use ecoflow::report::figures;
 use ecoflow::util::bench::bench_case;
 
 fn main() {
-    let t = figures::fig10_energy(8);
+    let session = Session::builder().threads(8).build();
+    let t = figures::fig10_energy(&session);
     print!("{}", t.render());
     bench_case("fig10_energy/full_sweep", 1500, || {
-        std::hint::black_box(figures::fig10_energy(8));
+        std::hint::black_box(figures::fig10_energy(&Session::builder().threads(8).build()));
     });
 }

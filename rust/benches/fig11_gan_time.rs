@@ -1,11 +1,13 @@
 //! Bench: regenerate paper Fig. 11 (GAN layer execution time, RS-normalized).
+use ecoflow::coordinator::Session;
 use ecoflow::report::figures;
 use ecoflow::util::bench::bench_case;
 
 fn main() {
-    let t = figures::fig11_gan_time(8);
+    let session = Session::builder().threads(8).build();
+    let t = figures::fig11_gan_time(&session);
     print!("{}", t.render());
     bench_case("fig11_gan_time/full_sweep", 1500, || {
-        std::hint::black_box(figures::fig11_gan_time(8));
+        std::hint::black_box(figures::fig11_gan_time(&Session::builder().threads(8).build()));
     });
 }

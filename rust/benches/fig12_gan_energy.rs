@@ -1,11 +1,13 @@
 //! Bench: regenerate paper Fig. 12 (GAN layer energy breakdown).
+use ecoflow::coordinator::Session;
 use ecoflow::report::figures;
 use ecoflow::util::bench::bench_case;
 
 fn main() {
-    let t = figures::fig12_gan_energy(8);
+    let session = Session::builder().threads(8).build();
+    let t = figures::fig12_gan_energy(&session);
     print!("{}", t.render());
     bench_case("fig12_gan_energy/full_sweep", 1500, || {
-        std::hint::black_box(figures::fig12_gan_energy(8));
+        std::hint::black_box(figures::fig12_gan_energy(&Session::builder().threads(8).build()));
     });
 }

@@ -1,11 +1,13 @@
 //! Bench: regenerate paper Fig. 8 (input-gradient speedups, TPU-normalized).
+use ecoflow::coordinator::Session;
 use ecoflow::report::figures;
 use ecoflow::util::bench::bench_case;
 
 fn main() {
-    let t = figures::fig8_input_grad(8);
+    let session = Session::builder().threads(8).build();
+    let t = figures::fig8_input_grad(&session);
     print!("{}", t.render());
     bench_case("fig8_input_grad/full_sweep", 1500, || {
-        std::hint::black_box(figures::fig8_input_grad(8));
+        std::hint::black_box(figures::fig8_input_grad(&Session::builder().threads(8).build()));
     });
 }

@@ -1,11 +1,13 @@
 //! Bench: regenerate paper Fig. 9 (filter-gradient speedups, TPU-normalized).
+use ecoflow::coordinator::Session;
 use ecoflow::report::figures;
 use ecoflow::util::bench::bench_case;
 
 fn main() {
-    let t = figures::fig9_filter_grad(8);
+    let session = Session::builder().threads(8).build();
+    let t = figures::fig9_filter_grad(&session);
     print!("{}", t.render());
     bench_case("fig9_filter_grad/full_sweep", 1500, || {
-        std::hint::black_box(figures::fig9_filter_grad(8));
+        std::hint::black_box(figures::fig9_filter_grad(&Session::builder().threads(8).build()));
     });
 }

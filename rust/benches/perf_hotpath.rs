@@ -49,7 +49,7 @@ fn main() {
         std::hint::black_box(rs::transpose_via_padding(&arch_rs, &e, &w, 2).unwrap());
     });
     set.run("tpu_direct_pass/25x25_k3_s2", 800, || {
-        std::hint::black_box(tpu::direct_pass(&arch, &x, &w, 2));
+        std::hint::black_box(tpu::direct_pass(&arch, &x, &w, 2).unwrap());
     });
     set.run("systolic_matmul/128x64x128", 800, || {
         std::hint::black_box(systolic_matmul(&arch, &a, &b));

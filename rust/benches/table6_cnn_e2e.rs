@@ -1,11 +1,13 @@
 //! Bench: regenerate paper Table 6 (end-to-end CNN training vs TPU).
+use ecoflow::coordinator::Session;
 use ecoflow::report::tables;
 use ecoflow::util::bench::bench_case;
 
 fn main() {
-    let t = tables::table6_cnn_e2e(8);
+    let session = Session::builder().threads(8).build();
+    let t = tables::table6_cnn_e2e(&session);
     print!("{}", t.render());
     bench_case("table6_cnn_e2e/full_estimate", 2000, || {
-        std::hint::black_box(tables::table6_cnn_e2e(8));
+        std::hint::black_box(tables::table6_cnn_e2e(&Session::builder().threads(8).build()));
     });
 }

@@ -6,37 +6,40 @@
 //! ecoflow fig3|fig8|fig9|fig10|fig11|fig12       regenerate a figure
 //! ecoflow table1|table2|table5|table6|table7|table8
 //! ecoflow report                                 all tables + figures
+//! ecoflow flows                                  list registered dataflows
 //! ecoflow validate [--artifacts DIR]             golden JAX-vs-sim check
 //! ecoflow train [--steps N] [--variant stride|pool]
 //! ecoflow sweep [--csv]                          full layer sweep
 //! ecoflow version
 //! ```
 //!
-//! One [`CostCache`] is created per invocation and shared by every sweep
-//! the command triggers, so e.g. `report` regenerates fig10 almost
-//! entirely from fig8/fig9's memoized simulations. `--cache-stats`
-//! appends the hit/miss/eviction counters to any command's output.
-//! `--cache-file PATH` persists that table across invocations through
-//! the versioned on-disk [`store`](crate::coordinator::store): the file
-//! is loaded (or, when corrupt/stale, logged and rebuilt) before the
-//! command runs and saved after it succeeds, so a `report` following a
-//! `sweep` answers >90% of its lookups from disk. `--max-sim-cycles N`
-//! tightens the simulator's cycle backstop for the whole invocation.
+//! One [`Session`] is built per invocation from the flags (`--threads`,
+//! `--cache-file`, `--max-sim-cycles`) and shared by every sweep the
+//! command triggers, so e.g. `report` regenerates fig10 almost entirely
+//! from fig8/fig9's memoized simulations. `--cache-stats` appends the
+//! session's hit/miss/eviction counters to any command's output.
+//! `--cache-file PATH` persists the session's memo table across
+//! invocations through the versioned on-disk
+//! [`store`](crate::coordinator::store): the file is loaded (or, when
+//! corrupt/stale, logged and rebuilt) when the session is built and
+//! saved after the command succeeds, so a `report` following a `sweep`
+//! answers >90% of its lookups from disk. `--max-sim-cycles N` tightens
+//! the simulator's cycle backstop for the whole invocation.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
+use crate::compiler::tiling::PlaneOp;
 use crate::compiler::Dataflow;
-use crate::coordinator::cache::CostCache;
-use crate::coordinator::scheduler::{default_threads, job_matrix, run_sweep_cached};
-use crate::coordinator::store;
-use crate::energy::{DramModel, EnergyParams};
+use crate::coordinator::scheduler::{default_threads, job_matrix};
+use crate::coordinator::Session;
 use crate::model::zoo;
-use crate::report::{figures, tables};
+use crate::report::{FigureId, TableId};
 use crate::runtime::trainer::{Trainer, Variant};
 use crate::runtime::{golden, Engine};
 use crate::util::prng::Prng;
+use crate::util::table::Table;
 
 /// Parsed command line: subcommand + `--key value` / `--flag` options.
 #[derive(Clone, Debug, Default)]
@@ -72,7 +75,8 @@ pub fn usage() -> &'static str {
      commands:\n\
      \u{20}  fig3|fig8|fig9|fig10|fig11|fig12   regenerate a paper figure\n\
      \u{20}  table1|table2|table5|table6|table7|table8\n\
-     \u{20}  report                             all tables + figures, one shared cache\n\
+     \u{20}  report                             all tables + figures, one shared session\n\
+     \u{20}  flows                              list the registered dataflows\n\
      \u{20}  validate [--artifacts DIR]         golden JAX-vs-simulator check\n\
      \u{20}  train [--steps N] [--variant stride|pool] [--artifacts DIR]\n\
      \u{20}  sweep [--csv]                      full layer x dataflow sweep\n\
@@ -95,7 +99,7 @@ impl Args {
     }
 }
 
-fn emit(t: crate::util::table::Table, csv: bool) {
+fn emit(t: Table, csv: bool) {
     if csv {
         print!("{}", t.to_csv());
     } else {
@@ -103,17 +107,79 @@ fn emit(t: crate::util::table::Table, csv: bool) {
     }
 }
 
+/// The `flows` listing: every registered dataflow, straight from the
+/// registry — name, serialization code, the zero-free property per op
+/// family, and the default array geometry. The whole table is produced
+/// by iterating [`Dataflow::registered`]; nothing here names a specific
+/// flow, which is the point.
+fn flows_table() -> Table {
+    let mut t = Table::new(
+        "Registered dataflows",
+        &["flow", "code", "direct", "transpose", "dilated", "array", "GIN bits"],
+    );
+    // zero-free is a per-op contract: ask each compiler for the PassPlan
+    // of several strides per family and report "stride-dep." when the
+    // plans disagree
+    let probe = |c: &dyn crate::compiler::DataflowCompiler,
+                 arch: &crate::config::ArchConfig,
+                 ops: [PlaneOp; 3]| {
+        let free: Vec<bool> = ops.iter().map(|op| c.compile(arch, *op).zero_free).collect();
+        match (free.iter().all(|f| *f), free.iter().any(|f| *f)) {
+            (true, _) => "zero-free",
+            (false, true) => "stride-dep.",
+            (false, false) => "padded",
+        }
+    };
+    for flow in Dataflow::registered() {
+        let c = flow.resolve();
+        let arch = c.default_arch();
+        let direct = probe(
+            c,
+            &arch,
+            [
+                PlaneOp::Direct { hx: 7, k: 3, s: 1 },
+                PlaneOp::Direct { hx: 7, k: 3, s: 2 },
+                PlaneOp::Direct { hx: 11, k: 3, s: 4 },
+            ],
+        );
+        let transpose = probe(
+            c,
+            &arch,
+            [
+                PlaneOp::Transpose { he: 4, k: 3, s: 1 },
+                PlaneOp::Transpose { he: 4, k: 3, s: 2 },
+                PlaneOp::Transpose { he: 4, k: 3, s: 4 },
+            ],
+        );
+        let dilated = probe(
+            c,
+            &arch,
+            [
+                PlaneOp::Dilated { he: 4, k: 3, s: 1 },
+                PlaneOp::Dilated { he: 4, k: 3, s: 2 },
+                PlaneOp::Dilated { he: 4, k: 3, s: 4 },
+            ],
+        );
+        t.row(vec![
+            c.name().to_string(),
+            flow.code().to_string(),
+            direct.to_string(),
+            transpose.to_string(),
+            dilated.to_string(),
+            format!("{}x{} @{} MHz", arch.array_rows, arch.array_cols, arch.clock_mhz),
+            format!("{}+{}", arch.noc.gin_filter_bits, arch.noc.gin_ifmap_bits),
+        ]);
+    }
+    t
+}
+
 /// Run the CLI; returns process exit code.
 pub fn run(args: &[String]) -> Result<()> {
     let parsed = parse_args(args)?;
     let threads = parsed.usize_or("threads", default_threads());
     let csv = parsed.flag("csv");
-    // One memo table per invocation: every sweep this command triggers
-    // shares it, and `--cache-stats` reports it at the end.
-    let cache = CostCache::new();
-    // The cycle-cap override is process-wide: set it explicitly on every
-    // invocation (0 = cleared) so an earlier in-process run's cap cannot
-    // leak into this one.
+    // Validate flag values *before* building the session, so a usage
+    // error cannot mutate the process-wide simulator knobs.
     let cap = match parsed.options.get("max-sim-cycles") {
         Some(v) => {
             // the flag exists to make runaway simulations fail fast; a
@@ -129,10 +195,6 @@ pub fn run(args: &[String]) -> Result<()> {
         }
         None => 0,
     };
-    crate::sim::array::set_max_cycles_override(cap);
-    // Warm-start from a persisted store; anything wrong with the file is
-    // logged and the store is rebuilt on save rather than failing the
-    // command or poisoning results.
     let cache_file = match parsed.options.get("cache-file") {
         // a bare `--cache-file` parses to the flag sentinel — reject it
         // rather than silently persisting to a file named "true"
@@ -140,38 +202,43 @@ pub fn run(args: &[String]) -> Result<()> {
         Some(v) => Some(std::path::PathBuf::from(v)),
         None => None,
     };
+    // One session per invocation: every sweep this command triggers
+    // shares its memo table, and `--cache-stats` reports it at the end.
+    // (The cycle-cap override is process-wide; setting it on every
+    // invocation — 0 = cleared — keeps an earlier in-process run's cap
+    // from leaking into this one.)
+    let mut builder = Session::builder().threads(threads).max_sim_cycles(cap);
     if let Some(path) = &cache_file {
-        eprintln!("{}", store::load_into(path, &cache).render_line(path));
+        builder = builder.store_path(path);
+    }
+    let session = builder.build();
+    if let (Some(path), Some(outcome)) = (session.store_path(), session.store_outcome()) {
+        eprintln!("{}", outcome.render_line(path));
     }
     match parsed.command.as_str() {
         "version" => println!("ecoflow {}", crate::version()),
-        "fig3" => emit(figures::fig3_zero_mults(), csv),
-        "fig8" => emit(figures::fig8_input_grad_cached(threads, &cache), csv),
-        "fig9" => emit(figures::fig9_filter_grad_cached(threads, &cache), csv),
-        "fig10" => emit(figures::fig10_energy_cached(threads, &cache), csv),
-        "fig11" => emit(figures::fig11_gan_time_cached(threads, &cache), csv),
-        "fig12" => emit(figures::fig12_gan_energy_cached(threads, &cache), csv),
-        "table1" => emit(tables::table1_noc(), csv),
-        "table2" => emit(tables::table2_validation(), csv),
-        "table5" => emit(tables::table5_layers(), csv),
-        "table6" => emit(tables::table6_cnn_e2e_cached(threads, &cache), csv),
-        "table7" => emit(tables::table7_layers(), csv),
-        "table8" => emit(tables::table8_gan_e2e_cached(threads, &cache), csv),
+        "flows" => emit(flows_table(), csv),
+        "fig3" => emit(session.figure(FigureId::ZeroMults), csv),
+        "fig8" => emit(session.figure(FigureId::InputGrad), csv),
+        "fig9" => emit(session.figure(FigureId::FilterGrad), csv),
+        "fig10" => emit(session.figure(FigureId::Energy), csv),
+        "fig11" => emit(session.figure(FigureId::GanTime), csv),
+        "fig12" => emit(session.figure(FigureId::GanEnergy), csv),
+        "table1" => emit(session.table(TableId::Noc), csv),
+        "table2" => emit(session.table(TableId::Validation), csv),
+        "table5" => emit(session.table(TableId::CnnLayers), csv),
+        "table6" => emit(session.table(TableId::CnnE2e), csv),
+        "table7" => emit(session.table(TableId::GanLayers), csv),
+        "table8" => emit(session.table(TableId::GanE2e), csv),
         "report" => {
-            // Every table and figure, in paper order, over one cache —
+            // Every table and figure, in paper order, over one session —
             // the repeated-layer/repeated-figure sweeps collapse.
-            emit(tables::table1_noc(), csv);
-            emit(tables::table2_validation(), csv);
-            emit(tables::table5_layers(), csv);
-            emit(tables::table6_cnn_e2e_cached(threads, &cache), csv);
-            emit(tables::table7_layers(), csv);
-            emit(tables::table8_gan_e2e_cached(threads, &cache), csv);
-            emit(figures::fig3_zero_mults(), csv);
-            emit(figures::fig8_input_grad_cached(threads, &cache), csv);
-            emit(figures::fig9_filter_grad_cached(threads, &cache), csv);
-            emit(figures::fig10_energy_cached(threads, &cache), csv);
-            emit(figures::fig11_gan_time_cached(threads, &cache), csv);
-            emit(figures::fig12_gan_energy_cached(threads, &cache), csv);
+            for id in TableId::ALL {
+                emit(session.table(id), csv);
+            }
+            for id in FigureId::ALL {
+                emit(session.figure(id), csv);
+            }
         }
         "validate" => {
             let dir = parsed
@@ -181,9 +248,8 @@ pub fn run(args: &[String]) -> Result<()> {
                 .unwrap_or_else(crate::runtime::pjrt::artifacts_dir);
             let mut engine = Engine::new(&dir)?;
             println!("platform: {}", engine.platform());
-            // fold in the cycle-cap override, as arch_for does for sweeps
-            let mut arch = crate::config::ArchConfig::ecoflow();
-            arch.max_sim_cycles = crate::sim::array::effective_max_cycles(&arch);
+            // the session's arch_for folds in the cycle-cap override
+            let arch = session.arch_for(Dataflow::EcoFlow);
             for r in golden::validate_all(&mut engine, &arch)? {
                 println!(
                     "golden {:<8} direct={:.2e} tconv={:.2e} fgrad={:.2e}  OK",
@@ -216,11 +282,9 @@ pub fn run(args: &[String]) -> Result<()> {
             println!("final accuracy: {:.1}%", 100.0 * acc);
         }
         "sweep" => {
-            let params = EnergyParams::default();
-            let dram = DramModel::default();
             let jobs = job_matrix(&zoo::evaluation_layers(), &Dataflow::ALL, 4);
-            let results = run_sweep_cached(&params, &dram, jobs, threads, &cache);
-            let mut t = crate::util::table::Table::new(
+            let results = session.sweep(jobs);
+            let mut t = Table::new(
                 "Full layer sweep",
                 &["layer", "pass", "flow", "ms", "uJ", "util"],
             );
@@ -239,15 +303,15 @@ pub fn run(args: &[String]) -> Result<()> {
         }
         other => return Err(anyhow!("unknown command {other}\n{}", usage())),
     }
-    if let Some(path) = &cache_file {
-        match store::save(path, &cache) {
+    if let Some(path) = session.store_path() {
+        match session.save_store().expect("store path is set") {
             Ok(n) => eprintln!("cost store {}: saved {n} entries", path.display()),
             Err(e) => eprintln!("cost store {}: save failed: {e}", path.display()),
         }
     }
     if parsed.flag("cache-stats") {
         // stderr, so `--csv --cache-stats` keeps stdout machine-readable
-        eprintln!("{}", cache.stats().render_line());
+        eprintln!("{}", session.cache_stats().render_line());
     }
     Ok(())
 }
@@ -339,6 +403,19 @@ mod tests {
     #[test]
     fn version_runs() {
         run(&["version".into()]).unwrap();
+    }
+
+    #[test]
+    fn flows_lists_the_builtin_dataflows() {
+        // the listing is generated straight from the registry
+        run(&["flows".into()]).unwrap();
+        let rendered = flows_table().render();
+        for name in ["RS", "TPU", "EcoFlow", "GANAX"] {
+            assert!(rendered.contains(name), "{rendered}");
+        }
+        // EcoFlow is zero-free everywhere; the baselines pad backward ops
+        assert!(rendered.contains("zero-free"), "{rendered}");
+        assert!(rendered.contains("padded"), "{rendered}");
     }
 
     #[test]

@@ -324,12 +324,13 @@ pub fn filter_grad_program(
     mp
 }
 
-/// Run the EcoFlow filter-gradient pass. The PE set is `k x k`; error maps
-/// of any size stream through it (queue backpressure throttles the buses),
-/// so no tiling is required for functionality. `assignment expansion`
-/// (§4.2.2) — replicating the PE set over error chunks to fill the array —
-/// is a layer-level parallelism factor handled by the tiler.
-pub fn filter_grad_pass(
+/// Run the EcoFlow zero-free **dilated convolution** pass — the registry
+/// name for this op family. The PE set is `k x k`; error maps of any
+/// size stream through it (queue backpressure throttles the buses), so
+/// no tiling is required for functionality. `assignment expansion`
+/// (§4.2.2) — replicating the PE set over error chunks to fill the array
+/// — is a layer-level parallelism factor handled by the tiler.
+pub fn dilated_pass(
     arch: &ArchConfig,
     x: &Mat,
     err: &Mat,
@@ -341,6 +342,19 @@ pub fn filter_grad_pass(
         b: err.clone(),
     };
     ArraySim::new(arch, &mp).run(&ops)
+}
+
+/// Paper-terminology alias for [`dilated_pass`]: §4.2 frames the dilated
+/// convolution as the *filter-gradient* calculation, because that is
+/// where training executes it. The registry exposes the op-family name
+/// (`Dilated`); this wrapper keeps the paper's vocabulary available.
+pub fn filter_grad_pass(
+    arch: &ArchConfig,
+    x: &Mat,
+    err: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
+    dilated_pass(arch, x, err, s)
 }
 
 #[cfg(test)]

@@ -2,6 +2,10 @@
 //! dataflow choice into the microprogrammed FSMs, broadcast/multicast
 //! schedules and register preloads the simulator executes.
 //!
+//! * [`registry`] — the [`DataflowCompiler`] trait, the open dataflow
+//!   registry and the [`Dataflow`] handles. **All** flow dispatch in the
+//!   crate goes through [`Dataflow::resolve`]; new dataflows plug in via
+//!   [`register`] with no core edits.
 //! * [`ecoflow`]  — the paper's contribution (§4): zero-free transposed
 //!   and dilated convolution dataflows.
 //! * [`rs`]       — row-stationary (Eyeriss) baseline; transposed/dilated
@@ -15,38 +19,9 @@
 pub mod ecoflow;
 pub mod ganax;
 pub mod lowering;
+pub mod registry;
 pub mod rs;
 pub mod tiling;
 pub mod tpu;
 
-/// The dataflows SASiML models (paper §6.1).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Dataflow {
-    /// Row-stationary (Eyeriss) — padded operands for backward convs.
-    RowStationary,
-    /// Lowering + output-stationary systolic matmul (TPU).
-    Tpu,
-    /// EcoFlow zero-free dataflows (this paper).
-    EcoFlow,
-    /// GANAX behavioural model (zero-free fwd/input-grad, padded
-    /// filter-grad) — §6.3 comparator.
-    Ganax,
-}
-
-impl Dataflow {
-    pub const ALL: [Dataflow; 4] = [
-        Dataflow::RowStationary,
-        Dataflow::Tpu,
-        Dataflow::EcoFlow,
-        Dataflow::Ganax,
-    ];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Dataflow::RowStationary => "RS",
-            Dataflow::Tpu => "TPU",
-            Dataflow::EcoFlow => "EcoFlow",
-            Dataflow::Ganax => "GANAX",
-        }
-    }
-}
+pub use registry::{register, Dataflow, DataflowCompiler, PassPlan, PlaneOperands};

@@ -1,0 +1,598 @@
+//! The open dataflow-compiler registry.
+//!
+//! EcoFlow's central claim (paper §4, §7) is that new convolutional
+//! dataflows slot into an existing spatial-architecture stack with
+//! minimal changes. This module makes the codebase live up to that
+//! claim: every dataflow — the four built-ins and any number of
+//! externally registered comparators — is a [`DataflowCompiler`] trait
+//! object, and **all** flow dispatch in the crate goes through
+//! [`Dataflow::resolve`]. No other module matches on the flow; adding a
+//! dataflow means implementing the trait and calling [`register`] — no
+//! core edits.
+//!
+//! The registry is the single source of truth for:
+//!
+//! * functional execution ([`DataflowCompiler::execute`] — the dispatch
+//!   behind [`tiling::simulate_plane`] and the proxy cost model;
+//!   [`DataflowCompiler::execute_batched`] is the multi-operand-set
+//!   entry point for library callers, defaulting to a loop because the
+//!   built-in passes lane-batch *beneath* this interface);
+//! * pass description ([`DataflowCompiler::compile`] → [`PassPlan`]:
+//!   operand/output geometry, the zero-free property and the MAC-slot
+//!   budget — what the CLI `flows` listing renders and external
+//!   schedulers can key on);
+//! * the zero-free property per op
+//!   ([`DataflowCompiler::zero_free`], paper §3.1/§4);
+//! * the architecture a flow runs on
+//!   ([`DataflowCompiler::default_arch`], Table 1/3) — consumed by the
+//!   sweep scheduler and overridable per
+//!   [`Session`](crate::coordinator::Session);
+//! * proxy-simulation policy ([`DataflowCompiler::nf_tile`] /
+//!   [`DataflowCompiler::proxy_stats`]) — how a flow keeps its array
+//!   busy during the capped proxy pass;
+//! * stable serialization codes ([`Dataflow::code`] /
+//!   [`Dataflow::from_code`]) — used by the persistent cost store.
+
+use std::sync::RwLock;
+
+use super::tiling::PlaneOp;
+use super::{ecoflow, ganax, rs, tiling, tpu};
+use crate::config::ArchConfig;
+use crate::model::ConvLayer;
+use crate::sim::stats::PassStats;
+use crate::sim::SimError;
+use crate::tensor::Mat;
+use crate::util::prng::Prng;
+
+/// Seed of the deterministic proxy-plane simulation behind the cost
+/// model (see [`tiling::proxy_stats`]).
+pub const PROXY_SEED: u64 = 0xC0FFEE;
+
+/// The dataflows SASiML models (paper §6.1), plus externally registered
+/// ones.
+///
+/// The four built-in variants carry no data; [`Custom`](Dataflow::Custom)
+/// indexes the process-wide table populated by [`register`]. The enum is
+/// a cheap `Copy` *handle*: behaviour lives in the
+/// [`DataflowCompiler`] it [`resolve`](Dataflow::resolve)s to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Row-stationary (Eyeriss) — padded operands for backward convs.
+    RowStationary,
+    /// Lowering + output-stationary systolic matmul (TPU).
+    Tpu,
+    /// EcoFlow zero-free dataflows (this paper).
+    EcoFlow,
+    /// GANAX behavioural model (zero-free fwd/input-grad, padded
+    /// filter-grad) — §6.3 comparator.
+    Ganax,
+    /// A compiler added at runtime via [`register`].
+    Custom(u16),
+}
+
+/// Compilers registered at runtime. `&'static` because flow handles are
+/// `Copy` and flow through every cost-model key; a leaked box or a true
+/// `static` both satisfy it.
+static CUSTOM: RwLock<Vec<&'static dyn DataflowCompiler>> = RwLock::new(Vec::new());
+
+/// Register a dataflow compiler and get its [`Dataflow`] handle.
+///
+/// The handle participates everywhere a built-in flow does: plane
+/// simulation, the layer cost model, sweep scheduling, memoization keys
+/// and [`Session`](crate::coordinator::Session) sweeps — with **zero**
+/// edits to any of those modules (pinned by `tests/registry_dispatch.rs`,
+/// which registers a test-only flow and runs the full pipeline on it).
+pub fn register(compiler: &'static dyn DataflowCompiler) -> Dataflow {
+    let mut table = CUSTOM.write().unwrap();
+    assert!(table.len() < u16::MAX as usize, "dataflow registry full");
+    table.push(compiler);
+    Dataflow::Custom((table.len() - 1) as u16)
+}
+
+impl Dataflow {
+    /// The built-in dataflows, in the order the report figures assume
+    /// (Fig. 11 chunks on it).
+    pub const ALL: [Dataflow; 4] = [
+        Dataflow::RowStationary,
+        Dataflow::Tpu,
+        Dataflow::EcoFlow,
+        Dataflow::Ganax,
+    ];
+
+    /// Every resolvable flow: the built-ins plus all [`register`]ed
+    /// compilers, in registration order.
+    pub fn registered() -> Vec<Dataflow> {
+        let mut flows = Self::ALL.to_vec();
+        let n = CUSTOM.read().unwrap().len();
+        flows.extend((0..n).map(|i| Dataflow::Custom(i as u16)));
+        flows
+    }
+
+    /// Look up the compiler behind this handle.
+    ///
+    /// # Panics
+    /// On a [`Custom`](Dataflow::Custom) handle that was never issued by
+    /// [`register`] in this process (a forged or deserialized index).
+    pub fn resolve(self) -> &'static dyn DataflowCompiler {
+        static RS_C: RsCompiler = RsCompiler;
+        static TPU_C: TpuCompiler = TpuCompiler;
+        static EF_C: EcoFlowCompiler = EcoFlowCompiler;
+        static GX_C: GanaxCompiler = GanaxCompiler;
+        match self {
+            Dataflow::RowStationary => &RS_C,
+            Dataflow::Tpu => &TPU_C,
+            Dataflow::EcoFlow => &EF_C,
+            Dataflow::Ganax => &GX_C,
+            Dataflow::Custom(i) => CUSTOM
+                .read()
+                .unwrap()
+                .get(i as usize)
+                .copied()
+                .unwrap_or_else(|| panic!("Dataflow::Custom({i}) was never registered")),
+        }
+    }
+
+    /// Display name (delegates to the compiler).
+    pub fn name(&self) -> &'static str {
+        self.resolve().name()
+    }
+
+    /// Stable serialization code (persistent cost store, CLI listings).
+    /// Built-in codes are frozen — they are the on-disk format; custom
+    /// flows start at 256 and are only stable within one process.
+    pub fn code(self) -> u64 {
+        match self {
+            Dataflow::RowStationary => 0,
+            Dataflow::Tpu => 1,
+            Dataflow::EcoFlow => 2,
+            Dataflow::Ganax => 3,
+            Dataflow::Custom(i) => 256 + i as u64,
+        }
+    }
+
+    /// Is this flow's [`code`](Dataflow::code) stable across processes?
+    /// True for the built-ins (their codes are the on-disk cost-store
+    /// format); false for [`register`]ed flows, whose codes depend on
+    /// registration order — the store skips those at save time.
+    pub fn has_stable_code(self) -> bool {
+        !matches!(self, Dataflow::Custom(_))
+    }
+
+    /// Inverse of [`Dataflow::code`]; `None` for unknown codes and for
+    /// custom codes not registered in this process.
+    pub fn from_code(code: u64) -> Option<Dataflow> {
+        match code {
+            0 => Some(Dataflow::RowStationary),
+            1 => Some(Dataflow::Tpu),
+            2 => Some(Dataflow::EcoFlow),
+            3 => Some(Dataflow::Ganax),
+            c if c >= 256 => {
+                let i = (c - 256) as usize;
+                (i < CUSTOM.read().unwrap().len()).then_some(Dataflow::Custom(i as u16))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// The two operand matrices of one plane pass, in the op's canonical
+/// roles: for [`PlaneOp::Direct`] `a` is the ifmap and `b` the filter;
+/// for [`PlaneOp::Transpose`] `a` is the error map and `b` the
+/// (un-rotated) forward filter; for [`PlaneOp::Dilated`] `a` is the
+/// ifmap and `b` the error map.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlaneOperands {
+    pub a: Mat,
+    pub b: Mat,
+}
+
+impl PlaneOperands {
+    /// Deterministic random operands for `op` (the cost model's proxy
+    /// inputs; a fixed `seed` makes every simulation reproducible).
+    pub fn random(op: PlaneOp, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        match op {
+            PlaneOp::Direct { hx, k, .. } => Self {
+                a: Mat::random(hx, hx, &mut rng),
+                b: Mat::random(k, k, &mut rng),
+            },
+            PlaneOp::Transpose { he, k, .. } => Self {
+                a: Mat::random(he, he, &mut rng),
+                b: Mat::random(k, k, &mut rng),
+            },
+            PlaneOp::Dilated { he, k, s } => {
+                let hx = s * (he - 1) + k;
+                Self {
+                    a: Mat::random(hx, hx, &mut rng),
+                    b: Mat::random(he, he, &mut rng),
+                }
+            }
+        }
+    }
+
+    /// Operand shapes `((a_rows, a_cols), (b_rows, b_cols))` for `op`,
+    /// without materializing the matrices.
+    pub fn shapes(op: PlaneOp) -> ((usize, usize), (usize, usize)) {
+        match op {
+            PlaneOp::Direct { hx, k, .. } => ((hx, hx), (k, k)),
+            PlaneOp::Transpose { he, k, .. } => ((he, he), (k, k)),
+            PlaneOp::Dilated { he, k, s } => {
+                let hx = s * (he - 1) + k;
+                ((hx, hx), (he, he))
+            }
+        }
+    }
+}
+
+/// What a dataflow compiler produces for one plane op before any operand
+/// values exist: the pass geometry and its issue-slot budget. The
+/// executable FSMs themselves are operand-shape-specific and built
+/// inside [`DataflowCompiler::execute`]; the plan is the part every flow
+/// can describe uniformly — the CLI `flows` listing renders it, and
+/// external schedulers can key on it. (The in-crate sweep scheduler
+/// keys on [`ProxyKey`](crate::compiler::tiling::ProxyKey), which also
+/// folds in the architecture fingerprint.)
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PassPlan {
+    /// Compiler that produced the plan ([`DataflowCompiler::name`]).
+    pub flow_name: &'static str,
+    /// The op the plan executes.
+    pub op: PlaneOp,
+    /// Does the pass issue only useful multiplications (paper §3.1)?
+    pub zero_free: bool,
+    /// Operand A shape `(rows, cols)` the pass consumes.
+    pub a_shape: (usize, usize),
+    /// Operand B shape `(rows, cols)` the pass consumes.
+    pub b_shape: (usize, usize),
+    /// Output shape `(rows, cols)` the pass produces.
+    pub out_shape: (usize, usize),
+    /// MAC issue slots, including clock-gated zeros
+    /// ([`PlaneOp::mac_slots`]).
+    pub mac_slots: u64,
+}
+
+impl PassPlan {
+    /// Build the plan description for `op` under a flow with the given
+    /// name and zero-free property (the default
+    /// [`DataflowCompiler::compile`] body).
+    pub fn describe(flow_name: &'static str, op: PlaneOp, zero_free: bool) -> Self {
+        let (a_shape, b_shape) = PlaneOperands::shapes(op);
+        let out_shape = match op {
+            PlaneOp::Direct { hx, k, s } => {
+                let ho = (hx - k) / s + 1;
+                (ho, ho)
+            }
+            PlaneOp::Transpose { he, k, s } => {
+                let hin = s * (he - 1) + k;
+                (hin, hin)
+            }
+            PlaneOp::Dilated { k, .. } => (k, k),
+        };
+        PassPlan {
+            flow_name,
+            op,
+            zero_free,
+            a_shape,
+            b_shape,
+            out_shape,
+            mac_slots: op.mac_slots(zero_free),
+        }
+    }
+}
+
+/// A convolutional dataflow: how one 2-D plane op is scheduled onto the
+/// spatial array, what architecture it defaults to, and which op
+/// families it executes without padding zeros.
+///
+/// Implementations must be `Sync` (compilers are shared by the sweep
+/// scheduler's worker threads) and are registered as `&'static`
+/// trait objects — see [`register`] for external flows and
+/// [`Dataflow::resolve`] for lookup.
+///
+/// Only [`name`](DataflowCompiler::name),
+/// [`default_arch`](DataflowCompiler::default_arch),
+/// [`zero_free`](DataflowCompiler::zero_free) and
+/// [`execute`](DataflowCompiler::execute) are required; everything else
+/// has semantics-preserving defaults, so a minimal comparator is ~30
+/// lines (see `DummyFlow` in `tests/registry_dispatch.rs`).
+pub trait DataflowCompiler: Sync {
+    /// Short display name (report tables, CLI `flows` listing).
+    fn name(&self) -> &'static str;
+
+    /// The architecture this flow runs on by default (its Table 1 NoC
+    /// row on the Table 3 baseline). [`Session`](crate::coordinator::Session)
+    /// can override per flow.
+    fn default_arch(&self) -> ArchConfig;
+
+    /// Is `op` executed without padding zeros under this flow (paper
+    /// §3.1)? Drives the MAC-slot closed forms the cost model scales by.
+    fn zero_free(&self, op: PlaneOp) -> bool;
+
+    /// Describe the pass this flow compiles for `op`: operand/output
+    /// geometry and the MAC issue-slot budget. The default derives
+    /// everything from `op` and [`zero_free`](DataflowCompiler::zero_free);
+    /// flows whose lowering changes the executed geometry can override.
+    fn compile(&self, arch: &ArchConfig, op: PlaneOp) -> PassPlan {
+        let _ = arch;
+        PassPlan::describe(self.name(), op, self.zero_free(op))
+    }
+
+    /// Execute `op` on concrete operands, returning the functional
+    /// output and cycle-accurate pass statistics.
+    fn execute(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        ops: &PlaneOperands,
+    ) -> Result<(Mat, PassStats), SimError>;
+
+    /// Execute `op` over several operand sets sharing one compiled pass.
+    /// The default loops [`execute`](DataflowCompiler::execute); flows
+    /// whose pass implementations batch internally (the microprogrammed
+    /// array's lane-parallel engine) need no override because batching
+    /// happens below this interface and is bit-identical by contract.
+    fn execute_batched(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        sets: &[PlaneOperands],
+    ) -> Result<Vec<(Mat, PassStats)>, SimError> {
+        sets.iter().map(|ops| self.execute(arch, op, ops)).collect()
+    }
+
+    /// Filter columns this flow lowers into one pass to keep the array
+    /// width busy (1 for flows that schedule one filter at a time).
+    /// Part of the proxy fingerprint
+    /// ([`ProxyKey`](crate::compiler::tiling::ProxyKey)).
+    fn nf_tile(&self, arch: &ArchConfig, layer: &ConvLayer) -> usize {
+        let _ = (arch, layer);
+        1
+    }
+
+    /// Cycle-accurate statistics of one proxy plane (the expensive part
+    /// of the layer cost model). The default simulates `proxy` on
+    /// [`PROXY_SEED`] operands; flows that amortize a multi-filter tile
+    /// (`nf_tile > 1`) must override and return *per-plane* stats.
+    fn proxy_stats(
+        &self,
+        arch: &ArchConfig,
+        proxy: PlaneOp,
+        nf_tile: usize,
+    ) -> Result<PassStats, SimError> {
+        let _ = nf_tile;
+        let ops = PlaneOperands::random(proxy, PROXY_SEED);
+        self.execute(arch, proxy, &ops).map(|(_, st)| st)
+    }
+}
+
+// --- built-in compilers -------------------------------------------------
+
+/// Row-stationary (Eyeriss) baseline: transposed/dilated convs execute
+/// over explicitly padded operands (paper §2.3, §3.1).
+pub struct RsCompiler;
+
+impl DataflowCompiler for RsCompiler {
+    fn name(&self) -> &'static str {
+        "RS"
+    }
+
+    fn default_arch(&self) -> ArchConfig {
+        ArchConfig::eyeriss()
+    }
+
+    fn zero_free(&self, op: PlaneOp) -> bool {
+        matches!(op, PlaneOp::Direct { .. })
+    }
+
+    fn execute(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        ops: &PlaneOperands,
+    ) -> Result<(Mat, PassStats), SimError> {
+        match op {
+            PlaneOp::Direct { s, .. } => rs::direct_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Transpose { s, .. } => rs::transpose_via_padding(arch, &ops.a, &ops.b, s),
+            PlaneOp::Dilated { s, .. } => rs::dilated_via_padding(arch, &ops.a, &ops.b, s),
+        }
+    }
+}
+
+/// im2col lowering onto the output-stationary systolic matmul array
+/// (TPU baseline): padded operands are lowered, so the patch matrix
+/// carries the zeros (paper §3.1).
+pub struct TpuCompiler;
+
+impl DataflowCompiler for TpuCompiler {
+    fn name(&self) -> &'static str {
+        "TPU"
+    }
+
+    fn default_arch(&self) -> ArchConfig {
+        ArchConfig::tpu()
+    }
+
+    fn zero_free(&self, op: PlaneOp) -> bool {
+        matches!(op, PlaneOp::Direct { .. })
+    }
+
+    fn execute(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        ops: &PlaneOperands,
+    ) -> Result<(Mat, PassStats), SimError> {
+        match op {
+            PlaneOp::Direct { s, .. } => tpu::direct_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Transpose { s, .. } => tpu::transpose_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Dilated { s, .. } => tpu::dilated_pass(arch, &ops.a, &ops.b, s),
+        }
+    }
+
+    fn nf_tile(&self, arch: &ArchConfig, layer: &ConvLayer) -> usize {
+        // real lowering keeps the systolic array's width occupied with
+        // multiple filter columns per matmul
+        layer.num_filters.clamp(1, arch.array_cols)
+    }
+
+    fn proxy_stats(
+        &self,
+        arch: &ArchConfig,
+        proxy: PlaneOp,
+        nf_tile: usize,
+    ) -> Result<PassStats, SimError> {
+        tiling::tpu_multi_proxy(arch, proxy, nf_tile)
+    }
+}
+
+/// EcoFlow (this paper, §4): zero-free transposed and dilated
+/// convolutions; the forward direct conv runs the RS schedule (EcoFlow
+/// only changes the backward dataflows).
+pub struct EcoFlowCompiler;
+
+impl DataflowCompiler for EcoFlowCompiler {
+    fn name(&self) -> &'static str {
+        "EcoFlow"
+    }
+
+    fn default_arch(&self) -> ArchConfig {
+        ArchConfig::ecoflow()
+    }
+
+    fn zero_free(&self, op: PlaneOp) -> bool {
+        let _ = op;
+        true // the whole point of the paper (§4.1/§4.2)
+    }
+
+    fn execute(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        ops: &PlaneOperands,
+    ) -> Result<(Mat, PassStats), SimError> {
+        match op {
+            PlaneOp::Direct { s, .. } => rs::direct_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Transpose { s, .. } => ecoflow::transpose_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Dilated { s, .. } => ecoflow::dilated_pass(arch, &ops.a, &ops.b, s),
+        }
+    }
+}
+
+/// GANAX behavioural comparator (paper §6.3): zero-free forward/input
+/// gradients, padded filter gradients.
+pub struct GanaxCompiler;
+
+impl DataflowCompiler for GanaxCompiler {
+    fn name(&self) -> &'static str {
+        "GANAX"
+    }
+
+    fn default_arch(&self) -> ArchConfig {
+        ArchConfig::ecoflow()
+    }
+
+    fn zero_free(&self, op: PlaneOp) -> bool {
+        !matches!(op, PlaneOp::Dilated { .. })
+    }
+
+    fn execute(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        ops: &PlaneOperands,
+    ) -> Result<(Mat, PassStats), SimError> {
+        match op {
+            PlaneOp::Direct { s, .. } => ganax::direct_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Transpose { s, .. } => ganax::transpose_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Dilated { s, .. } => ganax::filter_grad_pass(arch, &ops.a, &ops.b, s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_names_and_arches_resolve() {
+        assert_eq!(Dataflow::RowStationary.name(), "RS");
+        assert_eq!(Dataflow::Tpu.name(), "TPU");
+        assert_eq!(Dataflow::EcoFlow.name(), "EcoFlow");
+        assert_eq!(Dataflow::Ganax.name(), "GANAX");
+        assert_eq!(
+            Dataflow::EcoFlow.resolve().default_arch().noc.gin_filter_bits,
+            80
+        );
+        assert_eq!(
+            Dataflow::RowStationary.resolve().default_arch().noc.gin_filter_bits,
+            64
+        );
+    }
+
+    #[test]
+    fn builtin_codes_are_frozen_and_round_trip() {
+        // these are the on-disk cost-store codes: changing them silently
+        // invalidates (or worse, misreads) persisted entries
+        assert_eq!(Dataflow::RowStationary.code(), 0);
+        assert_eq!(Dataflow::Tpu.code(), 1);
+        assert_eq!(Dataflow::EcoFlow.code(), 2);
+        assert_eq!(Dataflow::Ganax.code(), 3);
+        for f in Dataflow::ALL {
+            assert_eq!(Dataflow::from_code(f.code()), Some(f));
+            assert!(f.has_stable_code());
+        }
+        assert_eq!(Dataflow::from_code(99), None);
+    }
+
+    #[test]
+    fn zero_free_matrix_matches_paper_table() {
+        let d = PlaneOp::Direct { hx: 7, k: 3, s: 2 };
+        let t = PlaneOp::Transpose { he: 4, k: 3, s: 2 };
+        let g = PlaneOp::Dilated { he: 4, k: 3, s: 2 };
+        for flow in Dataflow::ALL {
+            assert!(flow.resolve().zero_free(d), "{flow:?} direct");
+        }
+        assert!(!Dataflow::RowStationary.resolve().zero_free(t));
+        assert!(!Dataflow::Tpu.resolve().zero_free(t));
+        assert!(Dataflow::EcoFlow.resolve().zero_free(t));
+        assert!(Dataflow::Ganax.resolve().zero_free(t));
+        assert!(Dataflow::EcoFlow.resolve().zero_free(g));
+        assert!(!Dataflow::Ganax.resolve().zero_free(g));
+    }
+
+    #[test]
+    fn plan_geometry_matches_operand_and_output_shapes() {
+        let arch = ArchConfig::ecoflow();
+        for op in [
+            PlaneOp::Direct { hx: 9, k: 3, s: 2 },
+            PlaneOp::Transpose { he: 4, k: 3, s: 2 },
+            PlaneOp::Dilated { he: 4, k: 3, s: 2 },
+        ] {
+            for flow in Dataflow::ALL {
+                let c = flow.resolve();
+                let plan = c.compile(&arch, op);
+                let ops = PlaneOperands::random(op, 7);
+                assert_eq!((ops.a.rows, ops.a.cols), plan.a_shape, "{flow:?} {op:?}");
+                assert_eq!((ops.b.rows, ops.b.cols), plan.b_shape, "{flow:?} {op:?}");
+                let (out, st) = c.execute(&arch, op, &ops).unwrap();
+                assert_eq!((out.rows, out.cols), plan.out_shape, "{flow:?} {op:?}");
+                assert_eq!(st.macs + st.gated_macs, plan.mac_slots, "{flow:?} {op:?}");
+                assert_eq!(plan.flow_name, c.name());
+            }
+        }
+    }
+
+    #[test]
+    fn execute_batched_default_equals_per_set_execute() {
+        let arch = ArchConfig::ecoflow();
+        let op = PlaneOp::Transpose { he: 3, k: 3, s: 2 };
+        let sets: Vec<PlaneOperands> =
+            (0..3).map(|i| PlaneOperands::random(op, 100 + i)).collect();
+        let c = Dataflow::EcoFlow.resolve();
+        let batched = c.execute_batched(&arch, op, &sets).unwrap();
+        for (ops, got) in sets.iter().zip(&batched) {
+            let one = c.execute(&arch, op, ops).unwrap();
+            assert_eq!(&one, got);
+        }
+    }
+}

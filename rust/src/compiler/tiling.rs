@@ -18,7 +18,8 @@
 //! counts (useful vs padded — §3.1), which the unit tests pin against the
 //! measured simulator counts.
 
-use super::{ecoflow, ganax, rs, tpu, Dataflow};
+use super::registry::PlaneOperands;
+use super::{tpu, Dataflow};
 use crate::config::ArchConfig;
 use crate::energy::{DramModel, EnergyBreakdown, EnergyParams};
 use crate::model::{ConvLayer, LayerKind, TrainingPass};
@@ -84,14 +85,10 @@ impl PlaneOp {
     }
 
     /// Is this op executed without padding zeros under `flow`?
+    /// (Forwards to the flow's registered
+    /// [`DataflowCompiler::zero_free`](super::DataflowCompiler::zero_free).)
     pub fn zero_free(&self, flow: Dataflow) -> bool {
-        match self {
-            PlaneOp::Direct { .. } => true,
-            PlaneOp::Transpose { .. } => {
-                matches!(flow, Dataflow::EcoFlow | Dataflow::Ganax)
-            }
-            PlaneOp::Dilated { .. } => matches!(flow, Dataflow::EcoFlow),
-        }
+        flow.resolve().zero_free(*self)
     }
 
     /// MAC slots (multiply issue slots, incl. gated zeros) per plane.
@@ -149,44 +146,19 @@ impl PlaneOp {
 /// Cycle-accurate simulation of one plane op under a dataflow. Returns
 /// the functional output and pass stats (used by both the cost model and
 /// the functional validation tests).
+///
+/// Operand generation is seed-deterministic ([`PlaneOperands::random`]);
+/// execution dispatches through the flow's registered
+/// [`DataflowCompiler`](super::DataflowCompiler) — there is no per-flow
+/// logic here, so registered custom flows work unchanged.
 pub fn simulate_plane(
     arch: &ArchConfig,
     op: PlaneOp,
     flow: Dataflow,
     seed: u64,
 ) -> Result<(Mat, PassStats), SimError> {
-    let mut rng = Prng::new(seed);
-    match op {
-        PlaneOp::Direct { hx, k, s } => {
-            let x = Mat::random(hx, hx, &mut rng);
-            let w = Mat::random(k, k, &mut rng);
-            match flow {
-                Dataflow::Tpu => Ok(tpu::direct_pass(arch, &x, &w, s)),
-                _ => rs::direct_pass(arch, &x, &w, s),
-            }
-        }
-        PlaneOp::Transpose { he, k, s } => {
-            let e = Mat::random(he, he, &mut rng);
-            let w = Mat::random(k, k, &mut rng);
-            match flow {
-                Dataflow::RowStationary => rs::transpose_via_padding(arch, &e, &w, s),
-                Dataflow::Tpu => Ok(tpu::transpose_pass(arch, &e, &w, s)),
-                Dataflow::EcoFlow => ecoflow::transpose_pass(arch, &e, &w, s),
-                Dataflow::Ganax => ganax::transpose_pass(arch, &e, &w, s),
-            }
-        }
-        PlaneOp::Dilated { he, k, s } => {
-            let hx = s * (he - 1) + k;
-            let x = Mat::random(hx, hx, &mut rng);
-            let e = Mat::random(he, he, &mut rng);
-            match flow {
-                Dataflow::RowStationary => rs::dilated_via_padding(arch, &x, &e, s),
-                Dataflow::Tpu => Ok(tpu::dilated_pass(arch, &x, &e, s)),
-                Dataflow::EcoFlow => ecoflow::filter_grad_pass(arch, &x, &e, s),
-                Dataflow::Ganax => ganax::filter_grad_pass(arch, &x, &e, s),
-            }
-        }
-    }
+    let ops = PlaneOperands::random(op, seed);
+    flow.resolve().execute(arch, op, &ops)
 }
 
 /// Full cost of one layer's training pass under a dataflow.
@@ -387,11 +359,7 @@ impl ProxyKey {
         pass: TrainingPass,
         flow: Dataflow,
     ) -> Self {
-        let nf_tile = if flow == Dataflow::Tpu {
-            layer.num_filters.clamp(1, arch.array_cols)
-        } else {
-            1
-        };
+        let nf_tile = flow.resolve().nf_tile(arch, layer);
         Self {
             op: PlaneOp::from_layer(layer, pass).proxy(),
             flow,
@@ -526,14 +494,12 @@ pub fn proxy_stats(
     flow: Dataflow,
 ) -> Result<PassStats, SimError> {
     let proxy = PlaneOp::from_layer(layer, pass).proxy();
-    // The TPU keeps its array width busy with multiple filter columns per
-    // lowered matmul; its per-plane proxy divides a multi-filter tile.
-    if flow == Dataflow::Tpu {
-        let nf_tile = layer.num_filters.clamp(1, arch.array_cols);
-        Ok(tpu_multi_proxy(arch, proxy, nf_tile))
-    } else {
-        simulate_plane(arch, proxy, flow, 0xC0FFEE).map(|(_, st)| st)
-    }
+    // Proxy policy is the compiler's: flows that amortize a multi-filter
+    // tile (the TPU keeps its array width busy with several filter
+    // columns per lowered matmul) report nf_tile > 1 and divide the
+    // tile's stats back to one plane.
+    let compiler = flow.resolve();
+    compiler.proxy_stats(arch, proxy, compiler.nf_tile(arch, layer))
 }
 
 /// Extend a measured proxy pass to the full (layer, pass, flow, batch)
@@ -631,7 +597,13 @@ pub fn layer_cost_from_proxy(
 
 /// Per-plane stats of a TPU pass that lowers `nf_tile` filters into one
 /// matmul (B has `nf_tile` columns), amortizing the patch-matrix stream.
-fn tpu_multi_proxy(arch: &ArchConfig, op: PlaneOp, nf_tile: usize) -> PassStats {
+/// (Called by the registry's TPU compiler; lives here with the rest of
+/// the proxy machinery.)
+pub(crate) fn tpu_multi_proxy(
+    arch: &ArchConfig,
+    op: PlaneOp,
+    nf_tile: usize,
+) -> Result<PassStats, SimError> {
     let mut rng = Prng::new(0x7B0);
     let (x, kernels, s_eff) = match op {
         PlaneOp::Direct { hx, k, s } => {
@@ -656,8 +628,8 @@ fn tpu_multi_proxy(arch: &ArchConfig, op: PlaneOp, nf_tile: usize) -> PassStats 
             (x, kernels, 1)
         }
     };
-    let (_, stats) = tpu::direct_pass_multi(arch, &x, &kernels, s_eff);
-    scale_stats(&stats, 1.0 / nf_tile as f64)
+    let (_, stats) = tpu::direct_pass_multi(arch, &x, &kernels, s_eff)?;
+    Ok(scale_stats(&stats, 1.0 / nf_tile as f64))
 }
 
 fn scale_stats(s: &PassStats, f: f64) -> PassStats {

@@ -4,21 +4,33 @@
 //! Transposed and dilated convolutions lower their *padded* operands, so
 //! the patch matrix carries the zero padding through the array (the §3.1
 //! inefficiency this paper eliminates with EcoFlow).
+//!
+//! All entry points return `Result<(Mat, PassStats), SimError>` like
+//! every other dataflow family, so the
+//! [`registry`](crate::compiler::registry) dispatches them uniformly.
+//! The systolic model itself has no failure modes today; the `Result` is
+//! the shared contract, not a prediction of errors.
 
 use super::lowering::{col2out, filter_col, im2col};
 use crate::config::ArchConfig;
 use crate::sim::stats::PassStats;
 use crate::sim::systolic::systolic_matmul;
+use crate::sim::SimError;
 use crate::tensor::Mat;
 
 /// Direct convolution on the TPU dataflow.
-pub fn direct_pass(arch: &ArchConfig, x: &Mat, w: &Mat, s: usize) -> (Mat, PassStats) {
+pub fn direct_pass(
+    arch: &ArchConfig,
+    x: &Mat,
+    w: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
     let k = w.rows;
     let e = (x.rows - k) / s + 1;
     let f = (x.cols - k) / s + 1;
     let patches = im2col(x, k, s);
     let (out, stats) = systolic_matmul(arch, &patches, &filter_col(w));
-    (col2out(&out, e, f), stats)
+    Ok((col2out(&out, e, f), stats))
 }
 
 /// Multi-filter lowering: convolve one input plane with `nf` filters in a
@@ -30,7 +42,7 @@ pub fn direct_pass_multi(
     x: &Mat,
     ws: &[Mat],
     s: usize,
-) -> (Vec<Mat>, PassStats) {
+) -> Result<(Vec<Mat>, PassStats), SimError> {
     assert!(!ws.is_empty());
     let k = ws[0].rows;
     let e = (x.rows - k) / s + 1;
@@ -44,17 +56,27 @@ pub fn direct_pass_multi(
             col2out(&col, e, f)
         })
         .collect();
-    (outs, stats)
+    Ok((outs, stats))
 }
 
 /// Transposed conv: lower the dilated + border-padded error (§3.1.1).
-pub fn transpose_pass(arch: &ArchConfig, err: &Mat, w: &Mat, s: usize) -> (Mat, PassStats) {
+pub fn transpose_pass(
+    arch: &ArchConfig,
+    err: &Mat,
+    w: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
     let padded = err.dilate(s).pad_border(w.rows - 1);
     direct_pass(arch, &padded, &w.rot180(), 1)
 }
 
 /// Dilated conv (filter gradients): lower with the dilated error kernel.
-pub fn dilated_pass(arch: &ArchConfig, x: &Mat, err: &Mat, s: usize) -> (Mat, PassStats) {
+pub fn dilated_pass(
+    arch: &ArchConfig,
+    x: &Mat,
+    err: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
     let kernel = err.dilate(s);
     direct_pass(arch, x, &kernel, 1)
 }
@@ -79,7 +101,7 @@ mod tests {
             let hx = s * (ho - 1) + k;
             let x = Mat::random(hx, hx, rng);
             let w = Mat::random(k, k, rng);
-            let (got, _) = direct_pass(&arch, &x, &w, s);
+            let (got, _) = direct_pass(&arch, &x, &w, s).unwrap();
             got.assert_close(&conv::direct_conv(&x, &w, s), 1e-3);
         });
     }
@@ -93,7 +115,7 @@ mod tests {
             let s = rng.range(1, 3);
             let e = Mat::random(he, he, rng);
             let w = Mat::random(k, k, rng);
-            let (got, _) = transpose_pass(&arch, &e, &w, s);
+            let (got, _) = transpose_pass(&arch, &e, &w, s).unwrap();
             got.assert_close(&conv::transposed_conv(&e, &w, s), 1e-3);
         });
     }
@@ -108,7 +130,7 @@ mod tests {
             let hx = s * (he - 1) + k;
             let x = Mat::random(hx, hx, rng);
             let e = Mat::random(he, he, rng);
-            let (got, _) = dilated_pass(&arch, &x, &e, s);
+            let (got, _) = dilated_pass(&arch, &x, &e, s).unwrap();
             got.assert_close(&conv::dilated_conv(&x, &e, s), 1e-3);
         });
     }
@@ -119,7 +141,7 @@ mod tests {
         let mut rng = Prng::new(3);
         let e = Mat::from_fn(8, 8, |_, _| 1.0 + rng.f32());
         let w = Mat::from_fn(3, 3, |_, _| 1.0 + rng.f32());
-        let (_, stats) = transpose_pass(&arch, &e, &w, 2);
+        let (_, stats) = transpose_pass(&arch, &e, &w, 2).unwrap();
         let frac = stats.gated_macs as f64 / (stats.macs + stats.gated_macs) as f64;
         assert!(frac > 0.6, "{frac}");
     }

@@ -7,24 +7,25 @@
 //! optimized topology (pooling folded into stride), which is what enables
 //! the AlexNet-class gains the paper reports.
 //!
-//! Every sweep goes through the dedup→shard→fan-out engine with a
-//! [`CostCache`]: the `*_cached` entry points share one memo table across
-//! stacks, flows and networks (repeated shapes — ResNet bottlenecks, the
-//! GAN generator/discriminator mirrors, the per-flow TPU baselines —
-//! collapse to single simulations), while the plain entry points scope a
-//! private cache to one call.
+//! Every sweep goes through a [`Session`]: its memo table spans stacks,
+//! flows and networks (repeated shapes — ResNet bottlenecks, the GAN
+//! generator/discriminator mirrors, the per-flow TPU baselines —
+//! collapse to single simulations), and cache scope is simply session
+//! scope: a fresh [`Session::new`] per call reproduces the old
+//! private-cache behaviour, one session shared across calls reproduces
+//! the old `*_cached` behaviour. The results are bit-identical either
+//! way; only the hit counters move.
 
 use std::collections::HashMap;
 
 use crate::analysis::amdahl::{total_speedup, Fragment};
 use crate::compiler::Dataflow;
-use crate::energy::{DramModel, EnergyParams};
 use crate::model::profile::{gan_time_shares, non_conv_share, GanCategory};
 use crate::model::zoo::RepeatedLayer;
 use crate::model::{gan, zoo, LayerKind, TrainingPass};
 
-use super::cache::CostCache;
-use super::scheduler::{run_sweep_cached, SweepJob};
+use super::scheduler::SweepJob;
+use super::session::Session;
 
 /// End-to-end estimate for one network: per-dataflow speedup and energy
 /// savings, normalized to the TPU dataflow (Tables 6/8 convention).
@@ -38,13 +39,10 @@ pub struct E2eResult {
 }
 
 fn stack_cost(
-    params: &EnergyParams,
-    dram: &DramModel,
+    session: &Session,
     stack: &[RepeatedLayer],
     flow: Dataflow,
     batch: usize,
-    threads: usize,
-    cache: &CostCache,
 ) -> (f64, f64) {
     let jobs: Vec<SweepJob> = stack
         .iter()
@@ -57,7 +55,7 @@ fn stack_cost(
             })
         })
         .collect();
-    let results = run_sweep_cached(params, dram, jobs, threads, cache);
+    let results = session.sweep(jobs);
     let mut seconds = 0.0;
     let mut pj = 0.0;
     for (i, r) in results.iter().enumerate() {
@@ -69,35 +67,16 @@ fn stack_cost(
     (seconds, pj)
 }
 
-/// Table 6: end-to-end CNN training, normalized to TPU (private cache).
-pub fn network_e2e(
-    params: &EnergyParams,
-    dram: &DramModel,
-    net: &str,
-    batch: usize,
-    threads: usize,
-) -> E2eResult {
-    let cache = CostCache::new();
-    network_e2e_cached(params, dram, net, batch, threads, &cache)
-}
-
-/// Table 6 row against a shared memo table: repeated shapes across the
-/// original/optimized stacks — and across *networks* when the same cache
-/// spans a whole table — are simulated once.
-pub fn network_e2e_cached(
-    params: &EnergyParams,
-    dram: &DramModel,
-    net: &str,
-    batch: usize,
-    threads: usize,
-    cache: &CostCache,
-) -> E2eResult {
+/// Table 6 row: end-to-end CNN training for `net`, normalized to TPU.
+/// All sweeps run through `session` — shapes recurring across the
+/// original/optimized stacks (and across *networks*, when one session
+/// spans a whole table) are simulated once.
+pub fn network_e2e(session: &Session, net: &str, batch: usize) -> E2eResult {
     let original = zoo::full_network(net);
     let optimized = zoo::optimized_network(net);
     let nc = non_conv_share(net);
 
-    let (t_tpu, e_tpu) =
-        stack_cost(params, dram, &original, Dataflow::Tpu, batch, threads, cache);
+    let (t_tpu, e_tpu) = stack_cost(session, &original, Dataflow::Tpu, batch);
     // absolute non-conv time/energy, identical across dataflows
     let t_nc = t_tpu * nc / (1.0 - nc);
     let e_nc = e_tpu * nc / (1.0 - nc);
@@ -110,7 +89,7 @@ pub fn network_e2e_cached(
         (Dataflow::RowStationary, &original),
         (Dataflow::EcoFlow, &optimized),
     ] {
-        let (t, e) = stack_cost(params, dram, stack, flow, batch, threads, cache);
+        let (t, e) = stack_cost(session, stack, flow, batch);
         speedup.insert(flow, (t_tpu + t_nc) / (t + t_nc));
         energy_savings.insert(flow, (e_tpu + e_nc) / (e + e_nc));
     }
@@ -123,13 +102,10 @@ pub fn network_e2e_cached(
 
 /// Per-category (time, energy) ratios of `flow` vs TPU over a GAN stack.
 fn gan_category_ratios(
-    params: &EnergyParams,
-    dram: &DramModel,
+    session: &Session,
     stack: &[RepeatedLayer],
     flow: Dataflow,
     batch: usize,
-    threads: usize,
-    cache: &CostCache,
 ) -> HashMap<GanCategory, (f64, f64)> {
     use GanCategory::*;
     let mut out = HashMap::new();
@@ -161,10 +137,11 @@ fn gan_category_ratios(
                 })
                 .collect::<Vec<_>>()
         };
-        // With a shared cache the TPU baseline is simulated once and
-        // answered from the memo table for every subsequent flow.
-        let base = run_sweep_cached(params, dram, jobs(Dataflow::Tpu), threads, cache);
-        let ours = run_sweep_cached(params, dram, jobs(flow), threads, cache);
+        // The session cache makes the TPU baseline a one-time cost: it
+        // is simulated for the first compared flow and answered from the
+        // memo table for every subsequent one.
+        let base = session.sweep(jobs(Dataflow::Tpu));
+        let ours = session.sweep(jobs(flow));
         let (mut tb, mut to, mut eb, mut eo) = (0.0, 0.0, 0.0, 0.0);
         for ((b, o), rl) in base.iter().zip(&ours).zip(&layers) {
             let n = rl.count as f64;
@@ -180,30 +157,12 @@ fn gan_category_ratios(
     out
 }
 
-/// Table 8: end-to-end GAN training, normalized to TPU (private cache).
-pub fn gan_e2e(
-    params: &EnergyParams,
-    dram: &DramModel,
-    net: &str,
-    batch: usize,
-    threads: usize,
-) -> E2eResult {
-    let cache = CostCache::new();
-    gan_e2e_cached(params, dram, net, batch, threads, &cache)
-}
-
-/// Table 8 row against a shared memo table, using the profiled category
-/// shares (DESIGN.md §5) and measured per-category speedups from the
-/// Table 7 stack. The per-flow TPU baselines are guaranteed cache hits
+/// Table 8 row: end-to-end GAN training for `net`, normalized to TPU,
+/// using the profiled category shares (DESIGN.md §5) and measured
+/// per-category speedups from the Table 7 stack. All sweeps run through
+/// `session`; the per-flow TPU baselines are guaranteed cache hits
 /// after the first flow.
-pub fn gan_e2e_cached(
-    params: &EnergyParams,
-    dram: &DramModel,
-    net: &str,
-    batch: usize,
-    threads: usize,
-    cache: &CostCache,
-) -> E2eResult {
+pub fn gan_e2e(session: &Session, net: &str, batch: usize) -> E2eResult {
     let stack = gan::full_gan(net);
     let shares = gan_time_shares(net);
     let mut speedup = HashMap::new();
@@ -211,7 +170,7 @@ pub fn gan_e2e_cached(
     speedup.insert(Dataflow::Tpu, 1.0);
     energy_savings.insert(Dataflow::Tpu, 1.0);
     for flow in [Dataflow::RowStationary, Dataflow::Ganax, Dataflow::EcoFlow] {
-        let ratios = gan_category_ratios(params, dram, &stack, flow, batch, threads, cache);
+        let ratios = gan_category_ratios(session, &stack, flow, batch);
         let frags_t: Vec<Fragment> = shares
             .iter()
             .map(|(cat, share)| Fragment {
@@ -244,9 +203,8 @@ mod tests {
     fn alexnet_e2e_ecoflow_wins_big() {
         // Table 6: AlexNet 1.83x (TPU-normalized). Shape check: > 1.3x
         // and the largest gain among the evaluated CNNs.
-        let p = EnergyParams::default();
-        let d = DramModel::default();
-        let r = network_e2e(&p, &d, "AlexNet", 4, 8);
+        let s = Session::builder().threads(8).build();
+        let r = network_e2e(&s, "AlexNet", 4);
         let ef = r.speedup[&Dataflow::EcoFlow];
         assert!(ef > 1.3, "AlexNet EcoFlow speedup {ef}");
     }
@@ -254,23 +212,20 @@ mod tests {
     #[test]
     fn shufflenet_e2e_modest() {
         // Table 6: stride-1-dominated nets gain ~1.07-1.11x.
-        let p = EnergyParams::default();
-        let d = DramModel::default();
-        let r = network_e2e(&p, &d, "ShuffleNet", 4, 8);
+        let s = Session::builder().threads(8).build();
+        let r = s.network_e2e("ShuffleNet", 4);
         let ef = r.speedup[&Dataflow::EcoFlow];
         assert!((1.0..2.0).contains(&ef), "ShuffleNet {ef}");
     }
 
     #[test]
     fn gan_e2e_ordering_matches_table8() {
-        // Table 8: EcoFlow >= GANAX > Eyeriss ~ 1. A single shared cache
-        // spans both GANs; the repeated TPU baselines must register as
-        // hits (the --cache-stats acceptance path).
-        let p = EnergyParams::default();
-        let d = DramModel::default();
-        let cache = CostCache::new();
+        // Table 8: EcoFlow >= GANAX > Eyeriss ~ 1. One session spans
+        // both GANs; the repeated TPU baselines must register as hits
+        // (the --cache-stats acceptance path).
+        let s = Session::builder().threads(8).build();
         for net in ["CycleGAN", "pix2pix"] {
-            let r = gan_e2e_cached(&p, &d, net, 4, 8, &cache);
+            let r = s.gan_e2e(net, 4);
             let ef = r.speedup[&Dataflow::EcoFlow];
             let gx = r.speedup[&Dataflow::Ganax];
             let ey = r.speedup[&Dataflow::RowStationary];
@@ -278,7 +233,10 @@ mod tests {
             assert!(ef >= gx, "{net}: EcoFlow {ef} < GANAX {gx}");
             assert!(gx > ey, "{net}: GANAX {gx} <= Eyeriss {ey}");
         }
-        let s = cache.stats();
-        assert!(s.hits > 0, "shared-cache GAN sweep must reuse work: {s:?}");
+        let stats = s.cache_stats();
+        assert!(
+            stats.hits > 0,
+            "shared-session GAN sweep must reuse work: {stats:?}"
+        );
     }
 }

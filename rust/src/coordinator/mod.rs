@@ -30,20 +30,27 @@
 //! runs are bit-identical to the naive single-thread loop — property
 //! tests in `tests/sweep_cache.rs` pin this.
 //!
-//! Cache scope is the caller's choice: the CLI shares one
-//! [`cache::CostCache`] per invocation (`--cache-stats` prints its
-//! hit/miss/eviction counters), while the plain `run_sweep` /
-//! `network_e2e` / `gan_e2e` entry points scope a private cache to one
-//! call. With `--cache-file` the CLI additionally persists the table
-//! through the versioned on-disk [`store`], so repeated invocations
-//! warm-start from each other's simulations.
+//! Cache scope is session scope: the [`session::Session`] facade owns
+//! the [`cache::CostCache`] together with the per-flow architectures,
+//! energy/DRAM models and thread count, so every table, figure and
+//! end-to-end estimate asked of one session reuses each other's
+//! simulations. The CLI builds one session per invocation
+//! (`--cache-stats` prints its hit/miss/eviction counters); library
+//! users scope sessions however they like — results are bit-identical
+//! either way, only the hit counters move. With a
+//! [store path](session::SessionBuilder::store_path) (`--cache-file`)
+//! the session additionally persists the table through the versioned
+//! on-disk [`store`], so repeated invocations warm-start from each
+//! other's simulations.
 
 pub mod cache;
 pub mod e2e;
 pub mod scheduler;
+pub mod session;
 pub mod store;
 
 pub use cache::{CacheStats, CostCache};
-pub use e2e::{gan_e2e, gan_e2e_cached, network_e2e, network_e2e_cached, E2eResult};
-pub use scheduler::{run_sweep, run_sweep_cached, SweepJob, SweepResult};
+pub use e2e::{gan_e2e, network_e2e, E2eResult};
+pub use scheduler::{run_sweep, run_sweep_cached, run_sweep_with, SweepJob, SweepResult};
+pub use session::{Session, SessionBuilder};
 pub use store::{load_into, save, LoadOutcome};

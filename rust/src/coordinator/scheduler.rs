@@ -52,10 +52,19 @@ pub struct SweepJob {
 }
 
 impl SweepJob {
-    /// Canonical cache key of this job under its per-flow architecture.
-    pub fn cost_key(&self, params: &EnergyParams, dram: &DramModel) -> CostKey {
+    /// Canonical cache key of this job under `arch` — pass the same
+    /// architecture the sweep ran with ([`arch_for`] for default
+    /// sweeps, [`Session::arch_for`](super::Session::arch_for) when the
+    /// session overrides a flow's architecture), or the key will embed
+    /// a different [`EnvKey`] than the cache entry it is meant to hit.
+    pub fn cost_key(
+        &self,
+        arch: &ArchConfig,
+        params: &EnergyParams,
+        dram: &DramModel,
+    ) -> CostKey {
         CostKey::of(
-            &arch_for(self.flow),
+            arch,
             params,
             dram,
             &self.layer,
@@ -73,18 +82,18 @@ pub struct SweepResult {
     pub cost: Result<tiling::LayerCost, String>,
 }
 
-/// The architecture each dataflow runs on (its Table 1 NoC row).
+/// The architecture each dataflow runs on by default (its Table 1 NoC
+/// row), resolved through the dataflow registry
+/// ([`DataflowCompiler::default_arch`](crate::compiler::DataflowCompiler::default_arch))
+/// — registered custom flows get their own architecture with no edits
+/// here.
 ///
 /// The process-wide `--max-sim-cycles` override is folded into the
 /// returned config here, so it reaches both the simulators *and* the
 /// [`EnvKey`] cache fingerprint — a cache/store entry produced under one
 /// cycle cap can never answer for a different one.
 pub fn arch_for(flow: Dataflow) -> ArchConfig {
-    let mut arch = match flow {
-        Dataflow::RowStationary => ArchConfig::eyeriss(),
-        Dataflow::Tpu => ArchConfig::tpu(),
-        Dataflow::EcoFlow | Dataflow::Ganax => ArchConfig::ecoflow(),
-    };
+    let mut arch = flow.resolve().default_arch();
     arch.max_sim_cycles = crate::sim::array::effective_max_cycles(&arch);
     arch
 }
@@ -105,6 +114,9 @@ pub fn run_sweep(
 }
 
 /// Run all jobs against a shared memo table; results keep job order.
+/// Flows run on their registry-default architectures ([`arch_for`]);
+/// use [`run_sweep_with`] (or a [`Session`](super::Session) with arch
+/// overrides) to substitute architectures per flow.
 pub fn run_sweep_cached(
     params: &EnergyParams,
     dram: &DramModel,
@@ -112,8 +124,27 @@ pub fn run_sweep_cached(
     threads: usize,
     cache: &CostCache,
 ) -> Vec<SweepResult> {
+    run_sweep_with(arch_for, params, dram, jobs, threads, cache)
+}
+
+/// The full dedup → group → shard → fan-out engine with an explicit
+/// architecture provider: `arch_of(flow)` is consulted for keying,
+/// grouping and simulation alike, so a caller-supplied architecture
+/// (a [`Session`](super::Session) override) discriminates cache keys
+/// exactly like the built-in defaults do.
+pub fn run_sweep_with<F>(
+    arch_of: F,
+    params: &EnergyParams,
+    dram: &DramModel,
+    jobs: Vec<SweepJob>,
+    threads: usize,
+    cache: &CostCache,
+) -> Vec<SweepResult>
+where
+    F: Fn(Dataflow) -> ArchConfig + Sync,
+{
     // -- dedup: map each job onto the slot of its first occurrence -------
-    // Environment fingerprints depend only on the flow (via arch_for),
+    // Environment fingerprints depend only on the flow (via arch_of),
     // so compute them once per flow instead of once per job — on a
     // fully-warm sweep the keying IS the hot path.
     let mut env_by_flow: std::collections::HashMap<Dataflow, EnvKey> =
@@ -123,7 +154,7 @@ pub fn run_sweep_cached(
         .map(|j| {
             let env = *env_by_flow
                 .entry(j.flow)
-                .or_insert_with(|| EnvKey::of(&arch_for(j.flow), params, dram));
+                .or_insert_with(|| EnvKey::of(&arch_of(j.flow), params, dram));
             CostKey::with_env(env, &j.layer, j.pass, j.flow, j.batch)
         })
         .collect();
@@ -165,7 +196,7 @@ pub fn run_sweep_cached(
         let ji = unique_job[slot];
         let job = &jobs[ji];
         let env = env_by_flow[&job.flow]; // populated during keying above
-        let pk = tiling::ProxyKey::of(&arch_for(job.flow), env, &job.layer, job.pass, job.flow);
+        let pk = tiling::ProxyKey::of(&arch_of(job.flow), env, &job.layer, job.pass, job.flow);
         let g = *group_index.entry(pk).or_insert_with(|| {
             groups.push(Vec::new());
             groups.len() - 1
@@ -186,7 +217,7 @@ pub fn run_sweep_cached(
                     }
                     let members = &groups[g];
                     let j0 = &jobs[unique_job[members[0]]];
-                    let arch = arch_for(j0.flow);
+                    let arch = arch_of(j0.flow);
                     // one cycle-accurate proxy simulation per group
                     let proxy =
                         tiling::proxy_stats(&arch, &j0.layer, j0.pass, j0.flow)

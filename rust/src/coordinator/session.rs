@@ -1,0 +1,466 @@
+//! The [`Session`] facade: one object that owns everything a sweep
+//! needs.
+//!
+//! Before the facade existed every consumer hand-assembled the same
+//! five ingredients — per-flow [`ArchConfig`]s, [`EnergyParams`], a
+//! [`DramModel`], a [`CostCache`] and a thread count — and every report
+//! generator grew a `*_cached` twin to thread a shared cache through.
+//! [`Session`] collapses all of that: build one with
+//! [`Session::builder`], then ask it for layer costs, sweeps, end-to-end
+//! estimates, tables and figures. Every query shares the session's memo
+//! table, so cross-figure reuse (Fig. 10 re-answers Fig. 8 + Fig. 9)
+//! is automatic, and an optional [store path](SessionBuilder::store_path)
+//! persists the table across processes.
+//!
+//! Results are configuration-determined, never session-history-
+//! determined: a warm cache changes only the hit counters, and two
+//! sessions with equal configuration produce bit-identical results
+//! (property-tested in `tests/registry_dispatch.rs`).
+//!
+//! ```no_run
+//! use ecoflow::compiler::Dataflow;
+//! use ecoflow::coordinator::Session;
+//! use ecoflow::model::{zoo, TrainingPass};
+//!
+//! let session = Session::builder().threads(8).build();
+//! let layers = zoo::table5_layers();
+//! let cost = session
+//!     .layer_cost(&layers[0], TrainingPass::InputGrad, Dataflow::EcoFlow, 4)
+//!     .unwrap();
+//! println!("{} cycles, {:.3} ms", cost.cycles, cost.millis());
+//! print!("{}", session.table(ecoflow::report::TableId::CnnE2e).render());
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::compiler::tiling::LayerCost;
+use crate::compiler::Dataflow;
+use crate::config::ArchConfig;
+use crate::energy::{DramModel, EnergyParams};
+use crate::model::{ConvLayer, TrainingPass};
+use crate::report::{FigureId, TableId};
+use crate::sim::batch::{set_engine_override, SimEngine};
+use crate::util::table::Table;
+
+use super::cache::{CacheStats, CostCache};
+use super::e2e::{self, E2eResult};
+use super::scheduler::{self, run_sweep_with, SweepJob, SweepResult};
+use super::store::{self, LoadOutcome};
+
+/// Configures and constructs a [`Session`]. Every knob has the default
+/// the CLI and the paper evaluation use, so `Session::builder().build()`
+/// reproduces the historical behaviour of the free-function entry
+/// points exactly.
+#[derive(Default)]
+pub struct SessionBuilder {
+    params: Option<EnergyParams>,
+    dram: Option<DramModel>,
+    arch: HashMap<Dataflow, ArchConfig>,
+    threads: Option<usize>,
+    cache_capacity: Option<usize>,
+    store_path: Option<PathBuf>,
+    max_sim_cycles: Option<u64>,
+    engine: Option<SimEngine>,
+}
+
+impl SessionBuilder {
+    /// Per-event energy model (default: `EnergyParams::default()`).
+    pub fn params(mut self, params: EnergyParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// DRAM timing/energy model (default: `DramModel::default()`).
+    pub fn dram(mut self, dram: DramModel) -> Self {
+        self.dram = Some(dram);
+        self
+    }
+
+    /// Override the architecture a dataflow runs on in this session.
+    /// Unset flows use their registry default
+    /// ([`DataflowCompiler::default_arch`](crate::compiler::DataflowCompiler::default_arch)).
+    /// The override participates in the cache fingerprint, so results
+    /// never leak across architectures.
+    pub fn arch(mut self, flow: Dataflow, arch: ArchConfig) -> Self {
+        self.arch.insert(flow, arch);
+        self
+    }
+
+    /// Sweep worker threads (default:
+    /// [`scheduler::default_threads`]).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Memo-table capacity bound (default:
+    /// [`super::cache::DEFAULT_CAPACITY`]).
+    pub fn cache_capacity(mut self, capacity: usize) -> Self {
+        self.cache_capacity = Some(capacity);
+        self
+    }
+
+    /// Persist the layer-cost table at `path`: loaded (leniently — a
+    /// corrupt or stale file is reported and rebuilt, never fatal) by
+    /// [`build`](SessionBuilder::build), written back by
+    /// [`Session::save_store`].
+    pub fn store_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.store_path = Some(path.into());
+        self
+    }
+
+    /// Tighten the simulator's cycle backstop (`--max-sim-cycles`):
+    /// `cap > 0` caps every architecture this session hands out (and is
+    /// part of their cache fingerprints); `cap == 0` explicitly restores
+    /// each architecture's own default. Either way [`build`](SessionBuilder::build)
+    /// also sets the process-wide override so non-Session paths
+    /// ([`scheduler::arch_for`], the standalone table generators) see
+    /// the same cap — but the session itself resolves its cap **once at
+    /// build time** and never re-reads the global, so a *later* session
+    /// (or `cli::run`) cannot reconfigure it. Unset (the default), the
+    /// builder leaves the process-wide state untouched and snapshots
+    /// whatever override is in effect at build time.
+    pub fn max_sim_cycles(mut self, cap: u64) -> Self {
+        self.max_sim_cycles = Some(cap);
+        self
+    }
+
+    /// Microprogrammed-array engine choice. The engines are
+    /// bit-identical, so this only moves performance. Sets the
+    /// process-wide policy at [`build`](SessionBuilder::build) time;
+    /// unset (the default), the builder leaves it untouched
+    /// ([`SimEngine::Auto`] unless something else set it).
+    pub fn engine(mut self, engine: SimEngine) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Build the session: apply the explicitly requested process-wide
+    /// simulator knobs (unset knobs leave process state alone, so
+    /// building a default session never reconfigures live sessions) and
+    /// warm-start the memo table from the store path, if one is set
+    /// (the outcome is kept on the session for the caller to log).
+    pub fn build(self) -> Session {
+        if let Some(cap) = self.max_sim_cycles {
+            crate::sim::array::set_max_cycles_override(cap);
+        }
+        if let Some(engine) = self.engine {
+            set_engine_override(engine);
+        }
+        let cache = match self.cache_capacity {
+            Some(n) => CostCache::with_capacity(n),
+            None => CostCache::new(),
+        };
+        let store_outcome = self.store_path.as_ref().map(|p| store::load_into(p, &cache));
+        Session {
+            params: self.params.unwrap_or_default(),
+            dram: self.dram.unwrap_or_default(),
+            arch: self.arch,
+            threads: self.threads.unwrap_or_else(scheduler::default_threads),
+            // Resolve the effective cap ONCE: either the builder's
+            // request or a snapshot of the process-wide override as of
+            // now. arch_for never re-reads the mutable global, so a
+            // later build() (or cli::run) cannot shift this session's
+            // simulations or cache fingerprints mid-flight.
+            max_sim_cycles: self
+                .max_sim_cycles
+                .unwrap_or_else(crate::sim::array::max_cycles_override),
+            cache,
+            store_path: self.store_path,
+            store_outcome,
+        }
+    }
+}
+
+/// A configured simulation session: the single entry point for layer
+/// costs, sweeps, end-to-end estimates and report generation. See the
+/// [module docs](self) for the full story and an example.
+pub struct Session {
+    params: EnergyParams,
+    dram: DramModel,
+    arch: HashMap<Dataflow, ArchConfig>,
+    threads: usize,
+    /// The cycle cap resolved at build time (0 = each architecture's
+    /// own default), applied directly by [`Session::arch_for`] so this
+    /// session's environment cannot be reconfigured by process-wide
+    /// knob changes after construction.
+    max_sim_cycles: u64,
+    cache: CostCache,
+    store_path: Option<PathBuf>,
+    store_outcome: Option<LoadOutcome>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Session {
+    /// Start configuring a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// A session with every default (the paper-evaluation environment).
+    pub fn new() -> Self {
+        Self::builder().build()
+    }
+
+    /// The session's energy model.
+    pub fn params(&self) -> &EnergyParams {
+        &self.params
+    }
+
+    /// The session's DRAM model.
+    pub fn dram(&self) -> &DramModel {
+        &self.dram
+    }
+
+    /// Sweep worker thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The session's shared memo table.
+    pub fn cache(&self) -> &CostCache {
+        &self.cache
+    }
+
+    /// Hit/miss/eviction counters of the session cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// The persistent-store path, if one was configured.
+    pub fn store_path(&self) -> Option<&Path> {
+        self.store_path.as_deref()
+    }
+
+    /// What [`SessionBuilder::build`] found at the store path (`None`
+    /// when no store is configured) — for the caller to log.
+    pub fn store_outcome(&self) -> Option<&LoadOutcome> {
+        self.store_outcome.as_ref()
+    }
+
+    /// Write the memo table back to the configured store path. Returns
+    /// `None` when the session has no store, `Some(Ok(entries))` on a
+    /// successful save.
+    pub fn save_store(&self) -> Option<std::io::Result<usize>> {
+        self.store_path
+            .as_ref()
+            .map(|p| store::save(p, &self.cache))
+    }
+
+    /// The architecture `flow` runs on in this session: the builder's
+    /// override if one was set, otherwise the flow's registry default —
+    /// with the cycle cap this session resolved at build time applied.
+    /// Nothing here reads mutable process state, so the session's
+    /// environment (and hence its cache fingerprints) is fixed for its
+    /// whole lifetime.
+    pub fn arch_for(&self, flow: Dataflow) -> ArchConfig {
+        let mut arch = match self.arch.get(&flow) {
+            Some(a) => a.clone(),
+            None => flow.resolve().default_arch(),
+        };
+        if self.max_sim_cycles > 0 {
+            arch.max_sim_cycles = self.max_sim_cycles;
+        }
+        arch
+    }
+
+    /// Run a job list through the dedup → group → shard → fan-out engine
+    /// against the session cache; results keep submission order.
+    pub fn sweep(&self, jobs: Vec<SweepJob>) -> Vec<SweepResult> {
+        run_sweep_with(
+            |flow| self.arch_for(flow),
+            &self.params,
+            &self.dram,
+            jobs,
+            self.threads,
+            &self.cache,
+        )
+    }
+
+    /// Cost of one (layer, pass, flow, batch) evaluation — memoized in
+    /// the session cache and bit-identical to a direct
+    /// [`tiling::layer_cost`](crate::compiler::tiling::layer_cost) call
+    /// under the same architecture.
+    pub fn layer_cost(
+        &self,
+        layer: &ConvLayer,
+        pass: TrainingPass,
+        flow: Dataflow,
+        batch: usize,
+    ) -> Result<LayerCost, String> {
+        self.sweep(vec![SweepJob {
+            layer: layer.clone(),
+            pass,
+            flow,
+            batch,
+        }])
+        .pop()
+        .expect("one job in, one result out")
+        .cost
+    }
+
+    /// Table 6 row: end-to-end CNN training estimate for `net`,
+    /// normalized to the TPU dataflow.
+    pub fn network_e2e(&self, net: &str, batch: usize) -> E2eResult {
+        e2e::network_e2e(self, net, batch)
+    }
+
+    /// Table 8 row: end-to-end GAN training estimate for `net`,
+    /// normalized to the TPU dataflow.
+    pub fn gan_e2e(&self, net: &str, batch: usize) -> E2eResult {
+        e2e::gan_e2e(self, net, batch)
+    }
+
+    /// Regenerate one paper table over the session cache.
+    pub fn table(&self, id: TableId) -> Table {
+        id.generate(self)
+    }
+
+    /// Regenerate one paper figure over the session cache.
+    pub fn figure(&self, id: FigureId) -> Table {
+        id.generate(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn small_layer() -> ConvLayer {
+        zoo::table5_layers()
+            .into_iter()
+            .find(|l| l.net == "ShuffleNet")
+            .unwrap()
+    }
+
+    #[test]
+    fn default_session_matches_free_function_environment() {
+        let s = Session::new();
+        assert_eq!(s.params(), &EnergyParams::default());
+        for flow in Dataflow::ALL {
+            assert_eq!(s.arch_for(flow), scheduler::arch_for(flow));
+        }
+        assert!(s.store_path().is_none());
+        assert!(s.store_outcome().is_none());
+        assert!(s.save_store().is_none());
+    }
+
+    #[test]
+    fn layer_cost_is_memoized_in_the_session_cache() {
+        let s = Session::builder().threads(2).build();
+        let l = small_layer();
+        let a = s
+            .layer_cost(&l, TrainingPass::InputGrad, Dataflow::EcoFlow, 2)
+            .unwrap();
+        let misses = s.cache_stats().misses;
+        let b = s
+            .layer_cost(&l, TrainingPass::InputGrad, Dataflow::EcoFlow, 2)
+            .unwrap();
+        assert_eq!(a, b, "memoized result must be bit-identical");
+        let stats = s.cache_stats();
+        assert_eq!(stats.misses, misses, "second query must not miss");
+        assert!(stats.hits > 0);
+    }
+
+    #[test]
+    fn arch_override_changes_keys_not_plumbing() {
+        // an overridden architecture flows through sweep + cache keying:
+        // same layer, different arch => a fresh simulation, not a hit
+        let mut tiny = ArchConfig::ecoflow();
+        tiny.array_cols = 7;
+        let s = Session::builder()
+            .threads(1)
+            .arch(Dataflow::EcoFlow, tiny.clone())
+            .build();
+        assert_eq!(s.arch_for(Dataflow::EcoFlow).array_cols, 7);
+        // unset flows keep their registry defaults
+        assert_eq!(
+            s.arch_for(Dataflow::RowStationary),
+            scheduler::arch_for(Dataflow::RowStationary)
+        );
+        let l = small_layer();
+        let c = s
+            .layer_cost(&l, TrainingPass::Forward, Dataflow::EcoFlow, 1)
+            .unwrap();
+        let default_c = crate::compiler::tiling::layer_cost(
+            &scheduler::arch_for(Dataflow::EcoFlow),
+            s.params(),
+            s.dram(),
+            &l,
+            TrainingPass::Forward,
+            Dataflow::EcoFlow,
+            1,
+        )
+        .unwrap();
+        let tiny_c = crate::compiler::tiling::layer_cost(
+            &s.arch_for(Dataflow::EcoFlow),
+            s.params(),
+            s.dram(),
+            &l,
+            TrainingPass::Forward,
+            Dataflow::EcoFlow,
+            1,
+        )
+        .unwrap();
+        assert_eq!(c, tiny_c, "session must simulate the override arch");
+        assert_ne!(c, default_c, "7-wide array must cost differently");
+    }
+
+    #[test]
+    fn later_sessions_cannot_reconfigure_a_capped_session() {
+        // The builder's cycle cap is per-session state applied in
+        // arch_for. (Constructed by hand rather than through build() so
+        // this test never mutates the process-wide override, which
+        // other tests' cache fingerprints would observe.)
+        let mut capped = Session::new();
+        capped.max_sim_cycles = 12_345;
+        assert_eq!(capped.arch_for(Dataflow::EcoFlow).max_sim_cycles, 12_345);
+        let _other = Session::new(); // default builds leave process knobs alone
+        assert_eq!(
+            capped.arch_for(Dataflow::EcoFlow).max_sim_cycles,
+            12_345,
+            "a default session build must not stomp an existing cap"
+        );
+        // explicit 0 restores the per-arch default for that session
+        // (building with 0 is also safe process-wide: 0 == cleared)
+        let cleared = Session::builder().threads(1).max_sim_cycles(0).build();
+        assert_eq!(
+            cleared.arch_for(Dataflow::EcoFlow).max_sim_cycles,
+            ArchConfig::ecoflow().max_sim_cycles
+        );
+    }
+
+    #[test]
+    fn session_store_round_trip() {
+        let path = std::env::temp_dir().join(format!(
+            "ecoflow-session-store-{}.cache",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let l = small_layer();
+        {
+            let s = Session::builder().threads(1).store_path(&path).build();
+            assert!(matches!(s.store_outcome(), Some(LoadOutcome::Missing)));
+            s.layer_cost(&l, TrainingPass::Forward, Dataflow::EcoFlow, 1)
+                .unwrap();
+            let saved = s.save_store().unwrap().unwrap();
+            assert!(saved > 0);
+        }
+        let s2 = Session::builder().threads(1).store_path(&path).build();
+        assert!(matches!(
+            s2.store_outcome(),
+            Some(LoadOutcome::Loaded { .. })
+        ));
+        s2.layer_cost(&l, TrainingPass::Forward, Dataflow::EcoFlow, 1)
+            .unwrap();
+        assert_eq!(s2.cache_stats().misses, 0, "warm start must answer all");
+        std::fs::remove_file(&path).ok();
+    }
+}

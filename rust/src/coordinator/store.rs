@@ -108,11 +108,19 @@ pub fn load_into(path: &Path, cache: &CostCache) -> LoadOutcome {
 
 /// Write the cache's finished (`Ok`) entries to `path`, replacing any
 /// existing store atomically. Returns the number of entries written.
+///
+/// Entries for runtime-registered custom dataflows are skipped: their
+/// [`Dataflow::code`]s are only stable within one process, so a
+/// persisted entry could deserialize as a *different* flow (or reject
+/// the whole file) in the next one. Built-in flows round-trip.
 pub fn save(path: &Path, cache: &CostCache) -> std::io::Result<usize> {
     let mut body = String::new();
     let mut n = 0usize;
     for (key, value) in cache.snapshot() {
         if let Ok(cost) = &value {
+            if !key.flow.has_stable_code() {
+                continue; // process-local custom flow: not persistable
+            }
             encode_entry(&mut body, &key, cost);
             body.push('\n');
             n += 1;
@@ -178,7 +186,7 @@ fn encode_entry(out: &mut String, k: &CostKey, c: &LayerCost) {
         "{} {} {} {} {} {} {} {} {} {}",
         kind_code(k.kind),
         pass_code(k.pass),
-        flow_code(k.flow),
+        k.flow.code(),
         k.in_ch,
         k.ifm,
         k.ofm,
@@ -235,10 +243,14 @@ fn parse_entry(line: &str) -> Option<(CostKey, CachedCost)> {
         .iter()
         .map(|s| hex(s))
         .collect::<Option<_>>()?;
+    // mirror the save-side guard: a custom-flow code maps to whatever
+    // happens to occupy that registration slot in *this* process, so
+    // accepting one could serve flow X's costs as flow Y's results
+    let flow = Dataflow::from_code(dec(t[2])?).filter(|f| f.has_stable_code())?;
     let key = CostKey {
         kind: kind_from(dec(t[0])?)?,
         pass: pass_from(dec(t[1])?)?,
-        flow: flow_from(dec(t[2])?)?,
+        flow,
         in_ch: dec(t[3])? as usize,
         ifm: dec(t[4])? as usize,
         ofm: dec(t[5])? as usize,
@@ -289,7 +301,8 @@ fn parse_entry(line: &str) -> Option<(CostKey, CachedCost)> {
 }
 
 // --- enum codes (exhaustive both ways: adding a variant is a compile ---
-// --- error here, and an unknown code on disk reads as corruption) ------
+// --- error here, and an unknown code on disk reads as corruption; flow -
+// --- codes live with the dataflow registry: Dataflow::code/from_code) --
 
 fn kind_code(k: LayerKind) -> u64 {
     match k {
@@ -319,25 +332,6 @@ fn pass_from(c: u64) -> Option<TrainingPass> {
         0 => Some(TrainingPass::Forward),
         1 => Some(TrainingPass::InputGrad),
         2 => Some(TrainingPass::FilterGrad),
-        _ => None,
-    }
-}
-
-fn flow_code(f: Dataflow) -> u64 {
-    match f {
-        Dataflow::RowStationary => 0,
-        Dataflow::Tpu => 1,
-        Dataflow::EcoFlow => 2,
-        Dataflow::Ganax => 3,
-    }
-}
-
-fn flow_from(c: u64) -> Option<Dataflow> {
-    match c {
-        0 => Some(Dataflow::RowStationary),
-        1 => Some(Dataflow::Tpu),
-        2 => Some(Dataflow::EcoFlow),
-        3 => Some(Dataflow::Ganax),
         _ => None,
     }
 }
@@ -422,9 +416,14 @@ mod tests {
         // wrong token count
         assert!(parse_entry("").is_none());
         assert!(parse_entry("1 2 3").is_none());
-        // unknown flow code
+        // unknown flow code (9 is neither built-in nor registered)
         let mut toks: Vec<&str> = line.split(' ').collect();
         toks[2] = "9";
+        assert!(parse_entry(&toks.join(" ")).is_none());
+        // custom-flow codes are rejected even when resolvable: their
+        // registration-order meaning does not survive a process boundary
+        let mut toks: Vec<&str> = line.split(' ').collect();
+        toks[2] = "256";
         assert!(parse_entry(&toks.join(" ")).is_none());
         // non-numeric field
         let mut toks: Vec<&str> = line.split(' ').collect();
@@ -435,7 +434,7 @@ mod tests {
     #[test]
     fn enum_codes_round_trip() {
         for f in Dataflow::ALL {
-            assert_eq!(flow_from(flow_code(f)), Some(f));
+            assert_eq!(Dataflow::from_code(f.code()), Some(f));
         }
         for p in TrainingPass::ALL {
             assert_eq!(pass_from(pass_code(p)), Some(p));
@@ -443,7 +442,7 @@ mod tests {
         for k in [LayerKind::Conv, LayerKind::TransposedConv] {
             assert_eq!(kind_from(kind_code(k)), Some(k));
         }
-        assert_eq!(flow_from(99), None);
+        assert_eq!(Dataflow::from_code(99), None);
     }
 
     #[test]

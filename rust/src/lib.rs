@@ -5,12 +5,18 @@
 //! three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — SASiML, a cycle-accurate, functional
-//!   (value-propagating) spatial-architecture simulator ([`sim`]); the
-//!   dataflow compiler for row-stationary, TPU-lowering and EcoFlow
-//!   dataflows ([`compiler`]); energy models ([`energy`]); the paper's
-//!   analytic models ([`analysis`]); the CNN/GAN model zoo ([`model`]); a
-//!   multi-threaded sweep coordinator ([`coordinator`]); and report
-//!   generators for every table and figure in the paper ([`report`]).
+//!   (value-propagating) spatial-architecture simulator ([`sim`]); an
+//!   open dataflow-compiler registry with row-stationary, TPU-lowering,
+//!   EcoFlow and GANAX built in ([`compiler::registry`]); energy models
+//!   ([`energy`]); the paper's analytic models ([`analysis`]); the
+//!   CNN/GAN model zoo ([`model`]); a multi-threaded sweep coordinator
+//!   behind the [`coordinator::Session`] facade; and report generators
+//!   for every table and figure in the paper ([`report`]).
+//!
+//! Library users start at [`coordinator::Session`] (sweeps, layer
+//! costs, tables, figures — one object owns the whole environment) and
+//! [`compiler::DataflowCompiler`] (plug in a new dataflow with
+//! [`compiler::register`], no core edits). See README "Library API".
 //! * **L2 (JAX, build-time)** — golden conv fwd/bwd graphs and a small-CNN
 //!   train step, AOT-lowered to HLO text (`python/compile/aot.py`) and
 //!   executed from Rust through PJRT ([`runtime`]).

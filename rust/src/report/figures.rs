@@ -1,16 +1,15 @@
 //! Figure regenerators (Figs. 3, 8, 9, 10, 11, 12).
 //!
-//! Every sweep-backed figure has a `*_cached` variant taking a shared
-//! [`CostCache`]; Fig. 10 in particular re-evaluates the exact job sets
-//! of Figs. 8 and 9, so a cache spanning the figures (the CLI `report`
+//! Every sweep-backed figure takes a [`Session`] and runs over its memo
+//! table; Fig. 10 in particular re-evaluates the exact job sets of
+//! Figs. 8 and 9, so a session spanning the figures (the CLI `report`
 //! command, or one invocation's `--cache-stats` run) answers most of it
 //! from the memo table.
 
 use crate::analysis::zeros;
 use crate::compiler::Dataflow;
-use crate::coordinator::cache::CostCache;
-use crate::coordinator::scheduler::{job_matrix, run_sweep_cached, SweepJob, SweepResult};
-use crate::energy::{DramModel, EnergyParams};
+use crate::coordinator::scheduler::{job_matrix, SweepJob, SweepResult};
+use crate::coordinator::Session;
 use crate::model::{gan, zoo, ConvLayer, TrainingPass};
 use crate::util::table::{pct, ratio, Table};
 
@@ -33,11 +32,8 @@ fn speedup_table(
     title: &str,
     layers: &[ConvLayer],
     pass: TrainingPass,
-    threads: usize,
-    cache: &CostCache,
+    session: &Session,
 ) -> Table {
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
     let flows = [Dataflow::Tpu, Dataflow::RowStationary, Dataflow::EcoFlow];
     let jobs: Vec<SweepJob> = layers
         .iter()
@@ -50,7 +46,7 @@ fn speedup_table(
             })
         })
         .collect();
-    let results = run_sweep_cached(&params, &dram, jobs, threads, cache);
+    let results = session.sweep(jobs);
     let mut t = Table::new(
         title,
         &["layer", "stride", "TPU (ms)", "RS vs TPU", "EcoFlow vs TPU"],
@@ -71,34 +67,22 @@ fn speedup_table(
 }
 
 /// Fig. 8: input-gradient speedups over the Table 5 layer set.
-pub fn fig8_input_grad(threads: usize) -> Table {
-    fig8_input_grad_cached(threads, &CostCache::new())
-}
-
-/// Fig. 8 against a shared layer-cost cache.
-pub fn fig8_input_grad_cached(threads: usize, cache: &CostCache) -> Table {
+pub fn fig8_input_grad(session: &Session) -> Table {
     speedup_table(
         "Fig 8 — input-gradient speedup (normalized to TPU)",
         &zoo::table5_with_opt(),
         TrainingPass::InputGrad,
-        threads,
-        cache,
+        session,
     )
 }
 
 /// Fig. 9: filter-gradient speedups.
-pub fn fig9_filter_grad(threads: usize) -> Table {
-    fig9_filter_grad_cached(threads, &CostCache::new())
-}
-
-/// Fig. 9 against a shared layer-cost cache.
-pub fn fig9_filter_grad_cached(threads: usize, cache: &CostCache) -> Table {
+pub fn fig9_filter_grad(session: &Session) -> Table {
     speedup_table(
         "Fig 9 — filter-gradient speedup (normalized to TPU)",
         &zoo::table5_with_opt(),
         TrainingPass::FilterGrad,
-        threads,
-        cache,
+        session,
     )
 }
 
@@ -119,17 +103,10 @@ fn energy_rows(t: &mut Table, results: &[SweepResult]) {
     }
 }
 
-/// Fig. 10: energy breakdown of the CNN gradient calculations.
-pub fn fig10_energy(threads: usize) -> Table {
-    fig10_energy_cached(threads, &CostCache::new())
-}
-
-/// Fig. 10 against a shared layer-cost cache. Its job set is exactly
-/// Fig. 8's plus Fig. 9's, so after those figures a shared cache answers
-/// this one entirely from the memo table.
-pub fn fig10_energy_cached(threads: usize, cache: &CostCache) -> Table {
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
+/// Fig. 10: energy breakdown of the CNN gradient calculations. Its job
+/// set is exactly Fig. 8's plus Fig. 9's, so after those figures the
+/// session answers this one entirely from the memo table.
+pub fn fig10_energy(session: &Session) -> Table {
     let layers = zoo::table5_with_opt();
     let mut jobs = Vec::new();
     for pass in [TrainingPass::InputGrad, TrainingPass::FilterGrad] {
@@ -144,7 +121,7 @@ pub fn fig10_energy_cached(threads: usize, cache: &CostCache) -> Table {
             }
         }
     }
-    let results = run_sweep_cached(&params, &dram, jobs, threads, cache);
+    let results = session.sweep(jobs);
     let mut t = Table::new(
         "Fig 10 — energy breakdown (uJ): DRAM/GBUFF/SPAD/ALU/NoC",
         &["layer [pass]", "flow", "total", "DRAM", "GBUFF", "SPAD", "ALU", "NoC"],
@@ -154,16 +131,9 @@ pub fn fig10_energy_cached(threads: usize, cache: &CostCache) -> Table {
 }
 
 /// Fig. 11: GAN layer execution time across RS/TPU/GANAX/EcoFlow.
-pub fn fig11_gan_time(threads: usize) -> Table {
-    fig11_gan_time_cached(threads, &CostCache::new())
-}
-
-/// Fig. 11 against a shared layer-cost cache.
-pub fn fig11_gan_time_cached(threads: usize, cache: &CostCache) -> Table {
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
+pub fn fig11_gan_time(session: &Session) -> Table {
     let jobs = job_matrix(&gan::table7_layers(), &Dataflow::ALL, BATCH);
-    let results = run_sweep_cached(&params, &dram, jobs, threads, cache);
+    let results = session.sweep(jobs);
     let mut t = Table::new(
         "Fig 11 — GAN layer execution time (normalized to RS)",
         &["layer [pass]", "RS (ms)", "TPU", "GANAX", "EcoFlow"],
@@ -189,22 +159,15 @@ pub fn fig11_gan_time_cached(threads: usize, cache: &CostCache) -> Table {
     t
 }
 
-/// Fig. 12: GAN layer energy breakdown.
-pub fn fig12_gan_energy(threads: usize) -> Table {
-    fig12_gan_energy_cached(threads, &CostCache::new())
-}
-
-/// Fig. 12 against a shared layer-cost cache (a subset of Fig. 11's
-/// sweep plus the shared-shape overlaps with the Table 8 estimator).
-pub fn fig12_gan_energy_cached(threads: usize, cache: &CostCache) -> Table {
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
+/// Fig. 12: GAN layer energy breakdown (a subset of Fig. 11's sweep plus
+/// the shared-shape overlaps with the Table 8 estimator).
+pub fn fig12_gan_energy(session: &Session) -> Table {
     let jobs = job_matrix(
         &gan::table7_layers(),
         &[Dataflow::Tpu, Dataflow::RowStationary, Dataflow::EcoFlow],
         BATCH,
     );
-    let results = run_sweep_cached(&params, &dram, jobs, threads, cache);
+    let results = session.sweep(jobs);
     let mut t = Table::new(
         "Fig 12 — GAN layer energy breakdown (uJ)",
         &["layer [pass]", "flow", "total", "DRAM", "GBUFF", "SPAD", "ALU", "NoC"],

@@ -2,8 +2,101 @@
 //! regenerated from the simulator and analytic models as ASCII tables
 //! (and CSV via [`crate::util::table::Table::to_csv`]).
 //!
-//! Each `figN_*` / `tableN_*` function corresponds to one entry of the
-//! DESIGN.md experiment index and is wrapped by a same-named bench target.
+//! Every sweep-backed generator takes a [`Session`] and runs against
+//! its memo table, so generating several targets over one session
+//! collapses
+//! their overlapping job sets (Fig. 10 is answered almost entirely by
+//! Fig. 8 + Fig. 9's simulations). [`TableId`] and [`FigureId`]
+//! enumerate the targets for `session.table(..)` / `session.figure(..)`
+//! and the CLI's `report` command.
+//!
+//! Each generator corresponds to one entry of the DESIGN.md experiment
+//! index and is wrapped by a same-named bench target.
 
 pub mod figures;
 pub mod tables;
+
+use crate::coordinator::Session;
+use crate::util::table::Table;
+
+/// The paper tables [`Session::table`] can regenerate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TableId {
+    /// Table 1 — NoC bus widths + §4.4 multicast ID sizing.
+    Noc,
+    /// Table 2 — SASiML vs the Eyeriss chip (AlexNet inference).
+    Validation,
+    /// Table 5 — the evaluated CNN layer set.
+    CnnLayers,
+    /// Table 6 — end-to-end CNN training vs TPU.
+    CnnE2e,
+    /// Table 7 — the evaluated GAN layer set.
+    GanLayers,
+    /// Table 8 — end-to-end GAN training vs TPU.
+    GanE2e,
+}
+
+impl TableId {
+    /// All tables, in paper order (the `report` command's order).
+    pub const ALL: [TableId; 6] = [
+        TableId::Noc,
+        TableId::Validation,
+        TableId::CnnLayers,
+        TableId::CnnE2e,
+        TableId::GanLayers,
+        TableId::GanE2e,
+    ];
+
+    /// Regenerate this table over `session`.
+    pub fn generate(self, session: &Session) -> Table {
+        match self {
+            TableId::Noc => tables::table1_noc(),
+            TableId::Validation => tables::table2_validation(),
+            TableId::CnnLayers => tables::table5_layers(),
+            TableId::CnnE2e => tables::table6_cnn_e2e(session),
+            TableId::GanLayers => tables::table7_layers(),
+            TableId::GanE2e => tables::table8_gan_e2e(session),
+        }
+    }
+}
+
+/// The paper figures [`Session::figure`] can regenerate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FigureId {
+    /// Fig. 3 — padding-induced zero multiplications vs stride.
+    ZeroMults,
+    /// Fig. 8 — input-gradient speedups.
+    InputGrad,
+    /// Fig. 9 — filter-gradient speedups.
+    FilterGrad,
+    /// Fig. 10 — CNN gradient energy breakdown.
+    Energy,
+    /// Fig. 11 — GAN layer execution time.
+    GanTime,
+    /// Fig. 12 — GAN layer energy breakdown.
+    GanEnergy,
+}
+
+impl FigureId {
+    /// All figures, in paper order (the `report` command's order).
+    pub const ALL: [FigureId; 6] = [
+        FigureId::ZeroMults,
+        FigureId::InputGrad,
+        FigureId::FilterGrad,
+        FigureId::Energy,
+        FigureId::GanTime,
+        FigureId::GanEnergy,
+    ];
+
+    /// Regenerate this figure over `session`.
+    pub fn generate(self, session: &Session) -> Table {
+        match self {
+            FigureId::ZeroMults => figures::fig3_zero_mults(),
+            FigureId::InputGrad => figures::fig8_input_grad(session),
+            FigureId::FilterGrad => figures::fig9_filter_grad(session),
+            FigureId::Energy => figures::fig10_energy(session),
+            FigureId::GanTime => figures::fig11_gan_time(session),
+            FigureId::GanEnergy => figures::fig12_gan_energy(session),
+        }
+    }
+}

@@ -4,8 +4,7 @@
 use crate::analysis::noc;
 use crate::compiler::{tiling, Dataflow};
 use crate::config::{ArchConfig, NocConfig};
-use crate::coordinator::cache::CostCache;
-use crate::coordinator::e2e::{gan_e2e_cached, network_e2e_cached};
+use crate::coordinator::Session;
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::{gan, zoo, ConvLayer, TrainingPass};
 use crate::util::table::{fnum, pct, Table};
@@ -144,23 +143,17 @@ pub fn table5_layers() -> Table {
     t
 }
 
-/// Table 6: end-to-end CNN training speedup + energy savings vs TPU.
-pub fn table6_cnn_e2e(threads: usize) -> Table {
-    table6_cnn_e2e_cached(threads, &CostCache::new())
-}
-
-/// Table 6 against a shared layer-cost cache: shapes recurring across
-/// the six networks (e.g. ResNet-50 `S2-3x3s2` == MobileNet `CONV3`)
-/// are simulated once per (pass, flow).
-pub fn table6_cnn_e2e_cached(threads: usize, cache: &CostCache) -> Table {
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
+/// Table 6: end-to-end CNN training speedup + energy savings vs TPU,
+/// over the session's memo table — shapes recurring across the six
+/// networks (e.g. ResNet-50 `S2-3x3s2` == MobileNet `CONV3`) are
+/// simulated once per (pass, flow).
+pub fn table6_cnn_e2e(session: &Session) -> Table {
     let mut t = Table::new(
         "Table 6 — end-to-end CNN training (normalized to TPU)",
         &["CNN", "Eyeriss speedup", "EcoFlow speedup", "Eyeriss energy", "EcoFlow energy"],
     );
     for net in zoo::NETWORKS {
-        let r = network_e2e_cached(&params, &dram, net, 4, threads, cache);
+        let r = session.network_e2e(net, 4);
         t.row(vec![
             net.to_string(),
             fnum(r.speedup[&Dataflow::RowStationary], 2),
@@ -192,16 +185,10 @@ pub fn table7_layers() -> Table {
     t
 }
 
-/// Table 8: end-to-end GAN training vs TPU.
-pub fn table8_gan_e2e(threads: usize) -> Table {
-    table8_gan_e2e_cached(threads, &CostCache::new())
-}
-
-/// Table 8 against a shared layer-cost cache: the per-flow TPU baselines
-/// and the shapes shared by both GANs are guaranteed re-hits.
-pub fn table8_gan_e2e_cached(threads: usize, cache: &CostCache) -> Table {
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
+/// Table 8: end-to-end GAN training vs TPU, over the session's memo
+/// table — the per-flow TPU baselines and the shapes shared by both
+/// GANs are guaranteed re-hits.
+pub fn table8_gan_e2e(session: &Session) -> Table {
     let mut t = Table::new(
         "Table 8 — end-to-end GAN training (normalized to TPU)",
         &[
@@ -215,7 +202,7 @@ pub fn table8_gan_e2e_cached(threads: usize, cache: &CostCache) -> Table {
         ],
     );
     for net in gan::GANS {
-        let r = gan_e2e_cached(&params, &dram, net, 4, threads, cache);
+        let r = session.gan_e2e(net, 4);
         t.row(vec![
             net.to_string(),
             fnum(r.speedup[&Dataflow::RowStationary], 2),

@@ -35,6 +35,14 @@ pub fn set_max_cycles_override(limit: u64) {
     MAX_CYCLES_OVERRIDE.store(limit, Ordering::Relaxed);
 }
 
+/// The raw process-wide override value (0 = none). Snapshot this when
+/// building state that must stay configuration-determined (a
+/// [`Session`](crate::coordinator::Session) captures it at build time)
+/// rather than re-reading the mutable global per query.
+pub fn max_cycles_override() -> u64 {
+    MAX_CYCLES_OVERRIDE.load(Ordering::Relaxed)
+}
+
 /// The cycle cap in effect for a config being minted now: the CLI
 /// override when set, otherwise the config's own `max_sim_cycles`.
 pub fn effective_max_cycles(arch: &ArchConfig) -> u64 {

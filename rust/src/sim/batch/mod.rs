@@ -24,5 +24,8 @@
 pub mod engine;
 pub mod lanes;
 
-pub use engine::{run_shared_program, run_shared_program_chunked, BatchSim};
+pub use engine::{
+    engine_override, run_shared_program, run_shared_program_chunked, set_engine_override,
+    BatchSim, SimEngine,
+};
 pub use lanes::{Lane, LANES};

@@ -24,7 +24,7 @@ fn all_dataflows_agree_on_transposed_conv() {
         let golden = conv::transposed_conv(&e, &w, s);
         let (o_rs, _) = rs::transpose_via_padding(&eye, &e, &w, s).unwrap();
         let (o_ef, _) = ef::transpose_pass(&eco, &e, &w, s).unwrap();
-        let (o_tpu, _) = tpu::transpose_pass(&tpu_a, &e, &w, s);
+        let (o_tpu, _) = tpu::transpose_pass(&tpu_a, &e, &w, s).unwrap();
         let (o_gx, _) = ganax::transpose_pass(&eco, &e, &w, s).unwrap();
         o_rs.assert_close(&golden, 1e-3);
         o_ef.assert_close(&golden, 1e-3);
@@ -48,7 +48,7 @@ fn all_dataflows_agree_on_dilated_conv() {
         let golden = conv::dilated_conv(&x, &e, s);
         let (o_rs, _) = rs::dilated_via_padding(&eye, &x, &e, s).unwrap();
         let (o_ef, _) = ef::filter_grad_pass(&eco, &x, &e, s).unwrap();
-        let (o_tpu, _) = tpu::dilated_pass(&tpu_a, &x, &e, s);
+        let (o_tpu, _) = tpu::dilated_pass(&tpu_a, &x, &e, s).unwrap();
         o_rs.assert_close(&golden, 1e-3);
         o_ef.assert_close(&golden, 1e-3);
         o_tpu.assert_close(&golden, 1e-3);
@@ -68,7 +68,7 @@ fn all_dataflows_agree_on_direct_conv() {
         let w = Mat::random(k, k, rng);
         let golden = conv::direct_conv(&x, &w, s);
         let (o_rs, _) = rs::direct_pass(&eye, &x, &w, s).unwrap();
-        let (o_tpu, _) = tpu::direct_pass(&tpu_a, &x, &w, s);
+        let (o_tpu, _) = tpu::direct_pass(&tpu_a, &x, &w, s).unwrap();
         o_rs.assert_close(&golden, 1e-3);
         o_tpu.assert_close(&golden, 1e-3);
     });

@@ -91,10 +91,9 @@ fn fig11_shape_ganax_ties_on_igrad_loses_on_fgrad() {
 
 #[test]
 fn table6_shape_alexnet_biggest_winner() {
-    let p = EnergyParams::default();
-    let d = DramModel::default();
-    let alex = ecoflow::coordinator::e2e::network_e2e(&p, &d, "AlexNet", 4, 8);
-    let shuffle = ecoflow::coordinator::e2e::network_e2e(&p, &d, "ShuffleNet", 4, 8);
+    let session = ecoflow::coordinator::Session::builder().threads(8).build();
+    let alex = session.network_e2e("AlexNet", 4);
+    let shuffle = session.network_e2e("ShuffleNet", 4);
     let a = alex.speedup[&Dataflow::EcoFlow];
     let s = shuffle.speedup[&Dataflow::EcoFlow];
     assert!(a > s, "AlexNet ({a}) should beat ShuffleNet ({s})");

@@ -5,10 +5,10 @@
 
 use ecoflow::compiler::{tiling, Dataflow};
 use ecoflow::coordinator::cache::CostCache;
-use ecoflow::coordinator::e2e::network_e2e_cached;
 use ecoflow::coordinator::scheduler::{
     arch_for, job_matrix, run_sweep, run_sweep_cached, SweepJob,
 };
+use ecoflow::coordinator::Session;
 use ecoflow::energy::{DramModel, EnergyParams};
 use ecoflow::model::{zoo, ConvLayer};
 use ecoflow::util::prng::{for_each_case, Prng};
@@ -119,17 +119,15 @@ fn warm_cache_is_invisible_to_results() {
 }
 
 #[test]
-fn table6_style_shared_cache_reuses_across_networks() {
+fn table6_style_shared_session_reuses_across_networks() {
     // The --cache-stats acceptance path for Table 6: ResNet-50 and
     // MobileNet share conv geometries (e.g. S2-3x3s2 == CONV3), so a
-    // shared cache spanning the table's networks must report hits.
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
-    let cache = CostCache::new();
-    let r1 = network_e2e_cached(&params, &dram, "ResNet-50", 4, 8, &cache);
-    let after_first = cache.stats();
-    let r2 = network_e2e_cached(&params, &dram, "MobileNet", 4, 8, &cache);
-    let s = cache.stats();
+    // session spanning the table's networks must report hits.
+    let session = Session::builder().threads(8).build();
+    let r1 = session.network_e2e("ResNet-50", 4);
+    let after_first = session.cache_stats();
+    let r2 = session.network_e2e("MobileNet", 4);
+    let s = session.cache_stats();
     assert!(
         s.hits > after_first.hits,
         "MobileNet must reuse ResNet-50 simulations: {s:?}"

@@ -3,9 +3,9 @@
 //! Two guarantees, from strongest to most convenient:
 //!
 //! 1. **Refactor invariance (always checked):** Table 6 / Table 8
-//!    speedup rows computed with `threads=1` + private caches equal the
-//!    rows computed with `threads=8` + one shared cache spanning every
-//!    network, to full 3-decimal row formatting.
+//!    speedup rows computed with `threads=1` + one private session per
+//!    network equal the rows computed with `threads=8` + one session
+//!    spanning every network, to full 3-decimal row formatting.
 //! 2. **Golden snapshot:** the formatted rows are compared against
 //!    `tests/golden/e2e_speedups.txt`. The file is bootstrapped on first
 //!    run (fresh checkouts and CI start empty — the simulator's absolute
@@ -16,9 +16,8 @@
 use std::path::PathBuf;
 
 use ecoflow::compiler::Dataflow;
-use ecoflow::coordinator::cache::CostCache;
-use ecoflow::coordinator::e2e::{gan_e2e_cached, network_e2e_cached, E2eResult};
-use ecoflow::energy::{DramModel, EnergyParams};
+use ecoflow::coordinator::e2e::E2eResult;
+use ecoflow::coordinator::Session;
 
 /// Networks pinned by the snapshot: the paper's headline CNN rows plus
 /// one GAN (the full six-network Table 6 is exercised by the benches).
@@ -51,21 +50,21 @@ fn fmt_gan_row(r: &E2eResult) -> String {
     )
 }
 
-/// All snapshot rows under one scheduling configuration.
-fn rows(threads: usize, shared_cache: bool) -> Vec<String> {
-    let params = EnergyParams::default();
-    let dram = DramModel::default();
-    let shared = CostCache::new();
+/// All snapshot rows under one scheduling configuration: either one
+/// session spanning every network (shared memo table) or a fresh
+/// session per network (private tables).
+fn rows(threads: usize, shared_session: bool) -> Vec<String> {
+    let shared = Session::builder().threads(threads).build();
     let mut out = Vec::new();
     for net in CNNS {
-        let cache = CostCache::new();
-        let c = if shared_cache { &shared } else { &cache };
-        out.push(fmt_cnn_row(&network_e2e_cached(&params, &dram, net, BATCH, threads, c)));
+        let private = Session::builder().threads(threads).build();
+        let s = if shared_session { &shared } else { &private };
+        out.push(fmt_cnn_row(&s.network_e2e(net, BATCH)));
     }
     for net in GANS {
-        let cache = CostCache::new();
-        let c = if shared_cache { &shared } else { &cache };
-        out.push(fmt_gan_row(&gan_e2e_cached(&params, &dram, net, BATCH, threads, c)));
+        let private = Session::builder().threads(threads).build();
+        let s = if shared_session { &shared } else { &private };
+        out.push(fmt_gan_row(&s.gan_e2e(net, BATCH)));
     }
     out
 }
@@ -83,7 +82,7 @@ fn table6_table8_rows_survive_the_scheduler_refactor() {
     let sharded = rows(8, true);
     assert_eq!(
         serial, sharded,
-        "dedup/sharding/shared-cache changed a Table 6/8 row"
+        "dedup/sharding/shared-session changed a Table 6/8 row"
     );
 
     let snapshot = serial.join("\n") + "\n";
