@@ -10,7 +10,7 @@ use ecoflow::coordinator::cache::CostCache;
 use ecoflow::coordinator::scheduler::{arch_for, job_matrix, run_sweep_cached};
 use ecoflow::energy::{DramModel, EnergyParams};
 use ecoflow::model::zoo;
-use ecoflow::sim::batch::{BatchSim, LANES};
+use ecoflow::sim::batch::{BatchSim, BatchSystolicSim, LANES};
 use ecoflow::sim::systolic::systolic_matmul;
 use ecoflow::sim::{ArraySim, Operands};
 use ecoflow::tensor::Mat;
@@ -51,9 +51,33 @@ fn main() {
     set.run("tpu_direct_pass/25x25_k3_s2", 800, || {
         std::hint::black_box(tpu::direct_pass(&arch, &x, &w, 2).unwrap());
     });
-    set.run("systolic_matmul/128x64x128", 800, || {
-        std::hint::black_box(systolic_matmul(&arch, &a, &b));
-    });
+    let sys_scalar_m = set
+        .run("systolic_matmul/128x64x128", 800, || {
+            std::hint::black_box(systolic_matmul(&arch, &a, &b));
+        })
+        .clone();
+    // -- batched lane-parallel systolic engine vs the scalar wavefront --
+    // The 128x128 output tiles into 10 full 13x15 blocks (plus ragged
+    // edges); the batched engine streams same-geometry tiles through one
+    // wavefront loop in LANES-wide SoA lanes, bit-identical to scalar.
+    let sys_batched_m = set
+        .run("systolic_batched/128x64x128", 800, || {
+            std::hint::black_box(BatchSystolicSim::new(&arch).matmul(&a, &b));
+        })
+        .clone();
+    // PE-slot updates: cycles x array PEs, per wall second — the TPU
+    // path's trajectory metric, mirroring pe_slot_updates below.
+    let (_, sys_st) = systolic_matmul(&arch, &a, &b);
+    let sys_slots = sys_st.cycles as f64 * arch.num_pes() as f64;
+    let sys_scalar_mps = sys_slots / sys_scalar_m.median_ns() * 1e3;
+    let sys_batched_mps = sys_slots / sys_batched_m.median_ns() * 1e3;
+    println!(
+        "{{\"bench\":\"systolic_pe_slot_updates\",\"unit\":\"M/s\",\"scalar\":{:.1},\"batched\":{:.1},\"lanes\":{},\"speedup\":{:.2}}}",
+        sys_scalar_mps,
+        sys_batched_mps,
+        LANES,
+        sys_batched_mps / sys_scalar_mps.max(1e-9)
+    );
     set.run("golden_conv_oracle/25x25_k3_s2", 400, || {
         std::hint::black_box(ecoflow::tensor::conv::direct_conv(&x, &w, 2));
     });

@@ -25,6 +25,11 @@
 //! saved after the command succeeds, so a `report` following a `sweep`
 //! answers >90% of its lookups from disk. `--max-sim-cycles N` tightens
 //! the simulator's cycle backstop for the whole invocation.
+//! `--engine auto|scalar|batched` picks the simulation engine for both
+//! PE-array fabrics (engine-selection precedence: CLI flag > session
+//! builder > pre-existing process override — the flag feeds the builder,
+//! which sets the process-wide policy at build time; results are
+//! bit-identical under every choice, only throughput moves).
 
 use std::collections::HashMap;
 
@@ -83,7 +88,8 @@ pub fn usage() -> &'static str {
      \u{20}  version\n\
      options: --threads N, --csv, --cache-stats,\n\
      \u{20}        --cache-file PATH (persist the layer-cost cache across runs),\n\
-     \u{20}        --max-sim-cycles N (tighten the simulator cycle backstop)"
+     \u{20}        --max-sim-cycles N (tighten the simulator cycle backstop),\n\
+     \u{20}        --engine auto|scalar|batched (simulation engine, both fabrics)"
 }
 
 impl Args {
@@ -202,6 +208,12 @@ pub fn run(args: &[String]) -> Result<()> {
         Some(v) => Some(std::path::PathBuf::from(v)),
         None => None,
     };
+    let engine = match parsed.options.get("engine") {
+        Some(v) => Some(crate::sim::batch::SimEngine::parse(v).ok_or_else(|| {
+            anyhow!("invalid --engine value: {v} (expected auto, scalar or batched)")
+        })?),
+        None => None,
+    };
     // One session per invocation: every sweep this command triggers
     // shares its memo table, and `--cache-stats` reports it at the end.
     // (The cycle-cap override is process-wide; setting it on every
@@ -210,6 +222,14 @@ pub fn run(args: &[String]) -> Result<()> {
     let mut builder = Session::builder().threads(threads).max_sim_cycles(cap);
     if let Some(path) = &cache_file {
         builder = builder.store_path(path);
+    }
+    if let Some(engine) = engine {
+        // CLI flag > session builder > pre-existing process override:
+        // the flag IS a builder call, and the builder sets the
+        // process-wide policy at build time, so an explicit flag always
+        // wins for this invocation while an absent one leaves whatever
+        // override is in effect untouched.
+        builder = builder.engine(engine);
     }
     let session = builder.build();
     if let (Some(path), Some(outcome)) = (session.store_path(), session.store_outcome()) {
@@ -374,6 +394,14 @@ mod tests {
             .unwrap_err();
             assert!(err.to_string().contains("max-sim-cycles"), "{err}");
         }
+    }
+
+    #[test]
+    fn invalid_engine_is_a_usage_error() {
+        // must error out before building the session, so a typo cannot
+        // mutate the process-wide engine override
+        let err = run(&["version".into(), "--engine".into(), "simd".into()]).unwrap_err();
+        assert!(err.to_string().contains("engine"), "{err}");
     }
 
     #[test]

@@ -15,8 +15,10 @@
 //! * functional execution ([`DataflowCompiler::execute`] — the dispatch
 //!   behind [`tiling::simulate_plane`] and the proxy cost model;
 //!   [`DataflowCompiler::execute_batched`] is the multi-operand-set
-//!   entry point for library callers, defaulting to a loop because the
-//!   built-in passes lane-batch *beneath* this interface);
+//!   entry point for library callers: the microprogrammed-array flows
+//!   keep the default loop because their passes lane-batch *beneath*
+//!   this interface, while the TPU overrides it to fuse every set's
+//!   lowered tiles into one batched systolic run);
 //! * pass description ([`DataflowCompiler::compile`] → [`PassPlan`]:
 //!   operand/output geometry, the zero-free property and the MAC-slot
 //!   budget — what the CLI `flows` listing renders and external
@@ -331,6 +333,10 @@ pub trait DataflowCompiler: Sync {
     /// whose pass implementations batch internally (the microprogrammed
     /// array's lane-parallel engine) need no override because batching
     /// happens below this interface and is bit-identical by contract.
+    /// Flows that can fuse work *across* sets — the TPU streams every
+    /// set's same-geometry lowered tiles through one batched systolic
+    /// run — override it; the override must stay bit-identical to the
+    /// per-set loop (the `engine_matrix` differential harness pins this).
     fn execute_batched(
         &self,
         arch: &ArchConfig,
@@ -427,6 +433,19 @@ impl DataflowCompiler for TpuCompiler {
             PlaneOp::Transpose { s, .. } => tpu::transpose_pass(arch, &ops.a, &ops.b, s),
             PlaneOp::Dilated { s, .. } => tpu::dilated_pass(arch, &ops.a, &ops.b, s),
         }
+    }
+
+    fn execute_batched(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        sets: &[PlaneOperands],
+    ) -> Result<Vec<(Mat, PassStats)>, SimError> {
+        // no scalar fallback loop: same-op sets lower up front and their
+        // same-geometry tiles stream through one BatchSystolicSim run
+        // (bit-identical to per-set execute, pinned in tpu's unit tests
+        // and the engine_matrix differential harness)
+        tpu::batched_pass(arch, op, sets)
     }
 
     fn nf_tile(&self, arch: &ArchConfig, layer: &ConvLayer) -> usize {

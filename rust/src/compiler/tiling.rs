@@ -598,7 +598,10 @@ pub fn layer_cost_from_proxy(
 /// Per-plane stats of a TPU pass that lowers `nf_tile` filters into one
 /// matmul (B has `nf_tile` columns), amortizing the patch-matrix stream.
 /// (Called by the registry's TPU compiler; lives here with the rest of
-/// the proxy machinery.)
+/// the proxy machinery.) The lowered matmul dispatches through the
+/// shared [`SimEngine`](crate::sim::batch::SimEngine) policy, so under
+/// `Auto` its same-geometry output tiles run lane-parallel — the proxy
+/// numbers are bit-identical either way.
 pub(crate) fn tpu_multi_proxy(
     arch: &ArchConfig,
     op: PlaneOp,

@@ -10,13 +10,37 @@
 //! [`registry`](crate::compiler::registry) dispatches them uniformly.
 //! The systolic model itself has no failure modes today; the `Result` is
 //! the shared contract, not a prediction of errors.
+//!
+//! Every pass dispatches its lowered matmul through
+//! [`systolic_matmul_policy`]: under the shared
+//! [`SimEngine`](crate::sim::batch::SimEngine) policy, same-geometry
+//! output tiles stream lane-parallel through the batched systolic engine
+//! ([`BatchSystolicSim`]) with bit-identical results. [`batched_pass`]
+//! extends that across operand *sets*: several same-op plane passes fuse
+//! their tile streams into one batched run (the registry's
+//! `TpuCompiler::execute_batched`).
 
 use super::lowering::{col2out, filter_col, im2col};
+use super::registry::PlaneOperands;
+use super::tiling::PlaneOp;
 use crate::config::ArchConfig;
+use crate::sim::batch::systolic::systolic_matmul_policy;
+use crate::sim::batch::{use_batched, BatchSystolicSim};
 use crate::sim::stats::PassStats;
-use crate::sim::systolic::systolic_matmul;
 use crate::sim::SimError;
 use crate::tensor::Mat;
+
+/// Lower a strided direct convolution to its `(patch matrix, filter
+/// column)` matmul operands plus the output geometry `(e, f)` — the ONE
+/// copy of the lowering arithmetic, shared by the per-set passes below
+/// and by [`lower_plane`]/[`batched_pass`], so the fused batched path
+/// can never drift from the per-set path it must stay bit-identical to.
+fn lower_direct(x: &Mat, w: &Mat, s: usize) -> (Mat, Mat, usize, usize) {
+    let k = w.rows;
+    let e = (x.rows - k) / s + 1;
+    let f = (x.cols - k) / s + 1;
+    (im2col(x, k, s), filter_col(w), e, f)
+}
 
 /// Direct convolution on the TPU dataflow.
 pub fn direct_pass(
@@ -25,11 +49,8 @@ pub fn direct_pass(
     w: &Mat,
     s: usize,
 ) -> Result<(Mat, PassStats), SimError> {
-    let k = w.rows;
-    let e = (x.rows - k) / s + 1;
-    let f = (x.cols - k) / s + 1;
-    let patches = im2col(x, k, s);
-    let (out, stats) = systolic_matmul(arch, &patches, &filter_col(w));
+    let (patches, bcol, e, f) = lower_direct(x, w, s);
+    let (out, stats) = systolic_matmul_policy(arch, &patches, &bcol);
     Ok((col2out(&out, e, f), stats))
 }
 
@@ -49,7 +70,7 @@ pub fn direct_pass_multi(
     let f = (x.cols - k) / s + 1;
     let patches = im2col(x, k, s);
     let b = Mat::from_fn(k * k, ws.len(), |row, col| ws[col].data[row]);
-    let (out, stats) = systolic_matmul(arch, &patches, &b);
+    let (out, stats) = systolic_matmul_policy(arch, &patches, &b);
     let outs = (0..ws.len())
         .map(|c| {
             let col = Mat::from_fn(e * f, 1, |r, _| out.at(r, c));
@@ -57,6 +78,62 @@ pub fn direct_pass_multi(
         })
         .collect();
     Ok((outs, stats))
+}
+
+/// Lower one plane op for [`batched_pass`]: the same padded-operand
+/// preparation [`transpose_pass`]/[`dilated_pass`] perform before
+/// delegating to [`direct_pass`], followed by the shared
+/// [`lower_direct`] — so both paths run the identical arithmetic.
+fn lower_plane(op: PlaneOp, ops: &PlaneOperands) -> (Mat, Mat, usize, usize) {
+    match op {
+        PlaneOp::Direct { s, .. } => lower_direct(&ops.a, &ops.b, s),
+        // transpose_pass: dilate + border-pad the error, rotate the
+        // filter, direct conv at stride 1
+        PlaneOp::Transpose { s, .. } => lower_direct(
+            &ops.a.dilate(s).pad_border(ops.b.rows - 1),
+            &ops.b.rot180(),
+            1,
+        ),
+        // dilated_pass: the dilated error is the kernel, stride 1
+        PlaneOp::Dilated { s, .. } => lower_direct(&ops.a, &ops.b.dilate(s), 1),
+    }
+}
+
+/// Execute `op` over several operand sets sharing one lowered schedule:
+/// every set is lowered up front, and all their same-geometry output
+/// tiles stream through one [`BatchSystolicSim`] run instead of a scalar
+/// loop per set. Bit-identical to per-set [`direct_pass`]/
+/// [`transpose_pass`]/[`dilated_pass`] calls under every
+/// [`SimEngine`](crate::sim::batch::SimEngine) policy (the batched
+/// engine's equivalence contract); under `Scalar` — or for a singleton
+/// under `Auto` — this falls back to the per-set loop.
+pub fn batched_pass(
+    arch: &ArchConfig,
+    op: PlaneOp,
+    sets: &[PlaneOperands],
+) -> Result<Vec<(Mat, PassStats)>, SimError> {
+    let one = |ops: &PlaneOperands| match op {
+        PlaneOp::Direct { s, .. } => direct_pass(arch, &ops.a, &ops.b, s),
+        PlaneOp::Transpose { s, .. } => transpose_pass(arch, &ops.a, &ops.b, s),
+        PlaneOp::Dilated { s, .. } => dilated_pass(arch, &ops.a, &ops.b, s),
+    };
+    // One compiled pass means one operand geometry; a caller mixing
+    // shapes under a single op gets the per-set loop, not a panic.
+    let shape =
+        |ops: &PlaneOperands| (ops.a.rows, ops.a.cols, ops.b.rows, ops.b.cols);
+    let uniform = sets.windows(2).all(|w| shape(&w[0]) == shape(&w[1]));
+    if !use_batched(sets.len()) || !uniform {
+        return sets.iter().map(one).collect();
+    }
+    let lowered: Vec<(Mat, Mat, usize, usize)> =
+        sets.iter().map(|ops| lower_plane(op, ops)).collect();
+    let pairs: Vec<(&Mat, &Mat)> = lowered.iter().map(|(a, b, _, _)| (a, b)).collect();
+    let results = BatchSystolicSim::new(arch).run(&pairs);
+    Ok(lowered
+        .iter()
+        .zip(results)
+        .map(|(&(_, _, e, f), (out, stats))| (col2out(&out, e, f), stats))
+        .collect())
 }
 
 /// Transposed conv: lower the dilated + border-padded error (§3.1.1).
@@ -133,6 +210,33 @@ mod tests {
             let (got, _) = dilated_pass(&arch, &x, &e, s).unwrap();
             got.assert_close(&conv::dilated_conv(&x, &e, s), 1e-3);
         });
+    }
+
+    #[test]
+    fn batched_pass_equals_per_set_passes_for_every_op_family() {
+        // the multi-set batched entry point (TpuCompiler::execute_batched)
+        // must be bit-identical to per-set pass calls — matrices AND stats
+        let arch = arch();
+        for op in [
+            PlaneOp::Direct { hx: 9, k: 3, s: 2 },
+            PlaneOp::Transpose { he: 4, k: 3, s: 2 },
+            PlaneOp::Dilated { he: 3, k: 3, s: 2 },
+        ] {
+            let sets: Vec<PlaneOperands> = (0..5)
+                .map(|i| PlaneOperands::random(op, 0x7E57 + i))
+                .collect();
+            let batched = batched_pass(&arch, op, &sets).unwrap();
+            assert_eq!(batched.len(), sets.len());
+            for (ops, got) in sets.iter().zip(&batched) {
+                let one = match op {
+                    PlaneOp::Direct { s, .. } => direct_pass(&arch, &ops.a, &ops.b, s),
+                    PlaneOp::Transpose { s, .. } => transpose_pass(&arch, &ops.a, &ops.b, s),
+                    PlaneOp::Dilated { s, .. } => dilated_pass(&arch, &ops.a, &ops.b, s),
+                }
+                .unwrap();
+                assert_eq!(&one, got, "{op:?}");
+            }
+        }
     }
 
     #[test]

@@ -17,11 +17,16 @@
 //!    ([`tiling::layer_cost_from_proxy`]). Distinct [`CostKey`]s often
 //!    collapse here — layers differing only in channel/filter counts
 //!    or in geometry the `SIM_CAP` proxy absorbs.
-//! 3. **shard** — the groups are distributed across `threads` scoped
-//!    workers via an atomic cursor (work stealing by index; tokio is
-//!    unavailable in this offline image — see Cargo.toml). Each member
-//!    job writes its result into a dedicated [`OnceLock`] slot: no
-//!    shared `Mutex<Vec<_>>`, no cross-worker contention on results.
+//! 3. **shard** — two work-stealing phases over `threads` scoped
+//!    workers, each driven by an atomic cursor (work stealing by index;
+//!    tokio is unavailable in this offline image — see Cargo.toml).
+//!    Phase A simulates one cycle-accurate proxy per *group*; phase B
+//!    extends the shared measurement analytically per *member*, so a
+//!    giant group (every repeated-shape layer of a network fused onto
+//!    one proxy) spreads its extension work across all workers instead
+//!    of serializing on one. Each member job writes its result into a
+//!    dedicated [`OnceLock`] slot: no shared `Mutex<Vec<_>>`, no
+//!    cross-worker contention on results.
 //! 4. **fan-out** — results are cloned back onto the original job list,
 //!    preserving submission order exactly, so callers that index or
 //!    `chunks()` the result vector are unaffected by the dedup.
@@ -39,6 +44,7 @@ use crate::compiler::Dataflow;
 use crate::config::ArchConfig;
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::{ConvLayer, TrainingPass};
+use crate::sim::stats::PassStats;
 
 use super::cache::{CachedCost, CostCache};
 
@@ -204,7 +210,11 @@ where
         groups[g].push(slot);
     }
 
-    // -- shard: atomic-cursor work stealing over the groups --------------
+    // -- shard, phase A: work-stealing over the group *proxies* ----------
+    // One cycle-accurate proxy simulation per group (the expensive part),
+    // distributed across workers by an atomic cursor.
+    let proxies: Vec<OnceLock<Result<PassStats, String>>> =
+        (0..groups.len()).map(|_| OnceLock::new()).collect();
     if !groups.is_empty() {
         let cursor = AtomicUsize::new(0);
         let workers = threads.max(1).min(groups.len());
@@ -215,26 +225,51 @@ where
                     if g >= groups.len() {
                         break;
                     }
-                    let members = &groups[g];
-                    let j0 = &jobs[unique_job[members[0]]];
+                    let j0 = &jobs[unique_job[groups[g][0]]];
                     let arch = arch_of(j0.flow);
-                    // one cycle-accurate proxy simulation per group
-                    let proxy =
-                        tiling::proxy_stats(&arch, &j0.layer, j0.pass, j0.flow)
-                            .map_err(|e| e.to_string());
-                    for &slot in members {
-                        let ji = unique_job[slot];
-                        let job = &jobs[ji];
-                        let cost = match &proxy {
-                            Ok(ps) => Ok(tiling::layer_cost_from_proxy(
-                                &arch, params, dram, &job.layer, job.pass, job.flow,
-                                job.batch, ps,
-                            )),
-                            Err(e) => Err(e.clone()),
-                        };
-                        cache.insert(keys[ji], cost.clone());
-                        let _ = slots[slot].set(cost);
+                    let proxy = tiling::proxy_stats(&arch, &j0.layer, j0.pass, j0.flow)
+                        .map_err(|e| e.to_string());
+                    let _ = proxies[g].set(proxy);
+                });
+            }
+        });
+    }
+
+    // -- shard, phase B: member extension at *member* granularity --------
+    // Extension is analytic and cheap per member, but one group can hold
+    // most of a sweep (every repeated-shape layer of a network sharing a
+    // proxy). Sharding members instead of groups keeps all workers busy
+    // rather than leaving one to extend a giant group serially while the
+    // rest idle.
+    let members: Vec<(usize, usize)> = groups
+        .iter()
+        .enumerate()
+        .flat_map(|(g, member_slots)| member_slots.iter().map(move |&slot| (g, slot)))
+        .collect();
+    if !members.is_empty() {
+        let cursor = AtomicUsize::new(0);
+        let workers = threads.max(1).min(members.len());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= members.len() {
+                        break;
                     }
+                    let (g, slot) = members[i];
+                    let ji = unique_job[slot];
+                    let job = &jobs[ji];
+                    let arch = arch_of(job.flow);
+                    let proxy = proxies[g].get().expect("phase A filled every group");
+                    let cost = match proxy {
+                        Ok(ps) => Ok(tiling::layer_cost_from_proxy(
+                            &arch, params, dram, &job.layer, job.pass, job.flow,
+                            job.batch, ps,
+                        )),
+                        Err(e) => Err(e.clone()),
+                    };
+                    cache.insert(keys[ji], cost.clone());
+                    let _ = slots[slot].set(cost);
                 });
             }
         });
@@ -378,6 +413,30 @@ mod tests {
             )
             .unwrap();
             assert_eq!(r.cost.as_ref().unwrap(), &direct);
+        }
+    }
+
+    #[test]
+    fn giant_group_extension_is_sharded_deterministically() {
+        // Twelve layers differing only in channel/filter counts fuse
+        // onto one proxy per pass; the member-extension phase spreads
+        // them across workers, and every member must still get its own
+        // exact (channel-dependent) cost regardless of thread count.
+        let layers: Vec<ConvLayer> = (0..12)
+            .map(|i| ConvLayer::conv("Zoo", "L", 16 + i, 57, 28, 3, 16 + 2 * i, 2))
+            .collect();
+        let jobs = job_matrix(&layers, &[Dataflow::EcoFlow], 1);
+        let p = EnergyParams::default();
+        let d = DramModel::default();
+        let wide = run_sweep(&p, &d, jobs.clone(), 8);
+        let serial = run_sweep(&p, &d, jobs.clone(), 1);
+        for ((w, s), j) in wide.iter().zip(&serial).zip(&jobs) {
+            assert_eq!(w.cost.as_ref().unwrap(), s.cost.as_ref().unwrap());
+            let direct = tiling::layer_cost(
+                &arch_for(j.flow), &p, &d, &j.layer, j.pass, j.flow, j.batch,
+            )
+            .unwrap();
+            assert_eq!(w.cost.as_ref().unwrap(), &direct);
         }
     }
 

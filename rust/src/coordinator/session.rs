@@ -126,11 +126,15 @@ impl SessionBuilder {
         self
     }
 
-    /// Microprogrammed-array engine choice. The engines are
-    /// bit-identical, so this only moves performance. Sets the
-    /// process-wide policy at [`build`](SessionBuilder::build) time;
-    /// unset (the default), the builder leaves it untouched
-    /// ([`SimEngine::Auto`] unless something else set it).
+    /// Simulation-engine choice for both PE-array fabrics (the
+    /// microprogrammed array and the TPU systolic array share one
+    /// policy). The engines are bit-identical, so this only moves
+    /// performance. Sets the process-wide policy at
+    /// [`build`](SessionBuilder::build) time; unset (the default), the
+    /// builder leaves it untouched ([`SimEngine::Auto`] unless
+    /// something else set it). The CLI's `--engine` flag feeds this
+    /// builder knob, giving the precedence: CLI flag > session builder
+    /// > pre-existing process override.
     pub fn engine(mut self, engine: SimEngine) -> Self {
         self.engine = Some(engine);
         self

@@ -340,66 +340,17 @@ impl<'a> BatchSim<'a> {
     }
 }
 
-/// Which microprogrammed-array execution engine shared-program runs use.
-///
-/// The engines are bit-identical by contract (see the module docs), so
-/// this is a *performance* knob, never a correctness one — which is what
-/// makes a process-wide override safe. The
-/// [`Session`](crate::coordinator::Session) builder owns it; `Auto` is
-/// the default and the only sensible production choice, `Scalar` exists
-/// to bisect engine suspicions, `Batched` to force lane-parallel runs
-/// even for singletons (e.g. when profiling the SoA loop).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum SimEngine {
-    /// Batch when two or more operand sets share a program (default).
-    #[default]
-    Auto,
-    /// Always the scalar reference engine.
-    Scalar,
-    /// Lane-parallel whenever at least one operand set exists.
-    Batched,
-}
-
-/// Process-wide engine choice: 0 = Auto, 1 = Scalar, 2 = Batched.
-static ENGINE_OVERRIDE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
-
-/// Set the process-wide engine choice (see [`SimEngine`]).
-pub fn set_engine_override(engine: SimEngine) {
-    let code = match engine {
-        SimEngine::Auto => 0,
-        SimEngine::Scalar => 1,
-        SimEngine::Batched => 2,
-    };
-    ENGINE_OVERRIDE.store(code, std::sync::atomic::Ordering::Relaxed);
-}
-
-/// The current process-wide engine choice.
-pub fn engine_override() -> SimEngine {
-    match ENGINE_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
-        1 => SimEngine::Scalar,
-        2 => SimEngine::Batched,
-        _ => SimEngine::Auto,
-    }
-}
-
 /// Run every operand set of `ops` through `mp`, choosing the engine per
-/// the process-wide [`SimEngine`] policy. Under `Auto`, two or more sets
-/// amortize one lane-parallel cycle loop and a singleton takes the
-/// scalar engine (SoA lanes would waste most of the arithmetic on
-/// padding). Results are bit-identical under every policy — this is the
-/// single policy point the tiled compiler passes share, so the
-/// batched/scalar split cannot drift between call sites.
+/// the process-wide [`SimEngine`](super::SimEngine) policy
+/// ([`use_batched`](super::use_batched) — shared with the systolic
+/// dispatch, so the batched/scalar split cannot drift between the two
+/// array fabrics). Results are bit-identical under every policy.
 pub fn run_shared_program(
     arch: &ArchConfig,
     mp: &Microprogram,
     ops: &[Operands],
 ) -> Result<Vec<(Mat, PassStats)>, SimError> {
-    let batched = match engine_override() {
-        SimEngine::Auto => ops.len() >= 2,
-        SimEngine::Scalar => false,
-        SimEngine::Batched => !ops.is_empty(),
-    };
-    if batched {
+    if super::use_batched(ops.len()) {
         BatchSim::new(arch, mp).run(ops)
     } else {
         ops.iter().map(|o| ArraySim::new(arch, mp).run(o)).collect()

@@ -13,8 +13,18 @@ use crate::sim::microprogram::{Operands, SrcRef};
 
 /// Number of operand sets processed per batched cycle loop. Eight f32
 /// lanes fill one AVX2 register (or two NEON quads); larger batches are
-/// processed in [`LANES`]-sized chunks by the engine.
+/// processed in [`LANES`]-sized chunks by the engine. The `lanes16`
+/// feature widens this to sixteen lanes (one AVX-512 register) — a
+/// build-time choice because the lane count is the array width of every
+/// PE register, so it must be a constant for the auto-vectorizer. Both
+/// widths are bit-identical to the scalar engines (the equivalence
+/// contract is per lane and width-independent); CI tests both.
+#[cfg(not(feature = "lanes16"))]
 pub const LANES: usize = 8;
+/// Number of operand sets processed per batched cycle loop (see the
+/// `lanes16`-off doc above): sixteen f32 lanes, one AVX-512 register.
+#[cfg(feature = "lanes16")]
+pub const LANES: usize = 16;
 
 /// One value per batched operand set.
 pub type Lane = [f32; LANES];

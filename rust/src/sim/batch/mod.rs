@@ -1,31 +1,142 @@
-//! Batched lane-parallel PE-array simulation.
+//! Batched lane-parallel simulation engines.
 //!
-//! The scalar [`ArraySim`](crate::sim::ArraySim) steps one operand set
-//! through the cycle-accurate array model. When several operand sets
-//! share a [`Microprogram`](crate::sim::Microprogram) — tiles of one
-//! processing pass, or scheduler jobs fused by their proxy fingerprint —
-//! re-running the scalar loop per set repays the full control cost
-//! (validation, queue bookkeeping, bus arbitration) for arithmetic that
-//! differs only in values. [`BatchSim`] amortizes that: the program is
-//! validated once, one cycle loop advances the control state, and every
-//! PE register/queue slot carries a struct-of-arrays [`Lane`] of
-//! `LANES` f32 values whose inner MAC loop auto-vectorizes.
+//! Both PE-array variants SASiML models have a scalar reference engine
+//! and a batched struct-of-arrays twin with one semantics:
 //!
-//! **Equivalence contract:** for every operand set in the batch, the
-//! returned `(Mat, PassStats)` is bit-identical to a scalar
-//! `ArraySim::run` on that set alone. This holds because the scalar
-//! engine's control flow is operand-value-independent (queue occupancy
-//! and stalls are structural); the only value-dependent behaviour —
-//! zero-operand clock gating — is tracked with per-lane masks. The
-//! contract is pinned by the property tests in `tests/batch_engine.rs`
-//! and relied on by the tiled passes in [`crate::compiler::rs`] and
-//! [`crate::compiler::ecoflow`].
+//! * the microprogrammed array — scalar
+//!   [`ArraySim`](crate::sim::ArraySim), batched [`BatchSim`]
+//!   ([`engine`]);
+//! * the TPU-style systolic array — scalar
+//!   [`SystolicSim`](crate::sim::systolic::SystolicSim), batched
+//!   [`BatchSystolicSim`] ([`systolic`]).
+//!
+//! When several operand sets share a schedule — tiles of one processing
+//! pass, scheduler jobs fused by their proxy fingerprint, or the
+//! same-geometry output tiles of one lowered matmul — re-running a
+//! scalar loop per set repays the full control cost (validation, queue
+//! bookkeeping, wavefront shifting) for arithmetic that differs only in
+//! values. The batched engines amortize that: control state advances
+//! once, and every register/queue/accumulator slot carries a
+//! struct-of-arrays [`Lane`] of [`LANES`] f32 values whose inner MAC
+//! loop auto-vectorizes (`lanes16` widens the lane count from 8 to 16
+//! for AVX-512 targets).
+//!
+//! **Equivalence contract:** for every operand set in a batch, the
+//! returned `(Mat, PassStats)` is bit-identical to the corresponding
+//! scalar engine run on that set alone. This holds because both scalar
+//! engines' control flow is operand-value-independent (queue occupancy,
+//! stalls and the systolic wavefront are structural); the only
+//! value-dependent behaviour — zero-operand clock gating — is tracked
+//! with per-lane masks. The contract is pinned by the property tests in
+//! `tests/batch_engine.rs` and `tests/systolic_batch.rs`, and by the
+//! cross-engine differential harness in `tests/engine_matrix.rs`.
+//!
+//! This module is also the single home of the engine-selection
+//! *policy*: [`SimEngine`], its process-wide override, and
+//! [`use_batched`] — consulted by the microprogrammed-array dispatch
+//! ([`run_shared_program`]) and the systolic dispatch
+//! ([`systolic::systolic_matmul_policy`]) alike, so the batched/scalar
+//! split cannot drift between the two fabrics.
 
 pub mod engine;
 pub mod lanes;
+pub mod systolic;
 
-pub use engine::{
-    engine_override, run_shared_program, run_shared_program_chunked, set_engine_override,
-    BatchSim, SimEngine,
-};
+pub use engine::{run_shared_program, run_shared_program_chunked, BatchSim};
 pub use lanes::{Lane, LANES};
+pub use systolic::BatchSystolicSim;
+
+/// Which execution engine shared-schedule runs use, for both array
+/// variants.
+///
+/// The engines are bit-identical by contract (see the module docs), so
+/// this is a *performance* knob, never a correctness one — which is what
+/// makes a process-wide override safe. The
+/// [`Session`](crate::coordinator::Session) builder owns it (and the
+/// CLI's `--engine` flag feeds the builder); `Auto` is the default and
+/// the only sensible production choice, `Scalar` exists to bisect engine
+/// suspicions, `Batched` to force lane-parallel runs even for singletons
+/// (e.g. when profiling the SoA loop).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimEngine {
+    /// Batch when two or more operand sets share a schedule (default).
+    #[default]
+    Auto,
+    /// Always the scalar reference engines.
+    Scalar,
+    /// Lane-parallel whenever at least one operand set exists.
+    Batched,
+}
+
+impl SimEngine {
+    /// Parse a CLI/config spelling (`auto` | `scalar` | `batched`).
+    pub fn parse(s: &str) -> Option<SimEngine> {
+        match s {
+            "auto" => Some(SimEngine::Auto),
+            "scalar" => Some(SimEngine::Scalar),
+            "batched" => Some(SimEngine::Batched),
+            _ => None,
+        }
+    }
+}
+
+/// Process-wide engine choice: 0 = Auto, 1 = Scalar, 2 = Batched.
+static ENGINE_OVERRIDE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+/// Set the process-wide engine choice (see [`SimEngine`]).
+pub fn set_engine_override(engine: SimEngine) {
+    let code = match engine {
+        SimEngine::Auto => 0,
+        SimEngine::Scalar => 1,
+        SimEngine::Batched => 2,
+    };
+    ENGINE_OVERRIDE.store(code, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// The current process-wide engine choice.
+pub fn engine_override() -> SimEngine {
+    match ENGINE_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
+        1 => SimEngine::Scalar,
+        2 => SimEngine::Batched,
+        _ => SimEngine::Auto,
+    }
+}
+
+/// The shared batched-vs-scalar decision: should `shared_sets` operand
+/// sets (or same-geometry tiles) that share one schedule run through a
+/// lane-parallel engine under the current [`SimEngine`] policy? Under
+/// `Auto`, two or more sets amortize one batched loop and a singleton
+/// takes the scalar engine (SoA lanes would waste most of the arithmetic
+/// on padding). Results are bit-identical under every policy — this is
+/// the single policy point both array fabrics consult, so the
+/// batched/scalar split cannot drift between call sites.
+pub fn use_batched(shared_sets: usize) -> bool {
+    match engine_override() {
+        SimEngine::Auto => shared_sets >= 2,
+        SimEngine::Scalar => false,
+        SimEngine::Batched => shared_sets >= 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_cli_spellings() {
+        assert_eq!(SimEngine::parse("auto"), Some(SimEngine::Auto));
+        assert_eq!(SimEngine::parse("scalar"), Some(SimEngine::Scalar));
+        assert_eq!(SimEngine::parse("batched"), Some(SimEngine::Batched));
+        assert_eq!(SimEngine::parse("simd"), None);
+    }
+
+    #[test]
+    fn auto_policy_batches_only_shared_schedules() {
+        // default policy (tests run with the override unset)
+        assert_eq!(engine_override(), SimEngine::Auto);
+        assert!(!use_batched(0));
+        assert!(!use_batched(1));
+        assert!(use_batched(2));
+        assert!(use_batched(LANES + 1));
+    }
+}

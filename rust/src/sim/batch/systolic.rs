@@ -1,0 +1,390 @@
+//! Batched lane-parallel systolic-array engine (the TPU fabric's twin
+//! of [`BatchSim`](super::BatchSim)).
+//!
+//! The scalar [`SystolicSim`](crate::sim::systolic::SystolicSim) steps
+//! one operand pair through the wavefront model, one output tile at a
+//! time. The wavefront *schedule* of a tile — which PE holds operands in
+//! which cycle, when injection starts and stops, how long the drain
+//! takes — depends only on the tile geometry `(rows, cols, k)` and the
+//! architecture, never on operand values. So every same-geometry tile,
+//! whether it comes from another corner of the same matmul or from a
+//! different operand pair entirely, marches through the identical
+//! control schedule. [`BatchSystolicSim`] exploits that: it validates
+//! the batch geometry once, groups tile jobs by `(rows, cols)`, and
+//! streams [`LANES`] of them through a single wavefront loop in
+//! struct-of-arrays lanes — the MAC inner loop auto-vectorizes, and
+//! per-lane masks track the two value-dependent behaviours (zero-operand
+//! clock gating, and the drain of ragged final chunks whose padding
+//! lanes must not write outputs).
+//!
+//! **Equivalence contract:** for every operand pair in the batch, the
+//! returned `(Mat, PassStats)` is bit-identical to
+//! `SystolicSim::matmul` on that pair alone — by construction, because
+//! both engines iterate the same [`tile_spans`], count the same
+//! structural events, perform the same per-lane arithmetic in the same
+//! order, and apply the same [`pipeline_adjust`]. Pinned by the property
+//! tests in `tests/systolic_batch.rs` across geometries, batch sizes and
+//! both lane widths.
+
+use super::lanes::{self, Lane, LANES, ZERO_LANE};
+use crate::config::ArchConfig;
+use crate::sim::stats::PassStats;
+use crate::sim::systolic::{pipeline_adjust, systolic_matmul, tile_spans};
+use crate::tensor::Mat;
+
+/// The batched systolic-array simulator. Construct once per architecture
+/// and [`run`](BatchSystolicSim::run) with any number of same-geometry
+/// operand pairs; their output tiles are grouped by tile geometry and
+/// processed in [`LANES`]-sized chunks.
+pub struct BatchSystolicSim<'a> {
+    pub arch: &'a ArchConfig,
+}
+
+/// One tile job: (operand-pair index, span index).
+type TileJob = (usize, usize);
+
+impl<'a> BatchSystolicSim<'a> {
+    pub fn new(arch: &'a ArchConfig) -> Self {
+        Self { arch }
+    }
+
+    /// One matmul through the batched engine: the product's
+    /// same-geometry output tiles stream through the lanes together.
+    /// Bit-identical to [`systolic_matmul`] on the same operands.
+    pub fn matmul(&self, a: &Mat, b: &Mat) -> (Mat, PassStats) {
+        self.run(&[(a, b)]).pop().expect("one pair in, one result out")
+    }
+
+    /// Multiply every `(a, b)` pair of the batch, in input order — each
+    /// result bit-identical to what [`systolic_matmul`] returns for that
+    /// pair alone. All pairs must share one `(M, K, N)` geometry (that
+    /// is what lets their tiles share a wavefront schedule); the batch
+    /// geometry is validated once, up front.
+    pub fn run(&self, pairs: &[(&Mat, &Mat)]) -> Vec<(Mat, PassStats)> {
+        if pairs.is_empty() {
+            return Vec::new();
+        }
+        let spans = tile_spans(self.arch, pairs[0].0.rows, pairs[0].1.cols);
+        self.run_spanned(pairs, &spans)
+    }
+
+    /// [`run`](BatchSystolicSim::run) with a precomputed span list —
+    /// [`systolic_matmul_policy`] already built one for its geometry
+    /// histogram, and this path is the proxy hot loop, so the O(tiles)
+    /// decomposition is not rebuilt. `spans` must be
+    /// `tile_spans(arch, M, N)` for the batch geometry; `pairs` must be
+    /// non-empty.
+    fn run_spanned(
+        &self,
+        pairs: &[(&Mat, &Mat)],
+        spans: &[(usize, usize, usize, usize)],
+    ) -> Vec<(Mat, PassStats)> {
+        let (m, k, n) = (pairs[0].0.rows, pairs[0].0.cols, pairs[0].1.cols);
+        for (a, b) in pairs {
+            assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+            assert_eq!(
+                (a.rows, a.cols, b.cols),
+                (m, k, n),
+                "batched systolic operand pairs must share geometry"
+            );
+        }
+
+        // Group tile jobs by tile geometry: every (rows, cols) group
+        // shares one wavefront schedule, whichever pair or corner of the
+        // output its members come from. Span-major order keeps the
+        // scalar engine's tile order within each pair (the accumulated
+        // counters are order-independent sums, but determinism is free).
+        let mut groups: Vec<((usize, usize), Vec<TileJob>)> = Vec::new();
+        for (t, &(_, _, rows, cols)) in spans.iter().enumerate() {
+            let geo = (rows, cols);
+            let gi = match groups.iter().position(|(g, _)| *g == geo) {
+                Some(i) => i,
+                None => {
+                    groups.push((geo, Vec::new()));
+                    groups.len() - 1
+                }
+            };
+            for p in 0..pairs.len() {
+                groups[gi].1.push((p, t));
+            }
+        }
+
+        let mut outs: Vec<Mat> = (0..pairs.len()).map(|_| Mat::zeros(m, n)).collect();
+        let mut stats: Vec<PassStats> = vec![PassStats::default(); pairs.len()];
+        for ((rows, cols), jobs) in &groups {
+            for chunk in jobs.chunks(LANES) {
+                self.run_tile_lanes(pairs, spans, chunk, *rows, *cols, k, &mut outs, &mut stats);
+            }
+        }
+        for s in &mut stats {
+            pipeline_adjust(self.arch, s, spans.len() as u64);
+        }
+        outs.into_iter().zip(stats).collect()
+    }
+
+    /// One lockstep wavefront pass over up to [`LANES`] same-geometry
+    /// tile jobs. Chunks shorter than `LANES` pad the spare lanes with
+    /// the last job; the schedule is value-independent, so padding lanes
+    /// are inert copies whose drain is masked off (they must not write
+    /// their duplicate's output region, harmlessly or not).
+    #[allow(clippy::too_many_arguments)]
+    fn run_tile_lanes(
+        &self,
+        pairs: &[(&Mat, &Mat)],
+        spans: &[(usize, usize, usize, usize)],
+        chunk: &[TileJob],
+        rows: usize,
+        cols: usize,
+        k: usize,
+        outs: &mut [Mat],
+        stats: &mut [PassStats],
+    ) {
+        let arch = self.arch;
+        let lane_job: [TileJob; LANES] =
+            std::array::from_fn(|l| chunk[l.min(chunk.len() - 1)]);
+        // Structural (value-independent) counters are shared by every
+        // lane; only the gating split is tracked per lane.
+        let mut base = PassStats::default();
+        let mut lane_macs = [0u64; LANES];
+        let mut lane_gated = [0u64; LANES];
+
+        // a_reg[i][j] / b_reg[i][j]: operands currently held by PE(i,j).
+        // The Some/None occupancy is part of the shared schedule, so one
+        // Option wraps the whole lane.
+        let mut a_reg = vec![vec![None::<Lane>; cols]; rows];
+        let mut b_reg = vec![vec![None::<Lane>; cols]; rows];
+        let mut acc = vec![vec![ZERO_LANE; cols]; rows];
+
+        // Skewed injection: row i of A enters at cycle i; col j of B at
+        // cycle j (identical to the scalar engine's run_tile).
+        let total_cycles = k + rows + cols - 1;
+        for t in 0..total_cycles {
+            // MAC phase: every PE holding both operands computes.
+            for i in 0..rows {
+                for j in 0..cols {
+                    if let (Some(av), Some(bv)) = (a_reg[i][j], b_reg[i][j]) {
+                        if arch.clock_gating {
+                            lanes::tally_gating(&mut lane_gated, &mut lane_macs, &av, &bv);
+                        } else {
+                            for mac in &mut lane_macs {
+                                *mac += 1;
+                            }
+                        }
+                        lanes::mac(&mut acc[i][j], &av, &bv);
+                        base.spad_reads += 1;
+                        base.spad_writes += 1;
+                        base.pe_busy += 1;
+                    } else {
+                        base.pe_idle += 1;
+                    }
+                }
+            }
+            // Shift phase: A right, B down (one hop per cycle).
+            for i in 0..rows {
+                for j in (1..cols).rev() {
+                    a_reg[i][j] = a_reg[i][j - 1];
+                    if a_reg[i][j].is_some() {
+                        base.local_words += 1;
+                    }
+                }
+                // inject A[i, t - i] at the left edge (skew by row index)
+                let kk = t as isize - i as isize;
+                a_reg[i][0] = if (0..k as isize).contains(&kk) {
+                    base.noc_words += 1;
+                    base.gbuf_reads += 1;
+                    Some(std::array::from_fn(|l| {
+                        let (p, span) = lane_job[l];
+                        pairs[p].0.at(spans[span].0 + i, kk as usize)
+                    }))
+                } else {
+                    None
+                };
+            }
+            for j in 0..cols {
+                for i in (1..rows).rev() {
+                    b_reg[i][j] = b_reg[i - 1][j];
+                    if b_reg[i][j].is_some() {
+                        base.local_words += 1;
+                    }
+                }
+                let kk = t as isize - j as isize;
+                b_reg[0][j] = if (0..k as isize).contains(&kk) {
+                    base.noc_words += 1;
+                    base.gbuf_reads += 1;
+                    Some(std::array::from_fn(|l| {
+                        let (p, span) = lane_job[l];
+                        pairs[p].1.at(kk as usize, spans[span].1 + j)
+                    }))
+                } else {
+                    None
+                };
+            }
+        }
+        // Drain phase: rows*cols outputs through the GON — structural
+        // counters once (every lane's tile drains the same words), output
+        // writes per *live* lane only (the drain mask).
+        let ow = arch.noc.output_words_per_cycle(arch.word_bits);
+        let drain = (rows * cols).div_ceil(ow) as u64;
+        base.gon_words += (rows * cols) as u64;
+        base.gbuf_writes += (rows * cols) as u64;
+        for (l, &(p, span)) in chunk.iter().enumerate() {
+            let (m0, n0, _, _) = spans[span];
+            for i in 0..rows {
+                for j in 0..cols {
+                    *outs[p].at_mut(m0 + i, n0 + j) = acc[i][j][l];
+                }
+            }
+            let mut tile = base;
+            tile.cycles =
+                total_cycles as u64 + drain + (arch.mul_stages + arch.add_stages) as u64;
+            tile.macs = lane_macs[l];
+            tile.gated_macs = lane_gated[l];
+            stats[p].accumulate(&tile);
+        }
+    }
+}
+
+/// Policy-driven systolic matmul: the single dispatch point the TPU
+/// compiler passes share. Applies the process-wide
+/// [`SimEngine`](super::SimEngine) policy to this fabric's unit of
+/// sharing — same-geometry output tiles — exactly as
+/// [`use_batched`](super::use_batched) applies it to the
+/// microprogrammed array's shared-program runs: `Auto` batches when at
+/// least two output tiles of this product share a geometry, `Scalar`
+/// always takes the reference engine, and `Batched` forces the
+/// lane-parallel engine. Results are bit-identical under every policy.
+pub fn systolic_matmul_policy(arch: &ArchConfig, a: &Mat, b: &Mat) -> (Mat, PassStats) {
+    // Forced engines return before any decomposition work: this runs on
+    // the proxy hot path, and under `Scalar` (the bisection mode) the
+    // span histogram would be computed only to be thrown away.
+    match super::engine_override() {
+        super::SimEngine::Scalar => return systolic_matmul(arch, a, b),
+        super::SimEngine::Batched => return BatchSystolicSim::new(arch).matmul(a, b),
+        super::SimEngine::Auto => {}
+    }
+    // Auto: batch iff at least two output tiles share a geometry. A
+    // tiled matmul has at most four distinct geometries (full body,
+    // right edge, bottom edge, corner), so the histogram scan is cheap.
+    let spans = tile_spans(arch, a.rows, b.cols);
+    let mut geos: Vec<((usize, usize), usize)> = Vec::new();
+    for &(_, _, rows, cols) in &spans {
+        match geos.iter().position(|(g, _)| *g == (rows, cols)) {
+            Some(i) => geos[i].1 += 1,
+            None => geos.push(((rows, cols), 1)),
+        }
+    }
+    if geos.iter().any(|(_, c)| *c >= 2) {
+        BatchSystolicSim::new(arch)
+            .run_spanned(&[(a, b)], &spans)
+            .pop()
+            .expect("one pair in, one result out")
+    } else {
+        systolic_matmul(arch, a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::{for_each_case, Prng};
+
+    fn small_arch() -> ArchConfig {
+        ArchConfig {
+            array_rows: 4,
+            array_cols: 5,
+            ..ArchConfig::default()
+        }
+    }
+
+    fn assert_identical(got: &(Mat, PassStats), want: &(Mat, PassStats)) {
+        assert_eq!(got.0, want.0, "output matrix diverged from scalar");
+        assert_eq!(got.1, want.1, "PassStats diverged from scalar");
+    }
+
+    #[test]
+    fn single_pair_multi_tile_matches_scalar() {
+        // 11x7x12 on a 4x5 array: 9 tiles in 4 geometries, two groups
+        // with multiple members — the lane path engages within one pair.
+        let arch = small_arch();
+        let mut rng = Prng::new(0x5B5);
+        let a = Mat::random(11, 7, &mut rng);
+        let b = Mat::random(7, 12, &mut rng);
+        let got = BatchSystolicSim::new(&arch).matmul(&a, &b);
+        assert_identical(&got, &systolic_matmul(&arch, &a, &b));
+    }
+
+    #[test]
+    fn batch_matches_scalar_per_pair_with_gating_divergence() {
+        // lanes must keep distinct macs/gated_macs splits: pair 0 is
+        // all-zero A (fully gated), pair 1 dense.
+        let arch = small_arch();
+        let zero = Mat::zeros(4, 4);
+        let mut rng = Prng::new(0x5B6);
+        let dense_a = Mat::from_fn(4, 4, |_, _| 1.0 + rng.f32());
+        let b = Mat::from_fn(4, 5, |_, _| 1.0 + rng.f32());
+        let pairs: Vec<(&Mat, &Mat)> = vec![(&zero, &b), (&dense_a, &b)];
+        let got = BatchSystolicSim::new(&arch).run(&pairs);
+        assert_eq!(got.len(), 2);
+        for ((a, b), r) in pairs.iter().zip(&got) {
+            assert_identical(r, &systolic_matmul(&arch, a, b));
+        }
+        assert_eq!(got[0].1.macs, 0, "all-zero pair is fully gated");
+        assert_eq!(got[1].1.gated_macs, 0, "dense pair is never gated");
+    }
+
+    #[test]
+    fn more_jobs_than_lanes_chunk_raggedly() {
+        let arch = small_arch();
+        let mut rng = Prng::new(0x5B7);
+        let mats: Vec<(Mat, Mat)> = (0..LANES + 3)
+            .map(|_| (Mat::random(6, 3, &mut rng), Mat::random(3, 7, &mut rng)))
+            .collect();
+        let pairs: Vec<(&Mat, &Mat)> = mats.iter().map(|(a, b)| (a, b)).collect();
+        let got = BatchSystolicSim::new(&arch).run(&pairs);
+        assert_eq!(got.len(), LANES + 3);
+        for ((a, b), r) in pairs.iter().zip(&got) {
+            assert_identical(r, &systolic_matmul(&arch, a, b));
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let arch = small_arch();
+        assert!(BatchSystolicSim::new(&arch).run(&[]).is_empty());
+    }
+
+    #[test]
+    fn policy_dispatch_is_bit_identical_to_scalar() {
+        // whatever engine the policy picks, the result cannot move
+        let arch = small_arch();
+        for_each_case(10, 0x5B8, |rng| {
+            let m = rng.range(1, 11);
+            let k = rng.range(1, 8);
+            let n = rng.range(1, 12);
+            let a = Mat::random(m, k, rng);
+            let b = Mat::random(k, n, rng);
+            let got = systolic_matmul_policy(&arch, &a, &b);
+            assert_identical(&got, &systolic_matmul(&arch, &a, &b));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "share geometry")]
+    fn mixed_geometry_batch_rejected() {
+        let arch = small_arch();
+        let a1 = Mat::zeros(4, 3);
+        let b1 = Mat::zeros(3, 5);
+        let a2 = Mat::zeros(5, 3);
+        let b2 = Mat::zeros(3, 5);
+        BatchSystolicSim::new(&arch).run(&[(&a1, &b1), (&a2, &b2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions")]
+    fn dimension_mismatch_panics_like_scalar() {
+        let arch = small_arch();
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        BatchSystolicSim::new(&arch).run(&[(&a, &b)]);
+    }
+}

@@ -19,10 +19,12 @@
 //! Two PE-array variants are modelled, as in the paper: the
 //! Eyeriss/EcoFlow microprogrammed array ([`array`]) and a TPU-style
 //! output-stationary systolic array for lowered matmuls ([`systolic`]).
-//! The microprogrammed array has two execution engines: the scalar
-//! reference ([`array::ArraySim`]) and a batched lane-parallel engine
-//! ([`batch::BatchSim`]) that runs several operand sets through one
-//! cycle loop with bit-identical results.
+//! Each variant has two execution engines with one semantics: a scalar
+//! reference ([`array::ArraySim`], [`systolic::SystolicSim`]) and a
+//! batched lane-parallel engine ([`batch::BatchSim`],
+//! [`batch::BatchSystolicSim`]) that runs several operand sets through
+//! one cycle loop with bit-identical results. Engine selection is a
+//! shared policy ([`batch::SimEngine`]) consulted by both fabrics.
 
 pub mod array;
 pub mod batch;
@@ -31,6 +33,7 @@ pub mod stats;
 pub mod systolic;
 
 pub use array::{ArraySim, SimError};
-pub use batch::{BatchSim, LANES};
+pub use batch::{BatchSim, BatchSystolicSim, SimEngine, LANES};
 pub use microprogram::{Microprogram, Operands, PeInstr, SrcRef, WSrc, XSrc};
 pub use stats::PassStats;
+pub use systolic::SystolicSim;

@@ -10,40 +10,50 @@
 //! The simulation is cycle-by-cycle and functional: skewed injection,
 //! one-hop-per-cycle propagation, local accumulation, and a drain phase
 //! bounded by the GON width. Zero operands are clock-gated (Table 3).
+//!
+//! Like the microprogrammed array, the systolic model has two execution
+//! engines with one semantics: the scalar reference here ([`SystolicSim`])
+//! and the batched lane-parallel engine
+//! ([`BatchSystolicSim`](crate::sim::batch::BatchSystolicSim)), which
+//! streams several same-geometry tile sets through one wavefront loop
+//! with bit-identical results. The tile decomposition ([`tile_spans`])
+//! and the multi-tile pipelining adjustment ([`pipeline_adjust`]) are
+//! shared by both engines, so the schedule cannot drift between them.
 
 use super::stats::PassStats;
 use crate::config::ArchConfig;
 use crate::tensor::Mat;
 
-/// Multiply `a` (M x K) by `b` (K x N) on the configured systolic array,
-/// tiling the output into `array_rows x array_cols` blocks.
-///
-/// Returns the product and the pass statistics (all tiles accumulated).
-pub fn systolic_matmul(arch: &ArchConfig, a: &Mat, b: &Mat) -> (Mat, PassStats) {
-    assert_eq!(a.cols, b.rows, "inner dimensions must agree");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+/// Output-tile spans `(m0, n0, rows, cols)` of an `m x n` product on the
+/// configured array, in the order the scalar engine simulates them
+/// (row-blocks outer, column-blocks inner). Both engines iterate exactly
+/// this list; the batched engine additionally groups spans that share a
+/// `(rows, cols)` geometry into lanes.
+pub fn tile_spans(arch: &ArchConfig, m: usize, n: usize) -> Vec<(usize, usize, usize, usize)> {
     let (tr, tc) = (arch.array_rows, arch.array_cols);
-    let mut out = Mat::zeros(m, n);
-    let mut stats = PassStats::default();
-    let mut tiles = 0u64;
+    let mut spans = Vec::new();
     let mut mtile = 0;
     while mtile < m {
         let rows = tr.min(m - mtile);
         let mut ntile = 0;
         while ntile < n {
             let cols = tc.min(n - ntile);
-            let s = run_tile(arch, a, b, mtile, ntile, rows, cols, k, &mut out);
-            stats.accumulate(&s);
-            tiles += 1;
+            spans.push((mtile, ntile, rows, cols));
             ntile += cols;
         }
         mtile += rows;
     }
-    // Successive tiles pipeline: the next tile's skewed operands enter as
-    // the previous tile drains, so the (R+C−1) fill/drain skew and the
-    // GON drain are paid once, not per tile. Adjust the per-tile-isolated
-    // measurements to the pipelined schedule (same MACs, same traffic).
+    spans
+}
+
+/// Adjust per-tile-isolated measurements to the pipelined multi-tile
+/// schedule: successive tiles overlap fill and drain, so the (R+C−1)
+/// skew and the GON drain are paid once, not per tile (same MACs, same
+/// traffic). No-op for a single tile. Applied identically by the scalar
+/// and batched engines after accumulating their per-tile stats.
+pub fn pipeline_adjust(arch: &ArchConfig, stats: &mut PassStats, tiles: u64) {
     if tiles > 1 {
+        let (tr, tc) = (arch.array_rows, arch.array_cols);
         let skew = (tr + tc - 1) as u64;
         let drain = ((tr * tc) as u64)
             .div_ceil(arch.noc.output_words_per_cycle(arch.word_bits) as u64);
@@ -53,7 +63,43 @@ pub fn systolic_matmul(arch: &ArchConfig, a: &Mat, b: &Mat) -> (Mat, PassStats) 
         let idle_per_tile = stats.pe_idle / tiles;
         stats.pe_idle = idle_per_tile + (stats.macs + stats.gated_macs) / 50;
     }
-    (out, stats)
+}
+
+/// The scalar (reference) systolic-array engine: one operand pair steps
+/// through the cycle-accurate wavefront model, tile by tile.
+pub struct SystolicSim<'a> {
+    pub arch: &'a ArchConfig,
+}
+
+impl<'a> SystolicSim<'a> {
+    pub fn new(arch: &'a ArchConfig) -> Self {
+        Self { arch }
+    }
+
+    /// Multiply `a` (M x K) by `b` (K x N), tiling the output into
+    /// `array_rows x array_cols` blocks. Returns the product and the
+    /// pass statistics (all tiles accumulated, pipelining applied).
+    pub fn matmul(&self, a: &Mat, b: &Mat) -> (Mat, PassStats) {
+        let arch = self.arch;
+        assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        let mut stats = PassStats::default();
+        let spans = tile_spans(arch, m, n);
+        for &(m0, n0, rows, cols) in &spans {
+            let s = run_tile(arch, a, b, m0, n0, rows, cols, k, &mut out);
+            stats.accumulate(&s);
+        }
+        pipeline_adjust(arch, &mut stats, spans.len() as u64);
+        (out, stats)
+    }
+}
+
+/// Multiply `a` (M x K) by `b` (K x N) on the configured systolic array
+/// with the scalar engine — the historical free-function entry point;
+/// [`SystolicSim::matmul`] is the method form.
+pub fn systolic_matmul(arch: &ArchConfig, a: &Mat, b: &Mat) -> (Mat, PassStats) {
+    SystolicSim::new(arch).matmul(a, b)
 }
 
 /// Cycle-accurate simulation of one output tile.

@@ -4,6 +4,12 @@
 //! zero-operand clock gating; (2) the persistent cost store round-trips
 //! bit-exactly (save → load → hit) and rejects corrupt or stale files
 //! by rebuilding instead of erroring or poisoning results.
+//!
+//! Engine-selection equivalence at the pass/cost-model level (tiled
+//! passes, `execute_batched`, `Session::layer_cost` under every
+//! `SimEngine`) lives in the cross-engine differential harness,
+//! `tests/engine_matrix.rs`; the systolic twin of the property tests
+//! here is `tests/systolic_batch.rs`.
 
 use ecoflow::compiler::{ecoflow as ef, rs, Dataflow};
 use ecoflow::config::ArchConfig;
@@ -103,29 +109,10 @@ fn property_batched_equals_scalar_ecoflow_filter_grad() {
     });
 }
 
-#[test]
-fn tiled_passes_unchanged_by_batching() {
-    // rs::direct_pass and ecoflow::transpose_pass now route
-    // identical-geometry tiles through BatchSim; their functional
-    // outputs must still match the golden convolutions exactly where
-    // batching engages (>= 2 full tiles).
-    let arch = ArchConfig::eyeriss();
-    let mut rng = Prng::new(0xBA7C_0004);
-    // 40 input rows -> 38 output rows -> tiles of 15/15/8 at k=3, s=1:
-    // the two full tiles run lane-parallel.
-    let x = Mat::random(40, 9, &mut rng);
-    let w = Mat::random(3, 3, &mut rng);
-    let (got, _) = rs::direct_pass(&arch, &x, &w, 1).unwrap();
-    got.assert_close(&ecoflow::tensor::conv::direct_conv(&x, &w, 1), 1e-3);
-
-    // 28x32 error map on a 13x15 array: four interior tiles share the
-    // (13, 15) geometry and batch; edge/corner tiles stay scalar.
-    let arch = ArchConfig::ecoflow();
-    let e = Mat::random(28, 32, &mut rng);
-    let w = Mat::random(3, 3, &mut rng);
-    let (got, _) = ef::transpose_pass(&arch, &e, &w, 2).unwrap();
-    got.assert_close(&ecoflow::tensor::conv::transposed_conv(&e, &w, 2), 1e-3);
-}
+// (The former `tiled_passes_unchanged_by_batching` spot check moved
+// into the engine_matrix differential harness, which sweeps the same
+// tiled passes — and every other engine-sensitive path — through both
+// engines per (PlaneOp × Dataflow) cell.)
 
 // --- persistent cost store --------------------------------------------
 

@@ -1,0 +1,146 @@
+//! The cross-engine differential harness: ONE parameterized runner
+//! sweeps every (PlaneOp family × Dataflow × SimEngine) cell through a
+//! `Session` sweep (the exact machinery behind `Session::layer_cost`,
+//! submitted as one job matrix so the scheduler really shards) and
+//! asserts that
+//!
+//! * **batched == scalar** — the lane-parallel engines (microprogrammed
+//!   array and systolic array alike) return bit-identical `LayerCost`s
+//!   to the scalar references, for every cell; and
+//! * **threads 1 == threads 8** — the sweep scheduler's sharding never
+//!   moves a result, under either engine.
+//!
+//! This replaces the ad-hoc per-engine spot checks that used to live in
+//! `batch_engine.rs` (tiled-pass functional checks) and alongside the
+//! dispatch tests in `registry_dispatch.rs`: every engine-sensitive path
+//! — pass tiling, proxy fusion, TPU tile lowering, `execute_batched` —
+//! funnels through `Session::layer_cost`, so one matrix pins them all.
+//! The plane level gets the same treatment below the cost model:
+//! `simulate_plane` per (op × flow) under each engine override.
+//!
+//! Everything lives in ONE `#[test]` because the engine choice is a
+//! process-wide override: a second concurrent test in this binary could
+//! flip the engine mid-sweep. (Separate test binaries are separate
+//! processes, so the rest of the suite is unaffected.)
+
+use ecoflow::compiler::tiling::{self, LayerCost, PlaneOp};
+use ecoflow::compiler::{Dataflow, DataflowCompiler, PlaneOperands};
+use ecoflow::coordinator::scheduler::{arch_for, SweepJob};
+use ecoflow::coordinator::Session;
+use ecoflow::model::{ConvLayer, TrainingPass};
+use ecoflow::sim::batch::{set_engine_override, SimEngine};
+
+const BATCH: usize = 2;
+
+/// Layers whose three training passes cover every `PlaneOp` family,
+/// strided and unit-stride, on both layer kinds.
+fn layer_matrix() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::conv("EngineMatrix", "conv-s2", 16, 17, 8, 3, 16, 2),
+        ConvLayer::conv("EngineMatrix", "conv-s1", 8, 10, 8, 3, 8, 1),
+        ConvLayer::tconv("EngineMatrix", "tconv-s2", 8, 7, 14, 4, 8, 2),
+    ]
+}
+
+/// Every (layer, pass, flow) cell's cost under one (engine, threads)
+/// configuration, in a fixed order — submitted as ONE sweep, so the
+/// scheduler's dedup → group → two-phase shard machinery actually runs
+/// with many groups and (for threads > 1) many workers. Per-cell
+/// `layer_cost` calls would each be a single-job sweep and the threads
+/// leg of the matrix would never exercise sharding at all.
+fn matrix_costs(engine: SimEngine, threads: usize) -> Vec<LayerCost> {
+    let session = Session::builder().engine(engine).threads(threads).build();
+    let mut jobs = Vec::new();
+    for layer in layer_matrix() {
+        for pass in TrainingPass::ALL {
+            for flow in Dataflow::ALL {
+                jobs.push(SweepJob {
+                    layer: layer.clone(),
+                    pass,
+                    flow,
+                    batch: BATCH,
+                });
+            }
+        }
+    }
+    session
+        .sweep(jobs)
+        .into_iter()
+        .map(|r| {
+            let tag = format!("{} {:?} {:?}", r.job.layer.name, r.job.pass, r.job.flow);
+            r.cost
+                .unwrap_or_else(|e| panic!("{tag} under {engine:?}: {e}"))
+        })
+        .collect()
+}
+
+#[test]
+fn engine_matrix_batched_equals_scalar_and_threads_1_equals_8() {
+    // --- the full cost-model matrix ---------------------------------
+    let scalar_1 = matrix_costs(SimEngine::Scalar, 1);
+    let scalar_8 = matrix_costs(SimEngine::Scalar, 8);
+    let batched_1 = matrix_costs(SimEngine::Batched, 1);
+    let batched_8 = matrix_costs(SimEngine::Batched, 8);
+    let auto_8 = matrix_costs(SimEngine::Auto, 8);
+
+    let mut cell = 0;
+    for layer in layer_matrix() {
+        for pass in TrainingPass::ALL {
+            for flow in Dataflow::ALL {
+                let tag = format!("{} {pass:?} {flow:?}", layer.name);
+                assert_eq!(scalar_1[cell], scalar_8[cell], "{tag}: scalar threads 1 vs 8");
+                assert_eq!(batched_1[cell], batched_8[cell], "{tag}: batched threads 1 vs 8");
+                assert_eq!(scalar_1[cell], batched_1[cell], "{tag}: batched vs scalar");
+                assert_eq!(scalar_1[cell], auto_8[cell], "{tag}: auto vs scalar");
+                cell += 1;
+            }
+        }
+    }
+
+    // --- the plane level, below the cost model ----------------------
+    // simulate_plane drives DataflowCompiler::execute directly: under
+    // the Batched override even singleton operand sets take the
+    // lane-parallel engines, so this exercises the padding-lane path of
+    // both fabrics too.
+    let ops = [
+        PlaneOp::Direct { hx: 9, k: 3, s: 2 },
+        PlaneOp::Direct { hx: 7, k: 3, s: 1 },
+        PlaneOp::Transpose { he: 5, k: 3, s: 2 },
+        PlaneOp::Dilated { he: 4, k: 3, s: 2 },
+    ];
+    for (i, op) in ops.into_iter().enumerate() {
+        for flow in Dataflow::ALL {
+            set_engine_override(SimEngine::Scalar);
+            let scalar = tiling::simulate_plane(&arch_for(flow), op, flow, 0xE9 + i as u64)
+                .expect("scalar plane");
+            set_engine_override(SimEngine::Batched);
+            let batched = tiling::simulate_plane(&arch_for(flow), op, flow, 0xE9 + i as u64)
+                .expect("batched plane");
+            assert_eq!(scalar.0, batched.0, "{op:?} {flow:?}: plane output diverged");
+            assert_eq!(scalar.1, batched.1, "{op:?} {flow:?}: plane stats diverged");
+        }
+    }
+
+    // --- execute_batched vs per-set execute, per engine -------------
+    // the TPU override (one fused systolic run) and the default loop
+    // must both match per-set execution under every policy.
+    for engine in [SimEngine::Scalar, SimEngine::Batched, SimEngine::Auto] {
+        set_engine_override(engine);
+        for op in ops {
+            for flow in Dataflow::ALL {
+                let arch = arch_for(flow);
+                let c = flow.resolve();
+                let sets: Vec<PlaneOperands> =
+                    (0..3).map(|i| PlaneOperands::random(op, 0xBEEF + i)).collect();
+                let fused = c.execute_batched(&arch, op, &sets).expect("batched execute");
+                for (ops_i, got) in sets.iter().zip(&fused) {
+                    let one = c.execute(&arch, op, ops_i).expect("per-set execute");
+                    assert_eq!(&one, got, "{op:?} {flow:?} {engine:?}");
+                }
+            }
+        }
+    }
+
+    // leave the process the way we found it
+    set_engine_override(SimEngine::Auto);
+}

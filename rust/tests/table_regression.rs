@@ -12,12 +12,18 @@
 //!    numbers are host-independent, so a committed snapshot survives);
 //!    any later drift fails with a diff-friendly message. Delete the
 //!    file to re-baseline after an *intentional* cost-model change.
+//!
+//! A second snapshot (`tests/golden/tpu_rows.txt`, same bootstrap
+//! scheme) pins the TPU dataflow's *absolute* per-layer numbers, which
+//! the normalized speedup rows cannot see — the systolic-batching
+//! safety net.
 
 use std::path::PathBuf;
 
 use ecoflow::compiler::Dataflow;
 use ecoflow::coordinator::e2e::E2eResult;
 use ecoflow::coordinator::Session;
+use ecoflow::model::{gan, zoo, TrainingPass};
 
 /// Networks pinned by the snapshot: the paper's headline CNN rows plus
 /// one GAN (the full six-network Table 6 is exercised by the benches).
@@ -76,6 +82,33 @@ fn golden_path() -> PathBuf {
         .join("e2e_speedups.txt")
 }
 
+fn tpu_golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("tpu_rows.txt")
+}
+
+/// Compare `snapshot` against the golden file at `path`, bootstrapping
+/// it on first run (the shared scheme of both snapshots here).
+fn check_golden(path: &std::path::Path, snapshot: &str, what: &str) {
+    match std::fs::read_to_string(path) {
+        Ok(golden) => {
+            assert_eq!(
+                golden, snapshot,
+                "{what} moved vs {}; if the cost model changed \
+                 intentionally, delete the file to re-baseline",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir");
+            std::fs::write(path, snapshot).expect("write golden");
+            eprintln!("bootstrapped golden snapshot at {}", path.display());
+        }
+    }
+}
+
 #[test]
 fn table6_table8_rows_survive_the_scheduler_refactor() {
     let serial = rows(1, false);
@@ -86,20 +119,43 @@ fn table6_table8_rows_survive_the_scheduler_refactor() {
     );
 
     let snapshot = serial.join("\n") + "\n";
-    let path = golden_path();
-    match std::fs::read_to_string(&path) {
-        Ok(golden) => {
-            assert_eq!(
-                golden, snapshot,
-                "Table 6/8 rows moved vs {}; if the cost model changed \
-                 intentionally, delete the file to re-baseline",
-                path.display()
-            );
-        }
-        Err(_) => {
-            std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir");
-            std::fs::write(&path, &snapshot).expect("write golden");
-            eprintln!("bootstrapped golden snapshot at {}", path.display());
+    check_golden(&golden_path(), &snapshot, "Table 6/8 rows");
+}
+
+#[test]
+fn tpu_rows_pin_the_systolic_path_absolutely() {
+    // The Table 6/8 speedup rows are *normalized to* the TPU dataflow,
+    // so a systolic regression that scales every flow's baseline moves
+    // no ratio. These rows pin the TPU path's absolute per-layer numbers
+    // — cycles and MAC/gating counts are exact integers, energy is
+    // formatted to a stable precision — over the snapshot networks' CNN
+    // layers and the GAN (transposed-conv) layer set, so a systolic
+    // batching regression shows up as a table diff, not just a property
+    // failure. Same bootstrap-then-commit scheme as e2e_speedups.txt.
+    let session = Session::builder().threads(4).build();
+    let mut rows = Vec::new();
+    let layers: Vec<_> = zoo::table5_layers()
+        .into_iter()
+        .filter(|l| CNNS.contains(&l.net))
+        .chain(gan::table7_layers())
+        .collect();
+    for layer in &layers {
+        for pass in TrainingPass::ALL {
+            let c = session
+                .layer_cost(layer, pass, Dataflow::Tpu, BATCH)
+                .expect("TPU layer cost");
+            rows.push(format!(
+                "tpu {:<12} {:<10} {:<10} cycles={} macs={} gated={} energy_pj={:.6e}",
+                layer.net,
+                layer.name,
+                pass.name(),
+                c.cycles,
+                c.stats.macs,
+                c.stats.gated_macs,
+                c.energy.total_pj(),
+            ));
         }
     }
+    let snapshot = rows.join("\n") + "\n";
+    check_golden(&tpu_golden_path(), &snapshot, "TPU Table 6/8 rows");
 }
