@@ -21,11 +21,23 @@ pub struct IdRequirement {
     pub bits: usize,
 }
 
+/// Baseline Eyeriss multicast controller: one ID register + comparator
+/// per PE (and per X-bus), 4-bit IDs in the chip. What every pass that
+/// does not need the §4.4 extension provisions.
+pub const BASELINE_ID: IdRequirement = IdRequirement { ids: 1, bits: 4 };
+
 /// ID requirement for a K×K filter at stride S (§4.4).
+///
+/// The formulas assume `1 ≤ S ≤ K` (a conv whose stride exceeds its
+/// filter skips input pixels entirely and degenerates to the dense
+/// single-ID case), so the stride is clamped into that range for *both*
+/// terms — previously only the group count clamped, and `ids` was
+/// computed from the raw stride.
 pub fn id_requirement(k: usize, stride: usize) -> IdRequirement {
-    let ids = k.div_ceil(stride);
+    let s = stride.clamp(1, k.max(1));
+    let ids = k.div_ceil(s);
     // 2K − S quantifies the total number of multicast groups in a row.
-    let groups = 2 * k - stride.min(k);
+    let groups = 2 * k - s;
     IdRequirement {
         ids,
         bits: bits_for(groups) as usize,
@@ -142,6 +154,27 @@ mod tests {
         assert_eq!(id_requirement(4, 1).ids, 4);
         assert_eq!(id_requirement(4, 2).ids, 2);
         assert_eq!(id_requirement(4, 4).ids, 1);
+    }
+
+    #[test]
+    fn oversized_stride_clamps_to_the_dense_case() {
+        // stride > k: both terms must degrade to the stride == k values
+        // rather than computing ids/groups from the raw stride (or, for
+        // stride 0, dividing by zero).
+        assert_eq!(id_requirement(3, 7), id_requirement(3, 3));
+        assert_eq!(id_requirement(4, 100), id_requirement(4, 4));
+        assert_eq!(id_requirement(3, 0), id_requirement(3, 1));
+        for (k, s) in [(1, 5), (3, 7), (4, 9)] {
+            let r = id_requirement(k, s);
+            assert!(r.ids >= 1, "k={k} s={s}: {r:?}");
+            assert!(r.bits >= 1, "k={k} s={s}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn baseline_is_a_single_small_id() {
+        assert_eq!(BASELINE_ID.ids, 1);
+        assert_eq!(BASELINE_ID.bits, 4);
     }
 
     #[test]

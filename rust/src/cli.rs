@@ -5,6 +5,8 @@
 //! ```text
 //! ecoflow fig3|fig8|fig9|fig10|fig11|fig12       regenerate a figure
 //! ecoflow table1|table2|table5|table6|table7|table8
+//! ecoflow traffic                                per-level traffic table
+//! ecoflow cost [--net N] [--layer L] [--pass P] [--flow F] [--batch B]
 //! ecoflow report                                 all tables + figures
 //! ecoflow flows                                  list registered dataflows
 //! ecoflow validate [--artifacts DIR]             golden JAX-vs-sim check
@@ -12,6 +14,10 @@
 //! ecoflow sweep [--csv]                          full layer sweep
 //! ecoflow version
 //! ```
+//!
+//! `cost` walks one layer through the staged pipeline (keys → traffic →
+//! energy) and prints the per-hierarchy-level breakdown; `traffic`
+//! renders the same access counts for the whole Fig. 10 job set.
 //!
 //! One [`Session`] is built per invocation from the flags (`--threads`,
 //! `--cache-file`, `--max-sim-cycles`) and shared by every sweep the
@@ -37,14 +43,14 @@ use anyhow::{anyhow, Result};
 
 use crate::compiler::tiling::PlaneOp;
 use crate::compiler::Dataflow;
-use crate::coordinator::scheduler::{default_threads, job_matrix};
+use crate::coordinator::scheduler::{default_threads, job_matrix, SweepJob};
 use crate::coordinator::Session;
-use crate::model::zoo;
+use crate::model::{gan, zoo, ConvLayer, TrainingPass};
 use crate::report::{FigureId, TableId};
 use crate::runtime::trainer::{Trainer, Variant};
 use crate::runtime::{golden, Engine};
 use crate::util::prng::Prng;
-use crate::util::table::Table;
+use crate::util::table::{pct, Table};
 
 /// Parsed command line: subcommand + `--key value` / `--flag` options.
 #[derive(Clone, Debug, Default)]
@@ -80,6 +86,9 @@ pub fn usage() -> &'static str {
      commands:\n\
      \u{20}  fig3|fig8|fig9|fig10|fig11|fig12   regenerate a paper figure\n\
      \u{20}  table1|table2|table5|table6|table7|table8\n\
+     \u{20}  traffic                            per-level traffic behind the Fig. 10 bars\n\
+     \u{20}  cost [--net N] [--layer L] [--pass forward|input-grad|filter-grad]\n\
+     \u{20}       [--flow RS|TPU|EcoFlow|GANAX] [--batch B]   keys -> traffic -> energy\n\
      \u{20}  report                             all tables + figures, one shared session\n\
      \u{20}  flows                              list the registered dataflows\n\
      \u{20}  validate [--artifacts DIR]         golden JAX-vs-simulator check\n\
@@ -179,6 +188,139 @@ fn flows_table() -> Table {
     t
 }
 
+/// Parse a `--pass` spelling (both CLI hyphens and the internal
+/// underscore names are accepted).
+fn parse_pass(s: &str) -> Option<TrainingPass> {
+    match s {
+        "forward" | "fwd" => Some(TrainingPass::Forward),
+        "input-grad" | "input_grad" | "igrad" => Some(TrainingPass::InputGrad),
+        "filter-grad" | "filter_grad" | "fgrad" => Some(TrainingPass::FilterGrad),
+        _ => None,
+    }
+}
+
+/// Parse a `--flow` spelling against the registry (case-insensitive
+/// compiler names, so registered custom flows are addressable too).
+fn parse_flow(s: &str) -> Option<Dataflow> {
+    Dataflow::registered()
+        .into_iter()
+        .find(|f| f.name().eq_ignore_ascii_case(s))
+}
+
+/// The `cost` command: walk the selected layers through the staged
+/// pipeline (keys → traffic → energy) and render one table per layer —
+/// each hierarchy level's access counts, its energy, and its share of
+/// the total, plus the timing row. Everything comes straight off
+/// [`Session::layer_cost`]'s [`TrafficModel`](crate::cost::TrafficModel).
+fn cost_tables(
+    session: &Session,
+    net: &str,
+    layer_name: Option<&str>,
+    pass: TrainingPass,
+    flow: Dataflow,
+    batch: usize,
+) -> Result<Vec<Table>> {
+    let layers: Vec<ConvLayer> = zoo::table5_layers()
+        .into_iter()
+        .chain(gan::table7_layers())
+        .filter(|l| l.net.eq_ignore_ascii_case(net))
+        .filter(|l| layer_name.map(|n| l.name.eq_ignore_ascii_case(n)).unwrap_or(true))
+        .collect();
+    if layers.is_empty() {
+        return Err(anyhow!(
+            "no layer matches --net {net}{} (see table5/table7 for the evaluated sets)",
+            layer_name.map(|n| format!(" --layer {n}")).unwrap_or_default()
+        ));
+    }
+    // one sweep over all selected layers, so multi-layer selections use
+    // the threaded scheduler instead of serial single-job calls
+    let jobs: Vec<SweepJob> = layers
+        .iter()
+        .map(|l| SweepJob {
+            layer: l.clone(),
+            pass,
+            flow,
+            batch,
+        })
+        .collect();
+    let results = session.sweep(jobs);
+    let mut out = Vec::new();
+    for (layer, r) in layers.iter().zip(results) {
+        let c = r.cost.map_err(|e| anyhow!(e))?;
+        let tr = &c.traffic;
+        let shares = c.energy.shares();
+        let mut t = Table::new(
+            &format!(
+                "Cost pipeline — {} [{}] {} b{batch}: {} cycles, {:.3} ms{}",
+                layer.full_name(),
+                pass.name(),
+                flow.name(),
+                c.cycles,
+                c.millis(),
+                if c.dram_bound { " (DRAM-bound)" } else { "" },
+            ),
+            &["level", "traffic", "energy uJ", "share"],
+        );
+        let row = |t: &mut Table, level: &str, traffic: String, pj: f64, share: f64| {
+            t.row(vec![
+                level.to_string(),
+                traffic,
+                format!("{:.1}", pj * 1e-6),
+                pct(share),
+            ]);
+        };
+        row(
+            &mut t,
+            "DRAM",
+            format!("{:.1} MB", tr.dram_bytes / 1e6),
+            c.energy.dram_pj,
+            shares[0],
+        );
+        row(
+            &mut t,
+            "GBUFF",
+            format!("{} rd + {} wr words", tr.gbuf_reads, tr.gbuf_writes),
+            c.energy.gbuf_pj,
+            shares[1],
+        );
+        row(
+            &mut t,
+            "SPAD",
+            format!("{} rd + {} wr words", tr.spad_reads, tr.spad_writes),
+            c.energy.spad_pj,
+            shares[2],
+        );
+        row(
+            &mut t,
+            "ALU",
+            format!("{} MACs + {} gated", tr.macs, tr.gated_macs),
+            c.energy.alu_pj,
+            shares[3],
+        );
+        row(
+            &mut t,
+            "NoC",
+            format!(
+                "{} GIN / {} GON / {} local words, {} IDs",
+                tr.gin_words,
+                tr.gon_words,
+                tr.local_words,
+                tr.mcast_label()
+            ),
+            c.energy.noc_pj,
+            shares[4],
+        );
+        t.row(vec![
+            "total".to_string(),
+            format!("util {:.2}", c.utilization),
+            format!("{:.1}", c.energy.total_uj()),
+            pct(1.0),
+        ]);
+        out.push(t);
+    }
+    Ok(out)
+}
+
 /// Run the CLI; returns process exit code.
 pub fn run(args: &[String]) -> Result<()> {
     let parsed = parse_args(args)?;
@@ -250,6 +392,30 @@ pub fn run(args: &[String]) -> Result<()> {
         "table6" => emit(session.table(TableId::CnnE2e), csv),
         "table7" => emit(session.table(TableId::GanLayers), csv),
         "table8" => emit(session.table(TableId::GanE2e), csv),
+        "traffic" => emit(session.table(TableId::Traffic), csv),
+        "cost" => {
+            let net = parsed
+                .options
+                .get("net")
+                .map(String::as_str)
+                .unwrap_or("AlexNet");
+            let layer = parsed.options.get("layer").map(String::as_str);
+            let pass = match parsed.options.get("pass") {
+                Some(v) => parse_pass(v).ok_or_else(|| {
+                    anyhow!("invalid --pass value: {v} (expected forward, input-grad or filter-grad)")
+                })?,
+                None => TrainingPass::InputGrad,
+            };
+            let flow = match parsed.options.get("flow") {
+                Some(v) => parse_flow(v)
+                    .ok_or_else(|| anyhow!("unknown --flow {v} (see the flows command)"))?,
+                None => Dataflow::EcoFlow,
+            };
+            let batch = parsed.usize_or("batch", crate::report::figures::BATCH);
+            for t in cost_tables(&session, net, layer, pass, flow, batch)? {
+                emit(t, csv);
+            }
+        }
         "report" => {
             // Every table and figure, in paper order, over one session —
             // the repeated-layer/repeated-figure sweeps collapse.
@@ -416,6 +582,55 @@ mod tests {
         assert!(path.exists());
         run(&["fig3".into(), "--cache-file".into(), p]).unwrap();
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pass_and_flow_spellings_parse() {
+        assert_eq!(parse_pass("forward"), Some(TrainingPass::Forward));
+        assert_eq!(parse_pass("input-grad"), Some(TrainingPass::InputGrad));
+        assert_eq!(parse_pass("filter_grad"), Some(TrainingPass::FilterGrad));
+        assert_eq!(parse_pass("sideways"), None);
+        assert_eq!(parse_flow("ecoflow"), Some(Dataflow::EcoFlow));
+        assert_eq!(parse_flow("RS"), Some(Dataflow::RowStationary));
+        assert_eq!(parse_flow("warp"), None);
+    }
+
+    #[test]
+    fn cost_command_renders_the_pipeline_for_one_layer() {
+        let session = Session::builder().threads(2).build();
+        let tables = cost_tables(
+            &session,
+            "ShuffleNet",
+            None,
+            TrainingPass::InputGrad,
+            Dataflow::EcoFlow,
+            2,
+        )
+        .unwrap();
+        assert!(!tables.is_empty());
+        let rendered = tables[0].render();
+        for level in ["DRAM", "GBUFF", "SPAD", "ALU", "NoC", "total"] {
+            assert!(rendered.contains(level), "{rendered}");
+        }
+        assert!(rendered.contains("IDs"), "{rendered}");
+    }
+
+    #[test]
+    fn cost_command_rejects_unknown_selections() {
+        let session = Session::builder().threads(1).build();
+        assert!(cost_tables(
+            &session,
+            "NoSuchNet",
+            None,
+            TrainingPass::Forward,
+            Dataflow::EcoFlow,
+            1,
+        )
+        .is_err());
+        let err = run(&["cost".into(), "--pass".into(), "sideways".into()]).unwrap_err();
+        assert!(err.to_string().contains("--pass"), "{err}");
+        let err = run(&["cost".into(), "--flow".into(), "warp".into()]).unwrap_err();
+        assert!(err.to_string().contains("--flow"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,462 @@
+//! Content-address keys of the cost pipeline: environment, evaluation
+//! and proxy fingerprints.
+//!
+//! Everything the memoization layer ([`crate::coordinator::cache`]), the
+//! persistent store ([`crate::coordinator::store`]) and the sweep
+//! scheduler key on lives here, separate from both the plane-op algebra
+//! ([`super::tiling`]) and the cost arithmetic ([`crate::cost`]):
+//!
+//! * [`EnvKey`] — bit-exact fingerprint of the (architecture, energy
+//!   parameters, DRAM model) environment, with a flat word codec
+//!   ([`EnvKey::to_words`] / [`EnvKey::from_words`]) for the on-disk
+//!   store;
+//! * [`CostKey`] — canonical content address of one
+//!   [`layer_cost`](crate::cost::layer_cost) evaluation;
+//! * [`ProxyKey`] — the coarser fingerprint of the cycle-accurate proxy
+//!   simulation behind an evaluation, which the scheduler groups on.
+
+use super::registry::Dataflow;
+use super::tiling::PlaneOp;
+use crate::config::ArchConfig;
+use crate::energy::{DramModel, EnergyParams};
+use crate::model::{ConvLayer, LayerKind, TrainingPass};
+
+/// Bit-exact fingerprint of everything *besides* the layer geometry that
+/// feeds [`layer_cost`](crate::cost::layer_cost): the architecture
+/// (Table 3 + Table 1 NoC), the per-event energies, and the DRAM model.
+/// Floats are keyed by their bit patterns, so two configs compare equal
+/// iff the cost model cannot tell them apart.
+// Segment widths of the EnvKey fingerprint; growing a keyed struct means
+// touching exactly one of these (the array literal in `of` then fails to
+// compile until updated).
+const ARCH_WORDS: usize = 22;
+const ENERGY_WORDS: usize = 8;
+const DRAM_WORDS: usize = 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct EnvKey {
+    arch: [u64; ARCH_WORDS],
+    energy: [u64; ENERGY_WORDS],
+    dram: [u64; DRAM_WORDS],
+}
+
+impl EnvKey {
+    pub fn of(arch: &ArchConfig, params: &EnergyParams, dram: &DramModel) -> Self {
+        // Exhaustive destructuring (no `..` rest patterns): adding a field
+        // to any of these structs is a compile error here, so the cache
+        // key can never silently under-discriminate.
+        let ArchConfig {
+            array_rows,
+            array_cols,
+            clock_mhz,
+            rf_ifmap,
+            rf_filter,
+            rf_psum,
+            rf_latency,
+            gbuf_bytes,
+            gbuf_banks,
+            dram_bytes,
+            dram_gbps,
+            clock_gating,
+            mul_stages,
+            add_stages,
+            queue_depth,
+            word_bits,
+            max_sim_cycles,
+            noc,
+        } = arch.clone(); // ArchConfig is Clone, not Copy
+        let crate::config::NocConfig {
+            gin_filter_bits,
+            gin_ifmap_bits,
+            gon_bits,
+            local_bits,
+            hop_latency,
+        } = noc;
+        let EnergyParams {
+            mul_pj,
+            add_pj,
+            spad_pj,
+            gbuf_pj,
+            noc_pj,
+            dram_pj,
+            gated_pe_pj,
+            pe_ctrl_pj,
+        } = *params;
+        let DramModel {
+            peak_bw,
+            access_pj_per_byte,
+            background_mw,
+            latency_ns,
+        } = *dram;
+        Self {
+            arch: [
+                array_rows as u64,
+                array_cols as u64,
+                clock_mhz.to_bits(),
+                rf_ifmap as u64,
+                rf_filter as u64,
+                rf_psum as u64,
+                rf_latency as u64,
+                gbuf_bytes as u64,
+                gbuf_banks as u64,
+                dram_bytes as u64,
+                dram_gbps.to_bits(),
+                clock_gating as u64,
+                mul_stages as u64,
+                add_stages as u64,
+                queue_depth as u64,
+                word_bits as u64,
+                // the cycle cap discriminates: a run that aborted with
+                // CycleLimit under a tight cap must not answer for a
+                // generous one
+                max_sim_cycles,
+                gin_filter_bits as u64,
+                gin_ifmap_bits as u64,
+                gon_bits as u64,
+                local_bits as u64,
+                hop_latency as u64,
+            ],
+            energy: [
+                mul_pj.to_bits(),
+                add_pj.to_bits(),
+                spad_pj.to_bits(),
+                gbuf_pj.to_bits(),
+                noc_pj.to_bits(),
+                dram_pj.to_bits(),
+                gated_pe_pj.to_bits(),
+                pe_ctrl_pj.to_bits(),
+            ],
+            dram: [
+                peak_bw.to_bits(),
+                access_pj_per_byte.to_bits(),
+                background_mw.to_bits(),
+                latency_ns.to_bits(),
+            ],
+        }
+    }
+
+    /// Flat word count of the fingerprint (the persistent cost store's
+    /// on-disk encoding). Changing any keyed struct changes this, which
+    /// in turn invalidates stored entries via the token-count check.
+    pub const WORDS: usize = ARCH_WORDS + ENERGY_WORDS + DRAM_WORDS;
+
+    /// Flatten to words for the on-disk cost store.
+    pub fn to_words(&self) -> [u64; Self::WORDS] {
+        let mut w = [0u64; Self::WORDS];
+        w[..ARCH_WORDS].copy_from_slice(&self.arch);
+        w[ARCH_WORDS..ARCH_WORDS + ENERGY_WORDS].copy_from_slice(&self.energy);
+        w[ARCH_WORDS + ENERGY_WORDS..].copy_from_slice(&self.dram);
+        w
+    }
+
+    /// Rebuild from [`EnvKey::to_words`] output; `None` on a length
+    /// mismatch (a store written by an older schema).
+    pub fn from_words(words: &[u64]) -> Option<Self> {
+        if words.len() != Self::WORDS {
+            return None;
+        }
+        let mut arch = [0u64; ARCH_WORDS];
+        arch.copy_from_slice(&words[..ARCH_WORDS]);
+        let mut energy = [0u64; ENERGY_WORDS];
+        energy.copy_from_slice(&words[ARCH_WORDS..ARCH_WORDS + ENERGY_WORDS]);
+        let mut dram = [0u64; DRAM_WORDS];
+        dram.copy_from_slice(&words[ARCH_WORDS + ENERGY_WORDS..]);
+        Some(Self { arch, energy, dram })
+    }
+}
+
+/// Fingerprint of one proxy-plane simulation: two jobs with equal
+/// `ProxyKey`s are guaranteed identical
+/// [`proxy_stats`](crate::cost::proxy_stats) results, so the scheduler
+/// fuses them into one batched run and each member extends the shared
+/// measurement analytically. This is strictly coarser than [`CostKey`] —
+/// layers that differ only in channel/filter counts (or in any geometry
+/// the [`PlaneOp::proxy`] cap absorbs) collapse to one simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProxyKey {
+    /// The spatially-capped proxy op actually simulated.
+    pub op: PlaneOp,
+    pub flow: Dataflow,
+    /// Filter columns lowered per TPU matmul tile (1 for other flows).
+    pub nf_tile: usize,
+    pub env: EnvKey,
+}
+
+impl ProxyKey {
+    /// Key of the proxy simulation behind `layer_cost(arch, .., layer,
+    /// pass, flow, ..)`. `env` is passed in precomputed because bulk
+    /// keying shares it across many jobs (see [`CostKey::with_env`]).
+    pub fn of(
+        arch: &ArchConfig,
+        env: EnvKey,
+        layer: &ConvLayer,
+        pass: TrainingPass,
+        flow: Dataflow,
+    ) -> Self {
+        let nf_tile = flow.resolve().nf_tile(arch, layer);
+        Self {
+            op: PlaneOp::from_layer(layer, pass).proxy(),
+            flow,
+            nf_tile,
+            env,
+        }
+    }
+}
+
+/// Canonical content address of one
+/// [`layer_cost`](crate::cost::layer_cost) evaluation.
+///
+/// Two (layer, pass, flow, batch, environment) tuples get the same key
+/// iff [`layer_cost`](crate::cost::layer_cost) is guaranteed to return
+/// the same result for both: the layer's *geometry* is keyed, its
+/// `net`/`name` labels and the `optimized` provenance flag (which never
+/// enter the cost model) are not. Repeated layers across networks —
+/// ResNet-50 `S2-3x3s2` and MobileNet `CONV3` share a shape, for
+/// example — therefore collapse to one simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CostKey {
+    pub kind: LayerKind,
+    pub in_ch: usize,
+    pub ifm: usize,
+    pub ofm: usize,
+    pub k: usize,
+    pub num_filters: usize,
+    pub stride: usize,
+    pub pass: TrainingPass,
+    pub flow: Dataflow,
+    pub batch: usize,
+    pub env: EnvKey,
+}
+
+impl CostKey {
+    /// Key for the evaluation `layer_cost(arch, params, dram, layer,
+    /// pass, flow, batch)` — same argument order as
+    /// [`layer_cost`](crate::cost::layer_cost).
+    pub fn of(
+        arch: &ArchConfig,
+        params: &EnergyParams,
+        dram: &DramModel,
+        layer: &ConvLayer,
+        pass: TrainingPass,
+        flow: Dataflow,
+        batch: usize,
+    ) -> Self {
+        Self::with_env(EnvKey::of(arch, params, dram), layer, pass, flow, batch)
+    }
+
+    /// [`CostKey::of`] with a precomputed environment fingerprint — for
+    /// bulk keying where the (arch, params, dram) triple is shared by
+    /// many jobs and fingerprinting it per job would dominate.
+    pub fn with_env(
+        env: EnvKey,
+        layer: &ConvLayer,
+        pass: TrainingPass,
+        flow: Dataflow,
+        batch: usize,
+    ) -> Self {
+        Self {
+            kind: layer.kind,
+            in_ch: layer.in_ch,
+            ifm: layer.ifm,
+            ofm: layer.ofm,
+            k: layer.k,
+            num_filters: layer.num_filters,
+            stride: layer.stride,
+            pass,
+            flow,
+            batch,
+            env,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost;
+    use crate::model::zoo;
+
+    fn env() -> (ArchConfig, EnergyParams, DramModel) {
+        (
+            ArchConfig::ecoflow(),
+            EnergyParams::default(),
+            DramModel::default(),
+        )
+    }
+
+    fn resnet_conv3() -> ConvLayer {
+        zoo::table5_layers()
+            .into_iter()
+            .find(|l| l.net == "ResNet-50")
+            .unwrap()
+    }
+
+    #[test]
+    fn cost_key_ignores_layer_names_and_provenance() {
+        let (arch, p, d) = env();
+        let a = ConvLayer::conv("ResNet-50", "S2-3x3s2", 128, 57, 28, 3, 128, 2);
+        let mut b = ConvLayer::conv("MobileNet", "CONV3", 128, 57, 28, 3, 128, 2);
+        b.optimized = true; // provenance flag never enters the cost model
+        let ka = CostKey::of(&arch, &p, &d, &a, TrainingPass::InputGrad, Dataflow::EcoFlow, 4);
+        let kb = CostKey::of(&arch, &p, &d, &b, TrainingPass::InputGrad, Dataflow::EcoFlow, 4);
+        assert_eq!(ka, kb);
+    }
+
+    #[test]
+    fn cost_key_distinct_across_pass_flow_batch_and_arch() {
+        let (arch, p, d) = env();
+        let l = resnet_conv3();
+        let base = CostKey::of(&arch, &p, &d, &l, TrainingPass::Forward, Dataflow::EcoFlow, 4);
+        assert_ne!(
+            base,
+            CostKey::of(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::EcoFlow, 4)
+        );
+        assert_ne!(
+            base,
+            CostKey::of(&arch, &p, &d, &l, TrainingPass::Forward, Dataflow::RowStationary, 4)
+        );
+        assert_ne!(
+            base,
+            CostKey::of(&arch, &p, &d, &l, TrainingPass::Forward, Dataflow::EcoFlow, 8)
+        );
+        let eyeriss = ArchConfig::eyeriss();
+        assert_ne!(
+            base,
+            CostKey::of(&eyeriss, &p, &d, &l, TrainingPass::Forward, Dataflow::EcoFlow, 4)
+        );
+        let p65 = p.scaled_to_65nm();
+        assert_ne!(
+            base,
+            CostKey::of(&arch, &p65, &d, &l, TrainingPass::Forward, Dataflow::EcoFlow, 4)
+        );
+    }
+
+    #[test]
+    fn cost_key_geometry_fields_all_discriminate() {
+        let (arch, p, d) = env();
+        let base = resnet_conv3();
+        let key = |l: &ConvLayer| {
+            CostKey::of(&arch, &p, &d, l, TrainingPass::Forward, Dataflow::EcoFlow, 4)
+        };
+        let k0 = key(&base);
+        let mutations: [fn(&mut ConvLayer); 7] = [
+            |l| l.in_ch += 1,
+            |l| l.ifm += 1,
+            |l| l.ofm += 1,
+            |l| l.k += 1,
+            |l| l.num_filters += 1,
+            |l| l.stride += 1,
+            |l| l.kind = LayerKind::TransposedConv,
+        ];
+        for mutate in mutations {
+            let mut m = base.clone();
+            mutate(&mut m);
+            assert_ne!(k0, key(&m), "mutated layer must get a fresh key: {m:?}");
+        }
+    }
+
+    #[test]
+    fn cost_key_no_collisions_over_table5_matrix() {
+        // Smoke test: the full (Table 5 layers x passes x flows x batches)
+        // matrix maps to pairwise-distinct keys (all geometries differ).
+        let (arch, p, d) = env();
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0usize;
+        for l in zoo::table5_layers() {
+            for pass in TrainingPass::ALL {
+                for flow in Dataflow::ALL {
+                    for batch in [1usize, 4] {
+                        total += 1;
+                        assert!(
+                            seen.insert(CostKey::of(&arch, &p, &d, &l, pass, flow, batch)),
+                            "collision at {} {} {pass:?} {flow:?} b{batch}",
+                            l.net,
+                            l.name
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len(), total);
+        assert_eq!(total, 8 * 3 * 4 * 2);
+    }
+
+    #[test]
+    fn proxy_key_groups_layers_sharing_a_proxy() {
+        // Channel/filter counts never enter the proxy simulation: layers
+        // differing only there share a ProxyKey for non-TPU flows, and a
+        // shared proxy measurement reproduces layer_cost bit-exactly.
+        let (arch, p, d) = env();
+        let env = EnvKey::of(&arch, &p, &d);
+        let a = ConvLayer::conv("X", "A", 128, 57, 28, 3, 128, 2);
+        let b = ConvLayer::conv("Y", "B", 64, 57, 28, 3, 32, 2);
+        let pass = TrainingPass::InputGrad;
+        let flow = Dataflow::EcoFlow;
+        let ka = ProxyKey::of(&arch, env, &a, pass, flow);
+        let kb = ProxyKey::of(&arch, env, &b, pass, flow);
+        assert_eq!(ka, kb);
+        // one member's proxy stats serve the other's extension
+        let shared = cost::proxy_stats(&arch, &a, pass, flow).unwrap();
+        let via_group =
+            cost::layer_cost_from_proxy(&arch, &p, &d, &b, pass, flow, 4, &shared);
+        let direct = cost::layer_cost(&arch, &p, &d, &b, pass, flow, 4).unwrap();
+        assert_eq!(via_group, direct);
+    }
+
+    #[test]
+    fn proxy_key_discriminates_flow_geometry_and_tpu_tile() {
+        let (arch, p, d) = env();
+        let env = EnvKey::of(&arch, &p, &d);
+        let l = resnet_conv3();
+        let base = ProxyKey::of(&arch, env, &l, TrainingPass::InputGrad, Dataflow::EcoFlow);
+        assert_ne!(
+            base,
+            ProxyKey::of(&arch, env, &l, TrainingPass::InputGrad, Dataflow::RowStationary)
+        );
+        assert_ne!(
+            base,
+            ProxyKey::of(&arch, env, &l, TrainingPass::FilterGrad, Dataflow::EcoFlow)
+        );
+        let mut wider = l.clone();
+        wider.k += 1;
+        assert_ne!(
+            base,
+            ProxyKey::of(&arch, env, &wider, TrainingPass::InputGrad, Dataflow::EcoFlow)
+        );
+        // TPU: the lowered filter-tile width discriminates...
+        let mut few = l.clone();
+        few.num_filters = 2;
+        assert_ne!(
+            ProxyKey::of(&arch, env, &l, TrainingPass::Forward, Dataflow::Tpu),
+            ProxyKey::of(&arch, env, &few, TrainingPass::Forward, Dataflow::Tpu)
+        );
+        // ...but is clamped to the array width, so saturated counts fuse
+        let mut many = l.clone();
+        many.num_filters = 500;
+        assert_eq!(
+            ProxyKey::of(&arch, env, &l, TrainingPass::Forward, Dataflow::Tpu),
+            ProxyKey::of(&arch, env, &many, TrainingPass::Forward, Dataflow::Tpu)
+        );
+    }
+
+    #[test]
+    fn env_key_words_round_trip() {
+        let (arch, p, d) = env();
+        let k = EnvKey::of(&arch, &p, &d);
+        let words = k.to_words();
+        assert_eq!(words.len(), EnvKey::WORDS);
+        assert_eq!(EnvKey::from_words(&words), Some(k));
+        assert_eq!(EnvKey::from_words(&words[1..]), None);
+        // a different arch produces different words
+        let k2 = EnvKey::of(&ArchConfig::eyeriss(), &p, &d);
+        assert_ne!(k.to_words(), k2.to_words());
+    }
+
+    #[test]
+    fn cycle_cap_is_keyed() {
+        let (arch, p, d) = env();
+        let mut tight = arch.clone();
+        tight.max_sim_cycles = 1_000;
+        assert_ne!(EnvKey::of(&arch, &p, &d), EnvKey::of(&tight, &p, &d));
+    }
+}

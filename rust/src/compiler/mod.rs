@@ -13,11 +13,18 @@
 //! * [`lowering`] + [`tpu`] — im2col lowering onto the output-stationary
 //!   systolic matmul array (TPU baseline).
 //! * [`ganax`]    — behavioural GANAX comparator (§6.3).
-//! * [`tiling`]   — processing-pass tiling and the layer-level cost model
-//!   (§4.3: PE sets, processing passes, the n/r/t/q/p parameters).
+//! * [`tiling`]   — the plane-op algebra (§3.1/§4.3): op families, MAC-slot
+//!   closed forms and the capped proxy geometry.
+//! * [`keys`]     — content-address fingerprints (environment, evaluation,
+//!   proxy) the memoization layer and the persistent store key on.
+//!
+//! The cost arithmetic itself (traffic, energy, timing) lives in
+//! [`crate::cost`], fed by both simulated fabrics through the shared
+//! [`PassStats`](crate::sim::stats::PassStats).
 
 pub mod ecoflow;
 pub mod ganax;
+pub mod keys;
 pub mod lowering;
 pub mod registry;
 pub mod rs;

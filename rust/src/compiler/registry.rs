@@ -13,7 +13,8 @@
 //! The registry is the single source of truth for:
 //!
 //! * functional execution ([`DataflowCompiler::execute`] — the dispatch
-//!   behind [`tiling::simulate_plane`] and the proxy cost model;
+//!   behind [`simulate_plane`](super::tiling::simulate_plane) and the
+//!   proxy cost model;
 //!   [`DataflowCompiler::execute_batched`] is the multi-operand-set
 //!   entry point for library callers: the microprogrammed-array flows
 //!   keep the default loop because their passes lane-batch *beneath*
@@ -38,7 +39,7 @@
 use std::sync::RwLock;
 
 use super::tiling::PlaneOp;
-use super::{ecoflow, ganax, rs, tiling, tpu};
+use super::{ecoflow, ganax, rs, tpu};
 use crate::config::ArchConfig;
 use crate::model::ConvLayer;
 use crate::sim::stats::PassStats;
@@ -47,7 +48,7 @@ use crate::tensor::Mat;
 use crate::util::prng::Prng;
 
 /// Seed of the deterministic proxy-plane simulation behind the cost
-/// model (see [`tiling::proxy_stats`]).
+/// model (see [`proxy_stats`](crate::cost::proxy_stats)).
 pub const PROXY_SEED: u64 = 0xC0FFEE;
 
 /// The dataflows SASiML models (paper §6.1), plus externally registered
@@ -369,6 +370,38 @@ pub trait DataflowCompiler: Sync {
         let ops = PlaneOperands::random(proxy, PROXY_SEED);
         self.execute(arch, proxy, &ops).map(|(_, st)| st)
     }
+
+    /// Fuse-compatibility fingerprint of one proxy simulation: two proxy
+    /// jobs of this flow whose keys are equal (`Some` and identical) may
+    /// be handed to [`proxy_stats_multi`](DataflowCompiler::proxy_stats_multi)
+    /// in one call and share simulation work. `None` (the default) opts
+    /// the job out of cross-group fusing entirely. The TPU returns its
+    /// lowered-matmul `(M, K, N)` geometry here — distinct
+    /// [`ProxyKey`](super::keys::ProxyKey)s (different op families, even)
+    /// frequently lower to the same matmul shape, and same-geometry tiles
+    /// stream through one batched systolic run regardless of origin.
+    fn proxy_fuse_key(&self, arch: &ArchConfig, proxy: PlaneOp, nf_tile: usize) -> Option<u64> {
+        let _ = (arch, proxy, nf_tile);
+        None
+    }
+
+    /// [`proxy_stats`](DataflowCompiler::proxy_stats) over several
+    /// `(proxy, nf_tile)` jobs at once. The default is the independent
+    /// per-job loop; flows that can share work across jobs override it —
+    /// the contract is **bit-identical per-job results** under every
+    /// engine policy, which is what lets the sweep scheduler route fused
+    /// batches here without changing any cost. The scheduler only fuses
+    /// jobs whose [`proxy_fuse_key`](DataflowCompiler::proxy_fuse_key)s
+    /// agree, but implementations must tolerate arbitrary job mixes.
+    fn proxy_stats_multi(
+        &self,
+        arch: &ArchConfig,
+        jobs: &[(PlaneOp, usize)],
+    ) -> Vec<Result<PassStats, SimError>> {
+        jobs.iter()
+            .map(|&(proxy, nf_tile)| self.proxy_stats(arch, proxy, nf_tile))
+            .collect()
+    }
 }
 
 // --- built-in compilers -------------------------------------------------
@@ -460,7 +493,24 @@ impl DataflowCompiler for TpuCompiler {
         proxy: PlaneOp,
         nf_tile: usize,
     ) -> Result<PassStats, SimError> {
-        tiling::tpu_multi_proxy(arch, proxy, nf_tile)
+        tpu::multi_proxy(arch, proxy, nf_tile)
+    }
+
+    fn proxy_fuse_key(&self, arch: &ArchConfig, proxy: PlaneOp, nf_tile: usize) -> Option<u64> {
+        let _ = arch;
+        let (m, k, n) = tpu::proxy_matmul_geometry(proxy, nf_tile);
+        // distinct (M, K, N) triples must map to distinct keys; the
+        // widths below comfortably hold every proxy geometry (M ≤ 144,
+        // K ≤ ~2k, N ≤ the array width)
+        Some(((m as u64) << 40) | ((k as u64) << 20) | n as u64)
+    }
+
+    fn proxy_stats_multi(
+        &self,
+        arch: &ArchConfig,
+        jobs: &[(PlaneOp, usize)],
+    ) -> Vec<Result<PassStats, SimError>> {
+        tpu::multi_proxy_fused(arch, jobs)
     }
 }
 

@@ -29,6 +29,7 @@ use crate::sim::batch::{use_batched, BatchSystolicSim};
 use crate::sim::stats::PassStats;
 use crate::sim::SimError;
 use crate::tensor::Mat;
+use crate::util::prng::Prng;
 
 /// Lower a strided direct convolution to its `(patch matrix, filter
 /// column)` matmul operands plus the output geometry `(e, f)` — the ONE
@@ -54,6 +55,22 @@ pub fn direct_pass(
     Ok((col2out(&out, e, f), stats))
 }
 
+/// Lower one input plane + `nf` filters to the `(patch matrix, nf-column
+/// filter block)` matmul operands plus the output geometry `(e, f)` —
+/// like [`lower_direct`], the ONE copy of the multi-filter lowering
+/// arithmetic, shared by [`direct_pass_multi`] and the proxy machinery
+/// ([`proxy_matmul_operands`]) so the scheduler's fused proxy path can
+/// never drift from the execution path it must stay bit-identical to.
+fn lower_multi(x: &Mat, ws: &[Mat], s: usize) -> (Mat, Mat, usize, usize) {
+    assert!(!ws.is_empty());
+    let k = ws[0].rows;
+    let e = (x.rows - k) / s + 1;
+    let f = (x.cols - k) / s + 1;
+    let patches = im2col(x, k, s);
+    let b = Mat::from_fn(k * k, ws.len(), |row, col| ws[col].data[row]);
+    (patches, b, e, f)
+}
+
 /// Multi-filter lowering: convolve one input plane with `nf` filters in a
 /// single matmul whose `B` operand has `nf` columns — this is how real
 /// lowering keeps the systolic array's width occupied. Returns the stats
@@ -64,12 +81,7 @@ pub fn direct_pass_multi(
     ws: &[Mat],
     s: usize,
 ) -> Result<(Vec<Mat>, PassStats), SimError> {
-    assert!(!ws.is_empty());
-    let k = ws[0].rows;
-    let e = (x.rows - k) / s + 1;
-    let f = (x.cols - k) / s + 1;
-    let patches = im2col(x, k, s);
-    let b = Mat::from_fn(k * k, ws.len(), |row, col| ws[col].data[row]);
+    let (patches, b, e, f) = lower_multi(x, ws, s);
     let (out, stats) = systolic_matmul_policy(arch, &patches, &b);
     let outs = (0..ws.len())
         .map(|c| {
@@ -134,6 +146,135 @@ pub fn batched_pass(
         .zip(results)
         .map(|(&(_, _, e, f), (out, stats))| (col2out(&out, e, f), stats))
         .collect())
+}
+
+// --- proxy machinery (the TPU side of the cost model) ------------------
+
+/// Deterministic lowered-matmul operands of one TPU *proxy* pass that
+/// convolves `nf_tile` filters in a single matmul (B has `nf_tile`
+/// columns — how real lowering keeps the array width busy). The operand
+/// PRNG sequence is fixed, so equal `(op, nf_tile)` always lower to the
+/// identical `(patch matrix, filter block)` pair — which is what lets
+/// the scheduler fuse proxies *across* ProxyKey groups that share the
+/// lowered geometry ([`multi_proxy_fused`]).
+pub(crate) fn proxy_matmul_operands(op: PlaneOp, nf_tile: usize) -> (Mat, Mat) {
+    let mut rng = Prng::new(0x7B0);
+    let (x, kernels, s_eff) = match op {
+        PlaneOp::Direct { hx, k, s } => {
+            let x = Mat::random(hx, hx, &mut rng);
+            let ws: Vec<Mat> = (0..nf_tile).map(|_| Mat::random(k, k, &mut rng)).collect();
+            (x, ws, s)
+        }
+        PlaneOp::Transpose { he, k, s } => {
+            let e = Mat::random(he, he, &mut rng);
+            let padded = e.dilate(s).pad_border(k - 1);
+            let ws: Vec<Mat> = (0..nf_tile)
+                .map(|_| Mat::random(k, k, &mut rng).rot180())
+                .collect();
+            (padded, ws, 1)
+        }
+        PlaneOp::Dilated { he, k, s } => {
+            let hx = s * (he - 1) + k;
+            let x = Mat::random(hx, hx, &mut rng);
+            let kernels: Vec<Mat> = (0..nf_tile)
+                .map(|_| Mat::random(he, he, &mut rng).dilate(s))
+                .collect();
+            (x, kernels, 1)
+        }
+    };
+    let (patches, b, _, _) = lower_multi(&x, &kernels, s_eff);
+    (patches, b)
+}
+
+/// Lowered-matmul geometry `(M, K, N)` of [`proxy_matmul_operands`] for
+/// `(op, nf_tile)`, computed without materializing operands — the
+/// fuse-compatibility fingerprint behind
+/// [`DataflowCompiler::proxy_fuse_key`](super::DataflowCompiler::proxy_fuse_key).
+/// Pinned against the materialized operand shapes in the tests below.
+pub(crate) fn proxy_matmul_geometry(op: PlaneOp, nf_tile: usize) -> (usize, usize, usize) {
+    match op {
+        PlaneOp::Direct { hx, k, s } => {
+            let e = (hx - k) / s + 1;
+            (e * e, k * k, nf_tile)
+        }
+        PlaneOp::Transpose { he, k, s } => {
+            // dilated + border-padded error, dense conv at stride 1
+            let d = s * (he - 1) + 1 + 2 * (k - 1);
+            let e = d - k + 1;
+            (e * e, k * k, nf_tile)
+        }
+        PlaneOp::Dilated { he, k, s } => {
+            // the dilated error is the kernel: side dk over an input of
+            // side s(he-1)+k leaves a k-sided output
+            let dk = s * (he - 1) + 1;
+            (k * k, dk * dk, nf_tile)
+        }
+    }
+}
+
+/// Per-plane stats of a TPU proxy pass that lowers `nf_tile` filters
+/// into one matmul, amortizing the patch-matrix stream. The lowered
+/// matmul dispatches through the shared
+/// [`SimEngine`](crate::sim::batch::SimEngine) policy, so under `Auto`
+/// its same-geometry output tiles run lane-parallel — the proxy numbers
+/// are bit-identical either way.
+pub(crate) fn multi_proxy(
+    arch: &ArchConfig,
+    op: PlaneOp,
+    nf_tile: usize,
+) -> Result<PassStats, SimError> {
+    let (patches, b) = proxy_matmul_operands(op, nf_tile);
+    let (_, stats) = systolic_matmul_policy(arch, &patches, &b);
+    Ok(stats.scaled_by(1.0 / nf_tile as f64))
+}
+
+/// [`multi_proxy`] over several `(op, nf_tile)` proxy jobs — possibly
+/// from *different* ProxyKey groups — fusing every same-geometry lowered
+/// matmul into one [`BatchSystolicSim`] run (the engine accepts
+/// mixed-origin operand pairs). Bit-identical per job to [`multi_proxy`]
+/// under every engine policy: the batched engine's per-pair equivalence
+/// contract covers cross-pair batches, and jobs that cannot fuse (lone
+/// geometry, or `Scalar` policy) take the per-job path verbatim.
+pub(crate) fn multi_proxy_fused(
+    arch: &ArchConfig,
+    jobs: &[(PlaneOp, usize)],
+) -> Vec<Result<PassStats, SimError>> {
+    // Group defensively by the *actual* lowered geometry: callers fusing
+    // on proxy_fuse_key never mix geometries, but a direct caller might,
+    // and BatchSystolicSim requires a uniform batch.
+    let lowered: Vec<(Mat, Mat)> = jobs
+        .iter()
+        .map(|&(op, nf)| proxy_matmul_operands(op, nf))
+        .collect();
+    let mut classes: Vec<((usize, usize, usize), Vec<usize>)> = Vec::new();
+    for (i, (a, b)) in lowered.iter().enumerate() {
+        let geo = (a.rows, a.cols, b.cols);
+        match classes.iter_mut().find(|(g, _)| *g == geo) {
+            Some((_, members)) => members.push(i),
+            None => classes.push((geo, vec![i])),
+        }
+    }
+    let mut out: Vec<Option<PassStats>> = vec![None; jobs.len()];
+    for (_, members) in &classes {
+        if use_batched(members.len()) && members.len() >= 2 {
+            let pairs: Vec<(&Mat, &Mat)> = members
+                .iter()
+                .map(|&i| (&lowered[i].0, &lowered[i].1))
+                .collect();
+            for (&i, (_, stats)) in members.iter().zip(BatchSystolicSim::new(arch).run(&pairs))
+            {
+                out[i] = Some(stats.scaled_by(1.0 / jobs[i].1 as f64));
+            }
+        } else {
+            for &i in members {
+                let (_, stats) = systolic_matmul_policy(arch, &lowered[i].0, &lowered[i].1);
+                out[i] = Some(stats.scaled_by(1.0 / jobs[i].1 as f64));
+            }
+        }
+    }
+    out.into_iter()
+        .map(|s| Ok(s.expect("every job belongs to exactly one class")))
+        .collect()
 }
 
 /// Transposed conv: lower the dilated + border-padded error (§3.1.1).
@@ -236,6 +377,54 @@ mod tests {
                 .unwrap();
                 assert_eq!(&one, got, "{op:?}");
             }
+        }
+    }
+
+    #[test]
+    fn proxy_geometry_matches_materialized_operands() {
+        // the analytic fuse fingerprint must equal the lowered shapes
+        for op in [
+            PlaneOp::Direct { hx: 13, k: 3, s: 1 },
+            PlaneOp::Direct { hx: 9, k: 3, s: 2 },
+            PlaneOp::Transpose { he: 5, k: 3, s: 2 },
+            PlaneOp::Dilated { he: 4, k: 3, s: 2 },
+        ] {
+            for nf in [1usize, 4] {
+                let (a, b) = proxy_matmul_operands(op, nf);
+                assert_eq!(
+                    proxy_matmul_geometry(op, nf),
+                    (a.rows, a.cols, b.cols),
+                    "{op:?} nf={nf}"
+                );
+                assert_eq!(a.cols, b.rows, "{op:?} nf={nf}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_proxies_equal_per_job_proxies_bit_exactly() {
+        // mixed-origin fusing: a stride-1 direct proxy and a stride-2
+        // transpose proxy lower to the same (M, K, N) = (121, 9, nf)
+        // matmul; fusing them through one BatchSystolicSim run must be
+        // bit-identical to independent multi_proxy calls. A third,
+        // different-geometry job rides along to exercise the defensive
+        // per-class grouping.
+        let arch = arch();
+        let jobs: Vec<(PlaneOp, usize)> = vec![
+            (PlaneOp::Direct { hx: 13, k: 3, s: 1 }, 8),
+            (PlaneOp::Transpose { he: 5, k: 3, s: 2 }, 8),
+            (PlaneOp::Dilated { he: 3, k: 3, s: 2 }, 4),
+        ];
+        assert_eq!(
+            proxy_matmul_geometry(jobs[0].0, jobs[0].1),
+            proxy_matmul_geometry(jobs[1].0, jobs[1].1),
+            "test premise: first two jobs share the lowered geometry"
+        );
+        let fused = multi_proxy_fused(&arch, &jobs);
+        assert_eq!(fused.len(), jobs.len());
+        for (&(op, nf), got) in jobs.iter().zip(&fused) {
+            let alone = multi_proxy(&arch, op, nf).unwrap();
+            assert_eq!(got.as_ref().unwrap(), &alone, "{op:?} nf={nf}");
         }
     }
 

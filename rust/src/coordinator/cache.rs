@@ -1,4 +1,5 @@
-//! Content-addressed memoization of [`tiling::layer_cost`] evaluations.
+//! Content-addressed memoization of [`layer_cost`](crate::cost::layer_cost)
+//! evaluations.
 //!
 //! The paper's evaluation methodology (§6.1, Tables 6/8, Figs. 8–12)
 //! sweeps every (layer, pass, dataflow, batch) combination, and the
@@ -9,11 +10,12 @@
 //! table that collapses those: a thread-safe map from the canonical
 //! [`CostKey`] (normalized layer geometry + architecture/energy/DRAM
 //! fingerprint + pass + flow + batch) to the finished
-//! [`LayerCost`](tiling::LayerCost), with hit/miss/eviction counters
-//! surfaced the same way [`PassStats`](crate::sim::stats::PassStats)
-//! surfaces simulator counters.
+//! [`LayerCost`](crate::cost::LayerCost), with hit/miss/eviction
+//! counters surfaced the same way
+//! [`PassStats`](crate::sim::stats::PassStats) surfaces simulator
+//! counters.
 //!
-//! Correctness note: [`tiling::layer_cost`] is deterministic (fixed PRNG
+//! Correctness note: [`layer_cost`](crate::cost::layer_cost) is deterministic (fixed PRNG
 //! seeds, no wall-clock inputs), so memoized results are bit-identical to
 //! recomputation — asserted by the property tests in
 //! `tests/sweep_cache.rs`. Two threads racing on the same missing key may
@@ -25,12 +27,13 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::compiler::tiling::{self, CostKey};
+use crate::compiler::keys::CostKey;
+use crate::cost::LayerCost;
 use crate::util::table::Table;
 
 /// A memoized evaluation outcome — exactly what a
 /// [`SweepResult`](super::scheduler::SweepResult) carries.
-pub type CachedCost = Result<tiling::LayerCost, String>;
+pub type CachedCost = Result<LayerCost, String>;
 
 /// Counter snapshot of a [`CostCache`] (PassStats-style reporting).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

@@ -2,7 +2,7 @@
 //! into [`LayerCost`](crate::compiler::tiling::LayerCost)s and composes
 //! end-to-end network estimates (paper §6.1's methodology).
 //!
-//! # The dedup → group → shard → fan-out pipeline
+//! # The dedup → group → fuse → shard → fan-out pipeline
 //!
 //! The report targets submit heavily redundant job matrices: networks
 //! are stacks of repeated layer shapes, figures re-sweep each other's
@@ -11,19 +11,24 @@
 //! list verbatim; it
 //!
 //! 1. **dedups** jobs by their canonical
-//!    [`CostKey`](crate::compiler::tiling::CostKey) (normalized layer
+//!    [`CostKey`](crate::compiler::keys::CostKey) (normalized layer
 //!    geometry + architecture/energy/DRAM fingerprint + pass + flow +
 //!    batch — layer *names* are irrelevant), consulting the
 //!    [`cache::CostCache`] memo table for keys already evaluated;
 //! 2. **groups** the remaining unique jobs by their
-//!    [`ProxyKey`](crate::compiler::tiling::ProxyKey) — jobs whose
+//!    [`ProxyKey`](crate::compiler::keys::ProxyKey) — jobs whose
 //!    cycle-accurate proxy plane is identical (same architecture,
 //!    capped geometry and flow) fuse into one simulation, each member
 //!    extending the shared measurement analytically;
-//! 3. **shards** the groups across scoped worker threads
+//! 3. **fuses** groups whose flow reports a matching
+//!    [`proxy_fuse_key`](crate::compiler::DataflowCompiler::proxy_fuse_key)
+//!    (the TPU: equal lowered-matmul geometry) into single
+//!    `proxy_stats_multi` calls, streaming mixed-origin tiles through
+//!    one batched systolic run;
+//! 4. **shards** the proxy units across scoped worker threads
 //!    (atomic-cursor work stealing, one lock-free `OnceLock` result slot
 //!    per unique job — no shared results mutex);
-//! 4. **fans out** the unique results onto the original submission
+//! 5. **fans out** the unique results onto the original submission
 //!    order, so callers observe exactly the naive semantics.
 //!
 //! Simulation is deterministic, so cached, deduplicated and multi-thread
@@ -53,4 +58,4 @@ pub use cache::{CacheStats, CostCache};
 pub use e2e::{gan_e2e, network_e2e, E2eResult};
 pub use scheduler::{run_sweep, run_sweep_cached, run_sweep_with, SweepJob, SweepResult};
 pub use session::{Session, SessionBuilder};
-pub use store::{load_into, save, LoadOutcome};
+pub use store::{append_update, load_into, load_tracked, save, DiskState, LoadOutcome};

@@ -1,47 +1,58 @@
-//! Sharded sweep engine: dedup → group → shard → fan-out.
+//! Sharded sweep engine: dedup → group → fuse → shard → fan-out.
 //!
 //! Jobs are independent (each simulates one (layer, pass, dataflow)
 //! proxy and extends it analytically), but the job matrices the report
 //! targets build are highly redundant — repeated-layer networks submit
 //! the same canonical [`CostKey`] many times. The engine therefore runs
-//! in four stages:
+//! in five stages:
 //!
 //! 1. **dedup** — every job is keyed by [`CostKey::of`]; only the first
 //!    occurrence of each key becomes a *unique* job. Keys already in the
 //!    [`CostCache`] are resolved immediately without dispatch.
 //! 2. **group** — unique jobs that share a
-//!    [`ProxyKey`](tiling::ProxyKey) (same architecture, capped proxy
-//!    plane and flow) are fused into one run: the cycle-accurate proxy
-//!    is simulated once per group and every member job extends that
-//!    shared measurement analytically
-//!    ([`tiling::layer_cost_from_proxy`]). Distinct [`CostKey`]s often
+//!    [`ProxyKey`](crate::compiler::keys::ProxyKey) (same architecture,
+//!    capped proxy plane and flow) are fused into one run: the
+//!    cycle-accurate proxy is simulated once per group and every member
+//!    job extends that shared measurement analytically
+//!    ([`cost::layer_cost_from_proxy`]). Distinct [`CostKey`]s often
 //!    collapse here — layers differing only in channel/filter counts
 //!    or in geometry the `SIM_CAP` proxy absorbs.
-//! 3. **shard** — two work-stealing phases over `threads` scoped
+//! 3. **fuse** — groups whose flow reports a matching
+//!    [`proxy_fuse_key`](crate::compiler::DataflowCompiler::proxy_fuse_key)
+//!    merge into one work unit executed by a single
+//!    [`proxy_stats_multi`](crate::compiler::DataflowCompiler::proxy_stats_multi)
+//!    call: the TPU lowers *different* proxies (different op families,
+//!    even) to same-geometry matmuls whose tiles stream through one
+//!    batched systolic run. Bit-identical per group by the trait
+//!    contract; flows without a fuse key keep one unit per group.
+//! 4. **shard** — two work-stealing phases over `threads` scoped
 //!    workers, each driven by an atomic cursor (work stealing by index;
 //!    tokio is unavailable in this offline image — see Cargo.toml).
-//!    Phase A simulates one cycle-accurate proxy per *group*; phase B
-//!    extends the shared measurement analytically per *member*, so a
-//!    giant group (every repeated-shape layer of a network fused onto
-//!    one proxy) spreads its extension work across all workers instead
-//!    of serializing on one. Each member job writes its result into a
-//!    dedicated [`OnceLock`] slot: no shared `Mutex<Vec<_>>`, no
-//!    cross-worker contention on results.
-//! 4. **fan-out** — results are cloned back onto the original job list,
+//!    Phase A simulates the proxy units; phase B extends the shared
+//!    measurements analytically per *member*, so a giant group (every
+//!    repeated-shape layer of a network fused onto one proxy) spreads
+//!    its extension work across all workers instead of serializing on
+//!    one. Each member job writes its result into a dedicated
+//!    [`OnceLock`] slot: no shared `Mutex<Vec<_>>`, no cross-worker
+//!    contention on results.
+//! 5. **fan-out** — results are cloned back onto the original job list,
 //!    preserving submission order exactly, so callers that index or
 //!    `chunks()` the result vector are unaffected by the dedup.
 //!
-//! Determinism: `tiling::layer_cost` is seed-fixed and exactly equal to
+//! Determinism: [`cost::layer_cost`] is seed-fixed and exactly equal to
 //! `proxy_stats` + `layer_cost_from_proxy`, so the sweep output is
-//! bit-identical regardless of thread count, cache state, dedup or
-//! grouping — property-tested in `tests/sweep_cache.rs`.
+//! bit-identical regardless of thread count, cache state, dedup,
+//! grouping or cross-group fusing — property-tested in
+//! `tests/sweep_cache.rs`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
-use crate::compiler::tiling::{self, CostKey, EnvKey};
+use crate::compiler::keys::{CostKey, EnvKey, ProxyKey};
+use crate::compiler::tiling::PlaneOp;
 use crate::compiler::Dataflow;
 use crate::config::ArchConfig;
+use crate::cost::{self, LayerCost};
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::{ConvLayer, TrainingPass};
 use crate::sim::stats::PassStats;
@@ -85,7 +96,7 @@ impl SweepJob {
 #[derive(Debug)]
 pub struct SweepResult {
     pub job: SweepJob,
-    pub cost: Result<tiling::LayerCost, String>,
+    pub cost: Result<LayerCost, String>,
 }
 
 /// The architecture each dataflow runs on by default (its Table 1 NoC
@@ -195,14 +206,14 @@ where
     // -- group: pending slots sharing a proxy fingerprint are fused ------
     // into one batched run (the proxy plane is simulated once; members
     // extend it analytically).
-    let mut group_index: std::collections::HashMap<tiling::ProxyKey, usize> =
+    let mut group_index: std::collections::HashMap<ProxyKey, usize> =
         std::collections::HashMap::new();
     let mut groups: Vec<Vec<usize>> = Vec::new(); // group -> member slots
     for &slot in &pending {
         let ji = unique_job[slot];
         let job = &jobs[ji];
         let env = env_by_flow[&job.flow]; // populated during keying above
-        let pk = tiling::ProxyKey::of(&arch_of(job.flow), env, &job.layer, job.pass, job.flow);
+        let pk = ProxyKey::of(&arch_of(job.flow), env, &job.layer, job.pass, job.flow);
         let g = *group_index.entry(pk).or_insert_with(|| {
             groups.push(Vec::new());
             groups.len() - 1
@@ -210,26 +221,73 @@ where
         groups[g].push(slot);
     }
 
-    // -- shard, phase A: work-stealing over the group *proxies* ----------
+    // -- fuse: groups whose flow reports a matching fuse key share one ---
+    // proxy_stats_multi call. Distinct ProxyKeys (different op families,
+    // even) can lower to the same tile geometry — the TPU's batched
+    // systolic engine accepts mixed-origin tiles, so their proxies stream
+    // through one lane-parallel run. Flows that return None (the
+    // default) keep one work unit per group, exactly the old schedule.
+    let metas: Vec<(Dataflow, PlaneOp, usize)> = groups
+        .iter()
+        .map(|members| {
+            let j0 = &jobs[unique_job[members[0]]];
+            let arch = arch_of(j0.flow);
+            let proxy = PlaneOp::from_layer(&j0.layer, j0.pass).proxy();
+            let nf_tile = j0.flow.resolve().nf_tile(&arch, &j0.layer);
+            (j0.flow, proxy, nf_tile)
+        })
+        .collect();
+    let mut fused_index: std::collections::HashMap<(Dataflow, u64), usize> =
+        std::collections::HashMap::new();
+    let mut units: Vec<Vec<usize>> = Vec::new(); // unit -> group indices
+    for (g, &(flow, proxy, nf_tile)) in metas.iter().enumerate() {
+        match flow.resolve().proxy_fuse_key(&arch_of(flow), proxy, nf_tile) {
+            Some(key) => {
+                let u = *fused_index.entry((flow, key)).or_insert_with(|| {
+                    units.push(Vec::new());
+                    units.len() - 1
+                });
+                units[u].push(g);
+            }
+            None => units.push(vec![g]),
+        }
+    }
+
+    // -- shard, phase A: work-stealing over the proxy *units* ------------
     // One cycle-accurate proxy simulation per group (the expensive part),
-    // distributed across workers by an atomic cursor.
+    // distributed across workers by an atomic cursor; a fused unit runs
+    // all its groups' proxies in one proxy_stats_multi call (bit-identical
+    // per group by the trait contract).
     let proxies: Vec<OnceLock<Result<PassStats, String>>> =
         (0..groups.len()).map(|_| OnceLock::new()).collect();
-    if !groups.is_empty() {
+    if !units.is_empty() {
         let cursor = AtomicUsize::new(0);
-        let workers = threads.max(1).min(groups.len());
+        let workers = threads.max(1).min(units.len());
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
-                    let g = cursor.fetch_add(1, Ordering::Relaxed);
-                    if g >= groups.len() {
+                    let u = cursor.fetch_add(1, Ordering::Relaxed);
+                    if u >= units.len() {
                         break;
                     }
-                    let j0 = &jobs[unique_job[groups[g][0]]];
-                    let arch = arch_of(j0.flow);
-                    let proxy = tiling::proxy_stats(&arch, &j0.layer, j0.pass, j0.flow)
-                        .map_err(|e| e.to_string());
-                    let _ = proxies[g].set(proxy);
+                    let unit = &units[u];
+                    let (flow, _, _) = metas[unit[0]];
+                    let arch = arch_of(flow);
+                    if unit.len() == 1 {
+                        let g = unit[0];
+                        let j0 = &jobs[unique_job[groups[g][0]]];
+                        let proxy = cost::proxy_stats(&arch, &j0.layer, j0.pass, j0.flow)
+                            .map_err(|e| e.to_string());
+                        let _ = proxies[g].set(proxy);
+                    } else {
+                        let batch: Vec<(PlaneOp, usize)> =
+                            unit.iter().map(|&g| (metas[g].1, metas[g].2)).collect();
+                        let results = flow.resolve().proxy_stats_multi(&arch, &batch);
+                        debug_assert_eq!(results.len(), unit.len());
+                        for (&g, r) in unit.iter().zip(results) {
+                            let _ = proxies[g].set(r.map_err(|e| e.to_string()));
+                        }
+                    }
                 });
             }
         });
@@ -262,7 +320,7 @@ where
                     let arch = arch_of(job.flow);
                     let proxy = proxies[g].get().expect("phase A filled every group");
                     let cost = match proxy {
-                        Ok(ps) => Ok(tiling::layer_cost_from_proxy(
+                        Ok(ps) => Ok(cost::layer_cost_from_proxy(
                             &arch, params, dram, &job.layer, job.pass, job.flow,
                             job.batch, ps,
                         )),
@@ -408,11 +466,52 @@ mod tests {
         let d = DramModel::default();
         let results = run_sweep(&p, &d, jobs.clone(), 2);
         for (r, j) in results.iter().zip(&jobs) {
-            let direct = tiling::layer_cost(
+            let direct = cost::layer_cost(
                 &arch_for(j.flow), &p, &d, &j.layer, j.pass, j.flow, j.batch,
             )
             .unwrap();
             assert_eq!(r.cost.as_ref().unwrap(), &direct);
+        }
+    }
+
+    #[test]
+    fn tpu_proxies_fuse_across_groups_without_changing_results() {
+        // Two layers with *different* ProxyKeys whose TPU proxies lower
+        // to the same (M, K, N) matmul: a stride-1 direct conv with an
+        // 11-sided output and a stride-2 transposed conv rebuilding an
+        // 11-sided plane both lower to a (121, 9, 8) product. The fuse
+        // stage merges them into one proxy_stats_multi unit; every cost
+        // must still equal the direct evaluation bit-exactly.
+        let a = ConvLayer::conv("Zoo", "A", 8, 13, 11, 3, 8, 1);
+        let b = ConvLayer::tconv("Zoo", "B", 8, 5, 11, 3, 8, 2);
+        let flow = Dataflow::Tpu;
+        let arch = arch_for(flow);
+        let compiler = flow.resolve();
+        let key_of = |l: &ConvLayer| {
+            let proxy = PlaneOp::from_layer(l, TrainingPass::Forward).proxy();
+            compiler.proxy_fuse_key(&arch, proxy, compiler.nf_tile(&arch, l))
+        };
+        assert_eq!(
+            key_of(&a).expect("TPU reports fuse keys"),
+            key_of(&b).unwrap(),
+            "test premise: the two proxies share a lowered geometry"
+        );
+        let jobs: Vec<SweepJob> = [&a, &b]
+            .into_iter()
+            .map(|l| SweepJob {
+                layer: l.clone(),
+                pass: TrainingPass::Forward,
+                flow,
+                batch: 2,
+            })
+            .collect();
+        let p = EnergyParams::default();
+        let d = DramModel::default();
+        let results = run_sweep(&p, &d, jobs.clone(), 2);
+        for (r, j) in results.iter().zip(&jobs) {
+            let direct =
+                cost::layer_cost(&arch, &p, &d, &j.layer, j.pass, j.flow, j.batch).unwrap();
+            assert_eq!(r.cost.as_ref().unwrap(), &direct, "{}", j.layer.name);
         }
     }
 
@@ -432,7 +531,7 @@ mod tests {
         let serial = run_sweep(&p, &d, jobs.clone(), 1);
         for ((w, s), j) in wide.iter().zip(&serial).zip(&jobs) {
             assert_eq!(w.cost.as_ref().unwrap(), s.cost.as_ref().unwrap());
-            let direct = tiling::layer_cost(
+            let direct = cost::layer_cost(
                 &arch_for(j.flow), &p, &d, &j.layer, j.pass, j.flow, j.batch,
             )
             .unwrap();

@@ -33,10 +33,11 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
-use crate::compiler::tiling::LayerCost;
 use crate::compiler::Dataflow;
 use crate::config::ArchConfig;
+use crate::cost::LayerCost;
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::{ConvLayer, TrainingPass};
 use crate::report::{FigureId, TableId};
@@ -156,7 +157,12 @@ impl SessionBuilder {
             Some(n) => CostCache::with_capacity(n),
             None => CostCache::new(),
         };
-        let store_outcome = self.store_path.as_ref().map(|p| store::load_into(p, &cache));
+        let mut store_disk = store::DiskState::default();
+        let store_outcome = self.store_path.as_ref().map(|p| {
+            let (outcome, disk) = store::load_tracked(p, &cache);
+            store_disk = disk;
+            outcome
+        });
         Session {
             params: self.params.unwrap_or_default(),
             dram: self.dram.unwrap_or_default(),
@@ -173,6 +179,7 @@ impl SessionBuilder {
             cache,
             store_path: self.store_path,
             store_outcome,
+            store_disk: Mutex::new(store_disk),
         }
     }
 }
@@ -193,6 +200,11 @@ pub struct Session {
     cache: CostCache,
     store_path: Option<PathBuf>,
     store_outcome: Option<LoadOutcome>,
+    /// What is verified to be in the on-disk store (loaded at build,
+    /// advanced on every save) — the append guard that lets
+    /// [`Session::save_store`] write only the new entries instead of
+    /// rewriting the file.
+    store_disk: Mutex<store::DiskState>,
 }
 
 impl Default for Session {
@@ -249,12 +261,20 @@ impl Session {
     }
 
     /// Write the memo table back to the configured store path. Returns
-    /// `None` when the session has no store, `Some(Ok(entries))` on a
-    /// successful save.
+    /// `None` when the session has no store, `Some(Ok(entries))` —
+    /// the number of entries now persisted — on a successful save.
+    ///
+    /// Saves are *appending*: entries already verified on disk (loaded
+    /// at build time or written by an earlier save of this session) are
+    /// not rewritten; only new work is encoded and the store's count
+    /// header is patched in place ([`store::append_update`]). A cold or
+    /// rebuilt store — or one a concurrent writer touched since the
+    /// load — falls back to one full write.
     pub fn save_store(&self) -> Option<std::io::Result<usize>> {
-        self.store_path
-            .as_ref()
-            .map(|p| store::save(p, &self.cache))
+        self.store_path.as_ref().map(|p| {
+            let mut disk = self.store_disk.lock().unwrap();
+            store::append_update(p, &self.cache, &mut disk)
+        })
     }
 
     /// The architecture `flow` runs on in this session: the builder's

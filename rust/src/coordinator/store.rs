@@ -5,14 +5,14 @@
 //! the store, a following `report` answers >90% of its lookups from disk
 //! (`--cache-file`, asserted in `tests/batch_engine.rs`).
 //!
-//! # Format
+//! # Format (v2)
 //!
 //! A plain-text, line-oriented file:
 //!
 //! ```text
-//! ecoflow-cost-store v1
-//! checksum <fnv1a-64 of the entry lines, hex>
-//! <one entry per line: CostKey fields, EnvKey words, LayerCost fields>
+//! ecoflow-cost-store v2
+//! entries <000000000000 — fixed-width live line count>
+//! <entry: CostKey fields, EnvKey words, LayerCost + TrafficModel fields, fnv1a-64 of the line>
 //! ```
 //!
 //! Every float is stored as its IEEE-754 bit pattern in hex, so a
@@ -21,37 +21,86 @@
 //! table gives. Only `Ok` costs are persisted: error strings are cheap
 //! to recompute and would need escaping.
 //!
+//! v2 moved the integrity check from one whole-body checksum to **one
+//! FNV-1a 64 checksum per entry line**, and the header from a checksum
+//! to a fixed-width entry count. That is what makes saves *appendable*:
+//! [`append_update`] writes only the entries that are not on disk yet
+//! and patches the count field in place, instead of rewriting the whole
+//! file on every save (the carried-forward store perf lever). Integrity
+//! is unchanged in strength — a truncated file fails the count check, a
+//! flipped bit fails its line checksum — and any failure still rebuilds
+//! the whole store.
+//!
 //! # Robustness
 //!
 //! [`load_into`] never fails the caller and never partially poisons the
 //! cache: a missing file is a cold start, and *anything* wrong with an
-//! existing file — bad magic, a different format version, a checksum
-//! mismatch (truncation, bit rot, concurrent writers), a malformed
-//! entry — yields [`LoadOutcome::Rebuilt`] with the reason, loads
-//! nothing, and the next [`save`] rewrites the file wholesale. Saves go
-//! through a temp-file + rename so a crash mid-write cannot corrupt an
-//! existing store. Entries from a different architecture / energy /
-//! DRAM configuration need no special handling: their [`EnvKey`] words
-//! differ, so their keys simply never hit.
+//! existing file — bad magic, a different format version, a count
+//! mismatch (truncation), a line-checksum mismatch (bit rot, a torn
+//! concurrent append), a malformed entry — yields
+//! [`LoadOutcome::Rebuilt`] with the reason, loads nothing, and the next
+//! save rewrites the file wholesale. Full rewrites go through a
+//! temp-file + rename so a crash mid-write cannot corrupt an existing
+//! store; a crash mid-*append* leaves a torn last line or a stale count,
+//! either of which reads as corruption and rebuilds. A concurrent
+//! writer is detected before appending — the [`DiskState`] guard checks
+//! the entry count, the byte length, *and* the trailing bytes against
+//! what this process last read or wrote — and demotes the save to a
+//! full rewrite: last writer wins with a complete, consistent file,
+//! never a blind append that could drop the other writer's entries.
+//! Entries from a different architecture / energy / DRAM configuration
+//! need no special handling: their [`EnvKey`] words differ, so their
+//! keys simply never hit.
 
+use std::collections::HashSet;
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
-use crate::compiler::tiling::{CostKey, EnvKey, LayerCost};
+use crate::compiler::keys::{CostKey, EnvKey};
 use crate::compiler::Dataflow;
+use crate::cost::{LayerCost, TrafficModel};
 use crate::model::{LayerKind, TrainingPass};
 use crate::sim::stats::PassStats;
 
 use super::cache::{CachedCost, CostCache};
 
-/// Bump on any change to the entry encoding below.
-pub const FORMAT_VERSION: u32 = 1;
+/// Bump on any change to the entry encoding below. v2: per-line
+/// checksums + entry-count header (appendable saves), and the
+/// [`TrafficModel`] joined the persisted [`LayerCost`] when the key
+/// module split out of the tiling monolith.
+pub const FORMAT_VERSION: u32 = 2;
 
 const MAGIC: &str = "ecoflow-cost-store";
 
+/// First line of every store file — derived from [`FORMAT_VERSION`] so
+/// bumping the version can never leave the writer emitting a header its
+/// own parser rejects.
+fn magic_line() -> String {
+    format!("{MAGIC} v{FORMAT_VERSION}\n")
+}
+
+/// The count field is fixed-width so [`append_update`] can patch it in
+/// place at a known offset.
+const COUNT_PREFIX: &str = "entries ";
+const COUNT_DIGITS: usize = 12;
+
+/// Byte offset of the count digits (start of file → after magic line and
+/// count prefix).
+fn count_offset() -> u64 {
+    (magic_line().len() + COUNT_PREFIX.len()) as u64
+}
+
 /// Tokens per entry line: 10 key scalars + the env words + 24 cost
 /// fields (cycles, seconds, 5 energy components, 13 stats counters,
-/// dram_bytes, utilization, mac_slots, dram_bound).
-const ENTRY_TOKENS: usize = 10 + EnvKey::WORDS + 24;
+/// dram_bytes, utilization, mac_slots, dram_bound) + the 3 traffic
+/// fields that are not derivable from the rest of the line
+/// (mcast_ids, mcast_id_bits, word_bits) + the line checksum. The
+/// remaining [`TrafficModel`] fields are reconstructed at parse time:
+/// its access counts are the stats counters projected verbatim and its
+/// hop distances are compile-time constants (both pinned by
+/// `tests/traffic_model.rs`), so persisting them would duplicate the
+/// line by ~40% for zero information.
+const ENTRY_TOKENS: usize = 10 + EnvKey::WORDS + 24 + 3 + 1;
 
 /// What [`load_into`] found at the path.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -61,7 +110,7 @@ pub enum LoadOutcome {
     /// All entries loaded into the cache.
     Loaded { entries: usize },
     /// File present but unusable; nothing loaded, the cache is left
-    /// untouched, and the next [`save`] rewrites the file from scratch.
+    /// untouched, and the next save rewrites the file from scratch.
     Rebuilt { reason: String },
 }
 
@@ -83,57 +132,250 @@ impl LoadOutcome {
     }
 }
 
+/// Bytes of trailing file content a [`DiskState`] remembers — the
+/// append guard's content probe.
+const TAIL_PROBE: usize = 64;
+
+/// A session's record of the store file's on-disk state, produced by
+/// [`load_tracked`] and full rewrites and advanced by [`append_update`].
+/// Appending blindly is only safe while the file still is *exactly*
+/// what this process last read or wrote, so three things are checked
+/// before any append: the entry count, the byte length, and the
+/// trailing [`TAIL_PROBE`] bytes (which end with the last entry's own
+/// checksum — a concurrent rewrite that kept both the count and the
+/// length would still be caught here). Any mismatch demotes the save to
+/// a full rewrite.
+#[derive(Clone, Debug, Default)]
+pub struct DiskState {
+    keys: HashSet<CostKey>,
+    /// Byte length of the file as of the last load/save.
+    len: u64,
+    /// The last [`TAIL_PROBE`] (or fewer) bytes of that content.
+    tail: Vec<u8>,
+}
+
+impl DiskState {
+    fn of_text(text: &str, keys: HashSet<CostKey>) -> Self {
+        let bytes = text.as_bytes();
+        let start = bytes.len().saturating_sub(TAIL_PROBE);
+        DiskState {
+            keys,
+            len: bytes.len() as u64,
+            tail: bytes[start..].to_vec(),
+        }
+    }
+
+    /// Keys verified to be persisted in the file.
+    pub fn keys(&self) -> &HashSet<CostKey> {
+        &self.keys
+    }
+
+    /// True when nothing is known to be on disk (cold start, or the
+    /// last load rebuilt).
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
 /// Load a store into `cache`. Infallible by design — see [`LoadOutcome`].
 pub fn load_into(path: &Path, cache: &CostCache) -> LoadOutcome {
+    load_tracked(path, cache).0
+}
+
+/// [`load_into`] that additionally reports what is now known to be on
+/// disk — the seed for [`append_update`]'s append guard. The state is
+/// empty unless the outcome is `Loaded`.
+pub fn load_tracked(path: &Path, cache: &CostCache) -> (LoadOutcome, DiskState) {
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LoadOutcome::Missing,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return (LoadOutcome::Missing, DiskState::default())
+        }
         Err(e) => {
-            return LoadOutcome::Rebuilt {
-                reason: format!("unreadable: {e}"),
-            }
+            return (
+                LoadOutcome::Rebuilt {
+                    reason: format!("unreadable: {e}"),
+                },
+                DiskState::default(),
+            )
         }
     };
     match parse(&text) {
         Ok(entries) => {
             let n = entries.len();
+            let mut keys = HashSet::with_capacity(n);
             for (k, v) in entries {
+                keys.insert(k);
                 cache.insert(k, v);
             }
-            LoadOutcome::Loaded { entries: n }
+            (LoadOutcome::Loaded { entries: n }, DiskState::of_text(&text, keys))
         }
-        Err(reason) => LoadOutcome::Rebuilt { reason },
+        Err(reason) => (LoadOutcome::Rebuilt { reason }, DiskState::default()),
     }
 }
 
-/// Write the cache's finished (`Ok`) entries to `path`, replacing any
-/// existing store atomically. Returns the number of entries written.
+/// The cache entries worth persisting: finished (`Ok`) costs of flows
+/// with process-stable codes, in deterministic snapshot order.
 ///
 /// Entries for runtime-registered custom dataflows are skipped: their
 /// [`Dataflow::code`]s are only stable within one process, so a
 /// persisted entry could deserialize as a *different* flow (or reject
 /// the whole file) in the next one. Built-in flows round-trip.
-pub fn save(path: &Path, cache: &CostCache) -> std::io::Result<usize> {
+fn persistable(cache: &CostCache) -> Vec<(CostKey, LayerCost)> {
+    cache
+        .snapshot()
+        .into_iter()
+        .filter(|(k, _)| k.flow.has_stable_code())
+        .filter_map(|(k, v)| v.ok().map(|c| (k, c)))
+        .collect()
+}
+
+fn entry_line(key: &CostKey, cost: &LayerCost) -> String {
     let mut body = String::new();
-    let mut n = 0usize;
-    for (key, value) in cache.snapshot() {
-        if let Ok(cost) = &value {
-            if !key.flow.has_stable_code() {
-                continue; // process-local custom flow: not persistable
-            }
-            encode_entry(&mut body, &key, cost);
-            body.push('\n');
-            n += 1;
-        }
-    }
+    encode_entry(&mut body, key, cost);
     let checksum = fnv1a64(body.as_bytes());
-    let text = format!("{MAGIC} v{FORMAT_VERSION}\nchecksum {checksum:016x}\n{body}");
+    body.push_str(&format!(" {checksum:016x}\n"));
+    body
+}
+
+fn header(entries: usize) -> String {
+    format!(
+        "{}{COUNT_PREFIX}{entries:0width$}\n",
+        magic_line(),
+        width = COUNT_DIGITS
+    )
+}
+
+/// Write the cache's persistable entries to `path`, replacing any
+/// existing store atomically (temp file + rename). Returns the number
+/// of entries written. Prefer [`append_update`] when the on-disk key
+/// set is known — it avoids rewriting unchanged entries.
+pub fn save(path: &Path, cache: &CostCache) -> std::io::Result<usize> {
+    let entries = persistable(cache);
+    write_full(path, &entries)?;
+    Ok(entries.len())
+}
+
+/// Rewrite the whole store atomically; returns the resulting
+/// [`DiskState`] so appending saves can continue from it.
+fn write_full(path: &Path, entries: &[(CostKey, LayerCost)]) -> std::io::Result<DiskState> {
+    let mut text = header(entries.len());
+    for (key, cost) in entries {
+        text.push_str(&entry_line(key, cost));
+    }
     // per-process temp name: concurrent invocations sharing a store file
     // each rename their own complete write (last one wins, never torn)
     let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-    std::fs::write(&tmp, text)?;
+    std::fs::write(&tmp, &text)?;
     std::fs::rename(&tmp, path)?;
-    Ok(n)
+    Ok(DiskState::of_text(
+        &text,
+        entries.iter().map(|(k, _)| *k).collect(),
+    ))
+}
+
+/// Persist the cache to `path` by **appending** only the entries whose
+/// keys are not in `state` (the on-disk record from [`load_tracked`],
+/// maintained across repeated saves), then patching the header's
+/// fixed-width count in place. Falls back to a full rewrite when
+/// nothing is known to be on disk (cold start, or the load rebuilt) or
+/// when the file fails the append guard (header, count, length or tail
+/// content changed since the load — a concurrent writer or damage).
+/// Returns the number of entries now in the file; `state` is updated to
+/// match.
+pub fn append_update(
+    path: &Path,
+    cache: &CostCache,
+    state: &mut DiskState,
+) -> std::io::Result<usize> {
+    let entries = persistable(cache);
+    if state.is_empty() {
+        let n = entries.len();
+        *state = write_full(path, &entries)?;
+        return Ok(n);
+    }
+    let fresh: Vec<&(CostKey, LayerCost)> = entries
+        .iter()
+        .filter(|(k, _)| !state.keys.contains(k))
+        .collect();
+    // No early return when `fresh` is empty: try_append with nothing to
+    // write still runs the full append guard, so a save with no new
+    // work verifies the file really holds what we report (and a
+    // replaced/damaged file is restored by the fallback below).
+    match try_append(path, &fresh, state) {
+        Ok(total) => Ok(total),
+        // the file was replaced, damaged, written by another schema or
+        // touched by a concurrent writer since we loaded it: fall back
+        // to a wholesale rewrite of everything this cache holds
+        Err(_) => {
+            let n = entries.len();
+            *state = write_full(path, &entries)?;
+            Ok(n)
+        }
+    }
+}
+
+fn try_append(
+    path: &Path,
+    fresh: &[&(CostKey, LayerCost)],
+    state: &mut DiskState,
+) -> std::io::Result<usize> {
+    use std::io::{Error, ErrorKind};
+    let guard = |msg: &str| Error::new(ErrorKind::InvalidData, msg.to_string());
+    let magic = magic_line();
+    let mut file = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+    // Append guard: the file must still be *exactly* what we last read
+    // or wrote. Byte length first (cheapest, catches any resize)...
+    if file.metadata()?.len() != state.len {
+        return Err(guard("length changed since load (concurrent writer)"));
+    }
+    // ...then the fixed header and the entry count...
+    let mut head = vec![0u8; magic.len() + COUNT_PREFIX.len() + COUNT_DIGITS + 1];
+    file.read_exact(&mut head)?;
+    let head = std::str::from_utf8(&head).map_err(|_| guard("non-utf8 header"))?;
+    let rest = head
+        .strip_prefix(magic.as_str())
+        .and_then(|r| r.strip_prefix(COUNT_PREFIX))
+        .ok_or_else(|| guard("bad store header"))?;
+    let on_disk: usize = rest
+        .trim_end_matches('\n')
+        .parse()
+        .map_err(|_| guard("bad entry count"))?;
+    if rest.len() != COUNT_DIGITS + 1 || !rest.ends_with('\n') {
+        return Err(guard("malformed count field"));
+    }
+    if on_disk != state.keys.len() {
+        return Err(guard("entry count changed since load (concurrent writer)"));
+    }
+    // ...then the trailing bytes, which end with the last entry's own
+    // checksum — a concurrent rewrite that coincidentally kept both the
+    // count and the length is still caught here.
+    let mut tail_now = vec![0u8; state.tail.len()];
+    file.seek(SeekFrom::Start(state.len - state.tail.len() as u64))?;
+    file.read_exact(&mut tail_now)?;
+    if tail_now != state.tail {
+        return Err(guard("content changed since load (concurrent writer)"));
+    }
+    // append the new lines, then patch the count in place; a crash
+    // between the two leaves a count mismatch, which loads as Rebuilt
+    let mut tail = String::new();
+    for (key, cost) in fresh {
+        tail.push_str(&entry_line(key, cost));
+    }
+    file.seek(SeekFrom::Start(state.len))?;
+    file.write_all(tail.as_bytes())?;
+    let total = on_disk + fresh.len();
+    file.seek(SeekFrom::Start(count_offset()))?;
+    file.write_all(format!("{total:0width$}", width = COUNT_DIGITS).as_bytes())?;
+    file.flush()?;
+    // advance the guard state past the bytes we just appended
+    state.keys.extend(fresh.iter().map(|(k, _)| *k));
+    state.len += tail.len() as u64;
+    let mut probe = state.tail.clone();
+    probe.extend_from_slice(tail.as_bytes());
+    let start = probe.len().saturating_sub(TAIL_PROBE);
+    state.tail = probe[start..].to_vec();
+    Ok(total)
 }
 
 fn parse(text: &str) -> Result<Vec<(CostKey, CachedCost)>, String> {
@@ -153,26 +395,35 @@ fn parse(text: &str) -> Result<Vec<(CostKey, CachedCost)>, String> {
             "stale format v{version}, this build writes v{FORMAT_VERSION}"
         ));
     }
-    let declared = lines
+    let declared: usize = lines
         .next()
-        .and_then(|l| l.strip_prefix("checksum "))
-        .and_then(|h| u64::from_str_radix(h, 16).ok())
-        .ok_or("missing or unparseable checksum line")?;
+        .and_then(|l| l.strip_prefix(COUNT_PREFIX))
+        .and_then(|h| h.parse().ok())
+        .ok_or("missing or unparseable entry-count line")?;
     let body: Vec<&str> = lines.collect();
-    let mut actual = Fnv::new();
-    for line in &body {
-        actual.update(line.as_bytes());
-        actual.update(b"\n");
-    }
-    if actual.finish() != declared {
-        return Err("checksum mismatch (corrupt or truncated)".into());
+    if body.len() != declared {
+        return Err(format!(
+            "entry count mismatch: header says {declared}, found {} (truncated or torn append)",
+            body.len()
+        ));
     }
     body.iter()
         .enumerate()
         .map(|(i, line)| {
-            parse_entry(line).ok_or_else(|| format!("malformed entry at line {}", i + 3))
+            checked_entry(line).ok_or_else(|| format!("malformed entry at line {}", i + 3))
         })
         .collect()
+}
+
+/// Split the trailing per-line checksum off, verify it, and decode the
+/// body. `None` on any mismatch.
+fn checked_entry(line: &str) -> Option<(CostKey, CachedCost)> {
+    let (body, checksum) = line.rsplit_once(' ')?;
+    let declared = u64::from_str_radix(checksum, 16).ok()?;
+    if fnv1a64(body.as_bytes()) != declared {
+        return None;
+    }
+    parse_entry(body)
 }
 
 // --- entry encoding ----------------------------------------------------
@@ -228,12 +479,18 @@ fn encode_entry(out: &mut String, k: &CostKey, c: &LayerCost) {
     wf(out, c.utilization);
     w(out, c.mac_slots);
     w(out, c.dram_bound as u64);
+    // traffic: only the fields parse_entry cannot reconstruct (see
+    // ENTRY_TOKENS)
+    let t = &c.traffic;
+    w(out, t.mcast_ids as u64);
+    w(out, t.mcast_id_bits as u64);
+    w(out, t.word_bits as u64);
 }
 
 fn parse_entry(line: &str) -> Option<(CostKey, CachedCost)> {
     let t: Vec<&str> = line.split(' ').collect();
-    if t.len() != ENTRY_TOKENS {
-        return None;
+    if t.len() != ENTRY_TOKENS - 1 {
+        return None; // the checksum token is split off by checked_entry
     }
     let dec = |s: &str| s.parse::<u64>().ok();
     let hex = |s: &str| u64::from_str_radix(s, 16).ok();
@@ -277,6 +534,32 @@ fn parse_entry(line: &str) -> Option<(CostKey, CachedCost)> {
         pe_stall: dec(c[18])?,
         pe_idle: dec(c[19])?,
     };
+    let u32of = |s: &str| dec(s).and_then(|v| u32::try_from(v).ok());
+    let dram_bytes = hexf(c[20])?;
+    // Reconstruct the traffic table from fields already on the line:
+    // its access counts are the stats counters projected verbatim and
+    // its hop distances are the compile-time link constants (both
+    // invariants pinned by `tests/traffic_model.rs`); only the §4.4 ID
+    // provisioning and the operand width carry their own tokens.
+    let traffic = TrafficModel {
+        dram_bytes,
+        gbuf_reads: stats.gbuf_reads,
+        gbuf_writes: stats.gbuf_writes,
+        spad_reads: stats.spad_reads,
+        spad_writes: stats.spad_writes,
+        macs: stats.macs,
+        gated_macs: stats.gated_macs,
+        pe_ctrl_cycles: stats.pe_busy,
+        gin_words: stats.noc_words,
+        gon_words: stats.gon_words,
+        local_words: stats.local_words,
+        gin_hops: crate::cost::traffic::GIN_HOPS,
+        gon_hops: crate::cost::traffic::GON_HOPS,
+        local_hops: crate::cost::traffic::LOCAL_HOPS,
+        mcast_ids: u32of(c[24])?,
+        mcast_id_bits: u32of(c[25])?,
+        word_bits: u32of(c[26])?,
+    };
     let cost = LayerCost {
         cycles: dec(c[0])?,
         seconds: hexf(c[1])?,
@@ -288,7 +571,8 @@ fn parse_entry(line: &str) -> Option<(CostKey, CachedCost)> {
             noc_pj: hexf(c[6])?,
         },
         stats,
-        dram_bytes: hexf(c[20])?,
+        traffic,
+        dram_bytes,
         utilization: hexf(c[21])?,
         mac_slots: dec(c[22])?,
         dram_bound: match dec(c[23])? {
@@ -338,36 +622,20 @@ fn pass_from(c: u64) -> Option<TrainingPass> {
 
 // --- FNV-1a 64 (no external hashing crates in this offline image) ------
 
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Self {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn update(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-
-    fn finish(&self) -> u64 {
-        self.0
-    }
-}
-
 fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = Fnv::new();
-    h.update(bytes);
-    h.finish()
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::tiling;
     use crate::config::ArchConfig;
+    use crate::cost;
     use crate::energy::{DramModel, EnergyParams};
     use crate::model::zoo;
 
@@ -385,7 +653,7 @@ mod tests {
             Dataflow::EcoFlow,
             4,
         );
-        let cost = tiling::layer_cost(
+        let cost = cost::layer_cost(
             &arch,
             &p,
             &d,
@@ -401,9 +669,8 @@ mod tests {
     #[test]
     fn entry_round_trip_is_bit_exact() {
         let (key, cost) = sample_entry();
-        let mut line = String::new();
-        encode_entry(&mut line, &key, &cost);
-        let (k2, c2) = parse_entry(&line).unwrap();
+        let line = entry_line(&key, &cost);
+        let (k2, c2) = checked_entry(line.trim_end()).unwrap();
         assert_eq!(key, k2);
         assert_eq!(Ok(cost), c2);
     }
@@ -411,24 +678,195 @@ mod tests {
     #[test]
     fn malformed_entries_rejected() {
         let (key, cost) = sample_entry();
-        let mut line = String::new();
-        encode_entry(&mut line, &key, &cost);
+        let line = entry_line(&key, &cost);
+        let line = line.trim_end();
         // wrong token count
-        assert!(parse_entry("").is_none());
-        assert!(parse_entry("1 2 3").is_none());
-        // unknown flow code (9 is neither built-in nor registered)
-        let mut toks: Vec<&str> = line.split(' ').collect();
-        toks[2] = "9";
-        assert!(parse_entry(&toks.join(" ")).is_none());
+        assert!(checked_entry("").is_none());
+        assert!(checked_entry("1 2 3").is_none());
+        // flipped payload bit: the line checksum catches it
+        let mut rotted = line.to_string().into_bytes();
+        rotted[0] = if rotted[0] == b'0' { b'1' } else { b'0' };
+        assert!(checked_entry(std::str::from_utf8(&rotted).unwrap()).is_none());
+        // unknown flow code (9 is neither built-in nor registered);
+        // re-checksum so the *decoder* (not the checksum) rejects it
+        let reject_with_token = |idx: usize, tok: &str| {
+            let body = line.rsplit_once(' ').unwrap().0;
+            let mut toks: Vec<&str> = body.split(' ').collect();
+            toks[idx] = tok;
+            let body = toks.join(" ");
+            let sum = fnv1a64(body.as_bytes());
+            assert!(
+                checked_entry(&format!("{body} {sum:016x}")).is_none(),
+                "token {idx} = {tok} must be rejected"
+            );
+        };
+        reject_with_token(2, "9");
         // custom-flow codes are rejected even when resolvable: their
         // registration-order meaning does not survive a process boundary
-        let mut toks: Vec<&str> = line.split(' ').collect();
-        toks[2] = "256";
-        assert!(parse_entry(&toks.join(" ")).is_none());
+        reject_with_token(2, "256");
         // non-numeric field
-        let mut toks: Vec<&str> = line.split(' ').collect();
-        toks[3] = "xyz";
-        assert!(parse_entry(&toks.join(" ")).is_none());
+        reject_with_token(3, "xyz");
+    }
+
+    #[test]
+    fn append_update_appends_instead_of_rewriting() {
+        let params = EnergyParams::default();
+        let dram = DramModel::default();
+        let arch = ArchConfig::ecoflow();
+        let path = std::env::temp_dir().join(format!(
+            "ecoflow-store-append-{}.cache",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+
+        // first save: cold (state empty) -> full write
+        let cache = CostCache::new();
+        let (k1, c1) = sample_entry();
+        cache.insert(k1, Ok(c1));
+        let mut state = DiskState::default();
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 1);
+        assert_eq!(state.keys().len(), 1);
+        let first = std::fs::read_to_string(&path).unwrap();
+
+        // second save with one new entry: the old body must survive as a
+        // byte-identical prefix (append, not rewrite), count goes to 2
+        let layer = &zoo::table5_layers()[1];
+        let k2 = CostKey::of(
+            &arch,
+            &params,
+            &dram,
+            layer,
+            TrainingPass::Forward,
+            Dataflow::EcoFlow,
+            4,
+        );
+        let c2 = cost::layer_cost(
+            &arch,
+            &params,
+            &dram,
+            layer,
+            TrainingPass::Forward,
+            Dataflow::EcoFlow,
+            4,
+        )
+        .unwrap();
+        cache.insert(k2, Ok(c2));
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 2);
+        assert_eq!(state.keys().len(), 2);
+        let second = std::fs::read_to_string(&path).unwrap();
+        let body_at = magic_line().len() + COUNT_PREFIX.len() + COUNT_DIGITS + 1;
+        assert!(second[body_at..].starts_with(&first[body_at..]));
+        assert!(second.len() > first.len());
+
+        // nothing new: no-op, same byte content
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 2);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), second);
+
+        // and the appended store loads cleanly + bit-exactly
+        let reloaded = CostCache::new();
+        let (outcome, disk) = load_tracked(&path, &reloaded);
+        assert_eq!(outcome, LoadOutcome::Loaded { entries: 2 });
+        assert_eq!(disk.keys(), state.keys());
+        assert_eq!(reloaded.get(&k1), Some(cache.get(&k1).unwrap()));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn concurrent_writer_demotes_append_to_full_rewrite() {
+        // Another process replacing the file between our load and save
+        // fails the append guard; a blind append could drop entries, so
+        // the save must rewrite everything this cache holds.
+        let path = std::env::temp_dir().join(format!(
+            "ecoflow-store-concurrent-{}.cache",
+            std::process::id()
+        ));
+        let cache = CostCache::new();
+        let (k, c) = sample_entry();
+        cache.insert(k, Ok(c));
+        let mut state = DiskState::default();
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 1);
+        // "concurrent" process rewrites the store down to zero entries
+        let _ = write_full(&path, &[]).unwrap();
+        // our next save has fresh work (a different batch size)
+        let mut k2 = k;
+        k2.batch += 1;
+        cache.insert(k2, cache.get(&k).unwrap());
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 2);
+        assert!(state.keys().contains(&k) && state.keys().contains(&k2));
+        assert!(matches!(
+            load_into(&path, &CostCache::new()),
+            LoadOutcome::Loaded { entries: 2 }
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn same_size_concurrent_rewrite_is_still_caught() {
+        // The nastiest case: a concurrent rewrite that keeps the entry
+        // count AND the byte length (here literally the same bytes with
+        // one entry's payload digit flipped, checksum re-stamped) must
+        // still fail the tail probe, not get appended onto.
+        let path = std::env::temp_dir().join(format!(
+            "ecoflow-store-samesize-{}.cache",
+            std::process::id()
+        ));
+        let cache = CostCache::new();
+        let (k, c) = sample_entry();
+        cache.insert(k, Ok(c));
+        let mut state = DiskState::default();
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 1);
+        // flip one digit inside the entry body and restore a matching
+        // line checksum so only the *content* differs
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let body = lines[2].rsplit_once(' ').unwrap().0.to_string();
+        let mut mutated: Vec<u8> = body.clone().into_bytes();
+        let pos = mutated.len() - 1;
+        mutated[pos] = if mutated[pos] == b'0' { b'1' } else { b'0' };
+        let mutated = String::from_utf8(mutated).unwrap();
+        assert_ne!(body, mutated);
+        let sum = fnv1a64(mutated.as_bytes());
+        lines[2] = format!("{mutated} {sum:016x}");
+        let forged = lines.join("\n") + "\n";
+        assert_eq!(forged.len(), text.len(), "test premise: same byte length");
+        std::fs::write(&path, forged).unwrap();
+        // fresh work: the guard must detect the foreign content and
+        // rewrite wholesale instead of appending onto it
+        let mut k2 = k;
+        k2.batch += 1;
+        cache.insert(k2, cache.get(&k).unwrap());
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 2);
+        assert!(matches!(
+            load_into(&path, &CostCache::new()),
+            LoadOutcome::Loaded { entries: 2 }
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn append_update_falls_back_to_rewrite_on_header_damage() {
+        let path = std::env::temp_dir().join(format!(
+            "ecoflow-store-fallback-{}.cache",
+            std::process::id()
+        ));
+        let cache = CostCache::new();
+        let (k, c) = sample_entry();
+        cache.insert(k, Ok(c));
+        // a real save first, so the state is non-empty...
+        let mut state = DiskState::default();
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 1);
+        // ...then the file is damaged behind our back: the guard must
+        // reject the append and rewrite wholesale
+        std::fs::write(&path, "not a store\n").unwrap();
+        let mut k2 = k;
+        k2.batch += 1;
+        cache.insert(k2, cache.get(&k).unwrap());
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 2);
+        assert!(matches!(
+            load_into(&path, &CostCache::new()),
+            LoadOutcome::Loaded { entries: 2 }
+        ));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

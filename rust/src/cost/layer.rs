@@ -1,0 +1,318 @@
+//! The layer-level cost model (paper §4.3, §6.1): proxy measurement →
+//! analytic extension → traffic → energy → timing.
+//!
+//! SASiML simulates one representative 2-D plane pass cycle-accurately
+//! (proxy geometry, capped spatial side for tractability) and this
+//! module extends it to a full layer exactly the way the hardware does:
+//!
+//! * the layer's `C x M x B` plane-pairs are spread over the array —
+//!   PE sets run concurrently (`r x t` sets per processing pass, the
+//!   paper's grouping/expansion), captured by the measured PE-set
+//!   utilization of the proxy pass applied to the full array;
+//! * inputs are reused across `p` filters per pass (reuse type 1 of
+//!   §4.3), discounting global-buffer fetches;
+//! * DRAM traffic is the layer's true data footprint (+ spill re-reads
+//!   when a plane exceeds the global buffer), which also provides the
+//!   bandwidth floor on execution time.
+//!
+//! Scaling from proxy to real geometry uses the closed-form MAC-slot
+//! counts (useful vs padded — §3.1), which the plane-op unit tests pin
+//! against the measured simulator counts.
+
+use crate::compiler::tiling::PlaneOp;
+use crate::compiler::Dataflow;
+use crate::config::ArchConfig;
+use crate::energy::{DramModel, EnergyBreakdown, EnergyParams};
+use crate::model::{ConvLayer, TrainingPass};
+use crate::sim::stats::PassStats;
+use crate::sim::SimError;
+
+use super::traffic::TrafficModel;
+
+/// Full cost of one layer's training pass under a dataflow.
+///
+/// `PartialEq` compares every field exactly (floats included): the cost
+/// model is deterministic, so two computations of the same
+/// [`CostKey`](crate::compiler::keys::CostKey) must be bit-identical —
+/// which is what the memoization layer
+/// ([`crate::coordinator::cache`]) and its property tests rely on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerCost {
+    pub cycles: u64,
+    pub seconds: f64,
+    pub energy: EnergyBreakdown,
+    pub stats: PassStats,
+    /// Per-hierarchy-level access counts the energy was derived from.
+    pub traffic: TrafficModel,
+    pub dram_bytes: f64,
+    pub utilization: f64,
+    pub mac_slots: u64,
+    /// True when the DRAM bandwidth floor (not compute) set the time.
+    pub dram_bound: bool,
+}
+
+impl LayerCost {
+    /// Execution time in milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.seconds * 1e3
+    }
+}
+
+/// Per-pass DRAM footprint of a layer in bytes (16-bit words; §6.2 trains
+/// in BFLOAT16), including spill re-reads when a plane exceeds the GB.
+pub fn dram_traffic_bytes(
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    pass: TrainingPass,
+    batch: usize,
+) -> f64 {
+    let w = (arch.word_bits / 8) as f64;
+    let c = layer.in_ch as f64;
+    let m = layer.num_filters as f64;
+    let b = batch as f64;
+    let ifm = (layer.ifm * layer.ifm) as f64;
+    let ofm = (layer.ofm * layer.ofm) as f64;
+    let kk = (layer.k * layer.k) as f64;
+    let e2 = (layer.err_side() * layer.err_side()) as f64;
+    // spill: if one input plane overflows the GB, inputs re-stream per
+    // filter group instead of staying resident.
+    let plane_bytes = ifm * w;
+    let spill = (plane_bytes / arch.gbuf_bytes as f64).max(1.0).min(m);
+    let (reads, writes) = match pass {
+        TrainingPass::Forward => (c * b * ifm * spill + m * c * kk, m * b * ofm),
+        TrainingPass::InputGrad => (m * b * e2 * spill + m * c * kk, c * b * ifm),
+        TrainingPass::FilterGrad => (c * b * ifm * spill + m * b * e2, m * c * kk),
+    };
+    (reads + writes) * w
+}
+
+/// Compute the cost of (layer, pass) under `flow` (paper §6.1 method).
+///
+/// Equivalent to [`proxy_stats`] + [`layer_cost_from_proxy`]; the split
+/// exists so the scheduler can share one proxy simulation across every
+/// job with the same [`ProxyKey`](crate::compiler::keys::ProxyKey).
+pub fn layer_cost(
+    arch: &ArchConfig,
+    params: &EnergyParams,
+    dram: &DramModel,
+    layer: &ConvLayer,
+    pass: TrainingPass,
+    flow: Dataflow,
+    batch: usize,
+) -> Result<LayerCost, SimError> {
+    let stats = proxy_stats(arch, layer, pass, flow)?;
+    Ok(layer_cost_from_proxy(
+        arch, params, dram, layer, pass, flow, batch, &stats,
+    ))
+}
+
+/// Cycle-accurate statistics of the proxy plane behind `(layer, pass,
+/// flow)` — the *simulated* (expensive) part of [`layer_cost`]. The
+/// result depends only on the job's
+/// [`ProxyKey`](crate::compiler::keys::ProxyKey): the architecture, the
+/// capped proxy op, the flow and (for the TPU) the filter tile width —
+/// never on channel counts, batch, or energy/DRAM parameters.
+pub fn proxy_stats(
+    arch: &ArchConfig,
+    layer: &ConvLayer,
+    pass: TrainingPass,
+    flow: Dataflow,
+) -> Result<PassStats, SimError> {
+    let proxy = PlaneOp::from_layer(layer, pass).proxy();
+    // Proxy policy is the compiler's: flows that amortize a multi-filter
+    // tile (the TPU keeps its array width busy with several filter
+    // columns per lowered matmul) report nf_tile > 1 and divide the
+    // tile's stats back to one plane.
+    let compiler = flow.resolve();
+    compiler.proxy_stats(arch, proxy, compiler.nf_tile(arch, layer))
+}
+
+/// Extend a measured proxy pass to the full (layer, pass, flow, batch)
+/// cost — the analytic (cheap) part of [`layer_cost`]. `proxy_stats`
+/// must be the [`proxy_stats`] result for the same (arch, layer, pass,
+/// flow); the scheduler guarantees this by grouping jobs on
+/// [`ProxyKey`](crate::compiler::keys::ProxyKey).
+#[allow(clippy::too_many_arguments)]
+pub fn layer_cost_from_proxy(
+    arch: &ArchConfig,
+    params: &EnergyParams,
+    dram: &DramModel,
+    layer: &ConvLayer,
+    pass: TrainingPass,
+    flow: Dataflow,
+    batch: usize,
+    proxy_stats: &PassStats,
+) -> LayerCost {
+    let op = PlaneOp::from_layer(layer, pass);
+    let proxy = op.proxy();
+    let zero_free = op.zero_free(flow);
+    let real_slots = op.mac_slots(zero_free);
+    let proxy_slots = proxy.mac_slots(zero_free);
+    let scale = real_slots as f64 / proxy_slots.max(1) as f64;
+
+    let n_pairs = (layer.plane_pairs() * batch) as u64;
+
+    // events: proxy events scaled to the real plane, times plane pairs,
+    // with input fetches amortized over the p filters sharing a pass.
+    let p_reuse = (arch.rf_filter / (layer.k * layer.k).max(1))
+        .clamp(1, layer.num_filters) as u64;
+    // §4.3 `q`: planes whose psums accumulate in-array before writeback —
+    // filters for input grads, channels for the forward, batch for
+    // filter grads.
+    let contrib = match pass {
+        TrainingPass::Forward => layer.in_ch,
+        TrainingPass::InputGrad => layer.num_filters,
+        TrainingPass::FilterGrad => batch,
+    };
+    let q_acc = (contrib as u64).clamp(1, p_reuse);
+    let per_plane = proxy_stats.scaled_by(scale);
+    let mut total = per_plane.scaled(n_pairs);
+    total.gbuf_reads /= p_reuse;
+    total.gon_words /= q_acc;
+    total.gbuf_writes /= q_acc;
+    // roughly half the GIN traffic is input words, amortized by reuse
+    total.noc_words = total.noc_words / 2 + total.noc_words / 2 / p_reuse;
+
+    // timing: the layer is bound by the slowest of four resources —
+    //  * compute: busy + structural-bubble PE slots through the array
+    //    (systolic skew shows up as pe_idle; chain ops as pe_busy);
+    //  * GIN input delivery, amortized over the p filters sharing a pass;
+    //  * GON output drain;
+    //  * the DRAM stream.
+    let wb = arch.word_bits;
+    let phys = arch.num_pes() as f64;
+    let per = |v: u64| (v as f64 * scale) * n_pairs as f64;
+    let compute_cycles =
+        ((per(proxy_stats.pe_busy) + per(proxy_stats.pe_idle)) / phys).ceil() as u64;
+    let delivery_cycles = (per(proxy_stats.gbuf_reads)
+        / (arch.noc.ifmap_words_per_cycle(wb) * p_reuse as usize) as f64)
+        .ceil() as u64;
+    let gon_cycles = (per(proxy_stats.gon_words)
+        / (arch.noc.output_words_per_cycle(wb) as u64 * q_acc) as f64)
+        .ceil() as u64;
+    let slots_total = real_slots.saturating_mul(n_pairs);
+    let dram_bytes = dram_traffic_bytes(arch, layer, pass, batch);
+    let dram_cycles = dram.transfer_cycles(dram_bytes, arch.clock_mhz);
+    let cycles = compute_cycles
+        .max(delivery_cycles)
+        .max(gon_cycles)
+        .max(dram_cycles);
+    total.cycles = cycles;
+    let util = compute_cycles as f64 / cycles.max(1) as f64;
+
+    let seconds = cycles as f64 * arch.cycle_ns() * 1e-9;
+    // the staged pipeline: layer-extended PassStats → per-level traffic
+    // → energy breakdown. All energy arithmetic lives in TrafficModel.
+    let traffic = TrafficModel::of(arch, op, zero_free, &total, dram_bytes);
+    let energy = traffic.energy(params, dram);
+
+    LayerCost {
+        cycles,
+        seconds,
+        energy,
+        stats: total,
+        traffic,
+        dram_bytes,
+        utilization: util,
+        mac_slots: slots_total,
+        dram_bound: cycles == dram_cycles && dram_cycles > compute_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn env() -> (ArchConfig, EnergyParams, DramModel) {
+        (
+            ArchConfig::ecoflow(),
+            EnergyParams::default(),
+            DramModel::default(),
+        )
+    }
+
+    fn resnet_conv3() -> ConvLayer {
+        zoo::table5_layers()
+            .into_iter()
+            .find(|l| l.net == "ResNet-50")
+            .unwrap()
+    }
+
+    #[test]
+    fn ecoflow_beats_rs_on_strided_input_grad() {
+        let (arch, p, d) = env();
+        let l = resnet_conv3(); // stride 2
+        let rs = layer_cost(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::RowStationary, 4).unwrap();
+        let ef = layer_cost(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::EcoFlow, 4).unwrap();
+        let speedup = rs.cycles as f64 / ef.cycles as f64;
+        assert!(speedup > 2.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn ecoflow_beats_rs_on_strided_filter_grad() {
+        let (arch, p, d) = env();
+        let l = resnet_conv3();
+        let rs = layer_cost(&arch, &p, &d, &l, TrainingPass::FilterGrad, Dataflow::RowStationary, 4).unwrap();
+        let ef = layer_cost(&arch, &p, &d, &l, TrainingPass::FilterGrad, Dataflow::EcoFlow, 4).unwrap();
+        assert!(rs.cycles as f64 / ef.cycles as f64 > 2.0);
+    }
+
+    #[test]
+    fn stride1_near_parity() {
+        let (arch, p, d) = env();
+        let l = ConvLayer::conv("T", "S1", 32, 30, 28, 3, 32, 1);
+        let rs = layer_cost(&arch, &p, &d, &l, TrainingPass::FilterGrad, Dataflow::RowStationary, 4).unwrap();
+        let ef = layer_cost(&arch, &p, &d, &l, TrainingPass::FilterGrad, Dataflow::EcoFlow, 4).unwrap();
+        let speedup = rs.cycles as f64 / ef.cycles as f64;
+        assert!((0.5..2.0).contains(&speedup), "{speedup}");
+    }
+
+    #[test]
+    fn dram_energy_similar_across_flows() {
+        // paper Figs. 10/12: DRAM energy ~unchanged across dataflows.
+        let (arch, p, d) = env();
+        let l = resnet_conv3();
+        let rs = layer_cost(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::RowStationary, 4).unwrap();
+        let ef = layer_cost(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::EcoFlow, 4).unwrap();
+        assert_eq!(rs.dram_bytes, ef.dram_bytes);
+        assert_eq!(rs.energy.dram_pj, ef.energy.dram_pj);
+    }
+
+    #[test]
+    fn ecoflow_energy_lower_on_strided_backward() {
+        let (arch, p, d) = env();
+        let l = resnet_conv3();
+        let rs = layer_cost(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::RowStationary, 4).unwrap();
+        let ef = layer_cost(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::EcoFlow, 4).unwrap();
+        assert!(ef.energy.total_pj() < rs.energy.total_pj());
+    }
+
+    #[test]
+    fn energy_is_the_traffic_models_conversion() {
+        // the staged pipeline is not decorative: the LayerCost energy IS
+        // TrafficModel::energy of the carried traffic table, bit-exactly.
+        let (arch, p, d) = env();
+        let l = resnet_conv3();
+        for pass in TrainingPass::ALL {
+            for flow in Dataflow::ALL {
+                let c = layer_cost(&arch, &p, &d, &l, pass, flow, 4).unwrap();
+                assert_eq!(c.energy, c.traffic.energy(&p, &d), "{pass:?} {flow:?}");
+                assert_eq!(c.traffic.dram_bytes, c.dram_bytes);
+                assert_eq!(c.traffic.gbuf_reads, c.stats.gbuf_reads);
+                assert_eq!(c.traffic.gin_words, c.stats.noc_words);
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_layer_costs_compute() {
+        let (arch, p, d) = env();
+        let l = zoo::table5_layers()
+            .into_iter()
+            .find(|l| l.net == "MobileNet")
+            .unwrap();
+        let c = layer_cost(&arch, &p, &d, &l, TrainingPass::InputGrad, Dataflow::EcoFlow, 4).unwrap();
+        assert!(c.cycles > 0);
+    }
+}

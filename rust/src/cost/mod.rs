@@ -1,0 +1,37 @@
+//! The cost subsystem: a staged `keys → traffic → energy` pipeline.
+//!
+//! The paper's headline claims are energy claims — Figs. 10/12 decompose
+//! DRAM / GBUFF / SPAD / ALU / NoC per layer — and per-hierarchy-level
+//! access counts are the right abstraction for comparing dataflows
+//! (CARLA and the Multi-Mode Inference Engine make the same argument).
+//! This module is that abstraction made first-class, in three stages:
+//!
+//! 1. **Measure** — a dataflow's registered
+//!    [`DataflowCompiler`](crate::compiler::DataflowCompiler) simulates
+//!    one capped proxy plane cycle-accurately ([`proxy_stats`]), on
+//!    either fabric (microprogrammed array or TPU systolic array,
+//!    scalar or batched engine), producing the shared
+//!    [`PassStats`](crate::sim::stats::PassStats) counters.
+//! 2. **Extend + project** — [`layer_cost_from_proxy`] scales the proxy
+//!    to the full (layer, pass, batch) by exact MAC-slot ratios, applies
+//!    the §4.3 reuse amortizations, and projects the result onto one
+//!    access count per hierarchy level: the [`TrafficModel`] (DRAM
+//!    bytes, GBUF/SPAD words, ALU ops, NoC words × hop distance × §4.4
+//!    multicast IDs).
+//! 3. **Convert** — [`TrafficModel::energy`] turns the traffic table
+//!    into the Fig. 10 [`EnergyBreakdown`](crate::energy::EnergyBreakdown);
+//!    timing comes from the four-resource bound (compute, GIN delivery,
+//!    GON drain, DRAM stream) in the same pass.
+//!
+//! Everything is keyed by the content addresses in
+//! [`crate::compiler::keys`]; the memoization layer and the persistent
+//! store rely on the whole pipeline being deterministic and therefore
+//! bit-exactly reproducible.
+
+pub mod layer;
+pub mod traffic;
+
+pub use layer::{
+    dram_traffic_bytes, layer_cost, layer_cost_from_proxy, proxy_stats, LayerCost,
+};
+pub use traffic::TrafficModel;

@@ -1,0 +1,295 @@
+//! The per-hierarchy-level traffic model and its energy conversion.
+//!
+//! [`TrafficModel`] is the middle stage of the cost pipeline
+//! (`PassStats` → `TrafficModel` → [`EnergyBreakdown`]): one access
+//! count per memory-hierarchy level (DRAM bytes, global-buffer and
+//! scratchpad words, ALU ops, NoC words by link class), plus the NoC
+//! *flow descriptors* — hop distances per link class and the §4.4
+//! multicast-ID provisioning — that turn word counts into wire + control
+//! energy. Both simulated fabrics (the microprogrammed array and the
+//! TPU systolic array, scalar and batched engines alike) feed it through
+//! the shared [`PassStats`], so every registered
+//! [`DataflowCompiler`](crate::compiler::DataflowCompiler) gets the same
+//! reporting fidelity for free.
+//!
+//! # NoC energy (§4.4, Table 1)
+//!
+//! The pre-split model charged one flat `noc_pj` per word regardless of
+//! link class. Here each word instead pays its link's *hop distance* in
+//! wire energy, and each GIN multicast delivery additionally pays the
+//! ID-match term of [`crate::analysis::noc::id_requirement`]: `ids`
+//! comparators of `bits` bits each, scaled against driving a full
+//! `word_bits`-bit word:
+//!
+//! ```text
+//! noc_pj = p.noc_pj * ( gin_words   * (GIN_HOPS + ids*bits/word_bits)
+//!                     + gon_words   *  GON_HOPS
+//!                     + local_words *  LOCAL_HOPS )
+//! ```
+//!
+//! Zero-free strided backward passes use the EcoFlow ID provisioning
+//! (`⌈K/S⌉` IDs of `⌈log₂(2K−S)⌉` bits); every other pass uses the
+//! baseline single-ID Eyeriss controller
+//! ([`noc::BASELINE_ID`](crate::analysis::noc::BASELINE_ID)).
+
+use crate::analysis::noc::{self, IdRequirement};
+use crate::compiler::tiling::PlaneOp;
+use crate::config::ArchConfig;
+use crate::energy::{DramModel, EnergyBreakdown, EnergyParams};
+use crate::sim::stats::PassStats;
+
+/// Bus segments a GIN multicast delivery traverses: the Y-bus spine,
+/// then the destination row's X-bus (the Eyeriss two-level GIN, §5.1).
+pub const GIN_HOPS: u32 = 2;
+/// Bus segments an output word traverses back to the global buffer
+/// (X-bus, then Y-bus spine).
+pub const GON_HOPS: u32 = 2;
+/// A local psum word moves one vertical neighbour link.
+pub const LOCAL_HOPS: u32 = 1;
+
+/// Per-hierarchy-level access counts of one full (layer, pass) under a
+/// dataflow — the first-class "traffic table" of the cost pipeline.
+///
+/// Compared bit-exactly (every count integral, `dram_bytes` by float
+/// equality) because the cost model is deterministic and the memoization
+/// layer relies on recomputation being indistinguishable from a cache
+/// hit.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrafficModel {
+    /// Off-chip traffic in bytes (reads + writes + spill re-reads).
+    pub dram_bytes: f64,
+    /// Global-buffer accesses, in words.
+    pub gbuf_reads: u64,
+    pub gbuf_writes: u64,
+    /// PE scratchpad (register-file) accesses, in words.
+    pub spad_reads: u64,
+    pub spad_writes: u64,
+    /// Multiplies actually issued (ALU energy) / clock-gated away.
+    pub macs: u64,
+    pub gated_macs: u64,
+    /// Active-PE control cycles (FSM + clocking inside the PE).
+    pub pe_ctrl_cycles: u64,
+    /// GIN multicast deliveries (words × destination PEs).
+    pub gin_words: u64,
+    /// GON words (outputs to the global buffer).
+    pub gon_words: u64,
+    /// Local inter-PE link words (vertical psum movement).
+    pub local_words: u64,
+    /// Hop distance per link class (see the module docs).
+    pub gin_hops: u32,
+    pub gon_hops: u32,
+    pub local_hops: u32,
+    /// Multicast IDs matched per GIN delivery and bits per ID (§4.4).
+    pub mcast_ids: u32,
+    pub mcast_id_bits: u32,
+    /// Operand width the ID-compare term is scaled against.
+    pub word_bits: u32,
+}
+
+impl TrafficModel {
+    /// Project the layer-extended [`PassStats`] of one (layer, pass,
+    /// flow) onto the hierarchy levels. `op` is the executed plane op
+    /// (its `(k, stride)` size the §4.4 multicast IDs), `zero_free`
+    /// whether `flow` runs it without padding zeros.
+    pub fn of(
+        arch: &ArchConfig,
+        op: PlaneOp,
+        zero_free: bool,
+        total: &PassStats,
+        dram_bytes: f64,
+    ) -> Self {
+        let (k, s) = op.kernel_stride();
+        // §4.4: only the zero-free *strided backward* schedules need the
+        // multi-ID multicast extension; direct convs and padded baselines
+        // run the single-ID Eyeriss controller.
+        let strided_backward = s > 1 && !matches!(op, PlaneOp::Direct { .. });
+        let id: IdRequirement = if zero_free && strided_backward {
+            noc::id_requirement(k, s)
+        } else {
+            noc::BASELINE_ID
+        };
+        Self {
+            dram_bytes,
+            gbuf_reads: total.gbuf_reads,
+            gbuf_writes: total.gbuf_writes,
+            spad_reads: total.spad_reads,
+            spad_writes: total.spad_writes,
+            macs: total.macs,
+            gated_macs: total.gated_macs,
+            pe_ctrl_cycles: total.pe_busy,
+            gin_words: total.noc_words,
+            gon_words: total.gon_words,
+            local_words: total.local_words,
+            gin_hops: GIN_HOPS,
+            gon_hops: GON_HOPS,
+            local_hops: LOCAL_HOPS,
+            mcast_ids: id.ids as u32,
+            mcast_id_bits: id.bits as u32,
+            word_bits: arch.word_bits as u32,
+        }
+    }
+
+    /// DRAM component: traffic-proportional access energy. Standby /
+    /// refresh is a system constant the paper's per-layer Fig. 10/12
+    /// comparisons do not attribute to the dataflow, so it is excluded
+    /// here (the DRAM bars track traffic, which is dataflow-independent).
+    pub fn dram_pj(&self, dram: &DramModel) -> f64 {
+        dram.energy_pj(self.dram_bytes, 0.0)
+    }
+
+    /// Global-buffer component.
+    pub fn gbuf_pj(&self, p: &EnergyParams) -> f64 {
+        (self.gbuf_reads + self.gbuf_writes) as f64 * p.gbuf_pj
+    }
+
+    /// Scratchpad component.
+    pub fn spad_pj(&self, p: &EnergyParams) -> f64 {
+        (self.spad_reads + self.spad_writes) as f64 * p.spad_pj
+    }
+
+    /// ALU component: issued MACs + gated slots + active-PE control.
+    pub fn alu_pj(&self, p: &EnergyParams) -> f64 {
+        self.macs as f64 * p.mac_pj()
+            + self.gated_macs as f64 * p.gated_pe_pj
+            + self.pe_ctrl_cycles as f64 * p.pe_ctrl_pj
+    }
+
+    /// NoC component: per-word wire energy × hop distance per link
+    /// class, plus the multicast ID-match term per GIN delivery (see the
+    /// module docs for the formula).
+    pub fn noc_pj(&self, p: &EnergyParams) -> f64 {
+        let id_cmp = (self.mcast_ids * self.mcast_id_bits) as f64 / self.word_bits as f64;
+        p.noc_pj
+            * (self.gin_words as f64 * (self.gin_hops as f64 + id_cmp)
+                + self.gon_words as f64 * self.gon_hops as f64
+                + self.local_words as f64 * self.local_hops as f64)
+    }
+
+    /// The full conversion: one [`EnergyBreakdown`] assembled from the
+    /// per-component methods, in Fig. 10 order. The component methods
+    /// ARE the breakdown — `energy(..).total_pj()` equals the sum of the
+    /// five component calls bit-exactly (pinned in
+    /// `tests/traffic_model.rs`).
+    pub fn energy(&self, p: &EnergyParams, dram: &DramModel) -> EnergyBreakdown {
+        EnergyBreakdown {
+            dram_pj: self.dram_pj(dram),
+            gbuf_pj: self.gbuf_pj(p),
+            spad_pj: self.spad_pj(p),
+            alu_pj: self.alu_pj(p),
+            noc_pj: self.noc_pj(p),
+        }
+    }
+
+    /// Render the §4.4 ID provisioning, e.g. `"2x3b"`.
+    pub fn mcast_label(&self) -> String {
+        format!("{}x{}b", self.mcast_ids, self.mcast_id_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(op: PlaneOp, zero_free: bool) -> TrafficModel {
+        let arch = ArchConfig::ecoflow();
+        let stats = PassStats {
+            cycles: 100,
+            macs: 50,
+            gated_macs: 10,
+            spad_reads: 120,
+            spad_writes: 60,
+            gbuf_reads: 30,
+            gbuf_writes: 8,
+            noc_words: 40,
+            gon_words: 8,
+            local_words: 12,
+            pe_busy: 60,
+            pe_stall: 30,
+            pe_idle: 10,
+        };
+        TrafficModel::of(&arch, op, zero_free, &stats, 1000.0)
+    }
+
+    #[test]
+    fn components_populate_and_sum() {
+        let p = EnergyParams::default();
+        let d = DramModel::default();
+        let t = sample(PlaneOp::Transpose { he: 4, k: 3, s: 2 }, true);
+        let e = t.energy(&p, &d);
+        assert!(e.dram_pj > 0.0 && e.gbuf_pj > 0.0 && e.spad_pj > 0.0);
+        assert!(e.alu_pj > 0.0 && e.noc_pj > 0.0);
+        // component methods and the assembled breakdown are one model
+        let sum = t.dram_pj(&d) + t.gbuf_pj(&p) + t.spad_pj(&p) + t.alu_pj(&p) + t.noc_pj(&p);
+        assert_eq!(sum, e.total_pj());
+    }
+
+    #[test]
+    fn zero_free_strided_backward_gets_ecoflow_ids() {
+        // §4.4: ⌈K/S⌉ IDs of ⌈log₂(2K−S)⌉ bits for the zero-free strided
+        // schedules; the baseline single-ID controller otherwise.
+        // k=3, s=2: ids = ⌈3/2⌉ = 2; groups = 2*3-2 = 4 -> 2 bits
+        let ef = sample(PlaneOp::Transpose { he: 4, k: 3, s: 2 }, true);
+        assert_eq!((ef.mcast_ids, ef.mcast_id_bits), (2, 2));
+        assert_eq!(ef.mcast_label(), "2x2b");
+        let padded = sample(PlaneOp::Transpose { he: 4, k: 3, s: 2 }, false);
+        assert_eq!(padded.mcast_ids, noc::BASELINE_ID.ids as u32);
+        // direct convs never pay the extension, zero-free or not
+        let fwd = sample(PlaneOp::Direct { hx: 9, k: 3, s: 2 }, true);
+        assert_eq!(fwd.mcast_ids, noc::BASELINE_ID.ids as u32);
+        // stride 1 needs a single ID even when zero-free
+        let s1 = sample(PlaneOp::Transpose { he: 4, k: 3, s: 1 }, true);
+        assert_eq!(s1.mcast_ids, noc::BASELINE_ID.ids as u32);
+    }
+
+    #[test]
+    fn noc_energy_scales_with_hops_and_ids() {
+        let p = EnergyParams::default();
+        let t = sample(PlaneOp::Transpose { he: 4, k: 3, s: 2 }, true);
+        // hand-computed: gin 40*(2 + 2*2/16) + gon 8*2 + local 12*1
+        let expected = p.noc_pj * (40.0 * (2.0 + 4.0 / 16.0) + 16.0 + 12.0);
+        assert!((t.noc_pj(&p) - expected).abs() < 1e-9);
+        // a wider ID provisioning costs more per GIN delivery:
+        // k=5, s=2: ids = 3, groups = 8 -> 3 bits => 9 compare bits vs
+        // the padded baseline's single 4-bit ID
+        let strided = sample(PlaneOp::Transpose { he: 4, k: 5, s: 2 }, true);
+        let padded = sample(PlaneOp::Transpose { he: 4, k: 5, s: 2 }, false);
+        assert_eq!((strided.mcast_ids, strided.mcast_id_bits), (3, 3));
+        assert!(strided.noc_pj(&p) > padded.noc_pj(&p));
+    }
+
+    #[test]
+    fn gating_cheaper_than_mac() {
+        let p = EnergyParams::default();
+        let arch = ArchConfig::ecoflow();
+        let op = PlaneOp::Direct { hx: 9, k: 3, s: 2 };
+        let gated = TrafficModel::of(
+            &arch,
+            op,
+            true,
+            &PassStats {
+                gated_macs: 100,
+                ..Default::default()
+            },
+            0.0,
+        );
+        let active = TrafficModel::of(
+            &arch,
+            op,
+            true,
+            &PassStats {
+                macs: 100,
+                ..Default::default()
+            },
+            0.0,
+        );
+        let d = DramModel::default();
+        assert!(gated.energy(&p, &d).total_pj() < active.energy(&p, &d).total_pj());
+    }
+
+    #[test]
+    fn dram_component_tracks_traffic_only() {
+        let d = DramModel::default();
+        let t = sample(PlaneOp::Direct { hx: 9, k: 3, s: 2 }, true);
+        assert!((t.dram_pj(&d) - 1000.0 * d.access_pj_per_byte).abs() < 1e-9);
+    }
+}

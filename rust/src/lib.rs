@@ -30,6 +30,7 @@ pub mod cli;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;
+pub mod cost;
 pub mod energy;
 pub mod model;
 pub mod report;

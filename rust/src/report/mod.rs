@@ -34,17 +34,23 @@ pub enum TableId {
     GanLayers,
     /// Table 8 — end-to-end GAN training vs TPU.
     GanE2e,
+    /// Per-level traffic table (not a paper table): the
+    /// [`TrafficModel`](crate::cost::TrafficModel) access counts behind
+    /// the Fig. 10 energy bars, per (layer, pass, flow).
+    Traffic,
 }
 
 impl TableId {
-    /// All tables, in paper order (the `report` command's order).
-    pub const ALL: [TableId; 6] = [
+    /// All tables: the paper tables in paper order (the `report`
+    /// command's order), then the traffic table the cost subsystem adds.
+    pub const ALL: [TableId; 7] = [
         TableId::Noc,
         TableId::Validation,
         TableId::CnnLayers,
         TableId::CnnE2e,
         TableId::GanLayers,
         TableId::GanE2e,
+        TableId::Traffic,
     ];
 
     /// Regenerate this table over `session`.
@@ -56,6 +62,7 @@ impl TableId {
             TableId::CnnE2e => tables::table6_cnn_e2e(session),
             TableId::GanLayers => tables::table7_layers(),
             TableId::GanE2e => tables::table8_gan_e2e(session),
+            TableId::Traffic => tables::traffic_table(session),
         }
     }
 }

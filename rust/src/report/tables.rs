@@ -2,9 +2,11 @@
 //! bench that trains the two topology variants through PJRT).
 
 use crate::analysis::noc;
-use crate::compiler::{tiling, Dataflow};
+use crate::compiler::Dataflow;
 use crate::config::{ArchConfig, NocConfig};
+use crate::coordinator::scheduler::SweepJob;
 use crate::coordinator::Session;
+use crate::cost;
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::{gan, zoo, ConvLayer, TrainingPass};
 use crate::util::table::{fnum, pct, Table};
@@ -92,7 +94,7 @@ pub fn table2_validation() -> Table {
             .iter()
             .find(|rl| rl.layer.name == name)
             .expect("alexnet layer");
-        let c = tiling::layer_cost(
+        let c = cost::layer_cost(
             &arch,
             &params,
             &dram,
@@ -180,6 +182,71 @@ pub fn table7_layers() -> Table {
             format!("{}x{}", l.k, l.k),
             l.num_filters.to_string(),
             l.stride.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The per-level traffic table: one row per (Table 5 CNN layer,
+/// gradient pass, flow) with the [`TrafficModel`](crate::cost::TrafficModel)
+/// access counts the Fig. 10 energy bars are derived from — DRAM bytes,
+/// GBUF/SPAD words, ALU ops, and NoC words per link class with their
+/// §4.4 multicast-ID provisioning. The job set is exactly Fig. 10's, so
+/// a session that already generated the energy figure answers this
+/// entirely from its memo table.
+pub fn traffic_table(session: &Session) -> Table {
+    let flows = [Dataflow::Tpu, Dataflow::RowStationary, Dataflow::EcoFlow];
+    // one job matrix through the sweep engine (threads, dedup, proxy
+    // grouping/fusing), not 48 serial single-job layer_cost calls
+    let mut jobs = Vec::new();
+    for pass in [TrainingPass::InputGrad, TrainingPass::FilterGrad] {
+        for layer in zoo::table5_layers() {
+            for flow in flows {
+                jobs.push(SweepJob {
+                    layer: layer.clone(),
+                    pass,
+                    flow,
+                    batch: crate::report::figures::BATCH,
+                });
+            }
+        }
+    }
+    let results = session.sweep(jobs);
+    let mut t = Table::new(
+        "Per-level traffic (DRAM MB / words / ops) behind the Fig. 10 energy bars",
+        &[
+            "layer [pass]",
+            "flow",
+            "DRAM MB",
+            "GBUF rd",
+            "GBUF wr",
+            "SPAD rd",
+            "SPAD wr",
+            "MACs",
+            "gated",
+            "GIN",
+            "GON",
+            "local",
+            "mcast IDs",
+        ],
+    );
+    for r in results {
+        let c = r.cost.as_ref().expect("layer cost");
+        let tr = &c.traffic;
+        t.row(vec![
+            format!("{} [{}]", r.job.layer.full_name(), r.job.pass.name()),
+            r.job.flow.name().to_string(),
+            fnum(tr.dram_bytes / 1e6, 1),
+            tr.gbuf_reads.to_string(),
+            tr.gbuf_writes.to_string(),
+            tr.spad_reads.to_string(),
+            tr.spad_writes.to_string(),
+            tr.macs.to_string(),
+            tr.gated_macs.to_string(),
+            tr.gin_words.to_string(),
+            tr.gon_words.to_string(),
+            tr.local_words.to_string(),
+            tr.mcast_label(),
         ]);
     }
     t

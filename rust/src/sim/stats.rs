@@ -1,7 +1,9 @@
-//! Per-pass simulation statistics and their conversion to energy.
+//! Per-pass simulation statistics: the raw event counters both fabrics
+//! (microprogrammed array and systolic array, scalar and batched
+//! engines) emit. Conversion to per-level traffic and energy lives in
+//! [`crate::cost`] (`PassStats` → `TrafficModel` → `EnergyBreakdown`).
 
 use crate::config::ArchConfig;
-use crate::energy::{DramModel, EnergyBreakdown, EnergyParams};
 
 /// Event counts and timing of one simulated processing pass.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -68,6 +70,28 @@ impl PassStats {
         }
     }
 
+    /// Scale all counters by a real factor, rounding to the nearest
+    /// event (the proxy → real-plane extension and the TPU's
+    /// multi-filter-tile amortization both use this).
+    pub fn scaled_by(&self, f: f64) -> PassStats {
+        let m = |v: u64| (v as f64 * f).round() as u64;
+        PassStats {
+            cycles: m(self.cycles),
+            macs: m(self.macs),
+            gated_macs: m(self.gated_macs),
+            spad_reads: m(self.spad_reads),
+            spad_writes: m(self.spad_writes),
+            gbuf_reads: m(self.gbuf_reads),
+            gbuf_writes: m(self.gbuf_writes),
+            noc_words: m(self.noc_words),
+            gon_words: m(self.gon_words),
+            local_words: m(self.local_words),
+            pe_busy: m(self.pe_busy),
+            pe_stall: m(self.pe_stall),
+            pe_idle: m(self.pe_idle),
+        }
+    }
+
     /// PE utilization: busy / (busy + stall + idle).
     pub fn utilization(&self) -> f64 {
         let total = self.pe_busy + self.pe_stall + self.pe_idle;
@@ -78,38 +102,9 @@ impl PassStats {
         }
     }
 
-    /// On-chip energy breakdown (DRAM filled in by the layer-level model,
-    /// which knows the off-chip traffic).
-    pub fn energy(&self, p: &EnergyParams) -> EnergyBreakdown {
-        EnergyBreakdown {
-            dram_pj: 0.0,
-            gbuf_pj: (self.gbuf_reads + self.gbuf_writes) as f64 * p.gbuf_pj,
-            spad_pj: (self.spad_reads + self.spad_writes) as f64 * p.spad_pj,
-            alu_pj: self.macs as f64 * p.mac_pj()
-                + self.gated_macs as f64 * p.gated_pe_pj
-                + self.pe_busy as f64 * p.pe_ctrl_pj,
-            noc_pj: (self.noc_words + self.gon_words + self.local_words) as f64
-                * p.noc_pj,
-        }
-    }
-
     /// Wall-clock seconds at the configured array clock.
     pub fn seconds(&self, arch: &ArchConfig) -> f64 {
         self.cycles as f64 * arch.cycle_ns() * 1e-9
-    }
-
-    /// Full energy including DRAM traffic (`dram_bytes` moved during the
-    /// pass) using the DRAM model.
-    pub fn energy_with_dram(
-        &self,
-        p: &EnergyParams,
-        dram: &DramModel,
-        arch: &ArchConfig,
-        dram_bytes: f64,
-    ) -> EnergyBreakdown {
-        let mut e = self.energy(p);
-        e.dram_pj = dram.energy_pj(dram_bytes, self.seconds(arch));
-        e
     }
 }
 
@@ -156,35 +151,27 @@ mod tests {
     }
 
     #[test]
-    fn energy_components_populate() {
-        let p = EnergyParams::default();
-        let e = sample().energy(&p);
-        assert!(e.gbuf_pj > 0.0 && e.spad_pj > 0.0 && e.alu_pj > 0.0 && e.noc_pj > 0.0);
-        assert_eq!(e.dram_pj, 0.0);
+    fn scaled_by_rounds_to_nearest_event() {
+        let s = sample().scaled_by(0.5);
+        assert_eq!(s.cycles, 50);
+        assert_eq!(s.macs, 25);
+        assert_eq!(s.gated_macs, 5);
+        // 0.5 rounds half-away-from-zero per f64::round
+        assert_eq!(
+            PassStats {
+                macs: 3,
+                ..Default::default()
+            }
+            .scaled_by(0.5)
+            .macs,
+            2
+        );
     }
 
     #[test]
-    fn dram_energy_added() {
-        let p = EnergyParams::default();
-        let arch = ArchConfig::default();
-        let d = DramModel::default();
-        let e = sample().energy_with_dram(&p, &d, &arch, 1000.0);
-        assert!(e.dram_pj > 0.0);
-    }
-
-    #[test]
-    fn gating_cheaper_than_mac() {
-        let p = EnergyParams::default();
-        let mut gated = PassStats {
-            gated_macs: 100,
-            ..Default::default()
-        };
-        let mut active = PassStats {
-            macs: 100,
-            ..Default::default()
-        };
-        gated.pe_busy = 0;
-        active.pe_busy = 0;
-        assert!(gated.energy(&p).total_pj() < active.energy(&p).total_pj());
+    fn seconds_at_configured_clock() {
+        let arch = ArchConfig::default(); // 200 MHz => 5 ns/cycle
+        let s = sample();
+        assert!((s.seconds(&arch) - 100.0 * 5e-9).abs() < 1e-15);
     }
 }

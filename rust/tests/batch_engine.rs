@@ -193,7 +193,7 @@ fn store_rejects_garbage_stale_and_corrupt_files() {
     let good = std::fs::read_to_string(&path).unwrap();
 
     // (2) stale version header: rebuilt with a reason naming it
-    std::fs::write(&path, good.replacen(" v1\n", " v999\n", 1)).unwrap();
+    std::fs::write(&path, good.replacen(" v2\n", " v999\n", 1)).unwrap();
     match store::load_into(&path, &CostCache::new()) {
         LoadOutcome::Rebuilt { reason } => {
             assert!(reason.contains("v999"), "{reason}")
@@ -201,7 +201,7 @@ fn store_rejects_garbage_stale_and_corrupt_files() {
         other => panic!("expected Rebuilt, got {other:?}"),
     }
 
-    // (3) truncation: drop the last line -> checksum mismatch
+    // (3) truncation: drop the last line -> entry-count mismatch
     let truncated: String = {
         let mut lines: Vec<&str> = good.lines().collect();
         lines.pop();
@@ -214,6 +214,7 @@ fn store_rejects_garbage_stale_and_corrupt_files() {
     ));
 
     // (4) bit rot in the body: flip a digit inside an entry line
+    // (caught by that line's own checksum in the v2 format)
     let mut rotted = good.clone().into_bytes();
     let body_off = good.find('\n').unwrap() + 1;
     let body_off = body_off + good[body_off..].find('\n').unwrap() + 1;

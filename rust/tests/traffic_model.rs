@@ -1,0 +1,175 @@
+//! Integration: the traffic model IS the energy model.
+//!
+//! 1. **Decomposition property:** for every (PlaneOp family × Dataflow)
+//!    cell — covered by a conv layer and a transposed-conv layer across
+//!    all three training passes — the five `TrafficModel` component
+//!    energies equal the `LayerCost` breakdown fields and sum
+//!    *bit-exactly* to `EnergyBreakdown::total_pj()`, and `shares()`
+//!    sums to 1.0 within 1e-12.
+//! 2. **Projection property:** the traffic table is the layer-extended
+//!    `PassStats` projected onto hierarchy levels — counts must match
+//!    counter-for-counter, and the NoC descriptors must carry the §4.4
+//!    ID provisioning.
+//! 3. **Golden snapshot:** Fig. 10-style per-component shares for one
+//!    AlexNet layer and one generator transposed-conv layer (CycleGAN
+//!    Gen-TCONV1 — the DCGAN-class workload in the zoo), bootstrapped to
+//!    `tests/golden/energy_shares.txt` on first run and compared
+//!    exactly afterwards, like `e2e_speedups.txt`.
+//!
+//! Runs under both lane widths in CI (`--features lanes16` job),
+//! alongside `engine_matrix`.
+
+use std::path::PathBuf;
+
+use ecoflow::compiler::Dataflow;
+use ecoflow::coordinator::Session;
+use ecoflow::model::{gan, zoo, ConvLayer, TrainingPass};
+
+const BATCH: usize = 4;
+
+fn cell_layers() -> Vec<ConvLayer> {
+    let conv = zoo::table5_layers()
+        .into_iter()
+        .find(|l| l.net == "ResNet-50")
+        .unwrap();
+    let tconv = gan::table7_layers()
+        .into_iter()
+        .find(|l| l.name == "Gen-TCONV1")
+        .unwrap();
+    vec![conv, tconv]
+}
+
+#[test]
+fn component_energies_sum_bit_exactly_and_shares_normalize() {
+    let session = Session::builder().threads(4).build();
+    let p = *session.params();
+    let d = *session.dram();
+    for layer in cell_layers() {
+        for pass in TrainingPass::ALL {
+            for flow in Dataflow::ALL {
+                let c = session
+                    .layer_cost(&layer, pass, flow, BATCH)
+                    .expect("layer cost");
+                let t = &c.traffic;
+                let label = format!("{} {pass:?} {flow:?}", layer.full_name());
+                // each component method equals its breakdown field...
+                assert_eq!(t.dram_pj(&d), c.energy.dram_pj, "{label}");
+                assert_eq!(t.gbuf_pj(&p), c.energy.gbuf_pj, "{label}");
+                assert_eq!(t.spad_pj(&p), c.energy.spad_pj, "{label}");
+                assert_eq!(t.alu_pj(&p), c.energy.alu_pj, "{label}");
+                assert_eq!(t.noc_pj(&p), c.energy.noc_pj, "{label}");
+                // ...and their sum is the total, bit-exactly (same
+                // values added in the same order as total_pj)
+                let sum =
+                    t.dram_pj(&d) + t.gbuf_pj(&p) + t.spad_pj(&p) + t.alu_pj(&p) + t.noc_pj(&p);
+                assert_eq!(sum.to_bits(), c.energy.total_pj().to_bits(), "{label}");
+                // shares normalize
+                let share_sum: f64 = c.energy.shares().iter().sum();
+                assert!((share_sum - 1.0).abs() < 1e-12, "{label}: {share_sum}");
+            }
+        }
+    }
+}
+
+#[test]
+fn traffic_is_the_stats_projection_with_noc_descriptors() {
+    let session = Session::builder().threads(4).build();
+    for layer in cell_layers() {
+        for pass in TrainingPass::ALL {
+            for flow in Dataflow::ALL {
+                let c = session
+                    .layer_cost(&layer, pass, flow, BATCH)
+                    .expect("layer cost");
+                let t = &c.traffic;
+                let label = format!("{} {pass:?} {flow:?}", layer.full_name());
+                assert_eq!(t.dram_bytes, c.dram_bytes, "{label}");
+                assert_eq!(t.gbuf_reads, c.stats.gbuf_reads, "{label}");
+                assert_eq!(t.gbuf_writes, c.stats.gbuf_writes, "{label}");
+                assert_eq!(t.spad_reads, c.stats.spad_reads, "{label}");
+                assert_eq!(t.spad_writes, c.stats.spad_writes, "{label}");
+                assert_eq!(t.macs, c.stats.macs, "{label}");
+                assert_eq!(t.gated_macs, c.stats.gated_macs, "{label}");
+                assert_eq!(t.pe_ctrl_cycles, c.stats.pe_busy, "{label}");
+                assert_eq!(t.gin_words, c.stats.noc_words, "{label}");
+                assert_eq!(t.gon_words, c.stats.gon_words, "{label}");
+                assert_eq!(t.local_words, c.stats.local_words, "{label}");
+                assert!(t.mcast_ids >= 1 && t.mcast_id_bits >= 1, "{label}");
+                assert_eq!(t.word_bits, 16, "{label}");
+            }
+        }
+    }
+    // the §4.4 extension shows up exactly where the paper puts it: a
+    // zero-free strided transpose under EcoFlow provisions ⌈K/S⌉ IDs,
+    // the padded RS baseline keeps the single baseline ID
+    let layers = cell_layers();
+    let tconv = &layers[1]; // k=3, stride=2
+    let ef = session
+        .layer_cost(tconv, TrainingPass::Forward, Dataflow::EcoFlow, BATCH)
+        .unwrap();
+    assert_eq!(ef.traffic.mcast_ids, 2, "{:?}", ef.traffic);
+    let rs = session
+        .layer_cost(tconv, TrainingPass::Forward, Dataflow::RowStationary, BATCH)
+        .unwrap();
+    assert_eq!(rs.traffic.mcast_ids, 1, "{:?}", rs.traffic);
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("energy_shares.txt")
+}
+
+#[test]
+fn fig10_style_shares_pinned_by_golden_snapshot() {
+    // One CNN layer (AlexNet) and one GAN generator layer (CycleGAN
+    // Gen-TCONV1), gradient passes × the Fig. 10 flow set. Bootstraps on
+    // first run; commit the file once generated on the reference host.
+    let session = Session::builder().threads(4).build();
+    let alexnet = zoo::table5_layers()
+        .into_iter()
+        .find(|l| l.net == "AlexNet")
+        .unwrap();
+    let gen = gan::table7_layers()
+        .into_iter()
+        .find(|l| l.name == "Gen-TCONV1")
+        .unwrap();
+    let mut rows = Vec::new();
+    for layer in [&alexnet, &gen] {
+        for pass in [TrainingPass::InputGrad, TrainingPass::FilterGrad] {
+            for flow in [Dataflow::Tpu, Dataflow::RowStationary, Dataflow::EcoFlow] {
+                let c = session.layer_cost(layer, pass, flow, BATCH).unwrap();
+                let s = c.energy.shares();
+                rows.push(format!(
+                    "shares {:<12} {:<10} {:<11} {:<7} dram={:.6} gbuf={:.6} spad={:.6} alu={:.6} noc={:.6}",
+                    layer.net,
+                    layer.name,
+                    pass.name(),
+                    flow.name(),
+                    s[0],
+                    s[1],
+                    s[2],
+                    s[3],
+                    s[4],
+                ));
+            }
+        }
+    }
+    let snapshot = rows.join("\n") + "\n";
+    let path = golden_path();
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => {
+            assert_eq!(
+                golden, snapshot,
+                "per-component energy shares moved vs {}; if the cost \
+                 model changed intentionally, delete the file to re-baseline",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir");
+            std::fs::write(&path, snapshot).expect("write golden");
+            eprintln!("bootstrapped golden snapshot at {}", path.display());
+        }
+    }
+}
