@@ -1,0 +1,151 @@
+//! Perf bench: the resident sweep service under concurrent load.
+//!
+//! Spawns the JSON-lines service on a loopback port, warms the cost
+//! cache with one pass over the request set, then hammers it from
+//! several concurrent connections and reports throughput (qps) plus
+//! *exact* client-side latency percentiles (p50/p99) computed from
+//! every recorded round-trip — alongside the server's own histogram
+//! view from the shutdown report, so the two observability paths can
+//! be eyeballed against each other.
+//!
+//! Machine-readable trajectory line (mirrors perf_hotpath's):
+//! `{"bench":"service_layer_cost","unit":"us","qps":...,"p50_us":...,"p99_us":...}`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use ecoflow::coordinator::Session;
+use ecoflow::model::zoo;
+use ecoflow::service::{self, ServiceConfig};
+use ecoflow::util::bench::BenchSet;
+
+/// Concurrent connections in the timed phase.
+const CLIENTS: usize = 4;
+/// Rounds over the request set per connection.
+const ROUNDS: usize = 25;
+
+/// The request set: every Table 5 layer as a warm-key `layer_cost`.
+fn request_lines() -> Vec<String> {
+    zoo::table5_layers()
+        .iter()
+        .map(|l| {
+            format!(
+                r#"{{"type":"layer_cost","net":"{}","layer":"{}","pass":"forward","flow":"EcoFlow","batch":4}}"#,
+                l.net, l.name
+            )
+        })
+        .collect()
+}
+
+/// Run `rounds` passes over `lines` on one connection, returning every
+/// request's client-side round-trip latency.
+fn client(addr: SocketAddr, lines: &[String], rounds: usize) -> Vec<Duration> {
+    let stream = TcpStream::connect(addr).expect("connect to service");
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut stream = stream;
+    let mut latencies = Vec::with_capacity(rounds * lines.len());
+    let mut reply = String::new();
+    for _ in 0..rounds {
+        for line in lines {
+            let t = Instant::now();
+            stream.write_all(line.as_bytes()).expect("send request");
+            stream.write_all(b"\n").expect("send newline");
+            reply.clear();
+            reader.read_line(&mut reply).expect("read reply");
+            latencies.push(t.elapsed());
+            assert!(
+                reply.contains("\"ok\":true"),
+                "service answered an error: {reply}"
+            );
+        }
+    }
+    latencies
+}
+
+fn main() {
+    let lines = request_lines();
+    let session = Session::builder().build();
+    let handle = service::spawn(
+        session,
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            linger: Duration::from_millis(1),
+        },
+    )
+    .expect("spawn service");
+    let addr = handle.addr();
+
+    // Warm pass: every key simulated once, so the timed phase measures
+    // the resident-store hot path (cache hits + protocol + TCP), not
+    // simulation time.
+    let cold = client(addr, &lines, 1);
+    let cold_total: Duration = cold.iter().sum();
+    println!(
+        "warm-up: {} cold requests in {cold_total:?} (simulation dominated)",
+        cold.len()
+    );
+
+    // Timed phase: CLIENTS concurrent connections, warm keys only.
+    let t0 = Instant::now();
+    let mut latencies: Vec<Duration> = thread::scope(|s| {
+        let workers: Vec<_> = (0..CLIENTS)
+            .map(|_| s.spawn(|| client(addr, &lines, ROUNDS)))
+            .collect();
+        workers
+            .into_iter()
+            .flat_map(|w| w.join().expect("client thread"))
+            .collect()
+    });
+    let wall = t0.elapsed();
+    latencies.sort();
+    let total = latencies.len();
+    let qps = total as f64 / wall.as_secs_f64();
+    let pct = |q: f64| {
+        let rank = ((total as f64 * q).ceil() as usize).clamp(1, total);
+        latencies[rank - 1]
+    };
+    let (p50, p99) = (pct(0.50), pct(0.99));
+    let mean_us =
+        latencies.iter().sum::<Duration>().as_micros() as u64 / total as u64;
+    println!(
+        "service_layer_cost (warm): {total} requests over {CLIENTS} connections in {wall:?}"
+    );
+    println!(
+        "  -> {qps:.0} qps, latency mean {mean_us}us p50 {:?} p99 {:?}",
+        p50, p99
+    );
+    println!(
+        "{{\"bench\":\"service_layer_cost\",\"unit\":\"us\",\"qps\":{:.0},\"p50_us\":{},\"p99_us\":{},\"mean_us\":{mean_us},\"clients\":{CLIENTS},\"requests\":{total}}}",
+        qps,
+        p50.as_micros(),
+        p99.as_micros()
+    );
+
+    // Single-connection round trip through the standard harness, for a
+    // bench-suite-style line (no concurrency, pure protocol overhead).
+    let mut set = BenchSet::new();
+    let stream = TcpStream::connect(addr).expect("connect to service");
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut stream = stream;
+    let mut reply = String::new();
+    let line = &lines[0];
+    set.run("service_round_trip/warm_layer_cost", 400, || {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("\"ok\":true"));
+    });
+    drop(reader);
+    drop(stream);
+
+    // The server's own view: histogram percentiles (2x-resolution upper
+    // bounds) should bracket the exact client-side numbers above.
+    handle.shutdown();
+    let report = handle.join();
+    println!("server: {}", report.render());
+}

@@ -12,6 +12,7 @@
 //! ecoflow validate [--artifacts DIR]             golden JAX-vs-sim check
 //! ecoflow train [--steps N] [--variant stride|pool]
 //! ecoflow sweep [--csv]                          full layer sweep
+//! ecoflow serve [--addr HOST:PORT]               resident sweep service
 //! ecoflow version
 //! ```
 //!
@@ -32,10 +33,19 @@
 //! answers >90% of its lookups from disk. `--max-sim-cycles N` tightens
 //! the simulator's cycle backstop for the whole invocation.
 //! `--engine auto|scalar|batched` picks the simulation engine for both
-//! PE-array fabrics (engine-selection precedence: CLI flag > session
-//! builder > pre-existing process override — the flag feeds the builder,
-//! which sets the process-wide policy at build time; results are
-//! bit-identical under every choice, only throughput moves).
+//! PE-array fabrics. The choice is *per invocation*: the flag feeds the
+//! session builder (which snapshots it — see
+//! [`SessionBuilder::engine`](crate::coordinator::SessionBuilder::engine))
+//! and sets the process default for the few non-session paths
+//! (`validate`/`train` goldens); results are bit-identical under every
+//! choice, only throughput moves.
+//!
+//! `serve` turns the invocation into a resident daemon (see
+//! [`service`](crate::service)): the session — store load included — is
+//! built once and then answers JSON-lines requests over TCP until a
+//! `shutdown` request arrives. Unlike the one-shot commands, `serve`
+//! defaults `--threads` to the full host parallelism rather than the
+//! interactive cap, since a daemon's sweeps are its whole job.
 
 use std::collections::HashMap;
 
@@ -43,10 +53,12 @@ use anyhow::{anyhow, Result};
 
 use crate::compiler::tiling::PlaneOp;
 use crate::compiler::Dataflow;
-use crate::coordinator::scheduler::{default_threads, job_matrix, SweepJob};
+use crate::coordinator::scheduler::{default_threads, job_matrix, SweepJob, CLI_THREAD_CAP};
 use crate::coordinator::Session;
 use crate::model::{gan, zoo, ConvLayer, TrainingPass};
 use crate::report::{FigureId, TableId};
+use crate::service::protocol::{parse_flow, parse_pass};
+use crate::service::{self, ServiceConfig};
 use crate::runtime::trainer::{Trainer, Variant};
 use crate::runtime::{golden, Engine};
 use crate::util::prng::Prng;
@@ -94,6 +106,8 @@ pub fn usage() -> &'static str {
      \u{20}  validate [--artifacts DIR]         golden JAX-vs-simulator check\n\
      \u{20}  train [--steps N] [--variant stride|pool] [--artifacts DIR]\n\
      \u{20}  sweep [--csv]                      full layer x dataflow sweep\n\
+     \u{20}  serve [--addr HOST:PORT] [--linger-ms N]   resident sweep service\n\
+     \u{20}        (JSON-lines over TCP; see README \"Sweep service\")\n\
      \u{20}  version\n\
      options: --threads N, --csv, --cache-stats,\n\
      \u{20}        --cache-file PATH (persist the layer-cost cache across runs),\n\
@@ -188,24 +202,9 @@ fn flows_table() -> Table {
     t
 }
 
-/// Parse a `--pass` spelling (both CLI hyphens and the internal
-/// underscore names are accepted).
-fn parse_pass(s: &str) -> Option<TrainingPass> {
-    match s {
-        "forward" | "fwd" => Some(TrainingPass::Forward),
-        "input-grad" | "input_grad" | "igrad" => Some(TrainingPass::InputGrad),
-        "filter-grad" | "filter_grad" | "fgrad" => Some(TrainingPass::FilterGrad),
-        _ => None,
-    }
-}
-
-/// Parse a `--flow` spelling against the registry (case-insensitive
-/// compiler names, so registered custom flows are addressable too).
-fn parse_flow(s: &str) -> Option<Dataflow> {
-    Dataflow::registered()
-        .into_iter()
-        .find(|f| f.name().eq_ignore_ascii_case(s))
-}
+// `--pass` / `--flow` spellings are shared with the sweep service's
+// wire protocol (`parse_pass` / `parse_flow` from
+// [`service::protocol`]), so the two surfaces accept identical names.
 
 /// The `cost` command: walk the selected layers through the staged
 /// pipeline (keys → traffic → energy) and render one table per layer —
@@ -324,7 +323,16 @@ fn cost_tables(
 /// Run the CLI; returns process exit code.
 pub fn run(args: &[String]) -> Result<()> {
     let parsed = parse_args(args)?;
-    let threads = parsed.usize_or("threads", default_threads());
+    // Interactive commands default to a modest thread count (a CLI run
+    // should not monopolize a large host); the resident service gets
+    // the full default, its sweeps being the whole point. An explicit
+    // --threads overrides either way, up to the scheduler's ceiling.
+    let default_thread_count = if parsed.command == "serve" {
+        default_threads()
+    } else {
+        default_threads().min(CLI_THREAD_CAP)
+    };
+    let threads = parsed.usize_or("threads", default_thread_count);
     let csv = parsed.flag("csv");
     // Validate flag values *before* building the session, so a usage
     // error cannot mutate the process-wide simulator knobs.
@@ -366,11 +374,11 @@ pub fn run(args: &[String]) -> Result<()> {
         builder = builder.store_path(path);
     }
     if let Some(engine) = engine {
-        // CLI flag > session builder > pre-existing process override:
-        // the flag IS a builder call, and the builder sets the
-        // process-wide policy at build time, so an explicit flag always
-        // wins for this invocation while an absent one leaves whatever
-        // override is in effect untouched.
+        // The flag is per-invocation: the builder snapshots it into the
+        // session (scoped — it cannot leak into other sessions in this
+        // process), and the process *default* is set too so the few
+        // non-session paths (validate/train goldens) follow the flag.
+        crate::sim::batch::set_engine_override(engine);
         builder = builder.engine(engine);
     }
     let session = builder.build();
@@ -466,6 +474,27 @@ pub fn run(args: &[String]) -> Result<()> {
             }
             let acc = trainer.eval_accuracy(&mut engine, &mut rng)?;
             println!("final accuracy: {:.1}%", 100.0 * acc);
+        }
+        "serve" => {
+            let addr = match parsed.options.get("addr") {
+                Some(v) if v == "true" => return Err(anyhow!("--addr requires host:port")),
+                Some(v) => v.clone(),
+                None => ServiceConfig::default().addr,
+            };
+            let linger = std::time::Duration::from_millis(
+                parsed.usize_or("linger-ms", 2) as u64
+            );
+            let handle = service::spawn(session, ServiceConfig { addr, linger })?;
+            eprintln!(
+                "sweep service listening on {} ({threads} threads)",
+                handle.addr()
+            );
+            // blocks until a shutdown request drains the service; the
+            // writer thread owns persistence, so the one-shot save in
+            // the shared tail below must not run (session is consumed)
+            let report = handle.join();
+            eprintln!("{}", report.render());
+            return Ok(());
         }
         "sweep" => {
             let jobs = job_matrix(&zoo::evaluation_layers(), &Dataflow::ALL, 4);

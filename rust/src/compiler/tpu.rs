@@ -140,6 +140,7 @@ pub fn batched_pass(
     let lowered: Vec<(Mat, Mat, usize, usize)> =
         sets.iter().map(|ops| lower_plane(op, ops)).collect();
     let pairs: Vec<(&Mat, &Mat)> = lowered.iter().map(|(a, b, _, _)| (a, b)).collect();
+    crate::sim::batch::note_engine_run(true);
     let results = BatchSystolicSim::new(arch).run(&pairs);
     Ok(lowered
         .iter()
@@ -261,6 +262,7 @@ pub(crate) fn multi_proxy_fused(
                 .iter()
                 .map(|&i| (&lowered[i].0, &lowered[i].1))
                 .collect();
+            crate::sim::batch::note_engine_run(true);
             for (&i, (_, stats)) in members.iter().zip(BatchSystolicSim::new(arch).run(&pairs))
             {
                 out[i] = Some(stats.scaled_by(1.0 / jobs[i].1 as f64));

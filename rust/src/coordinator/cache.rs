@@ -15,17 +15,39 @@
 //! [`PassStats`](crate::sim::stats::PassStats) surfaces simulator
 //! counters.
 //!
+//! # Sharding
+//!
+//! The table is **lock-striped**: entries are spread over [`SHARDS`]
+//! segments by their key hash, each behind its own `RwLock`. Lookups
+//! take one shard's *read* lock, so under the resident sweep service —
+//! where many connection and worker threads hammer a warm cache
+//! concurrently — readers never contend with each other, and a writer
+//! blocks only the 1/[`SHARDS`]th of the key space it is inserting
+//! into. (The pre-service design was a single `Mutex` around the whole
+//! map, which serialized every reader behind every writer.) The
+//! capacity bound is enforced per shard (⌈capacity / SHARDS⌉ entries
+//! each, FIFO within the shard), so a worst-case skew can momentarily
+//! hold a few entries more than `capacity` in total — it can never hold
+//! fewer than `capacity` useful ones, which is the bound's purpose.
+//!
+//! Snapshot determinism survives the sharding: every first insert draws
+//! a ticket from a global sequence counter, and [`CostCache::snapshot`]
+//! orders by ticket — for a single-threaded fill that is exactly the
+//! old insertion order, so two saves of the same run still produce
+//! byte-identical store files.
+//!
 //! Correctness note: [`layer_cost`](crate::cost::layer_cost) is deterministic (fixed PRNG
 //! seeds, no wall-clock inputs), so memoized results are bit-identical to
 //! recomputation — asserted by the property tests in
 //! `tests/sweep_cache.rs`. Two threads racing on the same missing key may
 //! both compute it; both arrive at the same value and the second insert
-//! is a no-op overwrite, so no cross-thread coordination beyond the map
-//! lock is needed.
+//! is a no-op overwrite, so no cross-thread coordination beyond the
+//! shard lock is needed.
 
 use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::RwLock;
 
 use crate::compiler::keys::CostKey;
 use crate::cost::LayerCost;
@@ -88,24 +110,53 @@ impl CacheStats {
     }
 }
 
-struct Inner {
-    map: HashMap<CostKey, CachedCost>,
-    /// Insertion order for FIFO eviction at the capacity bound.
+/// Number of lock stripes. A power of two well above the worker-thread
+/// counts the scheduler and the sweep service run (≤ tens), so two
+/// threads touching the cache at once rarely even share a lock —
+/// while staying small enough that iterating every shard (len, stats,
+/// snapshot) stays trivially cheap.
+pub const SHARDS: usize = 32;
+
+/// One entry: its global insertion ticket + the memoized value.
+struct Slot {
+    seq: u64,
+    value: CachedCost,
+}
+
+struct Shard {
+    map: HashMap<CostKey, Slot>,
+    /// Insertion order within this shard, for FIFO eviction at the
+    /// per-shard capacity bound.
     order: VecDeque<CostKey>,
 }
 
-/// Thread-safe, capacity-bounded memo table for layer costs.
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+        }
+    }
+}
+
+/// Thread-safe, capacity-bounded, lock-striped memo table for layer
+/// costs.
 ///
 /// One cache is created per CLI invocation (see [`crate::cli::run`]) so
 /// every table/figure generated in that invocation reuses each other's
-/// simulations; library users can scope caches however they like —
-/// results are identical either way, only the hit counters move.
+/// simulations; the sweep service keeps one hot for its whole lifetime.
+/// Library users can scope caches however they like — results are
+/// identical either way, only the hit counters move.
 pub struct CostCache {
-    inner: Mutex<Inner>,
+    shards: Vec<RwLock<Shard>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
-    capacity: usize,
+    /// Global insertion tickets — what keeps [`snapshot`](Self::snapshot)
+    /// deterministic across the stripes.
+    seq: AtomicU64,
+    /// Per-shard entry bound (⌈total capacity / SHARDS⌉, min 1).
+    shard_capacity: usize,
 }
 
 /// Default capacity: comfortably above the full evaluation matrix
@@ -125,23 +176,35 @@ impl CostCache {
         Self::with_capacity(DEFAULT_CAPACITY)
     }
 
-    /// Cache bounded to `capacity` entries (FIFO eviction; min 1).
+    /// Cache bounded to ~`capacity` entries (FIFO eviction per shard;
+    /// min 1 per shard — see the [module docs](self) for how the bound
+    /// is apportioned across the stripes).
     pub fn with_capacity(capacity: usize) -> Self {
         Self {
-            inner: Mutex::new(Inner {
-                map: HashMap::new(),
-                order: VecDeque::new(),
-            }),
+            shards: (0..SHARDS).map(|_| RwLock::new(Shard::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
-            capacity: capacity.max(1),
+            seq: AtomicU64::new(0),
+            shard_capacity: capacity.max(1).div_ceil(SHARDS).max(1),
         }
     }
 
-    /// Look up a key, counting the outcome as a hit or miss.
+    /// Which stripe a key lives on. Uses the key's own `Hash` impl
+    /// (already the `HashMap` identity), folded to a shard index.
+    fn shard_of(&self, key: &CostKey) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
+
+    /// Look up a key, counting the outcome as a hit or miss. Takes only
+    /// the key's shard *read* lock — concurrent lookups never block each
+    /// other, and never block on writers to other shards.
     pub fn get(&self, key: &CostKey) -> Option<CachedCost> {
-        let found = self.inner.lock().unwrap().map.get(key).cloned();
+        let shard = self.shards[self.shard_of(key)].read().unwrap();
+        let found = shard.map.get(key).map(|s| s.value.clone());
+        drop(shard);
         match &found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -149,17 +212,24 @@ impl CostCache {
         found
     }
 
-    /// Insert (or overwrite) an entry, evicting FIFO at capacity.
+    /// Insert (or overwrite) an entry, evicting FIFO within the key's
+    /// shard at the per-shard capacity bound.
     pub fn insert(&self, key: CostKey, value: CachedCost) {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.map.insert(key, value).is_none() {
-            // `order` and the map keys stay in bijection: a key enters
-            // `order` exactly on first insert and leaves with its entry.
-            inner.order.push_back(key);
-            if inner.map.len() > self.capacity {
-                let old = inner.order.pop_front().expect("order tracks map");
-                inner.map.remove(&old);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+        let mut shard = self.shards[self.shard_of(&key)].write().unwrap();
+        match shard.map.get_mut(&key) {
+            Some(slot) => slot.value = value, // overwrite keeps the ticket
+            None => {
+                let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+                shard.map.insert(key, Slot { seq, value });
+                // `order` and the map keys stay in bijection per shard: a
+                // key enters `order` exactly on first insert and leaves
+                // with its entry.
+                shard.order.push_back(key);
+                if shard.map.len() > self.shard_capacity {
+                    let old = shard.order.pop_front().expect("order tracks map");
+                    shard.map.remove(&old);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
     }
@@ -184,21 +254,35 @@ impl CostCache {
         self.hits.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Deterministic snapshot of the live entries, in insertion order
-    /// (the persistent [`store`](super::store) serializes this, so two
-    /// saves of the same run produce byte-identical files).
+    /// Deterministic snapshot of the live entries, ordered by global
+    /// insertion ticket (the persistent [`store`](super::store)
+    /// serializes this, so two saves of the same run produce
+    /// byte-identical files; for a single-threaded fill the order is
+    /// exactly insertion order). Shards are read one at a time, so a
+    /// snapshot taken while writers run is a per-entry-consistent view,
+    /// not a global freeze — exactly what the service's background
+    /// store writer needs.
     pub fn snapshot(&self) -> Vec<(CostKey, CachedCost)> {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .order
-            .iter()
-            .filter_map(|k| inner.map.get(k).map(|v| (*k, v.clone())))
-            .collect()
+        let mut all: Vec<(u64, CostKey, CachedCost)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let shard = shard.read().unwrap();
+            all.extend(
+                shard
+                    .order
+                    .iter()
+                    .filter_map(|k| shard.map.get(k).map(|s| (s.seq, *k, s.value.clone()))),
+            );
+        }
+        all.sort_unstable_by_key(|(seq, _, _)| *seq);
+        all.into_iter().map(|(_, k, v)| (k, v)).collect()
     }
 
-    /// Live entry count.
+    /// Live entry count (sum over shards).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().map.len())
+            .sum()
     }
 
     /// True when nothing has been memoized yet.
@@ -263,18 +347,47 @@ mod tests {
     }
 
     #[test]
-    fn capacity_bound_evicts_fifo() {
-        let cache = CostCache::with_capacity(2);
-        let ks = keys(3);
-        for (i, k) in ks.iter().enumerate() {
+    fn capacity_bound_evicts_fifo_within_a_shard() {
+        // The bound is per shard, so pick three keys that *collide* on
+        // one stripe: the first inserted must be the one evicted.
+        let cache = CostCache::with_capacity(2); // -> 1 entry per shard
+        assert_eq!(cache.shard_capacity, 1);
+        let pool = keys(256);
+        let target = cache.shard_of(&pool[0]);
+        let colliding: Vec<CostKey> = pool
+            .into_iter()
+            .filter(|k| cache.shard_of(k) == target)
+            .take(3)
+            .collect();
+        assert_eq!(colliding.len(), 3, "256 keys must land 3 on one shard");
+        for (i, k) in colliding.iter().enumerate() {
             cache.insert(*k, dummy(i as u64));
         }
         let s = cache.stats();
-        assert_eq!(s.entries, 2);
-        assert_eq!(s.evictions, 1);
-        // the first-inserted key is the one that left
-        assert!(cache.get(&ks[0]).is_none());
-        assert!(cache.get(&ks[2]).is_some());
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.evictions, 2);
+        // the earlier-inserted keys are the ones that left (FIFO)
+        assert!(cache.get(&colliding[0]).is_none());
+        assert!(cache.get(&colliding[1]).is_none());
+        assert!(cache.get(&colliding[2]).is_some());
+    }
+
+    #[test]
+    fn keys_on_distinct_shards_do_not_evict_each_other() {
+        let cache = CostCache::with_capacity(2); // tight total bound...
+        let pool = keys(256);
+        let a = pool[0];
+        let b = *pool
+            .iter()
+            .find(|k| cache.shard_of(k) != cache.shard_of(&a))
+            .expect("256 keys must span at least two shards");
+        cache.insert(a, dummy(1));
+        cache.insert(b, dummy(2));
+        // ...but the bound is striped: entries on different shards
+        // coexist rather than thrash each other out
+        assert!(cache.get(&a).is_some());
+        assert!(cache.get(&b).is_some());
+        assert_eq!(cache.stats().evictions, 0);
     }
 
     #[test]
@@ -300,6 +413,61 @@ mod tests {
         cache.insert(k, dummy(2));
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.stats().evictions, 0);
+        assert_eq!(cache.get(&k), Some(dummy(2)));
+    }
+
+    #[test]
+    fn snapshot_preserves_insertion_order_across_shards() {
+        // Sequential inserts land on many different stripes; the global
+        // ticket must stitch them back into exact insertion order (the
+        // store's byte-identical-saves contract).
+        let cache = CostCache::new();
+        let ks = keys(64);
+        for (i, k) in ks.iter().enumerate() {
+            cache.insert(*k, dummy(i as u64));
+        }
+        let snap = cache.snapshot();
+        assert_eq!(snap.len(), 64);
+        for (i, (k, v)) in snap.iter().enumerate() {
+            assert_eq!(k, &ks[i], "entry {i} out of order");
+            assert_eq!(v, &dummy(i as u64));
+        }
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers_stay_consistent() {
+        // Smoke the striping under real contention: 4 writer threads
+        // insert disjoint key ranges while 4 readers poll; afterwards
+        // every entry must be present exactly once with its own value.
+        let cache = std::sync::Arc::new(CostCache::new());
+        let ks = std::sync::Arc::new(keys(64));
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let cache = cache.clone();
+                let ks = ks.clone();
+                s.spawn(move || {
+                    for i in (w..64).step_by(4) {
+                        cache.insert(ks[i], dummy(i as u64));
+                    }
+                });
+            }
+            for _ in 0..4 {
+                let cache = cache.clone();
+                let ks = ks.clone();
+                s.spawn(move || {
+                    for k in ks.iter() {
+                        // value may not be there yet; it must never be junk
+                        if let Some(v) = cache.get(k) {
+                            assert!(v.unwrap_err().starts_with("dummy-"));
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), 64);
+        for (i, k) in ks.iter().enumerate() {
+            assert_eq!(cache.get(k), Some(dummy(i as u64)), "key {i}");
+        }
     }
 
     #[test]

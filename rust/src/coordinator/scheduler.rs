@@ -55,6 +55,7 @@ use crate::config::ArchConfig;
 use crate::cost::{self, LayerCost};
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::{ConvLayer, TrainingPass};
+use crate::sim::batch::{EngineScope, SimEngine};
 use crate::sim::stats::PassStats;
 
 use super::cache::{CachedCost, CostCache};
@@ -141,7 +142,7 @@ pub fn run_sweep_cached(
     threads: usize,
     cache: &CostCache,
 ) -> Vec<SweepResult> {
-    run_sweep_with(arch_for, params, dram, jobs, threads, cache)
+    run_sweep_with(arch_for, params, dram, jobs, threads, None, cache)
 }
 
 /// The full dedup → group → shard → fan-out engine with an explicit
@@ -149,12 +150,19 @@ pub fn run_sweep_cached(
 /// grouping and simulation alike, so a caller-supplied architecture
 /// (a [`Session`](super::Session) override) discriminates cache keys
 /// exactly like the built-in defaults do.
+///
+/// `engine` pins the [`SimEngine`] on every worker this sweep spawns
+/// (via a thread-scoped [`EngineScope`]); `None` leaves workers on the
+/// process default. [`Session::sweep`](super::Session::sweep) always
+/// passes its builder-resolved engine, which is what keeps two
+/// Sessions with different engines independent in one process.
 pub fn run_sweep_with<F>(
     arch_of: F,
     params: &EnergyParams,
     dram: &DramModel,
     jobs: Vec<SweepJob>,
     threads: usize,
+    engine: Option<SimEngine>,
     cache: &CostCache,
 ) -> Vec<SweepResult>
 where
@@ -265,27 +273,30 @@ where
         let workers = threads.max(1).min(units.len());
         std::thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(|| loop {
-                    let u = cursor.fetch_add(1, Ordering::Relaxed);
-                    if u >= units.len() {
-                        break;
-                    }
-                    let unit = &units[u];
-                    let (flow, _, _) = metas[unit[0]];
-                    let arch = arch_of(flow);
-                    if unit.len() == 1 {
-                        let g = unit[0];
-                        let j0 = &jobs[unique_job[groups[g][0]]];
-                        let proxy = cost::proxy_stats(&arch, &j0.layer, j0.pass, j0.flow)
-                            .map_err(|e| e.to_string());
-                        let _ = proxies[g].set(proxy);
-                    } else {
-                        let batch: Vec<(PlaneOp, usize)> =
-                            unit.iter().map(|&g| (metas[g].1, metas[g].2)).collect();
-                        let results = flow.resolve().proxy_stats_multi(&arch, &batch);
-                        debug_assert_eq!(results.len(), unit.len());
-                        for (&g, r) in unit.iter().zip(results) {
-                            let _ = proxies[g].set(r.map_err(|e| e.to_string()));
+                s.spawn(|| {
+                    let _engine = engine.map(EngineScope::enter);
+                    loop {
+                        let u = cursor.fetch_add(1, Ordering::Relaxed);
+                        if u >= units.len() {
+                            break;
+                        }
+                        let unit = &units[u];
+                        let (flow, _, _) = metas[unit[0]];
+                        let arch = arch_of(flow);
+                        if unit.len() == 1 {
+                            let g = unit[0];
+                            let j0 = &jobs[unique_job[groups[g][0]]];
+                            let proxy = cost::proxy_stats(&arch, &j0.layer, j0.pass, j0.flow)
+                                .map_err(|e| e.to_string());
+                            let _ = proxies[g].set(proxy);
+                        } else {
+                            let batch: Vec<(PlaneOp, usize)> =
+                                unit.iter().map(|&g| (metas[g].1, metas[g].2)).collect();
+                            let results = flow.resolve().proxy_stats_multi(&arch, &batch);
+                            debug_assert_eq!(results.len(), unit.len());
+                            for (&g, r) in unit.iter().zip(results) {
+                                let _ = proxies[g].set(r.map_err(|e| e.to_string()));
+                            }
                         }
                     }
                 });
@@ -309,25 +320,32 @@ where
         let workers = threads.max(1).min(members.len());
         std::thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= members.len() {
-                        break;
+                s.spawn(|| {
+                    // Extension is analytic (no simulator dispatch), but
+                    // scope the engine anyway: a future value-dependent
+                    // extension path must not silently fall back to the
+                    // process default.
+                    let _engine = engine.map(EngineScope::enter);
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= members.len() {
+                            break;
+                        }
+                        let (g, slot) = members[i];
+                        let ji = unique_job[slot];
+                        let job = &jobs[ji];
+                        let arch = arch_of(job.flow);
+                        let proxy = proxies[g].get().expect("phase A filled every group");
+                        let cost = match proxy {
+                            Ok(ps) => Ok(cost::layer_cost_from_proxy(
+                                &arch, params, dram, &job.layer, job.pass, job.flow,
+                                job.batch, ps,
+                            )),
+                            Err(e) => Err(e.clone()),
+                        };
+                        cache.insert(keys[ji], cost.clone());
+                        let _ = slots[slot].set(cost);
                     }
-                    let (g, slot) = members[i];
-                    let ji = unique_job[slot];
-                    let job = &jobs[ji];
-                    let arch = arch_of(job.flow);
-                    let proxy = proxies[g].get().expect("phase A filled every group");
-                    let cost = match proxy {
-                        Ok(ps) => Ok(cost::layer_cost_from_proxy(
-                            &arch, params, dram, &job.layer, job.pass, job.flow,
-                            job.batch, ps,
-                        )),
-                        Err(e) => Err(e.clone()),
-                    };
-                    cache.insert(keys[ji], cost.clone());
-                    let _ = slots[slot].set(cost);
                 });
             }
         });
@@ -368,12 +386,40 @@ pub fn job_matrix(
     jobs
 }
 
-/// Reasonable worker count for this host.
+/// Default worker-count cap for one-shot CLI sweeps. A single table
+/// rarely has enough proxy units to feed more workers, and a CLI
+/// invocation should not commandeer a large shared host by default —
+/// pass `--threads` to go wider. The resident sweep service defaults to
+/// the full [`default_threads`] instead.
+pub const CLI_THREAD_CAP: usize = 16;
+
+/// Absolute ceiling on the auto-detected worker count when
+/// `ECOFLOW_MAX_THREADS` is unset — a sanity bound against pathological
+/// `available_parallelism` readings, far above any host this runs on.
+pub const THREAD_CEILING: usize = 512;
+
+/// The effective ceiling for [`default_threads`]: the
+/// `ECOFLOW_MAX_THREADS` environment variable if set to a positive
+/// integer, else [`THREAD_CEILING`]. Explicit thread counts
+/// (`SessionBuilder::threads`, `--threads`) are never clamped by this —
+/// it only bounds auto-detection.
+pub fn thread_ceiling() -> usize {
+    std::env::var("ECOFLOW_MAX_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(THREAD_CEILING)
+}
+
+/// Reasonable worker count for this host: `available_parallelism`,
+/// bounded by [`thread_ceiling`]. (Until the sweep service landed this
+/// hard-clamped to 16, silently capping throughput on large hosts; 16
+/// now survives only as [`CLI_THREAD_CAP`], the one-shot CLI default.)
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
-        .clamp(1, 16)
+        .clamp(1, thread_ceiling())
 }
 
 #[cfg(test)]
@@ -544,6 +590,17 @@ mod tests {
         let layers = zoo::table5_layers();
         let jobs = job_matrix(&layers, &Dataflow::ALL, 4);
         assert_eq!(jobs.len(), layers.len() * 3 * 4);
+    }
+
+    #[test]
+    fn default_threads_respects_the_ceiling() {
+        // No env mutation here (tests share the process): just pin the
+        // invariants — positive, and never above the effective ceiling.
+        let n = default_threads();
+        assert!(n >= 1);
+        assert!(n <= thread_ceiling());
+        assert!(thread_ceiling() >= 1);
+        assert!(CLI_THREAD_CAP <= THREAD_CEILING);
     }
 
     #[test]

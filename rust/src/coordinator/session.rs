@@ -41,7 +41,7 @@ use crate::cost::LayerCost;
 use crate::energy::{DramModel, EnergyParams};
 use crate::model::{ConvLayer, TrainingPass};
 use crate::report::{FigureId, TableId};
-use crate::sim::batch::{set_engine_override, SimEngine};
+use crate::sim::batch::{engine_override, SimEngine};
 use crate::util::table::Table;
 
 use super::cache::{CacheStats, CostCache};
@@ -130,12 +130,13 @@ impl SessionBuilder {
     /// Simulation-engine choice for both PE-array fabrics (the
     /// microprogrammed array and the TPU systolic array share one
     /// policy). The engines are bit-identical, so this only moves
-    /// performance. Sets the process-wide policy at
-    /// [`build`](SessionBuilder::build) time; unset (the default), the
-    /// builder leaves it untouched ([`SimEngine::Auto`] unless
-    /// something else set it). The CLI's `--engine` flag feeds this
-    /// builder knob, giving the precedence: CLI flag > session builder
-    /// > pre-existing process override.
+    /// performance. **Session-scoped**: the choice is resolved once at
+    /// [`build`](SessionBuilder::build) time (unset, the builder
+    /// snapshots the process default — [`SimEngine::Auto`] unless the
+    /// CLI's `--engine` flag changed it) and pinned on every sweep
+    /// worker this session spawns, so two concurrent sessions in one
+    /// process run their own engines without seeing each other.
+    /// Precedence: this builder knob > process default at build time.
     pub fn engine(mut self, engine: SimEngine) -> Self {
         self.engine = Some(engine);
         self
@@ -149,9 +150,6 @@ impl SessionBuilder {
     pub fn build(self) -> Session {
         if let Some(cap) = self.max_sim_cycles {
             crate::sim::array::set_max_cycles_override(cap);
-        }
-        if let Some(engine) = self.engine {
-            set_engine_override(engine);
         }
         let cache = match self.cache_capacity {
             Some(n) => CostCache::with_capacity(n),
@@ -176,6 +174,11 @@ impl SessionBuilder {
             max_sim_cycles: self
                 .max_sim_cycles
                 .unwrap_or_else(crate::sim::array::max_cycles_override),
+            // Same snapshot-at-build discipline for the engine: the
+            // session carries its own choice and scopes it onto sweep
+            // workers, never writing the process-wide default — so one
+            // session's engine cannot leak into another's.
+            engine: self.engine.unwrap_or_else(engine_override),
             cache,
             store_path: self.store_path,
             store_outcome,
@@ -197,6 +200,10 @@ pub struct Session {
     /// session's environment cannot be reconfigured by process-wide
     /// knob changes after construction.
     max_sim_cycles: u64,
+    /// The simulation engine resolved at build time, pinned (via
+    /// [`EngineScope`](crate::sim::batch::EngineScope)) on every sweep
+    /// worker this session spawns.
+    engine: SimEngine,
     cache: CostCache,
     store_path: Option<PathBuf>,
     store_outcome: Option<LoadOutcome>,
@@ -237,6 +244,12 @@ impl Session {
     /// Sweep worker thread count.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The simulation engine this session pins on its sweep workers
+    /// (resolved once at build time — see [`SessionBuilder::engine`]).
+    pub fn engine(&self) -> SimEngine {
+        self.engine
     }
 
     /// The session's shared memo table.
@@ -303,6 +316,7 @@ impl Session {
             &self.dram,
             jobs,
             self.threads,
+            Some(self.engine),
             &self.cache,
         )
     }
@@ -459,6 +473,21 @@ mod tests {
             cleared.arch_for(Dataflow::EcoFlow).max_sim_cycles,
             ArchConfig::ecoflow().max_sim_cycles
         );
+    }
+
+    #[test]
+    fn builder_engine_is_session_scoped() {
+        // Building with an explicit engine must not write the process
+        // default — that's the bug this field replaced. (No sweeps run
+        // here; engine *execution* scoping is pinned end-to-end by
+        // tests/session_engine.rs.)
+        let before = engine_override();
+        let s = Session::builder().threads(1).engine(SimEngine::Scalar).build();
+        assert_eq!(s.engine(), SimEngine::Scalar);
+        assert_eq!(engine_override(), before, "build() leaked the engine");
+        // unset, the builder snapshots the process default
+        let d = Session::builder().threads(1).build();
+        assert_eq!(d.engine(), before);
     }
 
     #[test]

@@ -35,14 +35,18 @@
 //!
 //! [`load_into`] never fails the caller and never partially poisons the
 //! cache: a missing file is a cold start, and *anything* wrong with an
-//! existing file — bad magic, a different format version, a count
-//! mismatch (truncation), a line-checksum mismatch (bit rot, a torn
-//! concurrent append), a malformed entry — yields
+//! existing file — bad magic, a different format version, fewer entry
+//! lines than the header declares (truncation), a line-checksum
+//! mismatch (bit rot), a malformed entry — yields
 //! [`LoadOutcome::Rebuilt`] with the reason, loads nothing, and the next
-//! save rewrites the file wholesale. Full rewrites go through a
+//! save rewrites the file wholesale. Appends are *reader-atomic*: the
+//! writer appends entry lines first and publishes them by patching the
+//! count header last, so a reader landing mid-append (or after a crash
+//! mid-append) sees extra unpublished lines past the declared count and
+//! simply loads the declared prefix — the store as it was before the
+//! append — rather than rebuilding. Full rewrites go through a
 //! temp-file + rename so a crash mid-write cannot corrupt an existing
-//! store; a crash mid-*append* leaves a torn last line or a stale count,
-//! either of which reads as corruption and rebuilds. A concurrent
+//! store. A concurrent
 //! writer is detected before appending — the [`DiskState`] guard checks
 //! the entry count, the byte length, *and* the trailing bytes against
 //! what this process last read or wrote — and demotes the save to a
@@ -201,14 +205,23 @@ pub fn load_tracked(path: &Path, cache: &CostCache) -> (LoadOutcome, DiskState) 
         }
     };
     match parse(&text) {
-        Ok(entries) => {
+        Ok((entries, clean)) => {
             let n = entries.len();
             let mut keys = HashSet::with_capacity(n);
             for (k, v) in entries {
                 keys.insert(k);
                 cache.insert(k, v);
             }
-            (LoadOutcome::Loaded { entries: n }, DiskState::of_text(&text, keys))
+            // an unclean read (torn append tail) still loads, but the
+            // disk state stays empty: this session's own first save
+            // must rewrite wholesale, never append after a tail whose
+            // bytes it did not verify
+            let state = if clean {
+                DiskState::of_text(&text, keys)
+            } else {
+                DiskState::default()
+            };
+            (LoadOutcome::Loaded { entries: n }, state)
         }
         Err(reason) => (LoadOutcome::Rebuilt { reason }, DiskState::default()),
     }
@@ -236,6 +249,29 @@ fn entry_line(key: &CostKey, cost: &LayerCost) -> String {
     let checksum = fnv1a64(body.as_bytes());
     body.push_str(&format!(" {checksum:016x}\n"));
     body
+}
+
+/// Encode one `(key, cost)` pair as a store-v2 entry line, checksummed,
+/// without the trailing newline.
+///
+/// This is the exact text [`save`]/[`append_update`] persist for the
+/// entry, exposed so transports can carry costs in a form that is
+/// *provably* bit-exact: the sweep service returns this line in its
+/// `layer_cost`/`sweep` responses, and a client holding
+/// [`decode_line`] can reconstruct the `LayerCost` — or diff the line
+/// against a local store — with no float formatting in between.
+pub fn encode_line(key: &CostKey, cost: &LayerCost) -> String {
+    let line = entry_line(key, cost);
+    line.trim_end().to_string()
+}
+
+/// Decode a store-v2 entry line (as produced by [`encode_line`], with
+/// or without a trailing newline): verify the checksum and reconstruct
+/// the `(key, cost)` pair. `None` on any corruption — bad checksum,
+/// wrong token count, unknown enum code, or a geometry field that
+/// overflows `usize` on this target.
+pub fn decode_line(line: &str) -> Option<(CostKey, CachedCost)> {
+    checked_entry(line.trim_end())
 }
 
 fn header(entries: usize) -> String {
@@ -356,8 +392,10 @@ fn try_append(
     if tail_now != state.tail {
         return Err(guard("content changed since load (concurrent writer)"));
     }
-    // append the new lines, then patch the count in place; a crash
-    // between the two leaves a count mismatch, which loads as Rebuilt
+    // append the new lines first, then publish them by patching the
+    // count in place: a reader (or a crash) landing between the two
+    // sees extra lines past the declared count, which `parse` ignores —
+    // it loads the pre-append store, never a torn one
     let mut tail = String::new();
     for (key, cost) in fresh {
         tail.push_str(&entry_line(key, cost));
@@ -378,7 +416,16 @@ fn try_append(
     Ok(total)
 }
 
-fn parse(text: &str) -> Result<Vec<(CostKey, CachedCost)>, String> {
+/// Parse a store file. The `bool` is true when the file was *clean* —
+/// exactly as many body lines as the header declares. Lines past the
+/// declared count are tolerated and ignored: the writer appends entry
+/// lines first and publishes them by patching the count header last, so
+/// a reader landing mid-append sees a complete, consistent store of
+/// `declared` entries plus an unpublished tail. Loading the declared
+/// prefix (and reporting the file unclean, so this reader's own next
+/// save rewrites instead of appending) makes appends atomic for
+/// readers. Fewer lines than declared is still truncation → rebuild.
+fn parse(text: &str) -> Result<(Vec<(CostKey, CachedCost)>, bool), String> {
     let mut lines = text.lines();
     let header = lines.next().ok_or("empty file")?;
     let mut hp = header.split_whitespace();
@@ -401,18 +448,20 @@ fn parse(text: &str) -> Result<Vec<(CostKey, CachedCost)>, String> {
         .and_then(|h| h.parse().ok())
         .ok_or("missing or unparseable entry-count line")?;
     let body: Vec<&str> = lines.collect();
-    if body.len() != declared {
+    if body.len() < declared {
         return Err(format!(
-            "entry count mismatch: header says {declared}, found {} (truncated or torn append)",
+            "entry count mismatch: header says {declared}, found {} (truncated)",
             body.len()
         ));
     }
-    body.iter()
+    let entries = body[..declared]
+        .iter()
         .enumerate()
         .map(|(i, line)| {
             checked_entry(line).ok_or_else(|| format!("malformed entry at line {}", i + 3))
         })
-        .collect()
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok((entries, body.len() == declared))
 }
 
 /// Split the trailing per-line checksum off, verify it, and decode the
@@ -493,6 +542,11 @@ fn parse_entry(line: &str) -> Option<(CostKey, CachedCost)> {
         return None; // the checksum token is split off by checked_entry
     }
     let dec = |s: &str| s.parse::<u64>().ok();
+    // Key geometry fields are usize in memory. `as usize` would
+    // silently truncate a >32-bit value on 32-bit targets, turning one
+    // geometry's entry into another's — go through try_from so an
+    // overflow reads as a malformed entry (checksum/rebuild path).
+    let us = |s: &str| dec(s).and_then(|v| usize::try_from(v).ok());
     let hex = |s: &str| u64::from_str_radix(s, 16).ok();
     let hexf = |s: &str| hex(s).map(f64::from_bits);
 
@@ -508,13 +562,13 @@ fn parse_entry(line: &str) -> Option<(CostKey, CachedCost)> {
         kind: kind_from(dec(t[0])?)?,
         pass: pass_from(dec(t[1])?)?,
         flow,
-        in_ch: dec(t[3])? as usize,
-        ifm: dec(t[4])? as usize,
-        ofm: dec(t[5])? as usize,
-        k: dec(t[6])? as usize,
-        num_filters: dec(t[7])? as usize,
-        stride: dec(t[8])? as usize,
-        batch: dec(t[9])? as usize,
+        in_ch: us(t[3])?,
+        ifm: us(t[4])?,
+        ofm: us(t[5])?,
+        k: us(t[6])?,
+        num_filters: us(t[7])?,
+        stride: us(t[8])?,
+        batch: us(t[9])?,
         env: EnvKey::from_words(&env_words)?,
     };
 
@@ -676,6 +730,20 @@ mod tests {
     }
 
     #[test]
+    fn public_line_codec_matches_the_persisted_bytes() {
+        // encode_line IS the on-disk entry text (sans newline): the
+        // service's wire format and the store file can never drift.
+        let (key, cost) = sample_entry();
+        let pub_line = encode_line(&key, &cost);
+        assert_eq!(format!("{pub_line}\n"), entry_line(&key, &cost));
+        let (k2, c2) = decode_line(&pub_line).unwrap();
+        assert_eq!((k2, c2), (key, Ok(cost)));
+        // trailing newline tolerated, corruption rejected
+        assert!(decode_line(&format!("{pub_line}\n")).is_some());
+        assert!(decode_line(&pub_line[1..]).is_none());
+    }
+
+    #[test]
     fn malformed_entries_rejected() {
         let (key, cost) = sample_entry();
         let line = entry_line(&key, &cost);
@@ -768,6 +836,48 @@ mod tests {
         assert_eq!(outcome, LoadOutcome::Loaded { entries: 2 });
         assert_eq!(disk.keys(), state.keys());
         assert_eq!(reloaded.get(&k1), Some(cache.get(&k1).unwrap()));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mid_append_reader_sees_the_pre_append_store() {
+        // Simulate a reader landing between `try_append`'s two writes:
+        // the entry line is on disk but the count header still says 1.
+        // The reader must load the declared prefix (the pre-append
+        // store), not rebuild — and its own disk state must stay empty
+        // so its next save rewrites instead of appending blind.
+        let path = std::env::temp_dir().join(format!(
+            "ecoflow-store-midappend-{}.cache",
+            std::process::id()
+        ));
+        let cache = CostCache::new();
+        let (k, c) = sample_entry();
+        cache.insert(k, Ok(c));
+        let mut state = DiskState::default();
+        assert_eq!(append_update(&path, &cache, &mut state).unwrap(), 1);
+        // unpublished tail: one extra entry line, count left at 1
+        let mut k2 = k;
+        k2.batch += 1;
+        let mut torn = std::fs::read_to_string(&path).unwrap();
+        torn.push_str(&entry_line(&k2, &c));
+        std::fs::write(&path, &torn).unwrap();
+
+        let reloaded = CostCache::new();
+        let (outcome, disk) = load_tracked(&path, &reloaded);
+        assert_eq!(outcome, LoadOutcome::Loaded { entries: 1 });
+        assert!(reloaded.get(&k).is_some());
+        assert!(reloaded.get(&k2).is_none(), "unpublished tail must be ignored");
+        assert!(disk.keys().is_empty(), "unclean read must not arm the append guard");
+
+        // a save through that empty state rewrites wholesale and the
+        // result is clean again
+        reloaded.insert(k2, Ok(c));
+        let mut disk = disk;
+        assert_eq!(append_update(&path, &reloaded, &mut disk).unwrap(), 2);
+        assert!(matches!(
+            load_into(&path, &CostCache::new()),
+            LoadOutcome::Loaded { entries: 2 }
+        ));
         std::fs::remove_file(&path).ok();
     }
 

@@ -35,6 +35,7 @@ pub mod energy;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod tensor;
 pub mod util;

@@ -1,0 +1,192 @@
+//! Cross-request job batching for the sweep service.
+//!
+//! The scheduler's fuse stage already merges same-fingerprint (and,
+//! for flows with a fuse key, same-lowered-geometry) jobs into single
+//! mixed-origin `BatchSystolicSim`/`BatchSim` runs — but only within
+//! one `Session::sweep` call. A resident service answering concurrent
+//! clients would waste that: two simultaneous `layer_cost` requests
+//! for sibling layers would run two separate sweeps, each simulating a
+//! proxy the other could have shared.
+//!
+//! The [`Batcher`] closes that gap. Connection threads
+//! [`submit`](Batcher::submit) their jobs and block on a private
+//! channel; a single dispatcher thread collects every submission
+//! queued at that moment (plus a short linger window for stragglers),
+//! concatenates them into ONE `Session::sweep` call, and routes each
+//! submission its own slice of the results. Sweep determinism makes
+//! this invisible to clients — a batched answer is bit-identical to a
+//! solo one — so batching is purely a throughput/latency trade, and
+//! the linger window keeps the latency side bounded.
+
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::scheduler::{SweepJob, SweepResult};
+
+/// One submission waiting to ride the next fused sweep.
+pub struct Pending {
+    /// The submitter's jobs, in its own order.
+    pub jobs: Vec<SweepJob>,
+    /// Where its slice of the fused results goes.
+    pub tx: mpsc::Sender<Vec<SweepResult>>,
+}
+
+struct State {
+    queue: Vec<Pending>,
+    /// False once the service is draining: new submissions are
+    /// rejected, [`next_batch`](Batcher::next_batch) returns `None`
+    /// after the queue empties.
+    open: bool,
+}
+
+/// The submission queue between connection threads and the dispatcher.
+pub struct Batcher {
+    state: Mutex<State>,
+    ready: Condvar,
+}
+
+impl Default for Batcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Batcher {
+    pub fn new() -> Self {
+        Batcher {
+            state: Mutex::new(State {
+                queue: Vec::new(),
+                open: true,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Queue `jobs` for the next fused sweep; the returned receiver
+    /// yields the matching results (same length, same order). `None`
+    /// when the batcher is already closed — the service is draining and
+    /// the request should be refused.
+    pub fn submit(&self, jobs: Vec<SweepJob>) -> Option<mpsc::Receiver<Vec<SweepResult>>> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut state = self.state.lock().unwrap();
+            if !state.open {
+                return None;
+            }
+            state.queue.push(Pending { jobs, tx });
+        }
+        self.ready.notify_all();
+        Some(rx)
+    }
+
+    /// Block until at least one submission is queued (or the batcher
+    /// closes), then linger briefly to let concurrent submitters pile
+    /// on, and drain the whole queue. `None` means closed *and* empty —
+    /// the dispatcher's signal to exit. Submissions queued during a
+    /// drain are picked up by the next call, closed or not, so closing
+    /// never drops work.
+    pub fn next_batch(&self, linger: Duration) -> Option<Vec<Pending>> {
+        let mut state = self.state.lock().unwrap();
+        state = self
+            .ready
+            .wait_while(state, |s| s.queue.is_empty() && s.open)
+            .unwrap();
+        if state.queue.is_empty() {
+            return None; // closed with nothing queued
+        }
+        if !linger.is_zero() {
+            // a second wait, bounded by the linger window: submissions
+            // racing with this wake-up join the same fused sweep
+            // instead of waiting a full sweep behind it
+            let (s, _timeout) = self
+                .ready
+                .wait_timeout(state, linger)
+                .unwrap();
+            state = s;
+        }
+        Some(std::mem::take(&mut state.queue))
+    }
+
+    /// Stop accepting submissions and wake the dispatcher. Already-
+    /// queued work is still handed out by
+    /// [`next_batch`](Batcher::next_batch) — close drains, it never
+    /// drops.
+    pub fn close(&self) {
+        self.state.lock().unwrap().open = false;
+        self.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::Dataflow;
+    use crate::model::{ConvLayer, TrainingPass};
+
+    fn job(name: &'static str) -> SweepJob {
+        SweepJob {
+            layer: ConvLayer::conv("Batcher", name, 4, 8, 4, 3, 4, 1),
+            pass: TrainingPass::Forward,
+            flow: Dataflow::EcoFlow,
+            batch: 1,
+        }
+    }
+
+    #[test]
+    fn batch_gathers_concurrent_submissions() {
+        let b = Batcher::new();
+        let _rx1 = b.submit(vec![job("a")]).unwrap();
+        let _rx2 = b.submit(vec![job("b"), job("c")]).unwrap();
+        let batch = b.next_batch(Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].jobs.len(), 1);
+        assert_eq!(batch[1].jobs.len(), 2);
+        // queue drained — a close with nothing left ends the dispatcher
+        b.close();
+        assert!(b.next_batch(Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn close_rejects_new_but_drains_queued() {
+        let b = Batcher::new();
+        let _rx = b.submit(vec![job("queued")]).unwrap();
+        b.close();
+        assert!(b.submit(vec![job("late")]).is_none(), "closed must refuse");
+        let batch = b.next_batch(Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1, "queued work survives the close");
+        assert!(b.next_batch(Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn next_batch_blocks_until_work_arrives() {
+        use std::sync::Arc;
+        let b = Arc::new(Batcher::new());
+        let waiter = {
+            let b = b.clone();
+            std::thread::spawn(move || b.next_batch(Duration::ZERO).map(|v| v.len()))
+        };
+        // give the waiter time to park, then feed it
+        std::thread::sleep(Duration::from_millis(20));
+        let _rx = b.submit(vec![job("x")]).unwrap();
+        assert_eq!(waiter.join().unwrap(), Some(1));
+    }
+
+    #[test]
+    fn linger_window_catches_stragglers() {
+        use std::sync::Arc;
+        let b = Arc::new(Batcher::new());
+        let _rx1 = b.submit(vec![job("first")]).unwrap();
+        let straggler = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(10));
+                b.submit(vec![job("second")]).unwrap()
+            })
+        };
+        // a generous linger lets the straggler join this batch
+        let batch = b.next_batch(Duration::from_millis(500)).unwrap();
+        let _keep = straggler.join().unwrap();
+        assert_eq!(batch.len(), 2, "straggler must ride the same batch");
+    }
+}

@@ -1,0 +1,478 @@
+//! Minimal JSON codec for the sweep-service wire protocol.
+//!
+//! serde is unavailable in this offline image (see Cargo.toml), and the
+//! protocol is small — flat request objects, one nesting level for
+//! inline layer specs and job arrays — so a ~200-line recursive-descent
+//! parser plus a renderer covers it. The codec is strict where the
+//! protocol needs trust (checksummed numbers round-trip exactly as
+//! written, depth is bounded so a hostile client cannot blow the
+//! connection thread's stack) and lenient where interop wants it
+//! (whitespace anywhere, trailing newline tolerated).
+//!
+//! Float caveat: numbers are carried as `f64`, so integers above 2^53
+//! lose precision — fine here, because the one value that must be
+//! bit-exact on the wire (a `LayerCost`) travels as a checksummed
+//! [`store`](crate::coordinator::store) entry *string*, never as JSON
+//! numbers (see [`protocol`](super::protocol)).
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+/// Nesting bound for the parser — far above anything the protocol
+/// produces (requests nest 3 deep), low enough that a deliberately
+/// deep document cannot overflow the connection thread's stack.
+const MAX_DEPTH: usize = 32;
+
+impl Json {
+    /// Parse one JSON document; trailing whitespace is allowed, any
+    /// other trailing content is an error.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser {
+            bytes: text.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing content at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (first match); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// String payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer payload: a number that is finite, integral
+    /// and exactly representable. `None` for 1.5, -1, NaN or 2^60.
+    pub fn as_u64(&self) -> Option<u64> {
+        let n = self.as_f64()?;
+        let ok = n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n <= (1u64 << 53) as f64;
+        ok.then_some(n as u64)
+    }
+
+    /// [`as_u64`](Json::as_u64) narrowed to `usize`.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    /// Boolean payload, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is an array.
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Render as a single-line JSON document (no added whitespace — one
+    /// rendered value per protocol line).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                } else if n.fract() == 0.0 && n.abs() <= (1u64 << 53) as f64 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_string(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected '{}' at byte {}",
+                b as char, self.pos
+            ))
+        }
+    }
+
+    fn eat_literal(&mut self, lit: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(value)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH}"));
+        }
+        match self.peek() {
+            Some(b'n') => self.eat_literal("null", Json::Null),
+            Some(b't') => self.eat_literal("true", Json::Bool(true)),
+            Some(b'f') => self.eat_literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            Some(b) => Err(format!("unexpected '{}' at byte {}", b as char, self.pos)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || b == b'.' || b == b'e' || b == b'E' || b == b'+' || b == b'-'
+            {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("scanned ASCII only");
+        text.parse::<f64>()
+            .ok()
+            .filter(|n| n.is_finite())
+            .map(Json::Num)
+            .ok_or_else(|| format!("invalid number '{text}' at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        // carried high surrogate from a \uD800-\uDBFF escape
+        let mut pending: VecDeque<u16> = VecDeque::new();
+        loop {
+            let b = self
+                .peek()
+                .ok_or_else(|| "unterminated string".to_string())?;
+            match b {
+                b'"' => {
+                    self.pos += 1;
+                    if !pending.is_empty() {
+                        out.extend(std::char::decode_utf16(pending.drain(..)).map(
+                            |r| r.unwrap_or(char::REPLACEMENT_CHARACTER),
+                        ));
+                    }
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let e = self
+                        .peek()
+                        .ok_or_else(|| "unterminated escape".to_string())?;
+                    self.pos += 1;
+                    let simple = match e {
+                        b'"' => Some('"'),
+                        b'\\' => Some('\\'),
+                        b'/' => Some('/'),
+                        b'b' => Some('\u{8}'),
+                        b'f' => Some('\u{c}'),
+                        b'n' => Some('\n'),
+                        b'r' => Some('\r'),
+                        b't' => Some('\t'),
+                        b'u' => None,
+                        _ => return Err(format!("bad escape at byte {}", self.pos - 1)),
+                    };
+                    match simple {
+                        Some(c) => {
+                            flush_units(&mut pending, &mut out);
+                            out.push(c);
+                        }
+                        None => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u16::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| {
+                                    format!("bad \\u escape at byte {}", self.pos)
+                                })?;
+                            self.pos += 4;
+                            // collect UTF-16 units; surrogate pairs
+                            // combine when flushed
+                            pending.push_back(hex);
+                            if !(0xD800..0xDC00).contains(&hex) {
+                                flush_units(&mut pending, &mut out);
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    flush_units(&mut pending, &mut out);
+                    // consume one UTF-8 scalar (input is &str, so the
+                    // byte stream is valid UTF-8 by construction)
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| "invalid utf-8".to_string())?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let value = self.value(depth + 1)?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+}
+
+/// Decode any buffered UTF-16 units (lone surrogates become U+FFFD,
+/// matching `String::from_utf16_lossy`).
+fn flush_units(pending: &mut VecDeque<u16>, out: &mut String) {
+    if !pending.is_empty() {
+        out.extend(
+            std::char::decode_utf16(pending.drain(..))
+                .map(|r| r.unwrap_or(char::REPLACEMENT_CHARACTER)),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_parse() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse(" false ").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(
+            Json::parse("\"hi\\n\\\"there\\\"\"").unwrap(),
+            Json::Str("hi\n\"there\"".to_string())
+        );
+    }
+
+    #[test]
+    fn structures_parse_and_access() {
+        let v = Json::parse(r#"{"type":"sweep","jobs":[{"batch":4},{}],"csv":false}"#).unwrap();
+        assert_eq!(v.get("type").and_then(Json::as_str), Some("sweep"));
+        assert_eq!(v.get("csv").and_then(Json::as_bool), Some(false));
+        let jobs = v.get("jobs").and_then(Json::as_array).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].get("batch").and_then(Json::as_usize), Some(4));
+        assert_eq!(jobs[1].get("batch"), None);
+    }
+
+    #[test]
+    fn round_trip_through_render() {
+        let cases = [
+            r#"{"a":[1,2,3],"b":{"c":"x y","d":null},"e":-2.5}"#,
+            r#"["tab\there",""]"#,
+            "123456789012345",
+        ];
+        for text in cases {
+            let v = Json::parse(text).unwrap();
+            assert_eq!(Json::parse(&v.render()).unwrap(), v, "{text}");
+        }
+    }
+
+    #[test]
+    fn unicode_escapes_decode() {
+        assert_eq!(
+            Json::parse(r#""é😀""#).unwrap(),
+            Json::Str("é😀".to_string())
+        );
+        // a lone surrogate degrades to U+FFFD instead of erroring
+        assert_eq!(
+            Json::parse(r#""\ud800x""#).unwrap(),
+            Json::Str("\u{FFFD}x".to_string())
+        );
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "nul",
+            r#"{"a" 1}"#,
+            "1 2",
+            "{\"a\":1}x",
+            "\"unterminated",
+            "1e999", // overflows to inf — not representable
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn depth_limit_holds() {
+        let deep = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep).is_err());
+        let ok = format!("{}1{}", "[".repeat(10), "]".repeat(10));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn u64_accessor_is_strict() {
+        assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+        assert_eq!(Json::Num(7.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(9.1e18).as_u64(), None);
+        assert_eq!(Json::Str("7".into()).as_u64(), None);
+    }
+}

@@ -1,0 +1,256 @@
+//! Lock-free request metrics for the sweep service.
+//!
+//! Every served request records `(kind, latency, outcome)` into atomic
+//! counters plus a log2-bucketed latency histogram — cheap enough to
+//! sit on the hot path (a handful of relaxed `fetch_add`s, no locks, no
+//! allocation) and precise enough for the observability the service
+//! promises: queries/s and p50/p99 come straight off a
+//! [`snapshot`](Metrics::snapshot), reported by the `stats` request
+//! type, the shutdown summary, and the `perf_service` bench alike.
+//!
+//! Percentiles are bucket-resolution approximations: the histogram
+//! buckets latencies by `ceil(log2(us))`, and a percentile reports its
+//! bucket's upper bound, so p99 is exact to within 2x. That is the
+//! right trade for a monitoring path — reservoir sampling or exact
+//! traces would buy precision nobody reads at the cost of contention
+//! everybody pays. (The bench computes *exact* client-side percentiles
+//! from its own recorded samples; this histogram is the server's own
+//! always-on view.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Request kinds the service distinguishes in its counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    LayerCost,
+    Sweep,
+    Table,
+    Traffic,
+    Stats,
+    Shutdown,
+    /// Unparseable or unknown requests (counted, never dispatched).
+    Invalid,
+}
+
+impl RequestKind {
+    pub const ALL: [RequestKind; 7] = [
+        RequestKind::LayerCost,
+        RequestKind::Sweep,
+        RequestKind::Table,
+        RequestKind::Traffic,
+        RequestKind::Stats,
+        RequestKind::Shutdown,
+        RequestKind::Invalid,
+    ];
+
+    /// Wire/stats name of this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestKind::LayerCost => "layer_cost",
+            RequestKind::Sweep => "sweep",
+            RequestKind::Table => "table",
+            RequestKind::Traffic => "traffic",
+            RequestKind::Stats => "stats",
+            RequestKind::Shutdown => "shutdown",
+            RequestKind::Invalid => "invalid",
+        }
+    }
+
+    fn index(self) -> usize {
+        Self::ALL
+            .iter()
+            .position(|k| *k == self)
+            .expect("ALL is exhaustive")
+    }
+}
+
+/// One histogram bucket per power of two of microseconds: bucket `i`
+/// holds latencies in `(2^(i-1), 2^i]` us (bucket 0: `<= 1us`). 40
+/// buckets reach ~2^39 us ≈ 6 days — effectively unbounded for a
+/// request latency; anything longer clamps into the last bucket.
+const BUCKETS: usize = 40;
+
+/// Shared, lock-free request metrics. One instance lives in the
+/// service's shared state; connection threads record into it
+/// concurrently and anyone may snapshot at any time.
+pub struct Metrics {
+    hist: [AtomicU64; BUCKETS],
+    by_kind: [AtomicU64; RequestKind::ALL.len()],
+    requests: AtomicU64,
+    errors: AtomicU64,
+    total_us: AtomicU64,
+}
+
+impl Default for Metrics {
+    // (not derived: std only provides array Default up to 32 elements,
+    // and `hist` has 40)
+    fn default() -> Self {
+        Metrics {
+            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            total_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters, with derived percentiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Requests served (successes and errors alike).
+    pub requests: u64,
+    /// Requests answered with `ok: false`.
+    pub errors: u64,
+    /// Per-kind request counts, in [`RequestKind::ALL`] order.
+    pub by_kind: Vec<(&'static str, u64)>,
+    /// Mean latency in microseconds (0 when nothing was served).
+    pub mean_us: u64,
+    /// Median latency upper bound in microseconds.
+    pub p50_us: u64,
+    /// 99th-percentile latency upper bound in microseconds.
+    pub p99_us: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served request.
+    pub fn record(&self, kind: RequestKind, latency: Duration, ok: bool) {
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        self.hist[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.by_kind[kind.index()].fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Copy the counters and derive mean/p50/p99. Concurrent recording
+    /// makes the copy approximate across counters (each counter is
+    /// individually exact) — fine for monitoring.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let hist: Vec<u64> = self
+            .hist
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = hist.iter().sum();
+        let requests = self.requests.load(Ordering::Relaxed);
+        let total_us = self.total_us.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests,
+            errors: self.errors.load(Ordering::Relaxed),
+            by_kind: RequestKind::ALL
+                .iter()
+                .map(|k| (k.name(), self.by_kind[k.index()].load(Ordering::Relaxed)))
+                .collect(),
+            mean_us: if total == 0 { 0 } else { total_us / total },
+            p50_us: percentile(&hist, total, 0.50),
+            p99_us: percentile(&hist, total, 0.99),
+        }
+    }
+}
+
+/// Histogram bucket index of a latency in microseconds.
+fn bucket_of(us: u64) -> usize {
+    if us <= 1 {
+        0
+    } else {
+        // ceil(log2(us)): position of the highest set bit, +1 when us
+        // is not a power of two
+        let floor = 63 - us.leading_zeros() as usize;
+        let ceil = floor + usize::from(!us.is_power_of_two());
+        ceil.min(BUCKETS - 1)
+    }
+}
+
+/// Upper bound (us) of the bucket holding the q-th percentile.
+fn percentile(hist: &[u64], total: u64, q: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((total as f64 * q).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &count) in hist.iter().enumerate() {
+        seen += count;
+        if seen >= rank {
+            return 1u64 << i;
+        }
+    }
+    1u64 << (BUCKETS - 1)
+}
+
+impl MetricsSnapshot {
+    /// One-line human summary (the shutdown report uses this).
+    pub fn render_line(&self) -> String {
+        format!(
+            "{} requests ({} errors), latency mean {}us p50<={}us p99<={}us",
+            self.requests, self.errors, self.mean_us, self.p50_us, self.p99_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_the_us_range() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(5), 3);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(1025), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_derives_counts_and_percentiles() {
+        let m = Metrics::new();
+        // 99 fast requests (<= 1us bucket), one slow one (~1ms)
+        for _ in 0..99 {
+            m.record(RequestKind::LayerCost, Duration::from_nanos(500), true);
+        }
+        m.record(RequestKind::Sweep, Duration::from_micros(1000), false);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.p50_us, 1, "{s:?}");
+        assert_eq!(s.p99_us, 1, "99/100 fit the first bucket");
+        let kind = |n: &str| s.by_kind.iter().find(|(k, _)| *k == n).unwrap().1;
+        assert_eq!(kind("layer_cost"), 99);
+        assert_eq!(kind("sweep"), 1);
+        assert_eq!(kind("table"), 0);
+        // the slow outlier dominates the mean but not the median
+        assert!(s.mean_us >= 9, "{s:?}");
+        assert!(s.render_line().contains("100 requests"));
+    }
+
+    #[test]
+    fn p99_catches_the_tail_when_it_is_real() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.record(RequestKind::LayerCost, Duration::from_micros(10), true);
+        }
+        for _ in 0..10 {
+            m.record(RequestKind::LayerCost, Duration::from_micros(5000), true);
+        }
+        let s = m.snapshot();
+        assert!(s.p50_us <= 16, "{s:?}");
+        assert!(s.p99_us >= 4096, "{s:?}");
+    }
+
+    #[test]
+    fn empty_metrics_report_zeros() {
+        let s = Metrics::new().snapshot();
+        assert_eq!((s.requests, s.errors, s.mean_us, s.p50_us, s.p99_us), (0, 0, 0, 0, 0));
+    }
+}

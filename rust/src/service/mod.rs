@@ -1,0 +1,542 @@
+//! The resident sweep service: a JSON-lines-over-TCP daemon on top of
+//! [`Session`].
+//!
+//! The one-shot CLI pays the expensive part of every invocation up
+//! front — loading and verifying the cost store, warming the cache —
+//! and throws it away on exit. `ecoflow serve` keeps that state hot:
+//! one [`Session`] (and thus one sharded
+//! [`CostCache`](crate::coordinator::CostCache) and one persistent
+//! store) serves every client until shutdown.
+//!
+//! Thread architecture, one instance each unless noted:
+//!
+//! * **accept** — non-blocking `TcpListener` loop; spawns one
+//!   **connection** thread per client (N of these) and joins them all
+//!   when the service stops.
+//! * **connection** (per client) — assembles request lines from the
+//!   byte stream, parses ([`protocol::parse_line`]), dispatches, writes
+//!   one response line per request, and records latency into the shared
+//!   [`Metrics`]. Simulation work is *submitted*, never run here.
+//! * **dispatcher** — drains the [`Batcher`]: concurrent submissions
+//!   become ONE [`Session::sweep`] call, so same-geometry jobs from
+//!   different clients fuse into mixed-origin batched simulations
+//!   exactly as they would inside a single sweep. Results are routed
+//!   back per submission, then the writer is nudged.
+//! * **writer** — the *only* thread that calls
+//!   [`Session::save_store`]. Persistence requests from any number of
+//!   dispatch rounds coalesce into single appending saves, so the
+//!   store-v2 append guard sees one writer and readers never see a torn
+//!   file mid-save.
+//! * **supervisor** — sequences shutdown: accept (and with it every
+//!   connection) drains first, then the batcher closes and the
+//!   dispatcher finishes queued work, then the writer flushes once more
+//!   and exits. [`ServiceHandle::join`] returns its final
+//!   [`ServiceReport`].
+//!
+//! Shutdown is graceful by construction: a `shutdown` request (or
+//! [`ServiceHandle::shutdown`]) only raises a flag — every in-flight
+//! request still gets its response, queued sweep jobs still run, and
+//! the store is flushed before the last thread exits.
+
+pub mod batcher;
+pub mod json;
+pub mod metrics;
+pub mod protocol;
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::scheduler::{SweepJob, SweepResult};
+use crate::coordinator::{CacheStats, Session};
+use crate::sim::batch::SimEngine;
+
+use batcher::Batcher;
+use json::Json;
+use metrics::{Metrics, MetricsSnapshot};
+use protocol::Request;
+
+/// Tunables of one service instance.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Bind address; use port 0 to let the OS pick (tests do).
+    pub addr: String,
+    /// How long the dispatcher lingers after the first submission of a
+    /// round to let concurrent clients join the same fused sweep. Zero
+    /// disables cross-request batching (every submission sweeps alone).
+    pub linger: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            linger: Duration::from_millis(2),
+        }
+    }
+}
+
+/// What the service did over its lifetime ([`ServiceHandle::join`]).
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    /// Request counters and latency percentiles.
+    pub metrics: MetricsSnapshot,
+    /// The session cache's final counters.
+    pub cache: CacheStats,
+    /// Successful store saves by the writer thread (0 when the session
+    /// has no store configured).
+    pub store_saves: u64,
+}
+
+impl ServiceReport {
+    /// Multi-line human summary (the CLI prints this on exit).
+    pub fn render(&self) -> String {
+        format!(
+            "sweep service: {}\nsweep service: {} (store saves: {})",
+            self.metrics.render_line(),
+            self.cache.render_line(),
+            self.store_saves,
+        )
+    }
+}
+
+/// A running service. Dropping the handle does NOT stop the service —
+/// call [`shutdown`](ServiceHandle::shutdown) (or send a `shutdown`
+/// request) and then [`join`](ServiceHandle::join).
+pub struct ServiceHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    supervisor: thread::JoinHandle<ServiceReport>,
+}
+
+impl ServiceHandle {
+    /// The bound address (resolves port 0 binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin graceful shutdown: stop accepting, drain, flush.
+    pub fn shutdown(&self) {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for the drain to finish and collect the final report.
+    pub fn join(self) -> ServiceReport {
+        self.supervisor.join().expect("service supervisor panicked")
+    }
+}
+
+/// State every service thread shares.
+struct Shared {
+    session: Session,
+    batcher: Batcher,
+    metrics: Metrics,
+    stopping: AtomicBool,
+    store_saves: AtomicU64,
+}
+
+/// The writer thread's mailbox.
+enum WriterMsg {
+    /// Persist the store soon (bursts coalesce into one save).
+    Flush,
+    /// Final save, then exit.
+    Stop,
+}
+
+/// Start a service around `session`. Returns once the socket is bound
+/// and every worker thread is up; the service then runs until a
+/// `shutdown` request arrives or [`ServiceHandle::shutdown`] is called.
+pub fn spawn(session: Session, config: ServiceConfig) -> io::Result<ServiceHandle> {
+    let listener = TcpListener::bind(&config.addr)?;
+    let addr = listener.local_addr()?;
+    // non-blocking accept so the loop can poll the stop flag
+    listener.set_nonblocking(true)?;
+
+    let shared = Arc::new(Shared {
+        session,
+        batcher: Batcher::new(),
+        metrics: Metrics::new(),
+        stopping: AtomicBool::new(false),
+        store_saves: AtomicU64::new(0),
+    });
+    let (writer_tx, writer_rx) = mpsc::channel::<WriterMsg>();
+
+    let dispatcher = {
+        let shared = shared.clone();
+        let tx = writer_tx.clone();
+        let linger = config.linger;
+        thread::spawn(move || dispatcher_loop(&shared, linger, &tx))
+    };
+    let writer = {
+        let shared = shared.clone();
+        thread::spawn(move || writer_loop(&shared, &writer_rx))
+    };
+    let accept = {
+        let shared = shared.clone();
+        thread::spawn(move || accept_loop(&listener, &shared))
+    };
+    let supervisor = {
+        let shared = shared.clone();
+        thread::spawn(move || {
+            // shutdown sequence — each stage drains before the next
+            // one's inputs close, so nothing in flight is dropped:
+            // connections finish answering, then the dispatcher sweeps
+            // whatever they submitted, then the writer flushes it all.
+            let _ = accept.join();
+            shared.batcher.close();
+            let _ = dispatcher.join();
+            let _ = writer_tx.send(WriterMsg::Stop);
+            let _ = writer.join();
+            ServiceReport {
+                metrics: shared.metrics.snapshot(),
+                cache: shared.session.cache_stats(),
+                store_saves: shared.store_saves.load(Ordering::Relaxed),
+            }
+        })
+    };
+
+    Ok(ServiceHandle {
+        addr,
+        shared,
+        supervisor,
+    })
+}
+
+/// Accept clients until the stop flag goes up (a `shutdown` request or
+/// [`ServiceHandle::shutdown`]), then join every connection thread.
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let shared = shared.clone();
+                conns.push(thread::spawn(move || connection_loop(&shared, stream)));
+                // reap finished connections so a long-lived service
+                // doesn't accumulate dead handles
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Serve one client: line in, line out, until EOF or shutdown.
+fn connection_loop(shared: &Arc<Shared>, mut stream: TcpStream) {
+    // a short read timeout doubles as the stop-flag poll interval
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.set_nodelay(true);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    'conn: loop {
+        if shared.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break, // client hung up
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                // answer every complete line before reading more —
+                // lines already buffered when a shutdown lands still
+                // get their responses
+                while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+                    let raw: Vec<u8> = buf.drain(..=pos).collect();
+                    let text = String::from_utf8_lossy(&raw);
+                    let line = text.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    let reply = handle_line(shared, line);
+                    if stream
+                        .write_all(reply.as_bytes())
+                        .and_then(|()| stream.write_all(b"\n"))
+                        .is_err()
+                    {
+                        break 'conn;
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Parse, dispatch and time one request line; returns the response
+/// line (without trailing newline).
+fn handle_line(shared: &Shared, line: &str) -> String {
+    let start = Instant::now();
+    let envelope = protocol::parse_line(line);
+    let (reply, ok) = match envelope.request {
+        Ok(request) => dispatch(shared, &envelope.id, request),
+        Err(e) => (protocol::err_response(&envelope.id, &e), false),
+    };
+    shared.metrics.record(envelope.kind, start.elapsed(), ok);
+    reply
+}
+
+/// Serve one parsed request. The envelope `ok` reflects whether the
+/// *service* answered; a job whose simulation failed still gets
+/// `ok:true` with the error inside its result object (a sweep's healthy
+/// siblings should not be masked by one bad geometry).
+fn dispatch(shared: &Shared, id: &Json, request: Request) -> (String, bool) {
+    match request {
+        Request::LayerCost(job) => match submit(shared, vec![job]) {
+            Ok(mut results) => {
+                let r = results.pop().expect("one job in, one result out");
+                let body = protocol::job_result_json(&shared.session, &r.job, &r.cost);
+                (
+                    protocol::ok_response(id, vec![("result".to_string(), body)]),
+                    true,
+                )
+            }
+            Err(e) => (protocol::err_response(id, &e), false),
+        },
+        Request::Sweep(jobs) => match submit(shared, jobs) {
+            Ok(results) => {
+                let arr = Json::Arr(
+                    results
+                        .iter()
+                        .map(|r| protocol::job_result_json(&shared.session, &r.job, &r.cost))
+                        .collect(),
+                );
+                (
+                    protocol::ok_response(id, vec![("results".to_string(), arr)]),
+                    true,
+                )
+            }
+            Err(e) => (protocol::err_response(id, &e), false),
+        },
+        Request::Report(target) => {
+            // reports regenerate over the shared session directly — its
+            // cache and scheduler are concurrency-safe, and report
+            // sweeps are exactly the kind of bulk work that should not
+            // serialize behind interactive layer_cost batches
+            let table = target.generate(&shared.session);
+            (
+                protocol::ok_response(
+                    id,
+                    vec![("table".to_string(), protocol::table_json(&table))],
+                ),
+                true,
+            )
+        }
+        Request::Stats => (protocol::ok_response(id, stats_fields(shared)), true),
+        Request::Shutdown => {
+            // reply first (the caller still gets its line), then raise
+            // the flag; the supervisor takes it from there
+            let reply = protocol::ok_response(
+                id,
+                vec![("stopping".to_string(), Json::Bool(true))],
+            );
+            shared.stopping.store(true, Ordering::SeqCst);
+            (reply, true)
+        }
+    }
+}
+
+/// Hand jobs to the dispatcher and wait for this submission's slice of
+/// the fused sweep.
+fn submit(shared: &Shared, jobs: Vec<SweepJob>) -> Result<Vec<SweepResult>, String> {
+    let rx = shared
+        .batcher
+        .submit(jobs)
+        .ok_or_else(|| "service is shutting down".to_string())?;
+    rx.recv()
+        .map_err(|_| "service dispatcher exited".to_string())
+}
+
+/// The `stats` response body.
+fn stats_fields(shared: &Shared) -> Vec<(String, Json)> {
+    let m = shared.metrics.snapshot();
+    let c = shared.session.cache_stats();
+    let num = |v: u64| Json::Num(v as f64);
+    let engine = match shared.session.engine() {
+        SimEngine::Auto => "auto",
+        SimEngine::Scalar => "scalar",
+        SimEngine::Batched => "batched",
+    };
+    vec![
+        ("requests".to_string(), num(m.requests)),
+        ("errors".to_string(), num(m.errors)),
+        ("latency_mean_us".to_string(), num(m.mean_us)),
+        ("latency_p50_us".to_string(), num(m.p50_us)),
+        ("latency_p99_us".to_string(), num(m.p99_us)),
+        (
+            "by_kind".to_string(),
+            Json::Obj(
+                m.by_kind
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), num(*v)))
+                    .collect(),
+            ),
+        ),
+        (
+            "cache".to_string(),
+            Json::Obj(vec![
+                ("hits".to_string(), num(c.hits)),
+                ("misses".to_string(), num(c.misses)),
+                ("evictions".to_string(), num(c.evictions)),
+                ("entries".to_string(), Json::Num(c.entries as f64)),
+            ]),
+        ),
+        (
+            "threads".to_string(),
+            Json::Num(shared.session.threads() as f64),
+        ),
+        ("engine".to_string(), Json::Str(engine.to_string())),
+        (
+            "store_saves".to_string(),
+            num(shared.store_saves.load(Ordering::Relaxed)),
+        ),
+    ]
+}
+
+/// Fuse and run submission batches until the batcher closes.
+fn dispatcher_loop(shared: &Shared, linger: Duration, writer_tx: &mpsc::Sender<WriterMsg>) {
+    while let Some(pendings) = shared.batcher.next_batch(linger) {
+        let counts: Vec<usize> = pendings.iter().map(|p| p.jobs.len()).collect();
+        let all: Vec<SweepJob> = pendings
+            .iter()
+            .flat_map(|p| p.jobs.iter().cloned())
+            .collect();
+        // ONE sweep for the whole round: the scheduler dedups repeats
+        // across submissions and fuses same-geometry jobs into shared
+        // batched simulations; results keep submission order
+        let mut rest = shared.session.sweep(all);
+        for (p, n) in pendings.into_iter().zip(counts) {
+            let tail = rest.split_off(n);
+            let slice = std::mem::replace(&mut rest, tail);
+            // a submitter that gave up (connection died) just drops
+            // its receiver; the sweep results are still cached
+            let _ = p.tx.send(slice);
+        }
+        // new results may be worth persisting; the writer coalesces
+        let _ = writer_tx.send(WriterMsg::Flush);
+    }
+}
+
+/// The single store writer: every persistence request funnels here, so
+/// concurrent dispatch rounds (or racing clients) can never produce
+/// interleaved writes to the cache file.
+fn writer_loop(shared: &Shared, rx: &mpsc::Receiver<WriterMsg>) {
+    loop {
+        match rx.recv() {
+            Ok(WriterMsg::Flush) => {
+                // coalesce a burst of flush requests into one save
+                let mut stop = false;
+                while let Ok(m) = rx.try_recv() {
+                    if matches!(m, WriterMsg::Stop) {
+                        stop = true;
+                        break;
+                    }
+                }
+                save_store(shared);
+                if stop {
+                    break;
+                }
+            }
+            // Stop (or every sender gone): final flush, then exit
+            Ok(WriterMsg::Stop) | Err(_) => {
+                save_store(shared);
+                break;
+            }
+        }
+    }
+}
+
+fn save_store(shared: &Shared) {
+    if let Some(result) = shared.session.save_store() {
+        match result {
+            Ok(_) => {
+                shared.store_saves.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => eprintln!("sweep service: store save failed: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+
+    fn request(stream: &mut TcpStream, line: &str) -> Json {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reader = io::BufReader::new(stream.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        Json::parse(reply.trim()).unwrap()
+    }
+
+    #[test]
+    fn serves_stats_and_shuts_down_on_request() {
+        let session = Session::builder().threads(1).build();
+        let handle = spawn(
+            session,
+            ServiceConfig {
+                addr: "127.0.0.1:0".to_string(),
+                linger: Duration::ZERO,
+            },
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+
+        let stats = request(&mut stream, r#"{"id":1,"type":"stats"}"#);
+        assert_eq!(stats.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(stats.get("id").and_then(Json::as_u64), Some(1));
+        assert_eq!(stats.get("engine").and_then(Json::as_str), Some("auto"));
+        assert_eq!(stats.get("threads").and_then(Json::as_u64), Some(1));
+
+        // a garbage line is answered, not fatal
+        let err = request(&mut stream, r#"{"id":2,"type":"warp"}"#);
+        assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(err.get("id").and_then(Json::as_u64), Some(2));
+
+        let bye = request(&mut stream, r#"{"id":3,"type":"shutdown"}"#);
+        assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+
+        let report = handle.join();
+        assert_eq!(report.metrics.requests, 3);
+        assert_eq!(report.metrics.errors, 1);
+        assert!(report.render().contains("3 requests"));
+    }
+
+    #[test]
+    fn handle_shutdown_stops_an_idle_service() {
+        let session = Session::builder().threads(1).build();
+        let handle = spawn(
+            session,
+            ServiceConfig {
+                addr: "127.0.0.1:0".to_string(),
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        handle.shutdown();
+        let report = handle.join();
+        assert_eq!(report.metrics.requests, 0);
+        assert_eq!(report.store_saves, 0, "no store configured");
+    }
+}

@@ -1,0 +1,508 @@
+//! Request/response schema of the sweep service (JSON lines).
+//!
+//! Every request is one JSON object on one line; every response is one
+//! JSON object on one line. Requests carry a `type` plus type-specific
+//! fields and an optional `id` the response echoes verbatim (clients
+//! pipelining requests over one connection correlate by it):
+//!
+//! ```text
+//! {"id":1,"type":"layer_cost","net":"AlexNet","layer":"CONV2","pass":"input-grad","flow":"EcoFlow","batch":4}
+//! {"id":2,"type":"layer_cost","layer":{"kind":"tconv","in_ch":8,"ifm":7,"ofm":14,"k":4,"filters":8,"stride":2}}
+//! {"id":3,"type":"sweep","jobs":[{"net":"MobileNet","layer":"CONV1"},{"net":"MobileNet","layer":"CONV3"}]}
+//! {"id":4,"type":"table","target":"table6"}
+//! {"id":5,"type":"traffic"}
+//! {"id":6,"type":"stats"}
+//! {"id":7,"type":"shutdown"}
+//! ```
+//!
+//! Responses are `{"id":...,"ok":true,...}` or
+//! `{"id":...,"ok":false,"error":"..."}`. A `layer_cost` (and each
+//! element of a `sweep`) result carries human-readable summary numbers
+//! *plus* an `entry` field: the checksummed
+//! [store-v2 line](crate::coordinator::store::encode_line) for the
+//! `(key, cost)` pair, which is the service's bit-exactness contract —
+//! [`decode_line`](crate::coordinator::store::decode_line) reconstructs
+//! the full `LayerCost` with no float formatting in between, and the
+//! integration tests diff it against the one-shot path byte for byte.
+//!
+//! Parsing is strict: unknown `type`s, unknown nets/layers/flows, and
+//! malformed numbers are errors (`ok:false` with the `id` echoed), and
+//! the connection stays usable afterwards.
+
+use crate::compiler::Dataflow;
+use crate::coordinator::scheduler::SweepJob;
+use crate::coordinator::{store, Session};
+use crate::model::{gan, zoo, ConvLayer, TrainingPass};
+use crate::report::{FigureId, TableId};
+use crate::util::table::Table;
+
+use super::json::Json;
+use super::metrics::RequestKind;
+
+/// Parse a pass spelling (both CLI hyphens and the internal underscore
+/// names are accepted). Shared by the CLI's `--pass` flag and the
+/// service's `pass` field, so the two surfaces can never drift.
+pub fn parse_pass(s: &str) -> Option<TrainingPass> {
+    match s {
+        "forward" | "fwd" => Some(TrainingPass::Forward),
+        "input-grad" | "input_grad" | "igrad" => Some(TrainingPass::InputGrad),
+        "filter-grad" | "filter_grad" | "fgrad" => Some(TrainingPass::FilterGrad),
+        _ => None,
+    }
+}
+
+/// Parse a flow spelling against the registry (case-insensitive
+/// compiler names, so registered custom flows are addressable too).
+/// Shared by the CLI's `--flow` flag and the service's `flow` field.
+pub fn parse_flow(s: &str) -> Option<Dataflow> {
+    Dataflow::registered()
+        .into_iter()
+        .find(|f| f.name().eq_ignore_ascii_case(s))
+}
+
+/// A report target: any paper table or figure the CLI can render, by
+/// its CLI subcommand name (`table1`..`table8`, `traffic`,
+/// `fig3`..`fig12`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReportTarget {
+    Table(TableId),
+    Figure(FigureId),
+}
+
+impl ReportTarget {
+    /// Resolve a CLI-spelling target name.
+    pub fn parse(s: &str) -> Option<ReportTarget> {
+        let t = |id| Some(ReportTarget::Table(id));
+        let f = |id| Some(ReportTarget::Figure(id));
+        match s {
+            "table1" => t(TableId::Noc),
+            "table2" => t(TableId::Validation),
+            "table5" => t(TableId::CnnLayers),
+            "table6" => t(TableId::CnnE2e),
+            "table7" => t(TableId::GanLayers),
+            "table8" => t(TableId::GanE2e),
+            "traffic" => t(TableId::Traffic),
+            "fig3" => f(FigureId::ZeroMults),
+            "fig8" => f(FigureId::InputGrad),
+            "fig9" => f(FigureId::FilterGrad),
+            "fig10" => f(FigureId::Energy),
+            "fig11" => f(FigureId::GanTime),
+            "fig12" => f(FigureId::GanEnergy),
+            _ => None,
+        }
+    }
+
+    /// Generate the target over `session`.
+    pub fn generate(self, session: &Session) -> Table {
+        match self {
+            ReportTarget::Table(id) => session.table(id),
+            ReportTarget::Figure(id) => session.figure(id),
+        }
+    }
+}
+
+/// A parsed, validated request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// One job; the response carries its cost.
+    LayerCost(SweepJob),
+    /// Many jobs; the response carries one result per job, in order.
+    Sweep(Vec<SweepJob>),
+    /// Regenerate a table/figure; the response carries the rows.
+    Report(ReportTarget),
+    /// Service counters + latency percentiles + cache stats.
+    Stats,
+    /// Graceful shutdown: drain in-flight work, flush the store.
+    Shutdown,
+}
+
+/// One wire line, decoded: the echoed `id`, the [`RequestKind`] for
+/// metrics (known even when the body is malformed), and the request —
+/// or the parse error to answer with.
+pub struct Envelope {
+    pub id: Json,
+    pub kind: RequestKind,
+    pub request: Result<Request, String>,
+}
+
+/// Decode one request line.
+pub fn parse_line(line: &str) -> Envelope {
+    let doc = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return Envelope {
+                id: Json::Null,
+                kind: RequestKind::Invalid,
+                request: Err(format!("invalid JSON: {e}")),
+            }
+        }
+    };
+    let id = doc.get("id").cloned().unwrap_or(Json::Null);
+    let (kind, request) = match doc.get("type").and_then(Json::as_str) {
+        Some("layer_cost") => (RequestKind::LayerCost, parse_job(&doc).map(Request::LayerCost)),
+        Some("sweep") => (RequestKind::Sweep, parse_sweep(&doc).map(Request::Sweep)),
+        Some("table") => (RequestKind::Table, parse_table(&doc).map(Request::Report)),
+        Some("traffic") => (
+            RequestKind::Traffic,
+            Ok(Request::Report(ReportTarget::Table(TableId::Traffic))),
+        ),
+        Some("stats") => (RequestKind::Stats, Ok(Request::Stats)),
+        Some("shutdown") => (RequestKind::Shutdown, Ok(Request::Shutdown)),
+        Some(other) => (
+            RequestKind::Invalid,
+            Err(format!("unknown request type {other:?}")),
+        ),
+        None => (
+            RequestKind::Invalid,
+            Err("missing request type".to_string()),
+        ),
+    };
+    Envelope { id, kind, request }
+}
+
+/// Decode a job spec from a request object: evaluation-set layers by
+/// `"net"`/`"layer"` name, arbitrary geometries as an inline `"layer"`
+/// object. `pass`/`flow`/`batch` default to forward/EcoFlow/1.
+fn parse_job(spec: &Json) -> Result<SweepJob, String> {
+    let layer = match spec.get("layer") {
+        Some(Json::Obj(_)) => parse_inline_layer(spec.get("layer").unwrap())?,
+        _ => {
+            let net = spec
+                .get("net")
+                .and_then(Json::as_str)
+                .ok_or("job needs \"net\"+\"layer\" names or an inline \"layer\" object")?;
+            let name = spec
+                .get("layer")
+                .and_then(Json::as_str)
+                .ok_or("job needs a \"layer\" name alongside \"net\"")?;
+            zoo::evaluation_layers()
+                .into_iter()
+                .chain(gan::table7_layers())
+                .find(|l| {
+                    l.net.eq_ignore_ascii_case(net) && l.name.eq_ignore_ascii_case(name)
+                })
+                .ok_or_else(|| {
+                    format!("no layer {net}/{name} in the evaluation sets (tables 5/7)")
+                })?
+        }
+    };
+    let pass = match spec.get("pass") {
+        Some(v) => {
+            let s = v.as_str().ok_or("\"pass\" must be a string")?;
+            parse_pass(s).ok_or_else(|| format!("invalid pass {s:?}"))?
+        }
+        None => TrainingPass::Forward,
+    };
+    let flow = match spec.get("flow") {
+        Some(v) => {
+            let s = v.as_str().ok_or("\"flow\" must be a string")?;
+            parse_flow(s).ok_or_else(|| format!("unknown flow {s:?}"))?
+        }
+        None => Dataflow::EcoFlow,
+    };
+    let batch = match spec.get("batch") {
+        Some(v) => v
+            .as_usize()
+            .filter(|&b| b >= 1)
+            .ok_or("\"batch\" must be a positive integer")?,
+        None => 1,
+    };
+    Ok(SweepJob {
+        layer,
+        pass,
+        flow,
+        batch,
+    })
+}
+
+/// Decode an inline layer object:
+/// `{"kind":"conv"|"tconv","in_ch":..,"ifm":..,"ofm":..,"k":..,"filters":..,"stride":..,"name":..}`.
+fn parse_inline_layer(obj: &Json) -> Result<ConvLayer, String> {
+    let dim = |key: &str| {
+        obj.get(key)
+            .and_then(Json::as_usize)
+            .filter(|&v| v >= 1)
+            .ok_or_else(|| format!("inline layer needs positive integer {key:?}"))
+    };
+    let (in_ch, ifm, ofm, k, filters, stride) = (
+        dim("in_ch")?,
+        dim("ifm")?,
+        dim("ofm")?,
+        dim("k")?,
+        dim("filters")?,
+        dim("stride")?,
+    );
+    let name = obj.get("name").and_then(Json::as_str).unwrap_or("adhoc");
+    // `net` is a &'static str (the zoo tables are static data); inline
+    // layers all live in the "custom" pseudo-network
+    let layer = match obj.get("kind").and_then(Json::as_str) {
+        Some("conv") | None => {
+            ConvLayer::conv("custom", name, in_ch, ifm, ofm, k, filters, stride)
+        }
+        Some("tconv") => ConvLayer::tconv("custom", name, in_ch, ifm, ofm, k, filters, stride),
+        Some(other) => return Err(format!("unknown layer kind {other:?}")),
+    };
+    Ok(layer)
+}
+
+fn parse_sweep(doc: &Json) -> Result<Vec<SweepJob>, String> {
+    let specs = doc
+        .get("jobs")
+        .and_then(Json::as_array)
+        .ok_or("sweep needs a \"jobs\" array")?;
+    if specs.is_empty() {
+        return Err("sweep needs at least one job".to_string());
+    }
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| parse_job(spec).map_err(|e| format!("job {i}: {e}")))
+        .collect()
+}
+
+fn parse_table(doc: &Json) -> Result<ReportTarget, String> {
+    let s = doc
+        .get("target")
+        .and_then(Json::as_str)
+        .ok_or("table needs a \"target\" name (e.g. \"table6\", \"fig10\")")?;
+    ReportTarget::parse(s).ok_or_else(|| format!("unknown report target {s:?}"))
+}
+
+// --- response building -------------------------------------------------
+
+/// A successful response line: `{"id":...,"ok":true,<fields>}`.
+pub fn ok_response(id: &Json, fields: Vec<(String, Json)>) -> String {
+    let mut obj = vec![
+        ("id".to_string(), id.clone()),
+        ("ok".to_string(), Json::Bool(true)),
+    ];
+    obj.extend(fields);
+    Json::Obj(obj).render()
+}
+
+/// An error response line: `{"id":...,"ok":false,"error":...}`.
+pub fn err_response(id: &Json, error: &str) -> String {
+    Json::Obj(vec![
+        ("id".to_string(), id.clone()),
+        ("ok".to_string(), Json::Bool(false)),
+        ("error".to_string(), Json::Str(error.to_string())),
+    ])
+    .render()
+}
+
+/// One job's result as a response object: human-readable summary
+/// numbers plus the bit-exact store `entry` line (see the module docs).
+/// A failed simulation becomes `{"error": ...}` — per job, so one bad
+/// job in a sweep doesn't mask its siblings' results.
+pub fn job_result_json(
+    session: &Session,
+    job: &SweepJob,
+    cost: &Result<crate::cost::LayerCost, String>,
+) -> Json {
+    let mut obj = vec![
+        ("net".to_string(), Json::Str(job.layer.net.to_string())),
+        ("layer".to_string(), Json::Str(job.layer.name.clone())),
+        ("pass".to_string(), Json::Str(job.pass.name().to_string())),
+        ("flow".to_string(), Json::Str(job.flow.name().to_string())),
+        ("batch".to_string(), Json::Num(job.batch as f64)),
+    ];
+    match cost {
+        Ok(c) => {
+            obj.push(("cycles".to_string(), Json::Num(c.cycles as f64)));
+            obj.push(("ms".to_string(), Json::Num(c.millis())));
+            obj.push(("total_uj".to_string(), Json::Num(c.energy.total_uj())));
+            obj.push(("utilization".to_string(), Json::Num(c.utilization)));
+            obj.push(("dram_bound".to_string(), Json::Bool(c.dram_bound)));
+            // the bit-exactness contract: the exact store-v2 entry line
+            // (flows without a stable serialization code can't have one
+            // — same rule the persistent store applies)
+            if job.flow.has_stable_code() {
+                let key = job.cost_key(&session.arch_for(job.flow), session.params(), session.dram());
+                obj.push(("entry".to_string(), Json::Str(store::encode_line(&key, c))));
+            }
+        }
+        Err(e) => obj.push(("error".to_string(), Json::Str(e.clone()))),
+    }
+    Json::Obj(obj)
+}
+
+/// A rendered report table as a response object:
+/// `{"title":...,"header":[...],"rows":[[...]]}`.
+pub fn table_json(t: &Table) -> Json {
+    let strings = |cells: &[String]| {
+        Json::Arr(cells.iter().map(|c| Json::Str(c.clone())).collect())
+    };
+    Json::Obj(vec![
+        ("title".to_string(), Json::Str(t.title.clone())),
+        ("header".to_string(), strings(&t.header)),
+        (
+            "rows".to_string(),
+            Json::Arr(t.rows.iter().map(|r| strings(r)).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_job_parses_with_defaults() {
+        let env = parse_line(
+            r#"{"id":7,"type":"layer_cost","net":"AlexNet","layer":"CONV2"}"#,
+        );
+        assert_eq!(env.id, Json::Num(7.0));
+        assert_eq!(env.kind, RequestKind::LayerCost);
+        match env.request.unwrap() {
+            Request::LayerCost(job) => {
+                assert_eq!(job.layer.net, "AlexNet");
+                assert_eq!(job.layer.name, "CONV2");
+                assert_eq!(job.pass, TrainingPass::Forward);
+                assert_eq!(job.flow, Dataflow::EcoFlow);
+                assert_eq!(job.batch, 1);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn inline_layer_and_explicit_fields_parse() {
+        let env = parse_line(
+            r#"{"type":"layer_cost","layer":{"kind":"tconv","in_ch":8,"ifm":7,"ofm":14,"k":4,"filters":8,"stride":2},"pass":"filter-grad","flow":"TPU","batch":3}"#,
+        );
+        match env.request.unwrap() {
+            Request::LayerCost(job) => {
+                assert_eq!(job.layer.net, "custom");
+                assert_eq!(job.layer.kind, crate::model::LayerKind::TransposedConv);
+                assert_eq!((job.layer.ifm, job.layer.ofm), (7, 14));
+                assert_eq!(job.pass, TrainingPass::FilterGrad);
+                assert_eq!(job.flow, Dataflow::Tpu);
+                assert_eq!(job.batch, 3);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sweep_table_stats_shutdown_parse() {
+        let env = parse_line(
+            r#"{"type":"sweep","jobs":[{"net":"MobileNet","layer":"CONV1"},{"net":"MobileNet","layer":"CONV1","pass":"igrad"}]}"#,
+        );
+        match env.request.unwrap() {
+            Request::Sweep(jobs) => assert_eq!(jobs.len(), 2),
+            other => panic!("wrong request: {other:?}"),
+        }
+        for (line, want) in [
+            (
+                r#"{"type":"table","target":"fig10"}"#,
+                ReportTarget::Figure(FigureId::Energy),
+            ),
+            (
+                r#"{"type":"traffic"}"#,
+                ReportTarget::Table(TableId::Traffic),
+            ),
+        ] {
+            match parse_line(line).request.unwrap() {
+                Request::Report(t) => assert_eq!(t, want),
+                other => panic!("wrong request: {other:?}"),
+            }
+        }
+        assert!(matches!(
+            parse_line(r#"{"type":"stats"}"#).request.unwrap(),
+            Request::Stats
+        ));
+        assert!(matches!(
+            parse_line(r#"{"type":"shutdown"}"#).request.unwrap(),
+            Request::Shutdown
+        ));
+    }
+
+    #[test]
+    fn malformed_requests_keep_their_id() {
+        let cases = [
+            r#"{"id":"a","type":"warp"}"#,
+            r#"{"id":"a"}"#,
+            r#"{"id":"a","type":"layer_cost"}"#,
+            r#"{"id":"a","type":"layer_cost","net":"NoSuchNet","layer":"X"}"#,
+            r#"{"id":"a","type":"layer_cost","net":"AlexNet","layer":"CONV2","pass":"sideways"}"#,
+            r#"{"id":"a","type":"layer_cost","net":"AlexNet","layer":"CONV2","batch":0}"#,
+            r#"{"id":"a","type":"sweep","jobs":[]}"#,
+            r#"{"id":"a","type":"table","target":"table99"}"#,
+        ];
+        for line in cases {
+            let env = parse_line(line);
+            assert!(env.request.is_err(), "{line} should fail");
+            assert_eq!(env.id, Json::Str("a".to_string()), "{line}");
+        }
+        // unparseable JSON still produces an addressable envelope
+        let env = parse_line("not json");
+        assert_eq!(env.kind, RequestKind::Invalid);
+        assert!(env.request.is_err());
+    }
+
+    #[test]
+    fn every_report_target_resolves() {
+        let names = [
+            "table1", "table2", "table5", "table6", "table7", "table8", "traffic", "fig3",
+            "fig8", "fig9", "fig10", "fig11", "fig12",
+        ];
+        assert_eq!(names.len(), TableId::ALL.len() + FigureId::ALL.len());
+        for n in names {
+            assert!(ReportTarget::parse(n).is_some(), "{n}");
+        }
+        assert!(ReportTarget::parse("table3").is_none());
+    }
+
+    #[test]
+    fn responses_echo_the_id_and_render_one_line() {
+        let id = Json::Num(42.0);
+        let ok = ok_response(&id, vec![("x".to_string(), Json::Num(1.0))]);
+        assert_eq!(ok, r#"{"id":42,"ok":true,"x":1}"#);
+        let err = err_response(&id, "boom \"quoted\"");
+        assert!(err.starts_with(r#"{"id":42,"ok":false,"#), "{err}");
+        assert!(!ok.contains('\n') && !err.contains('\n'));
+        // both must re-parse
+        assert!(Json::parse(&ok).is_ok());
+        assert!(Json::parse(&err).is_ok());
+    }
+
+    #[test]
+    fn job_result_embeds_a_decodable_store_entry() {
+        let session = Session::builder().threads(1).build();
+        let job = match parse_line(
+            r#"{"type":"layer_cost","net":"ShuffleNet","layer":"CONV2","pass":"igrad","batch":2}"#,
+        )
+        .request
+        .unwrap()
+        {
+            Request::LayerCost(j) => j,
+            other => panic!("wrong request: {other:?}"),
+        };
+        let cost = session
+            .layer_cost(&job.layer, job.pass, job.flow, job.batch);
+        let rendered = job_result_json(&session, &job, &cost).render();
+        let parsed = Json::parse(&rendered).unwrap();
+        let entry = parsed.get("entry").and_then(Json::as_str).unwrap();
+        let (key, decoded) = store::decode_line(entry).expect("entry must decode");
+        assert_eq!(
+            key,
+            job.cost_key(
+                &session.arch_for(job.flow),
+                session.params(),
+                session.dram()
+            )
+        );
+        assert_eq!(decoded, cost, "wire entry must be the exact cost");
+    }
+
+    #[test]
+    fn pass_and_flow_spellings_parse() {
+        assert_eq!(parse_pass("forward"), Some(TrainingPass::Forward));
+        assert_eq!(parse_pass("input-grad"), Some(TrainingPass::InputGrad));
+        assert_eq!(parse_pass("filter_grad"), Some(TrainingPass::FilterGrad));
+        assert_eq!(parse_pass("sideways"), None);
+        assert_eq!(parse_flow("ecoflow"), Some(Dataflow::EcoFlow));
+        assert_eq!(parse_flow("RS"), Some(Dataflow::RowStationary));
+        assert_eq!(parse_flow("warp"), None);
+    }
+}

@@ -341,7 +341,7 @@ impl<'a> BatchSim<'a> {
 }
 
 /// Run every operand set of `ops` through `mp`, choosing the engine per
-/// the process-wide [`SimEngine`](super::SimEngine) policy
+/// the effective [`SimEngine`](super::SimEngine) policy
 /// ([`use_batched`](super::use_batched) — shared with the systolic
 /// dispatch, so the batched/scalar split cannot drift between the two
 /// array fabrics). Results are bit-identical under every policy.
@@ -351,8 +351,12 @@ pub fn run_shared_program(
     ops: &[Operands],
 ) -> Result<Vec<(Mat, PassStats)>, SimError> {
     if super::use_batched(ops.len()) {
+        super::note_engine_run(true);
         BatchSim::new(arch, mp).run(ops)
     } else {
+        if !ops.is_empty() {
+            super::note_engine_run(false);
+        }
         ops.iter().map(|o| ArraySim::new(arch, mp).run(o)).collect()
     }
 }

@@ -32,11 +32,23 @@
 //! cross-engine differential harness in `tests/engine_matrix.rs`.
 //!
 //! This module is also the single home of the engine-selection
-//! *policy*: [`SimEngine`], its process-wide override, and
-//! [`use_batched`] — consulted by the microprogrammed-array dispatch
+//! *policy*: [`SimEngine`], its scoping machinery, and [`use_batched`]
+//! — consulted by the microprogrammed-array dispatch
 //! ([`run_shared_program`]) and the systolic dispatch
 //! ([`systolic::systolic_matmul_policy`]) alike, so the batched/scalar
 //! split cannot drift between the two fabrics.
+//!
+//! # Engine scoping
+//!
+//! The effective engine at a policy point is resolved by
+//! [`current_engine`]: the innermost active [`EngineScope`] on this
+//! thread if one exists, else the process-wide default
+//! ([`engine_override`], set by the CLI's `--engine` flag once per
+//! invocation). [`Session`](crate::coordinator::Session) pins its
+//! engine at build time and enters an `EngineScope` on every sweep
+//! worker thread it spawns, so two Sessions in one process run their
+//! own engines concurrently without seeing each other — the process
+//! default only matters for code that simulates outside any Session.
 
 pub mod engine;
 pub mod lanes;
@@ -50,13 +62,13 @@ pub use systolic::BatchSystolicSim;
 /// variants.
 ///
 /// The engines are bit-identical by contract (see the module docs), so
-/// this is a *performance* knob, never a correctness one — which is what
-/// makes a process-wide override safe. The
+/// this is a *performance* knob, never a correctness one. The
 /// [`Session`](crate::coordinator::Session) builder owns it (and the
-/// CLI's `--engine` flag feeds the builder); `Auto` is the default and
-/// the only sensible production choice, `Scalar` exists to bisect engine
-/// suspicions, `Batched` to force lane-parallel runs even for singletons
-/// (e.g. when profiling the SoA loop).
+/// CLI's `--engine` flag doubles as the per-invocation process default);
+/// `Auto` is the default and the only sensible production choice,
+/// `Scalar` exists to bisect engine suspicions, `Batched` to force
+/// lane-parallel runs even for singletons (e.g. when profiling the SoA
+/// loop).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SimEngine {
     /// Batch when two or more operand sets share a schedule (default).
@@ -80,10 +92,19 @@ impl SimEngine {
     }
 }
 
-/// Process-wide engine choice: 0 = Auto, 1 = Scalar, 2 = Batched.
+/// Process-wide *default* engine: 0 = Auto, 1 = Scalar, 2 = Batched.
+/// Consulted only when no [`EngineScope`] is active on the calling
+/// thread (see the module docs).
 static ENGINE_OVERRIDE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
 
-/// Set the process-wide engine choice (see [`SimEngine`]).
+thread_local! {
+    /// Innermost active [`EngineScope`] engine for this thread.
+    static ENGINE_SCOPE: std::cell::Cell<Option<SimEngine>> = const { std::cell::Cell::new(None) };
+}
+
+/// Set the process-wide default engine (see [`SimEngine`]). The CLI
+/// sets this once per invocation from `--engine`; an active
+/// [`EngineScope`] always wins over it.
 pub fn set_engine_override(engine: SimEngine) {
     let code = match engine {
         SimEngine::Auto => 0,
@@ -93,7 +114,7 @@ pub fn set_engine_override(engine: SimEngine) {
     ENGINE_OVERRIDE.store(code, std::sync::atomic::Ordering::Relaxed);
 }
 
-/// The current process-wide engine choice.
+/// The process-wide default engine choice.
 pub fn engine_override() -> SimEngine {
     match ENGINE_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
         1 => SimEngine::Scalar,
@@ -102,16 +123,78 @@ pub fn engine_override() -> SimEngine {
     }
 }
 
+/// RAII guard that pins the engine choice for the current thread.
+///
+/// While alive, [`current_engine`] on this thread returns the scoped
+/// engine instead of the process default; dropping restores whatever
+/// was scoped before (scopes nest). `Session` enters one of these on
+/// each sweep worker it spawns, which is what makes two Sessions with
+/// different engines safe to run concurrently in one process.
+#[must_use = "the scope only applies while this guard is alive"]
+pub struct EngineScope {
+    prev: Option<SimEngine>,
+}
+
+impl EngineScope {
+    /// Pin `engine` for the current thread until the guard drops.
+    pub fn enter(engine: SimEngine) -> EngineScope {
+        let prev = ENGINE_SCOPE.with(|s| s.replace(Some(engine)));
+        EngineScope { prev }
+    }
+}
+
+impl Drop for EngineScope {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        ENGINE_SCOPE.with(|s| s.set(prev));
+    }
+}
+
+/// The engine in effect for the calling thread: the innermost active
+/// [`EngineScope`] if any, else the process default.
+pub fn current_engine() -> SimEngine {
+    ENGINE_SCOPE
+        .with(|s| s.get())
+        .unwrap_or_else(engine_override)
+}
+
+/// Scalar-engine runs completed process-wide (shared programs and
+/// lowered systolic matmuls alike).
+static SCALAR_RUNS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+/// Lane-parallel runs completed process-wide.
+static BATCHED_RUNS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Record one engine dispatch. Both policy points (shared-program and
+/// systolic matmul) call this on every run, so the counters attribute
+/// every simulated schedule to the engine that actually executed it.
+pub(crate) fn note_engine_run(batched: bool) {
+    let ctr = if batched { &BATCHED_RUNS } else { &SCALAR_RUNS };
+    ctr.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Process-wide `(scalar_runs, batched_runs)` dispatch counters.
+///
+/// Monotonic over the process lifetime; take a delta around a region to
+/// attribute its simulations. The Session-scoping test uses this to
+/// prove two Sessions in one process really ran different engines.
+pub fn engine_run_counts() -> (u64, u64) {
+    (
+        SCALAR_RUNS.load(std::sync::atomic::Ordering::Relaxed),
+        BATCHED_RUNS.load(std::sync::atomic::Ordering::Relaxed),
+    )
+}
+
 /// The shared batched-vs-scalar decision: should `shared_sets` operand
 /// sets (or same-geometry tiles) that share one schedule run through a
-/// lane-parallel engine under the current [`SimEngine`] policy? Under
-/// `Auto`, two or more sets amortize one batched loop and a singleton
-/// takes the scalar engine (SoA lanes would waste most of the arithmetic
-/// on padding). Results are bit-identical under every policy — this is
-/// the single policy point both array fabrics consult, so the
-/// batched/scalar split cannot drift between call sites.
+/// lane-parallel engine under the effective [`SimEngine`] policy
+/// ([`current_engine`])? Under `Auto`, two or more sets amortize one
+/// batched loop and a singleton takes the scalar engine (SoA lanes
+/// would waste most of the arithmetic on padding). Results are
+/// bit-identical under every policy — this is the single policy point
+/// both array fabrics consult, so the batched/scalar split cannot
+/// drift between call sites.
 pub fn use_batched(shared_sets: usize) -> bool {
-    match engine_override() {
+    match current_engine() {
         SimEngine::Auto => shared_sets >= 2,
         SimEngine::Scalar => false,
         SimEngine::Batched => shared_sets >= 1,
@@ -132,11 +215,34 @@ mod tests {
 
     #[test]
     fn auto_policy_batches_only_shared_schedules() {
-        // default policy (tests run with the override unset)
-        assert_eq!(engine_override(), SimEngine::Auto);
+        // default policy (tests run with the override unset and no
+        // scope active on this thread)
+        assert_eq!(current_engine(), SimEngine::Auto);
         assert!(!use_batched(0));
         assert!(!use_batched(1));
         assert!(use_batched(2));
         assert!(use_batched(LANES + 1));
+    }
+
+    #[test]
+    fn engine_scopes_nest_and_restore_per_thread() {
+        assert_eq!(current_engine(), SimEngine::Auto);
+        {
+            let _outer = EngineScope::enter(SimEngine::Scalar);
+            assert_eq!(current_engine(), SimEngine::Scalar);
+            assert!(!use_batched(8));
+            {
+                let _inner = EngineScope::enter(SimEngine::Batched);
+                assert_eq!(current_engine(), SimEngine::Batched);
+                assert!(use_batched(1));
+            }
+            assert_eq!(current_engine(), SimEngine::Scalar);
+            // the scope is thread-local: a fresh thread sees the
+            // process default, not this thread's scope
+            std::thread::spawn(|| assert_eq!(current_engine(), SimEngine::Auto))
+                .join()
+                .unwrap();
+        }
+        assert_eq!(current_engine(), SimEngine::Auto);
     }
 }

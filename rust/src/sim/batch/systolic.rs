@@ -245,8 +245,9 @@ impl<'a> BatchSystolicSim<'a> {
 }
 
 /// Policy-driven systolic matmul: the single dispatch point the TPU
-/// compiler passes share. Applies the process-wide
-/// [`SimEngine`](super::SimEngine) policy to this fabric's unit of
+/// compiler passes share. Applies the effective
+/// [`SimEngine`](super::SimEngine) policy
+/// ([`current_engine`](super::current_engine)) to this fabric's unit of
 /// sharing — same-geometry output tiles — exactly as
 /// [`use_batched`](super::use_batched) applies it to the
 /// microprogrammed array's shared-program runs: `Auto` batches when at
@@ -257,9 +258,15 @@ pub fn systolic_matmul_policy(arch: &ArchConfig, a: &Mat, b: &Mat) -> (Mat, Pass
     // Forced engines return before any decomposition work: this runs on
     // the proxy hot path, and under `Scalar` (the bisection mode) the
     // span histogram would be computed only to be thrown away.
-    match super::engine_override() {
-        super::SimEngine::Scalar => return systolic_matmul(arch, a, b),
-        super::SimEngine::Batched => return BatchSystolicSim::new(arch).matmul(a, b),
+    match super::current_engine() {
+        super::SimEngine::Scalar => {
+            super::note_engine_run(false);
+            return systolic_matmul(arch, a, b);
+        }
+        super::SimEngine::Batched => {
+            super::note_engine_run(true);
+            return BatchSystolicSim::new(arch).matmul(a, b);
+        }
         super::SimEngine::Auto => {}
     }
     // Auto: batch iff at least two output tiles share a geometry. A
@@ -274,11 +281,13 @@ pub fn systolic_matmul_policy(arch: &ArchConfig, a: &Mat, b: &Mat) -> (Mat, Pass
         }
     }
     if geos.iter().any(|(_, c)| *c >= 2) {
+        super::note_engine_run(true);
         BatchSystolicSim::new(arch)
             .run_spanned(&[(a, b)], &spans)
             .pop()
             .expect("one pair in, one result out")
     } else {
+        super::note_engine_run(false);
         systolic_matmul(arch, a, b)
     }
 }

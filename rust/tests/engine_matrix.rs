@@ -18,10 +18,13 @@
 //! The plane level gets the same treatment below the cost model:
 //! `simulate_plane` per (op × flow) under each engine override.
 //!
-//! Everything lives in ONE `#[test]` because the engine choice is a
-//! process-wide override: a second concurrent test in this binary could
-//! flip the engine mid-sweep. (Separate test binaries are separate
-//! processes, so the rest of the suite is unaffected.)
+//! Everything lives in ONE `#[test]`: the Session legs pin their
+//! engines per session (the builder field scopes each sweep worker),
+//! but the plane-level and execute_batched legs below the cost model
+//! still steer via the process-wide *default*
+//! (`set_engine_override`) — a second concurrent test in this binary
+//! could flip that default mid-check. (Separate test binaries are
+//! separate processes, so the rest of the suite is unaffected.)
 
 use ecoflow::compiler::tiling::{self, LayerCost, PlaneOp};
 use ecoflow::compiler::{Dataflow, DataflowCompiler, PlaneOperands};

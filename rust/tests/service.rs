@@ -1,0 +1,341 @@
+//! End-to-end tests of the resident sweep service (`ecoflow serve`):
+//! concurrent clients get answers bit-identical to the one-shot CLI
+//! path, protocol errors are survivable, racing writers are serialized
+//! through the single writer thread, and shutdown drains before it
+//! flushes.
+//!
+//! Each test spawns its own service on an OS-assigned port (`:0`) with
+//! its own session, so the tests are independent and parallel-safe.
+//! Layers are small custom geometries to keep simulations cheap; the
+//! bit-exactness checks ride on the store-entry codec
+//! ([`store::encode_line`]/[`decode_line`]), which round-trips
+//! `LayerCost` floats by bit pattern — no JSON float formatting is in
+//! the comparison path.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use ecoflow::compiler::Dataflow;
+use ecoflow::coordinator::scheduler::SweepJob;
+use ecoflow::coordinator::{store, CostCache, LoadOutcome, Session};
+use ecoflow::model::{ConvLayer, TrainingPass};
+use ecoflow::service::json::Json;
+use ecoflow::service::{spawn, ServiceConfig};
+
+fn config() -> ServiceConfig {
+    ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        linger: Duration::from_millis(5),
+    }
+}
+
+/// One protocol connection: send a line, read the reply line.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "connection closed with no reply to {line}");
+        Json::parse(reply.trim()).unwrap()
+    }
+}
+
+fn ok(v: &Json) -> bool {
+    v.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+/// The small custom layers the tests sweep, as both a wire spec and the
+/// in-memory [`ConvLayer`] the direct path uses (the protocol builds
+/// inline layers with net `"custom"`).
+fn small_layer(i: usize) -> (String, ConvLayer) {
+    // distinct geometries so nothing dedups across indices
+    let (in_ch, ifm, k, filters) = (2 + i, 9 + 2 * i, 3, 4 + i);
+    let ofm = ifm - k + 1;
+    let spec = format!(
+        r#"{{"kind":"conv","name":"svc{i}","in_ch":{in_ch},"ifm":{ifm},"ofm":{ofm},"k":{k},"filters":{filters},"stride":1}}"#
+    );
+    let layer = ConvLayer::conv("custom", &format!("svc{i}"), in_ch, ifm, ofm, k, filters, 1);
+    (spec, layer)
+}
+
+/// The store entry the one-shot path would produce for `job` — the
+/// byte string a bit-identical service answer must match.
+fn direct_entry(session: &Session, job: &SweepJob) -> String {
+    let cost = session
+        .layer_cost(&job.layer, job.pass, job.flow, job.batch)
+        .expect("direct simulation must succeed");
+    let key = job.cost_key(&session.arch_for(job.flow), session.params(), session.dram());
+    store::encode_line(&key, &cost)
+}
+
+#[test]
+fn concurrent_clients_get_bit_identical_answers() {
+    // the reference: a plain one-shot session with the same (default)
+    // environment the service session gets
+    let direct = Session::builder().threads(2).build();
+    let jobs: Vec<(String, SweepJob)> = (0..4)
+        .map(|i| {
+            let (spec, layer) = small_layer(i);
+            let pass = if i % 2 == 0 {
+                TrainingPass::Forward
+            } else {
+                TrainingPass::InputGrad
+            };
+            let job = SweepJob {
+                layer,
+                pass,
+                flow: Dataflow::EcoFlow,
+                batch: 1 + i % 2,
+            };
+            let pass_name = if i % 2 == 0 { "forward" } else { "input-grad" };
+            let line = format!(
+                r#"{{"id":{i},"type":"layer_cost","layer":{spec},"pass":"{pass_name}","batch":{}}}"#,
+                job.batch
+            );
+            (line, job)
+        })
+        .collect();
+    let expected: Vec<String> = jobs.iter().map(|(_, j)| direct_entry(&direct, j)).collect();
+
+    let handle = spawn(Session::builder().threads(2).build(), config()).unwrap();
+    let addr = handle.addr();
+
+    // one client thread per job, all in flight together — concurrent
+    // submissions fuse in the dispatcher, results must not mix up
+    let answers: Vec<(usize, String)> = std::thread::scope(|s| {
+        let workers: Vec<_> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, (line, _))| {
+                s.spawn(move || {
+                    let mut c = Client::connect(addr);
+                    let reply = c.request(line);
+                    assert!(ok(&reply), "job {i} failed: {}", reply.render());
+                    assert_eq!(reply.get("id").and_then(Json::as_u64), Some(i as u64));
+                    let entry = reply
+                        .get("result")
+                        .and_then(|r| r.get("entry"))
+                        .and_then(Json::as_str)
+                        .expect("EcoFlow results carry a store entry")
+                        .to_string();
+                    (i, entry)
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().unwrap()).collect()
+    });
+    for (i, entry) in &answers {
+        assert_eq!(
+            entry, &expected[*i],
+            "service answer {i} must be byte-identical to the one-shot path"
+        );
+        let (_, decoded) = store::decode_line(entry).expect("wire entry must decode");
+        assert!(decoded.is_ok());
+    }
+
+    // a multi-job sweep over the same geometries: per-job results in
+    // submission order, each still bit-identical
+    let mut c = Client::connect(addr);
+    let specs: Vec<String> = (0..4)
+        .map(|i| {
+            let (spec, _) = small_layer(i);
+            let pass = if i % 2 == 0 { "forward" } else { "input-grad" };
+            format!(r#"{{"layer":{spec},"pass":"{pass}","batch":{}}}"#, 1 + i % 2)
+        })
+        .collect();
+    let reply = c.request(&format!(
+        r#"{{"id":99,"type":"sweep","jobs":[{}]}}"#,
+        specs.join(",")
+    ));
+    assert!(ok(&reply), "{}", reply.render());
+    let results = reply.get("results").and_then(Json::as_array).unwrap();
+    assert_eq!(results.len(), 4);
+    for (i, r) in results.iter().enumerate() {
+        let entry = r.get("entry").and_then(Json::as_str).unwrap();
+        assert_eq!(entry, expected[i], "sweep result {i} out of order or drifted");
+    }
+
+    assert!(ok(&c.request(r#"{"type":"shutdown"}"#)));
+    let report = handle.join();
+    assert_eq!(report.metrics.requests, 6, "4 layer_cost + 1 sweep + 1 shutdown");
+    assert_eq!(report.metrics.errors, 0);
+}
+
+#[test]
+fn protocol_errors_are_answered_and_survivable() {
+    let handle = spawn(Session::builder().threads(1).build(), config()).unwrap();
+    let mut c = Client::connect(handle.addr());
+
+    for bad in [
+        "this is not json",
+        r#"{"id":"x","type":"warp"}"#,
+        r#"{"id":"x","type":"layer_cost","net":"NoSuchNet","layer":"CONV9"}"#,
+        r#"{"id":"x","type":"layer_cost","layer":{"kind":"conv","in_ch":0,"ifm":9,"ofm":7,"k":3,"filters":4,"stride":1}}"#,
+        r#"{"id":"x","type":"table","target":"table42"}"#,
+        r#"{"id":"x","type":"sweep","jobs":[]}"#,
+    ] {
+        let reply = c.request(bad);
+        assert_eq!(
+            reply.get("ok").and_then(Json::as_bool),
+            Some(false),
+            "{bad} must be refused: {}",
+            reply.render()
+        );
+        assert!(
+            reply.get("error").and_then(Json::as_str).is_some(),
+            "refusals carry an error message"
+        );
+    }
+
+    // the connection is still usable after every refusal
+    let stats = c.request(r#"{"id":7,"type":"stats"}"#);
+    assert!(ok(&stats), "{}", stats.render());
+    assert_eq!(stats.get("errors").and_then(Json::as_u64), Some(6));
+
+    // report targets serve real tables (table1 is analytic — cheap)
+    let table = c.request(r#"{"type":"table","target":"table1"}"#);
+    assert!(ok(&table), "{}", table.render());
+    let rows = table
+        .get("table")
+        .and_then(|t| t.get("rows"))
+        .and_then(Json::as_array)
+        .unwrap();
+    assert!(!rows.is_empty());
+
+    assert!(ok(&c.request(r#"{"type":"shutdown"}"#)));
+    let report = handle.join();
+    assert_eq!(report.metrics.errors, 6);
+}
+
+#[test]
+fn racing_writers_serialize_through_the_writer_thread() {
+    let path = std::env::temp_dir().join(format!(
+        "ecoflow-service-race-{}.cache",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    let session = Session::builder().threads(2).store_path(&path).build();
+    let handle = spawn(session, config()).unwrap();
+    let addr = handle.addr();
+
+    // two clients hammer distinct layer sets concurrently — every
+    // dispatch round nudges the writer, so saves race with sweeps and
+    // with each other (and coalesce inside the writer thread)
+    std::thread::scope(|s| {
+        for half in 0..2usize {
+            s.spawn(move || {
+                let mut c = Client::connect(addr);
+                for i in (half * 3)..(half * 3 + 3) {
+                    let (spec, _) = small_layer(i);
+                    let reply =
+                        c.request(&format!(r#"{{"type":"layer_cost","layer":{spec}}}"#));
+                    assert!(ok(&reply), "{}", reply.render());
+                }
+            });
+        }
+        // meanwhile a reader polls the store file: it may be missing
+        // (before the first save) or loaded, but NEVER torn — the
+        // writer's full rewrites are temp-file + rename, its appends
+        // patch the count last, and there is only one writer
+        let path = &path;
+        s.spawn(move || {
+            for _ in 0..50 {
+                match store::load_into(path, &CostCache::new()) {
+                    LoadOutcome::Missing | LoadOutcome::Loaded { .. } => {}
+                    LoadOutcome::Rebuilt { reason } => {
+                        panic!("reader saw a torn store mid-save: {reason}")
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+    });
+
+    // a foreign writer replaces the file behind the service's back;
+    // the next save must detect it (append guard) and demote to a full
+    // rewrite that still carries every entry the service computed
+    store::save(&path, &CostCache::new()).unwrap();
+
+    let mut c = Client::connect(addr);
+    let (spec, _) = small_layer(6);
+    assert!(ok(&c.request(&format!(r#"{{"type":"layer_cost","layer":{spec}}}"#))));
+    assert!(ok(&c.request(r#"{"type":"shutdown"}"#)));
+    let report = handle.join();
+    assert!(report.store_saves >= 1, "the writer thread must have saved");
+
+    // final store: loadable, and holding ALL 7 distinct geometries —
+    // the foreign rewrite cost nothing
+    let reloaded = CostCache::new();
+    match store::load_into(&path, &reloaded) {
+        LoadOutcome::Loaded { entries } => {
+            assert_eq!(entries, 7, "no entry may be dropped by the demoted append")
+        }
+        other => panic!("final store unusable: {other:?}"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn shutdown_drains_in_flight_work_and_flushes_the_store() {
+    let path = std::env::temp_dir().join(format!(
+        "ecoflow-service-drain-{}.cache",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    let session = Session::builder().threads(2).store_path(&path).build();
+    // a long linger holds the first sweep open, so the shutdown below
+    // reliably lands while the request is still in flight
+    let handle = spawn(
+        session,
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            linger: Duration::from_millis(300),
+        },
+    )
+    .unwrap();
+    let addr = handle.addr();
+
+    let worker = std::thread::spawn(move || {
+        let mut c = Client::connect(addr);
+        let (spec, _) = small_layer(0);
+        c.request(&format!(r#"{{"id":1,"type":"layer_cost","layer":{spec}}}"#))
+    });
+    // let the request reach the batcher, then shut down from a second
+    // connection while it is still lingering/sweeping
+    std::thread::sleep(Duration::from_millis(100));
+    let mut c = Client::connect(addr);
+    assert!(ok(&c.request(r#"{"type":"shutdown"}"#)));
+
+    // the in-flight request still gets its full answer...
+    let reply = worker.join().unwrap();
+    assert!(ok(&reply), "in-flight request dropped by shutdown: {}", reply.render());
+    assert!(reply
+        .get("result")
+        .and_then(|r| r.get("entry"))
+        .and_then(Json::as_str)
+        .is_some());
+
+    // ...and the drain flushed its result to disk before exit
+    let report = handle.join();
+    assert!(report.store_saves >= 1);
+    match store::load_into(&path, &CostCache::new()) {
+        LoadOutcome::Loaded { entries } => assert_eq!(entries, 1),
+        other => panic!("store not flushed on shutdown: {other:?}"),
+    }
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,88 @@
+//! Session-scoped engine selection: two [`Session`]s in one process
+//! run *different* engines, concurrently safe and without touching the
+//! process default.
+//!
+//! This pins the fix for the old behavior, where
+//! `SessionBuilder::engine` mutated the process-wide override at
+//! `build()` — the last session built silently decided every session's
+//! engine. Now the builder snapshots the choice into the session and
+//! sweeps carry it to their worker threads via a thread-local
+//! [`EngineScope`](ecoflow::sim::batch::EngineScope), observable
+//! through the process-wide dispatch counters
+//! ([`engine_run_counts`]).
+//!
+//! One `#[test]` on purpose: the dispatch counters are process-global,
+//! so concurrent tests in this binary would see each other's runs.
+
+use ecoflow::compiler::Dataflow;
+use ecoflow::coordinator::{Session, SweepJob};
+use ecoflow::model::{ConvLayer, TrainingPass};
+use ecoflow::sim::batch::{engine_override, engine_run_counts, SimEngine};
+
+/// Small distinct geometries — cheap to simulate, not fused together.
+fn jobs() -> Vec<SweepJob> {
+    let layers = [
+        ConvLayer::conv("EngineIso", "A", 4, 9, 7, 3, 8, 1),
+        ConvLayer::conv("EngineIso", "B", 6, 11, 9, 3, 4, 1),
+    ];
+    layers
+        .iter()
+        .map(|l| SweepJob {
+            layer: l.clone(),
+            pass: TrainingPass::Forward,
+            flow: Dataflow::EcoFlow,
+            batch: 2,
+        })
+        .collect()
+}
+
+#[test]
+fn two_sessions_run_different_engines_in_one_process() {
+    let default_before = engine_override();
+
+    // build order is deliberately scalar-then-batched with both alive:
+    // under the old process-global behavior the second build would
+    // have silently switched the first session to Batched
+    let scalar = Session::builder().threads(2).engine(SimEngine::Scalar).build();
+    let batched = Session::builder().threads(2).engine(SimEngine::Batched).build();
+    assert_eq!(scalar.engine(), SimEngine::Scalar);
+    assert_eq!(batched.engine(), SimEngine::Batched);
+
+    let before = engine_run_counts();
+    let scalar_results = scalar.sweep(jobs());
+    let mid = engine_run_counts();
+    assert!(
+        mid.0 > before.0,
+        "the scalar session must dispatch scalar engine runs ({before:?} -> {mid:?})"
+    );
+    assert_eq!(
+        mid.1, before.1,
+        "the scalar session must never dispatch a batched run"
+    );
+
+    let batched_results = batched.sweep(jobs());
+    let after = engine_run_counts();
+    assert!(
+        after.1 > mid.1,
+        "the batched session must dispatch batched engine runs ({mid:?} -> {after:?})"
+    );
+    assert_eq!(
+        after.0, mid.0,
+        "the batched session must never dispatch a scalar run"
+    );
+
+    // the engine is a throughput policy, not a model: bit-identical
+    for (s, b) in scalar_results.iter().zip(&batched_results) {
+        assert_eq!(s.job.layer.name, b.job.layer.name);
+        assert_eq!(s.cost, b.cost, "engines must agree on {}", s.job.layer.name);
+    }
+
+    // neither builder nor sweep leaked into the process default
+    assert_eq!(engine_override(), default_before);
+
+    // and the scopes did not stick to this (main) thread either: a
+    // sweep on a default session after both of the above behaves as
+    // the process default dictates, not as the last session ran
+    let plain = Session::builder().threads(1).build();
+    assert_eq!(plain.engine(), default_before);
+}
