@@ -71,13 +71,14 @@ fn main() {
     let sys_slots = sys_st.cycles as f64 * arch.num_pes() as f64;
     let sys_scalar_mps = sys_slots / sys_scalar_m.median_ns() * 1e3;
     let sys_batched_mps = sys_slots / sys_batched_m.median_ns() * 1e3;
-    println!(
+    let sys_line = format!(
         "{{\"bench\":\"systolic_pe_slot_updates\",\"unit\":\"M/s\",\"scalar\":{:.1},\"batched\":{:.1},\"lanes\":{},\"speedup\":{:.2}}}",
         sys_scalar_mps,
         sys_batched_mps,
         LANES,
         sys_batched_mps / sys_scalar_mps.max(1e-9)
     );
+    println!("{sys_line}");
     set.run("golden_conv_oracle/25x25_k3_s2", 400, || {
         std::hint::black_box(ecoflow::tensor::conv::direct_conv(&x, &w, 2));
     });
@@ -110,13 +111,14 @@ fn main() {
     let scalar_mps = slot_updates / scalar_m.median_ns() * 1e3;
     let batched_mps = slot_updates / batched_m.median_ns() * 1e3;
     // machine-readable line for the bench trajectory
-    println!(
+    let pe_line = format!(
         "{{\"bench\":\"pe_slot_updates\",\"unit\":\"M/s\",\"scalar\":{:.1},\"batched\":{:.1},\"lanes\":{},\"speedup\":{:.2}}}",
         scalar_mps,
         batched_mps,
         LANES,
         batched_mps / scalar_mps.max(1e-9)
     );
+    println!("{pe_line}");
 
     if let Some(s) = set.speedup("golden_conv_oracle/25x25_k3_s2", "rs_direct_pass/25x25_k3_s2")
     {
@@ -165,13 +167,43 @@ fn main() {
     });
     let warm = CostCache::new();
     let _ = run_sweep_cached(&params, &dram, jobs.clone(), 1, &warm);
-    set.run("sweep_engine_warm/resnet50", 1500, || {
-        std::hint::black_box(run_sweep_cached(&params, &dram, jobs.clone(), 1, &warm));
-    });
+    let warm_m = set
+        .run("sweep_engine_warm/resnet50", 1500, || {
+            std::hint::black_box(run_sweep_cached(&params, &dram, jobs.clone(), 1, &warm));
+        })
+        .clone();
     if let Some(s) = set.speedup("sweep_engine_cold/resnet50", "sweep_naive_loop/resnet50") {
         println!("  dedup speedup (cold cache) over naive loop: {s:.2}x");
     }
     if let Some(s) = set.speedup("sweep_engine_warm/resnet50", "sweep_naive_loop/resnet50") {
         println!("  memoized speedup (warm cache) over naive loop: {s:.2}x");
+    }
+
+    // -- tracing overhead: the obs layer must be noise while disabled ----
+    // The warm sweep is the most instrumentation-dense hot path (every
+    // scheduler stage is spanned, every cache lookup counted); measure
+    // it again with a capture window open and report the delta. The
+    // disabled path is one relaxed atomic load per probe — the budget
+    // for the *enabled* delta on this path is ~2%.
+    ecoflow::obs::start_capture();
+    let traced_m = set
+        .run("sweep_engine_warm_traced/resnet50", 1500, || {
+            std::hint::black_box(run_sweep_cached(&params, &dram, jobs.clone(), 1, &warm));
+        })
+        .clone();
+    let _ = ecoflow::obs::stop_capture();
+    let off_ns = warm_m.median_ns();
+    let on_ns = traced_m.median_ns();
+    let overhead_line = format!(
+        "{{\"bench\":\"tracing_overhead\",\"unit\":\"pct\",\"off_ns\":{:.0},\"on_ns\":{:.0},\"overhead_pct\":{:.2}}}",
+        off_ns,
+        on_ns,
+        (on_ns / off_ns.max(1e-9) - 1.0) * 100.0
+    );
+    println!("{overhead_line}");
+
+    if let Some(path) = ecoflow::util::bench::bench_out_path() {
+        set.write_json(&path, &[sys_line, pe_line, overhead_line])
+            .expect("bench-out write failed");
     }
 }

@@ -117,12 +117,13 @@ fn main() {
         "  -> {qps:.0} qps, latency mean {mean_us}us p50 {:?} p99 {:?}",
         p50, p99
     );
-    println!(
+    let svc_line = format!(
         "{{\"bench\":\"service_layer_cost\",\"unit\":\"us\",\"qps\":{:.0},\"p50_us\":{},\"p99_us\":{},\"mean_us\":{mean_us},\"clients\":{CLIENTS},\"requests\":{total}}}",
         qps,
         p50.as_micros(),
         p99.as_micros()
     );
+    println!("{svc_line}");
 
     // Single-connection round trip through the standard harness, for a
     // bench-suite-style line (no concurrency, pure protocol overhead).
@@ -148,4 +149,9 @@ fn main() {
     handle.shutdown();
     let report = handle.join();
     println!("server: {}", report.render());
+
+    if let Some(path) = ecoflow::util::bench::bench_out_path() {
+        set.write_json(&path, &[svc_line])
+            .expect("bench-out write failed");
+    }
 }

@@ -40,6 +40,15 @@
 //! (`validate`/`train` goldens); results are bit-identical under every
 //! choice, only throughput moves.
 //!
+//! Two observability flags ride on every command (see
+//! [`obs`](crate::obs) and README "Observability"): `--trace-file PATH`
+//! opens a capture window around the whole invocation and writes the
+//! recorded spans as Chrome trace-event JSON (open it in Perfetto);
+//! `--stats` prints the unified metrics registry — engine run counts,
+//! cache hits/misses, store save modes, scheduler totals — to stderr on
+//! exit. Both are pure observers: results are bit-identical with and
+//! without them.
+//!
 //! `serve` turns the invocation into a resident daemon (see
 //! [`service`](crate::service)): the session — store load included — is
 //! built once and then answers JSON-lines requests over TCP until a
@@ -105,14 +114,16 @@ pub fn usage() -> &'static str {
      \u{20}  flows                              list the registered dataflows\n\
      \u{20}  validate [--artifacts DIR]         golden JAX-vs-simulator check\n\
      \u{20}  train [--steps N] [--variant stride|pool] [--artifacts DIR]\n\
-     \u{20}  sweep [--csv]                      full layer x dataflow sweep\n\
+     \u{20}  sweep [--csv] [--net N] [--layer L]   layer x dataflow sweep\n\
      \u{20}  serve [--addr HOST:PORT] [--linger-ms N]   resident sweep service\n\
      \u{20}        (JSON-lines over TCP; see README \"Sweep service\")\n\
      \u{20}  version\n\
      options: --threads N, --csv, --cache-stats,\n\
      \u{20}        --cache-file PATH (persist the layer-cost cache across runs),\n\
      \u{20}        --max-sim-cycles N (tighten the simulator cycle backstop),\n\
-     \u{20}        --engine auto|scalar|batched (simulation engine, both fabrics)"
+     \u{20}        --engine auto|scalar|batched (simulation engine, both fabrics),\n\
+     \u{20}        --trace-file PATH (write a Chrome trace of this invocation),\n\
+     \u{20}        --stats (print the unified metrics registry on exit)"
 }
 
 impl Args {
@@ -364,6 +375,18 @@ pub fn run(args: &[String]) -> Result<()> {
         })?),
         None => None,
     };
+    let trace_file = match parsed.options.get("trace-file") {
+        // a bare `--trace-file` parses to the flag sentinel — reject it
+        // rather than silently writing a trace to a file named "true"
+        Some(v) if v == "true" => return Err(anyhow!("--trace-file requires a path")),
+        Some(v) => Some(std::path::PathBuf::from(v)),
+        None => None,
+    };
+    // the capture opens before the session is built so store load and
+    // cache warm-up are on the trace too
+    if trace_file.is_some() {
+        crate::obs::start_capture();
+    }
     // One session per invocation: every sweep this command triggers
     // shares its memo table, and `--cache-stats` reports it at the end.
     // (The cycle-cap override is process-wide; setting it on every
@@ -494,10 +517,40 @@ pub fn run(args: &[String]) -> Result<()> {
             // the shared tail below must not run (session is consumed)
             let report = handle.join();
             eprintln!("{}", report.render());
+            // the shared tail is skipped, so flush observers here: a
+            // traced `serve` covers the daemon's whole lifetime
+            if let Some(path) = &trace_file {
+                write_trace(path)?;
+            }
+            if parsed.flag("stats") {
+                eprint!("{}", crate::obs::registry().render_summary());
+            }
             return Ok(());
         }
         "sweep" => {
-            let jobs = job_matrix(&zoo::evaluation_layers(), &Dataflow::ALL, 4);
+            let layer_sel = parsed.options.get("layer").map(String::as_str);
+            let layers: Vec<ConvLayer> = match parsed.options.get("net") {
+                Some(v) if v == "true" => {
+                    return Err(anyhow!("--net requires a network name"))
+                }
+                net => zoo::evaluation_layers()
+                    .into_iter()
+                    .filter(|l| {
+                        net.map(|n| l.net.eq_ignore_ascii_case(n)).unwrap_or(true)
+                    })
+                    .filter(|l| {
+                        layer_sel
+                            .map(|n| l.name.eq_ignore_ascii_case(n))
+                            .unwrap_or(true)
+                    })
+                    .collect(),
+            };
+            if layers.is_empty() {
+                return Err(anyhow!(
+                    "no evaluation layer matches the --net/--layer selection"
+                ));
+            }
+            let jobs = job_matrix(&layers, &Dataflow::ALL, 4);
             let results = session.sweep(jobs);
             let mut t = Table::new(
                 "Full layer sweep",
@@ -528,6 +581,22 @@ pub fn run(args: &[String]) -> Result<()> {
         // stderr, so `--csv --cache-stats` keeps stdout machine-readable
         eprintln!("{}", session.cache_stats().render_line());
     }
+    if let Some(path) = &trace_file {
+        write_trace(path)?;
+    }
+    if parsed.flag("stats") {
+        // stderr for the same reason as --cache-stats
+        eprint!("{}", crate::obs::registry().render_summary());
+    }
+    Ok(())
+}
+
+/// Close the capture window and write the Chrome trace document.
+fn write_trace(path: &std::path::Path) -> Result<()> {
+    let doc = crate::obs::stop_capture();
+    std::fs::write(path, &doc)
+        .map_err(|e| anyhow!("trace file {}: {e}", path.display()))?;
+    eprintln!("trace: wrote {} bytes to {}", doc.len(), path.display());
     Ok(())
 }
 
@@ -574,6 +643,40 @@ mod tests {
     fn bare_cache_file_flag_is_a_usage_error() {
         let err = run(&["version".into(), "--cache-file".into()]).unwrap_err();
         assert!(err.to_string().contains("cache-file"), "{err}");
+    }
+
+    #[test]
+    fn bare_trace_file_flag_is_a_usage_error() {
+        let err = run(&["version".into(), "--trace-file".into()]).unwrap_err();
+        assert!(err.to_string().contains("trace-file"), "{err}");
+    }
+
+    #[test]
+    fn trace_file_writes_a_chrome_trace_document() {
+        // fig3 is analytic, so this exercises the capture plumbing
+        // without paying for simulations; --stats rides along to cover
+        // the registry summary path
+        let path = std::env::temp_dir()
+            .join(format!("ecoflow-cli-trace-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        run(&[
+            "fig3".into(),
+            "--trace-file".into(),
+            path.to_string_lossy().to_string(),
+            "--stats".into(),
+        ])
+        .unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        assert!(doc.starts_with(r#"{"traceEvents":["#), "{doc}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sweep_net_filter_rejects_unknown_selections() {
+        let err = run(&["sweep".into(), "--net".into(), "NoSuchNet".into()]).unwrap_err();
+        assert!(err.to_string().contains("--net"), "{err}");
+        let err = run(&["sweep".into(), "--net".into()]).unwrap_err();
+        assert!(err.to_string().contains("--net"), "{err}");
     }
 
     #[test]

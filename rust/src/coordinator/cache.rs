@@ -110,6 +110,42 @@ impl CacheStats {
     }
 }
 
+/// Process-wide registry mirrors of the per-cache counters: every
+/// `CostCache` instance feeds the same `ecoflow_cache_*_total` series,
+/// so the unified `metrics`/`--stats` view aggregates across sessions
+/// while each cache keeps its own [`CacheStats`].
+fn global_counters() -> &'static (
+    std::sync::Arc<crate::obs::Counter>,
+    std::sync::Arc<crate::obs::Counter>,
+    std::sync::Arc<crate::obs::Counter>,
+) {
+    static C: std::sync::OnceLock<(
+        std::sync::Arc<crate::obs::Counter>,
+        std::sync::Arc<crate::obs::Counter>,
+        std::sync::Arc<crate::obs::Counter>,
+    )> = std::sync::OnceLock::new();
+    C.get_or_init(|| {
+        let reg = crate::obs::registry();
+        (
+            reg.counter(
+                "ecoflow_cache_hits_total",
+                "",
+                "Layer-cost cache lookups answered from the memo table.",
+            ),
+            reg.counter(
+                "ecoflow_cache_misses_total",
+                "",
+                "Layer-cost cache lookups that fell through to simulation.",
+            ),
+            reg.counter(
+                "ecoflow_cache_evictions_total",
+                "",
+                "Layer-cost cache entries dropped at the capacity bound.",
+            ),
+        )
+    })
+}
+
 /// Number of lock stripes. A power of two well above the worker-thread
 /// counts the scheduler and the sweep service run (≤ tens), so two
 /// threads touching the cache at once rarely even share a lock —
@@ -205,9 +241,16 @@ impl CostCache {
         let shard = self.shards[self.shard_of(key)].read().unwrap();
         let found = shard.map.get(key).map(|s| s.value.clone());
         drop(shard);
+        let (hits, misses, _) = global_counters();
         match &found {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
+            Some(_) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                hits.inc();
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                misses.inc();
+            }
         };
         found
     }
@@ -229,6 +272,7 @@ impl CostCache {
                     let old = shard.order.pop_front().expect("order tracks map");
                     shard.map.remove(&old);
                     self.evictions.fetch_add(1, Ordering::Relaxed);
+                    global_counters().2.inc();
                 }
             }
         }
@@ -252,6 +296,7 @@ impl CostCache {
     /// `--cache-stats`.
     pub fn record_extra_hits(&self, n: u64) {
         self.hits.fetch_add(n, Ordering::Relaxed);
+        global_counters().0.add(n);
     }
 
     /// Deterministic snapshot of the live entries, ordered by global

@@ -100,6 +100,41 @@ pub struct SweepResult {
     pub cost: Result<LayerCost, String>,
 }
 
+/// Registry counters for sweep throughput: submitted jobs, unique jobs
+/// after dedup, and proxy work units after fusing. Their ratios are the
+/// dedup and fuse factors the `--stats` summary surfaces.
+fn sched_counters() -> &'static (
+    std::sync::Arc<crate::obs::Counter>,
+    std::sync::Arc<crate::obs::Counter>,
+    std::sync::Arc<crate::obs::Counter>,
+) {
+    static C: std::sync::OnceLock<(
+        std::sync::Arc<crate::obs::Counter>,
+        std::sync::Arc<crate::obs::Counter>,
+        std::sync::Arc<crate::obs::Counter>,
+    )> = std::sync::OnceLock::new();
+    C.get_or_init(|| {
+        let reg = crate::obs::registry();
+        (
+            reg.counter(
+                "ecoflow_sched_jobs_total",
+                "",
+                "Sweep jobs submitted to the scheduler.",
+            ),
+            reg.counter(
+                "ecoflow_sched_unique_jobs_total",
+                "",
+                "Sweep jobs remaining after the dedup stage.",
+            ),
+            reg.counter(
+                "ecoflow_sched_units_total",
+                "",
+                "Proxy work units dispatched after the fuse stage.",
+            ),
+        )
+    })
+}
+
 /// The architecture each dataflow runs on by default (its Table 1 NoC
 /// row), resolved through the dataflow registry
 /// ([`DataflowCompiler::default_arch`](crate::compiler::DataflowCompiler::default_arch))
@@ -168,10 +203,13 @@ pub fn run_sweep_with<F>(
 where
     F: Fn(Dataflow) -> ArchConfig + Sync,
 {
+    let _sweep_span = crate::obs::span1("sched/sweep", "jobs", jobs.len() as u64);
+
     // -- dedup: map each job onto the slot of its first occurrence -------
     // Environment fingerprints depend only on the flow (via arch_of),
     // so compute them once per flow instead of once per job — on a
     // fully-warm sweep the keying IS the hot path.
+    let key_span = crate::obs::span("sched/key");
     let mut env_by_flow: std::collections::HashMap<Dataflow, EnvKey> =
         std::collections::HashMap::new();
     let keys: Vec<CostKey> = jobs
@@ -183,6 +221,8 @@ where
             CostKey::with_env(env, &j.layer, j.pass, j.flow, j.batch)
         })
         .collect();
+    drop(key_span);
+    let dedup_span = crate::obs::span("sched/dedup");
     let mut slot_by_key: std::collections::HashMap<CostKey, usize> = std::collections::HashMap::new();
     let mut unique_job: Vec<usize> = Vec::new(); // slot -> index of first job
     let mut slot_of: Vec<usize> = Vec::with_capacity(jobs.len());
@@ -197,8 +237,14 @@ where
     // Duplicate jobs are answered from their first occurrence's slot;
     // surface that reuse in the counters so --cache-stats reflects it.
     cache.record_extra_hits((jobs.len() - unique_job.len()) as u64);
+    let (jobs_total, unique_total, _) = sched_counters();
+    jobs_total.add(jobs.len() as u64);
+    unique_total.add(unique_job.len() as u64);
+    drop(dedup_span);
 
     // -- resolve cache hits up front; queue only true misses -------------
+    let resolve_span =
+        crate::obs::span1("sched/resolve", "unique", unique_job.len() as u64);
     let slots: Vec<OnceLock<CachedCost>> =
         (0..unique_job.len()).map(|_| OnceLock::new()).collect();
     let mut pending: Vec<usize> = Vec::new(); // slots that need simulation
@@ -210,10 +256,20 @@ where
             None => pending.push(slot),
         }
     }
+    if crate::obs::trace_enabled() {
+        let s = cache.stats();
+        crate::obs::counter(
+            "cache_hit_rate",
+            "pct",
+            (100.0 * s.hit_rate()).round() as u64,
+        );
+    }
+    drop(resolve_span);
 
     // -- group: pending slots sharing a proxy fingerprint are fused ------
     // into one batched run (the proxy plane is simulated once; members
     // extend it analytically).
+    let group_span = crate::obs::span1("sched/group", "pending", pending.len() as u64);
     let mut group_index: std::collections::HashMap<ProxyKey, usize> =
         std::collections::HashMap::new();
     let mut groups: Vec<Vec<usize>> = Vec::new(); // group -> member slots
@@ -228,6 +284,7 @@ where
         });
         groups[g].push(slot);
     }
+    drop(group_span);
 
     // -- fuse: groups whose flow reports a matching fuse key share one ---
     // proxy_stats_multi call. Distinct ProxyKeys (different op families,
@@ -235,6 +292,7 @@ where
     // systolic engine accepts mixed-origin tiles, so their proxies stream
     // through one lane-parallel run. Flows that return None (the
     // default) keep one work unit per group, exactly the old schedule.
+    let fuse_span = crate::obs::span1("sched/fuse", "groups", groups.len() as u64);
     let metas: Vec<(Dataflow, PlaneOp, usize)> = groups
         .iter()
         .map(|members| {
@@ -260,6 +318,13 @@ where
             None => units.push(vec![g]),
         }
     }
+    sched_counters().2.add(units.len() as u64);
+    if crate::obs::trace_enabled() {
+        for unit in &units {
+            crate::obs::counter("fuse_width", "groups", unit.len() as u64);
+        }
+    }
+    drop(fuse_span);
 
     // -- shard, phase A: work-stealing over the proxy *units* ------------
     // One cycle-accurate proxy simulation per group (the expensive part),
@@ -269,11 +334,22 @@ where
     let proxies: Vec<OnceLock<Result<PassStats, String>>> =
         (0..groups.len()).map(|_| OnceLock::new()).collect();
     if !units.is_empty() {
+        let _phase_span = crate::obs::span2(
+            "sched/proxies",
+            "units",
+            units.len() as u64,
+            "groups",
+            groups.len() as u64,
+        );
         let cursor = AtomicUsize::new(0);
+        let namer = AtomicUsize::new(0);
         let workers = threads.max(1).min(units.len());
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| {
+                    crate::obs::lane_name(|| {
+                        format!("sweep-worker-{}", namer.fetch_add(1, Ordering::Relaxed))
+                    });
                     let _engine = engine.map(EngineScope::enter);
                     loop {
                         let u = cursor.fetch_add(1, Ordering::Relaxed);
@@ -281,6 +357,13 @@ where
                             break;
                         }
                         let unit = &units[u];
+                        let _unit_span = crate::obs::span2(
+                            "sched/proxy_unit",
+                            "unit",
+                            u as u64,
+                            "groups",
+                            unit.len() as u64,
+                        );
                         let (flow, _, _) = metas[unit[0]];
                         let arch = arch_of(flow);
                         if unit.len() == 1 {
@@ -316,11 +399,17 @@ where
         .flat_map(|(g, member_slots)| member_slots.iter().map(move |&slot| (g, slot)))
         .collect();
     if !members.is_empty() {
+        let _phase_span =
+            crate::obs::span1("sched/extend", "members", members.len() as u64);
         let cursor = AtomicUsize::new(0);
+        let namer = AtomicUsize::new(0);
         let workers = threads.max(1).min(members.len());
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| {
+                    crate::obs::lane_name(|| {
+                        format!("extend-worker-{}", namer.fetch_add(1, Ordering::Relaxed))
+                    });
                     // Extension is analytic (no simulator dispatch), but
                     // scope the engine anyway: a future value-dependent
                     // extension path must not silently fall back to the
@@ -352,6 +441,7 @@ where
     }
 
     // -- fan-out: clone unique results back onto the original order ------
+    let _fanout_span = crate::obs::span("sched/fanout");
     jobs.into_iter()
         .zip(slot_of)
         .map(|(job, slot)| SweepResult {

@@ -285,6 +285,7 @@ impl Session {
     /// load — falls back to one full write.
     pub fn save_store(&self) -> Option<std::io::Result<usize>> {
         self.store_path.as_ref().map(|p| {
+            let _span = crate::obs::span("session/save_store");
             let mut disk = self.store_disk.lock().unwrap();
             store::append_update(p, &self.cache, &mut disk)
         })
@@ -310,6 +311,7 @@ impl Session {
     /// Run a job list through the dedup → group → shard → fan-out engine
     /// against the session cache; results keep submission order.
     pub fn sweep(&self, jobs: Vec<SweepJob>) -> Vec<SweepResult> {
+        let _span = crate::obs::span1("session/sweep", "jobs", jobs.len() as u64);
         run_sweep_with(
             |flow| self.arch_for(flow),
             &self.params,
@@ -332,6 +334,7 @@ impl Session {
         flow: Dataflow,
         batch: usize,
     ) -> Result<LayerCost, String> {
+        let _span = crate::obs::span1("session/layer_cost", "batch", batch as u64);
         self.sweep(vec![SweepJob {
             layer: layer.clone(),
             pass,
@@ -346,12 +349,14 @@ impl Session {
     /// Table 6 row: end-to-end CNN training estimate for `net`,
     /// normalized to the TPU dataflow.
     pub fn network_e2e(&self, net: &str, batch: usize) -> E2eResult {
+        let _span = crate::obs::span1("session/network_e2e", "batch", batch as u64);
         e2e::network_e2e(self, net, batch)
     }
 
     /// Table 8 row: end-to-end GAN training estimate for `net`,
     /// normalized to the TPU dataflow.
     pub fn gan_e2e(&self, net: &str, batch: usize) -> E2eResult {
+        let _span = crate::obs::span1("session/gan_e2e", "batch", batch as u64);
         e2e::gan_e2e(self, net, batch)
     }
 

@@ -190,6 +190,7 @@ pub fn load_into(path: &Path, cache: &CostCache) -> LoadOutcome {
 /// disk — the seed for [`append_update`]'s append guard. The state is
 /// empty unless the outcome is `Loaded`.
 pub fn load_tracked(path: &Path, cache: &CostCache) -> (LoadOutcome, DiskState) {
+    let _span = crate::obs::span("store/load");
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
@@ -295,6 +296,7 @@ pub fn save(path: &Path, cache: &CostCache) -> std::io::Result<usize> {
 /// Rewrite the whole store atomically; returns the resulting
 /// [`DiskState`] so appending saves can continue from it.
 fn write_full(path: &Path, entries: &[(CostKey, LayerCost)]) -> std::io::Result<DiskState> {
+    let _span = crate::obs::span1("store/rewrite", "entries", entries.len() as u64);
     let mut text = header(entries.len());
     for (key, cost) in entries {
         text.push_str(&entry_line(key, cost));
@@ -324,10 +326,12 @@ pub fn append_update(
     cache: &CostCache,
     state: &mut DiskState,
 ) -> std::io::Result<usize> {
+    let _span = crate::obs::span("store/append_update");
     let entries = persistable(cache);
     if state.is_empty() {
         let n = entries.len();
         *state = write_full(path, &entries)?;
+        save_mode_counter("rewrite").inc();
         return Ok(n);
     }
     let fresh: Vec<&(CostKey, LayerCost)> = entries
@@ -339,16 +343,37 @@ pub fn append_update(
     // work verifies the file really holds what we report (and a
     // replaced/damaged file is restored by the fallback below).
     match try_append(path, &fresh, state) {
-        Ok(total) => Ok(total),
+        Ok(total) => {
+            save_mode_counter("append").inc();
+            Ok(total)
+        }
         // the file was replaced, damaged, written by another schema or
         // touched by a concurrent writer since we loaded it: fall back
         // to a wholesale rewrite of everything this cache holds
         Err(_) => {
             let n = entries.len();
             *state = write_full(path, &entries)?;
+            save_mode_counter("rewrite_guard").inc();
             Ok(n)
         }
     }
+}
+
+/// Registry series `ecoflow_store_saves_total{mode=...}` — how each
+/// [`append_update`] resolved: a true `append`, a cold/rebuilt-store
+/// `rewrite`, or a `rewrite_guard` demotion (the append guard caught a
+/// concurrent writer or damage).
+fn save_mode_counter(mode: &'static str) -> std::sync::Arc<crate::obs::Counter> {
+    let labels = match mode {
+        "append" => r#"mode="append""#,
+        "rewrite" => r#"mode="rewrite""#,
+        _ => r#"mode="rewrite_guard""#,
+    };
+    crate::obs::registry().counter(
+        "ecoflow_store_saves_total",
+        labels,
+        "Cost-store saves by resolution mode.",
+    )
 }
 
 fn try_append(
@@ -357,6 +382,7 @@ fn try_append(
     state: &mut DiskState,
 ) -> std::io::Result<usize> {
     use std::io::{Error, ErrorKind};
+    let _span = crate::obs::span1("store/append", "fresh", fresh.len() as u64);
     let guard = |msg: &str| Error::new(ErrorKind::InvalidData, msg.to_string());
     let magic = magic_line();
     let mut file = std::fs::OpenOptions::new().read(true).write(true).open(path)?;

@@ -33,6 +33,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod energy;
 pub mod model;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod service;

@@ -1,0 +1,57 @@
+//! Crate-wide observability: span tracing + the unified metrics
+//! registry.
+//!
+//! Two faces, one module:
+//!
+//! * [`trace`] — per-thread span buffers recorded at every pipeline
+//!   boundary (`Session` entry points, each scheduler stage, engine
+//!   dispatches on both fabrics, store I/O, the service request
+//!   lifecycle), exported as Chrome trace-event JSON via the CLI's
+//!   `--trace-file` flag or the service's `trace` request. Open the
+//!   file in [Perfetto](https://ui.perfetto.dev) to see where a
+//!   sweep's wall-clock goes.
+//! * [`registry`] — named atomic counters/gauges absorbing the
+//!   previously scattered statistics (cache hits, engine run counts,
+//!   batcher fuse stats, store save modes, per-kind request outcomes),
+//!   rendered as a `--stats` summary or Prometheus text exposition
+//!   (the service's `metrics` request / `GET /metrics` scrape).
+//!
+//! Both faces share the same contract: **observability never changes
+//! results** (sweep outputs are bit-identical with tracing on or off),
+//! and the disabled tracing path costs one relaxed atomic load per
+//! instrumentation point (`tests/obs.rs` pins the first property;
+//! `benches/perf_hotpath.rs` measures the second as
+//! `tracing_overhead`).
+//!
+//! # Recording spans
+//!
+//! ```
+//! {
+//!     let _span = ecoflow::obs::span1("sched/fuse", "units", 4);
+//!     // ... work measured until the guard drops ...
+//! }
+//! ```
+//!
+//! # Registering metrics
+//!
+//! ```
+//! use std::sync::{Arc, OnceLock};
+//! use ecoflow::obs::{self, Counter};
+//!
+//! fn saves_total() -> &'static Arc<Counter> {
+//!     static C: OnceLock<Arc<Counter>> = OnceLock::new();
+//!     C.get_or_init(|| {
+//!         obs::registry().counter("my_saves_total", "", "Saves completed.")
+//!     })
+//! }
+//! saves_total().inc();
+//! ```
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{registry, Counter, MetricKind, Registry};
+pub use trace::{
+    counter, lane_name, span, span1, span2, start_capture, stop_capture, trace_enabled,
+    Span,
+};

@@ -1,0 +1,257 @@
+//! The unified metrics registry: named atomic counters and gauges.
+//!
+//! Every subsystem that used to keep private statistics — the cost
+//! cache's hit/miss atomics, `sim/batch`'s engine-dispatch counts, the
+//! service batcher's fuse stats, the store writer's save modes — now
+//! interns its counters here, so one call ([`registry`]) can render the
+//! whole pipeline's state as a `--stats` summary or as Prometheus text
+//! exposition (the service's `metrics` request and its `GET /metrics`
+//! HTTP scrape path).
+//!
+//! # Hot-path contract
+//!
+//! [`Registry::counter`]/[`Registry::gauge`] take a lock and should run
+//! once per call site; callers cache the returned [`Arc<Counter>`] in a
+//! `OnceLock` (or a struct field) and pay only a relaxed `fetch_add`
+//! per event afterwards. Metric and label strings are `&'static str` by
+//! design: the registry never allocates per increment.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// A single monotonically-written atomic cell. Used for both Prometheus
+/// counters (callers only [`add`](Counter::add)) and gauges (callers
+/// may [`set`](Counter::set)); the distinction lives in the registry's
+/// [`MetricKind`], not the cell.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n` (relaxed; counters are statistical, not synchronizing).
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the value (gauge semantics).
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Prometheus metric type, emitted on the `# TYPE` line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonically increasing.
+    Counter,
+    /// Free to move both ways.
+    Gauge,
+}
+
+impl MetricKind {
+    fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// One registered series: a base name, an optional label set (the text
+/// between `{}` in exposition format, e.g. `engine="scalar"`), and the
+/// shared cell.
+struct Entry {
+    name: &'static str,
+    labels: &'static str,
+    help: &'static str,
+    kind: MetricKind,
+    value: Arc<Counter>,
+}
+
+impl Entry {
+    /// `name` or `name{labels}` — the series identity in both the
+    /// snapshot and exposition renderings.
+    fn series(&self) -> String {
+        if self.labels.is_empty() {
+            self.name.to_string()
+        } else {
+            format!("{}{{{}}}", self.name, self.labels)
+        }
+    }
+}
+
+/// The process-wide metric registry. Obtain it via [`registry`].
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+/// The process-wide [`Registry`] every subsystem interns its metrics
+/// into.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        entries: Mutex::new(Vec::new()),
+    })
+}
+
+impl Registry {
+    fn lock(&self) -> MutexGuard<'_, Vec<Entry>> {
+        self.entries
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn intern(
+        &self,
+        name: &'static str,
+        labels: &'static str,
+        help: &'static str,
+        kind: MetricKind,
+    ) -> Arc<Counter> {
+        let mut entries = self.lock();
+        if let Some(e) = entries.iter().find(|e| e.name == name && e.labels == labels) {
+            return Arc::clone(&e.value);
+        }
+        let value = Arc::new(Counter::default());
+        entries.push(Entry {
+            name,
+            labels,
+            help,
+            kind,
+            value: Arc::clone(&value),
+        });
+        value
+    }
+
+    /// Intern (or fetch) a counter series. Idempotent: the same
+    /// `(name, labels)` pair always returns the same cell, so separate
+    /// call sites share one count.
+    pub fn counter(
+        &self,
+        name: &'static str,
+        labels: &'static str,
+        help: &'static str,
+    ) -> Arc<Counter> {
+        self.intern(name, labels, help, MetricKind::Counter)
+    }
+
+    /// Intern (or fetch) a gauge series.
+    pub fn gauge(
+        &self,
+        name: &'static str,
+        labels: &'static str,
+        help: &'static str,
+    ) -> Arc<Counter> {
+        self.intern(name, labels, help, MetricKind::Gauge)
+    }
+
+    /// Every series and its current value, in registration order, keyed
+    /// `name` or `name{labels}`.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.lock()
+            .iter()
+            .map(|e| (e.series(), e.value.get()))
+            .collect()
+    }
+
+    /// Render the registry in Prometheus text exposition format:
+    /// `# HELP` / `# TYPE` once per base name (first registration
+    /// order), then one sample line per label set.
+    pub fn prometheus(&self) -> String {
+        let entries = self.lock();
+        let mut out = String::new();
+        let mut seen: Vec<&'static str> = Vec::new();
+        for e in entries.iter() {
+            if seen.contains(&e.name) {
+                continue;
+            }
+            seen.push(e.name);
+            out.push_str(&format!(
+                "# HELP {} {}\n# TYPE {} {}\n",
+                e.name,
+                e.help,
+                e.name,
+                e.kind.as_str()
+            ));
+            for s in entries.iter().filter(|s| s.name == e.name) {
+                out.push_str(&s.series());
+                out.push_str(&format!(" {}\n", s.value.get()));
+            }
+        }
+        out
+    }
+
+    /// Human-oriented `series = value` lines (the CLI `--stats`
+    /// summary), in registration order.
+    pub fn render_summary(&self) -> String {
+        let rows = self.snapshot();
+        let width = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        for (k, v) in rows {
+            out.push_str(&format!("{k:width$} = {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent_and_labels_split_series() {
+        let reg = Registry {
+            entries: Mutex::new(Vec::new()),
+        };
+        let a = reg.counter("test_runs_total", r#"engine="scalar""#, "Runs.");
+        let a2 = reg.counter("test_runs_total", r#"engine="scalar""#, "Runs.");
+        let b = reg.counter("test_runs_total", r#"engine="batched""#, "Runs.");
+        a.add(3);
+        a2.inc();
+        b.inc();
+        assert!(Arc::ptr_eq(&a, &a2));
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap,
+            vec![
+                (r#"test_runs_total{engine="scalar"}"#.to_string(), 4),
+                (r#"test_runs_total{engine="batched"}"#.to_string(), 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn prometheus_groups_help_and_type_by_base_name() {
+        let reg = Registry {
+            entries: Mutex::new(Vec::new()),
+        };
+        reg.counter("x_total", r#"k="a""#, "Xs.").add(2);
+        reg.gauge("y", "", "A level.").set(7);
+        reg.counter("x_total", r#"k="b""#, "Xs.").add(5);
+        let text = reg.prometheus();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines,
+            vec![
+                "# HELP x_total Xs.",
+                "# TYPE x_total counter",
+                r#"x_total{k="a"} 2"#,
+                r#"x_total{k="b"} 5"#,
+                "# HELP y A level.",
+                "# TYPE y gauge",
+                "y 7",
+            ]
+        );
+    }
+}

@@ -1,0 +1,311 @@
+//! Span tracing: per-thread append-only event buffers exported as
+//! Chrome trace-event JSON (the format Perfetto and `chrome://tracing`
+//! open directly).
+//!
+//! # Design
+//!
+//! * **One relaxed load when disabled.** Every recording entry point
+//!   ([`span`], [`counter`], [`lane_name`]) checks a process-wide
+//!   `AtomicBool` first and returns immediately — no allocation, no
+//!   lock, no thread-local touch. Tracing never changes results; it
+//!   only appends to side buffers.
+//! * **Per-thread lanes.** The first event a thread records creates its
+//!   *lane* — a named, numbered event buffer registered globally — so
+//!   recording contends on nothing shared. Lanes outlive their threads
+//!   (the global registry keeps them), which is what lets the scoped
+//!   sweep workers' spans survive into the export.
+//! * **Balanced by construction at export.** A capture window can open
+//!   or close while spans are in flight (a live `serve` session, a
+//!   worker mid-proxy). The exporter pair-matches begin/end events per
+//!   lane, drops orphan ends, and synthesizes ends for still-open
+//!   begins at the capture's last timestamp — so every exported trace
+//!   is balanced and per-lane monotonic, which `tests/obs.rs` pins.
+//!
+//! Span and argument names are `&'static str`: the enabled path's cost
+//! is one `Instant` read plus one `Vec` push under an uncontended
+//! per-lane mutex.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// The capture epoch: all timestamps are nanoseconds since the first
+/// one ever taken, so traces start near t=0.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    u64::try_from(epoch().elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Begin,
+    End,
+    Counter,
+}
+
+/// Up to two `(key, value)` arguments per event — enough for every
+/// pipeline annotation (job counts, fuse widths, lane occupancy)
+/// without a per-event allocation.
+type Args = [Option<(&'static str, u64)>; 2];
+
+struct Event {
+    phase: Phase,
+    name: &'static str,
+    ts_ns: u64,
+    args: Args,
+}
+
+struct Lane {
+    name: String,
+    tid: u64,
+    events: Vec<Event>,
+}
+
+fn lock_lane(lane: &Mutex<Lane>) -> MutexGuard<'_, Lane> {
+    lane.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Global lane registry: every lane ever created, in creation order.
+/// Lanes are kept after their threads die so the export sees them.
+fn lanes() -> &'static Mutex<Vec<Arc<Mutex<Lane>>>> {
+    static LANES: OnceLock<Mutex<Vec<Arc<Mutex<Lane>>>>> = OnceLock::new();
+    LANES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LANE: std::cell::OnceCell<Arc<Mutex<Lane>>> =
+        const { std::cell::OnceCell::new() };
+}
+
+fn with_lane(f: impl FnOnce(&mut Lane)) {
+    LANE.with(|cell| {
+        let lane = cell.get_or_init(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            let lane = Arc::new(Mutex::new(Lane {
+                name,
+                tid,
+                events: Vec::new(),
+            }));
+            lanes()
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .push(Arc::clone(&lane));
+            lane
+        });
+        f(&mut lock_lane(lane));
+    });
+}
+
+fn record(phase: Phase, name: &'static str, args: Args) {
+    let ts_ns = now_ns();
+    with_lane(|lane| {
+        lane.events.push(Event {
+            phase,
+            name,
+            ts_ns,
+            args,
+        });
+    });
+}
+
+/// Is a capture window open? One relaxed atomic load — this is the
+/// entire cost of every instrumentation point while tracing is off,
+/// and the gate callers use before building span arguments.
+pub fn trace_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// A RAII span: records a begin event on creation (when tracing is on)
+/// and the matching end event on drop. Hold it across the region being
+/// measured; a span created while tracing is off is inert.
+#[must_use = "the span measures until this guard drops"]
+pub struct Span {
+    live: bool,
+    name: &'static str,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.live && trace_enabled() {
+            record(Phase::End, self.name, [None, None]);
+        }
+    }
+}
+
+fn span_args(name: &'static str, args: Args) -> Span {
+    if !trace_enabled() {
+        return Span { live: false, name };
+    }
+    record(Phase::Begin, name, args);
+    Span { live: true, name }
+}
+
+/// Open a span named `name` on this thread's lane.
+pub fn span(name: &'static str) -> Span {
+    span_args(name, [None, None])
+}
+
+/// [`span`] with one `u64` argument.
+pub fn span1(name: &'static str, key: &'static str, value: u64) -> Span {
+    span_args(name, [Some((key, value)), None])
+}
+
+/// [`span`] with two `u64` arguments.
+pub fn span2(
+    name: &'static str,
+    k0: &'static str,
+    v0: u64,
+    k1: &'static str,
+    v1: u64,
+) -> Span {
+    span_args(name, [Some((k0, v0)), Some((k1, v1))])
+}
+
+/// Record one sample on a counter *track* (Chrome `ph:"C"`): a named
+/// time series rendered as a filled graph in Perfetto. Used for the
+/// cache hit-rate, fuse widths and batch-lane occupancy tracks.
+pub fn counter(name: &'static str, key: &'static str, value: u64) {
+    if !trace_enabled() {
+        return;
+    }
+    record(Phase::Counter, name, [Some((key, value)), None]);
+}
+
+/// Name this thread's lane in the exported trace (e.g.
+/// `sweep-worker-3`). The closure is only evaluated — and the lane only
+/// created — while tracing is on, so callers can format freely.
+pub fn lane_name(name: impl FnOnce() -> String) {
+    if !trace_enabled() {
+        return;
+    }
+    let name = name();
+    with_lane(|lane| lane.name = name);
+}
+
+/// Open a capture window: clear every lane's buffer and enable
+/// recording. Safe to call at any time, including while another capture
+/// is open (it restarts the window).
+pub fn start_capture() {
+    let registry = lanes()
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    for lane in registry.iter() {
+        lock_lane(lane).events.clear();
+    }
+    drop(registry);
+    epoch(); // pin t=0 no later than the window start
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Close the capture window and export everything recorded as a Chrome
+/// trace-event JSON document. Returns `{"traceEvents":[]}` when nothing
+/// was recorded (or no window was open).
+pub fn stop_capture() -> String {
+    ENABLED.store(false, Ordering::SeqCst);
+    export()
+}
+
+/// Minimal JSON string escaping for lane/thread names (span names are
+/// `&'static str` literals we control, but thread names are not).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn push_event(
+    out: &mut String,
+    ph: char,
+    tid: u64,
+    ts_ns: u64,
+    name: &str,
+    args: &Args,
+) {
+    out.push_str(&format!(
+        "{{\"ph\":\"{ph}\",\"pid\":1,\"tid\":{tid},\"ts\":{}.{:03},\"name\":\"{}\"",
+        ts_ns / 1000,
+        ts_ns % 1000,
+        escape(name)
+    ));
+    if args.iter().any(Option::is_some) {
+        out.push_str(",\"args\":{");
+        let mut first = true;
+        for (k, v) in args.iter().flatten() {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\"{}\":{v}", escape(k)));
+        }
+        out.push('}');
+    }
+    out.push_str("},");
+}
+
+fn export() -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let registry = lanes()
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    for lane_arc in registry.iter() {
+        let lane = lock_lane(lane_arc);
+        if lane.events.is_empty() {
+            continue;
+        }
+        // thread_name metadata event: names the lane in Perfetto
+        out.push_str(&format!(
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\"args\":{{\"name\":\"{}\"}}}},",
+            lane.tid,
+            escape(&lane.name)
+        ));
+        // Pair-match begins and ends: drop ends with no open begin
+        // (their begin predates this capture window), synthesize ends
+        // for begins still open at export (span straddles the stop).
+        let mut open: Vec<&'static str> = Vec::new();
+        let mut last_ts = 0u64;
+        for ev in &lane.events {
+            last_ts = last_ts.max(ev.ts_ns);
+            match ev.phase {
+                Phase::Begin => {
+                    open.push(ev.name);
+                    push_event(&mut out, 'B', lane.tid, ev.ts_ns, ev.name, &ev.args);
+                }
+                Phase::End => {
+                    if open.pop().is_none() {
+                        continue;
+                    }
+                    push_event(&mut out, 'E', lane.tid, ev.ts_ns, ev.name, &ev.args);
+                }
+                Phase::Counter => {
+                    push_event(&mut out, 'C', lane.tid, ev.ts_ns, ev.name, &ev.args);
+                }
+            }
+        }
+        while let Some(name) = open.pop() {
+            push_event(&mut out, 'E', lane.tid, last_ts, name, &[None, None]);
+        }
+    }
+    if out.ends_with(',') {
+        out.pop();
+    }
+    out.push_str("]}");
+    out
+}

@@ -18,11 +18,13 @@
 //! solo one — so batching is purely a throughput/latency trade, and
 //! the linger window keeps the latency side bounded.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::scheduler::{SweepJob, SweepResult};
+use crate::obs;
 
 /// One submission waiting to ride the next fused sweep.
 pub struct Pending {
@@ -40,10 +42,30 @@ struct State {
     open: bool,
 }
 
+/// Counter snapshot of a [`Batcher`] — how well cross-request fusing
+/// is working. `submissions / rounds` is the mean fuse width; a value
+/// near 1.0 means clients rarely overlap and the linger window buys
+/// nothing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatcherStats {
+    /// Fused sweep rounds handed to the dispatcher.
+    pub rounds: u64,
+    /// Client submissions accepted into some round.
+    pub submissions: u64,
+    /// Total jobs across all accepted submissions.
+    pub jobs: u64,
+}
+
 /// The submission queue between connection threads and the dispatcher.
 pub struct Batcher {
     state: Mutex<State>,
     ready: Condvar,
+    rounds: AtomicU64,
+    submissions: AtomicU64,
+    jobs: AtomicU64,
+    /// Registry mirrors (`ecoflow_batcher_*_total`), interned once here
+    /// so the submit path never touches the registry lock.
+    reg: [Arc<obs::Counter>; 3],
 }
 
 impl Default for Batcher {
@@ -53,13 +75,44 @@ impl Default for Batcher {
 }
 
 impl Batcher {
+    /// A fresh, open batcher.
     pub fn new() -> Self {
+        let reg = obs::registry();
         Batcher {
             state: Mutex::new(State {
                 queue: Vec::new(),
                 open: true,
             }),
             ready: Condvar::new(),
+            rounds: AtomicU64::new(0),
+            submissions: AtomicU64::new(0),
+            jobs: AtomicU64::new(0),
+            reg: [
+                reg.counter(
+                    "ecoflow_batcher_rounds_total",
+                    "",
+                    "Fused sweep rounds dispatched by the service batcher.",
+                ),
+                reg.counter(
+                    "ecoflow_batcher_submissions_total",
+                    "",
+                    "Client submissions accepted by the service batcher.",
+                ),
+                reg.counter(
+                    "ecoflow_batcher_jobs_total",
+                    "",
+                    "Sweep jobs accepted by the service batcher.",
+                ),
+            ],
+        }
+    }
+
+    /// Fuse counters so far.
+    pub fn stats(&self) -> BatcherStats {
+        BatcherStats {
+            rounds: self.rounds.load(Ordering::Relaxed),
+            submissions: self.submissions.load(Ordering::Relaxed),
+            jobs: self.jobs.load(Ordering::Relaxed),
         }
     }
 
@@ -69,6 +122,7 @@ impl Batcher {
     /// the request should be refused.
     pub fn submit(&self, jobs: Vec<SweepJob>) -> Option<mpsc::Receiver<Vec<SweepResult>>> {
         let (tx, rx) = mpsc::channel();
+        let n_jobs = jobs.len() as u64;
         {
             let mut state = self.state.lock().unwrap();
             if !state.open {
@@ -76,6 +130,10 @@ impl Batcher {
             }
             state.queue.push(Pending { jobs, tx });
         }
+        self.submissions.fetch_add(1, Ordering::Relaxed);
+        self.jobs.fetch_add(n_jobs, Ordering::Relaxed);
+        self.reg[1].inc();
+        self.reg[2].add(n_jobs);
         self.ready.notify_all();
         Some(rx)
     }
@@ -105,6 +163,8 @@ impl Batcher {
                 .unwrap();
             state = s;
         }
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        self.reg[0].inc();
         Some(std::mem::take(&mut state.queue))
     }
 

@@ -8,6 +8,13 @@
 //! [`snapshot`](Metrics::snapshot), reported by the `stats` request
 //! type, the shutdown summary, and the `perf_service` bench alike.
 //!
+//! Outcomes are split **per kind**: each [`RequestKind`] carries its
+//! own ok/error counters (not just a global error total), surfaced in
+//! the `stats` response and mirrored into the unified
+//! [`obs::registry`](crate::obs::registry) as
+//! `ecoflow_requests_total{kind=...,outcome=...}` for the Prometheus
+//! `metrics` request.
+//!
 //! Percentiles are bucket-resolution approximations: the histogram
 //! buckets latencies by `ceil(log2(us))`, and a percentile reports its
 //! bucket's upper bound, so p99 is exact to within 2x. That is the
@@ -18,28 +25,44 @@
 //! always-on view.)
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
+
+use crate::obs;
 
 /// Request kinds the service distinguishes in its counters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RequestKind {
+    /// One `(layer, pass, flow, batch)` cost query.
     LayerCost,
+    /// A multi-job sweep.
     Sweep,
+    /// A table/figure regeneration.
     Table,
+    /// A traffic-model query.
     Traffic,
+    /// The JSON stats snapshot.
     Stats,
+    /// The Prometheus text-exposition snapshot.
+    Metrics,
+    /// Trace capture control (`start`/`stop`).
+    Trace,
+    /// Graceful shutdown.
     Shutdown,
     /// Unparseable or unknown requests (counted, never dispatched).
     Invalid,
 }
 
 impl RequestKind {
-    pub const ALL: [RequestKind; 7] = [
+    /// Every kind, in wire/stats reporting order.
+    pub const ALL: [RequestKind; 9] = [
         RequestKind::LayerCost,
         RequestKind::Sweep,
         RequestKind::Table,
         RequestKind::Traffic,
         RequestKind::Stats,
+        RequestKind::Metrics,
+        RequestKind::Trace,
         RequestKind::Shutdown,
         RequestKind::Invalid,
     ];
@@ -52,8 +75,53 @@ impl RequestKind {
             RequestKind::Table => "table",
             RequestKind::Traffic => "traffic",
             RequestKind::Stats => "stats",
+            RequestKind::Metrics => "metrics",
+            RequestKind::Trace => "trace",
             RequestKind::Shutdown => "shutdown",
             RequestKind::Invalid => "invalid",
+        }
+    }
+
+    /// Registry label sets for this kind's `(ok, err)` series — static
+    /// strings so recording never formats or allocates.
+    fn outcome_labels(self) -> (&'static str, &'static str) {
+        match self {
+            RequestKind::LayerCost => (
+                r#"kind="layer_cost",outcome="ok""#,
+                r#"kind="layer_cost",outcome="err""#,
+            ),
+            RequestKind::Sweep => (
+                r#"kind="sweep",outcome="ok""#,
+                r#"kind="sweep",outcome="err""#,
+            ),
+            RequestKind::Table => (
+                r#"kind="table",outcome="ok""#,
+                r#"kind="table",outcome="err""#,
+            ),
+            RequestKind::Traffic => (
+                r#"kind="traffic",outcome="ok""#,
+                r#"kind="traffic",outcome="err""#,
+            ),
+            RequestKind::Stats => (
+                r#"kind="stats",outcome="ok""#,
+                r#"kind="stats",outcome="err""#,
+            ),
+            RequestKind::Metrics => (
+                r#"kind="metrics",outcome="ok""#,
+                r#"kind="metrics",outcome="err""#,
+            ),
+            RequestKind::Trace => (
+                r#"kind="trace",outcome="ok""#,
+                r#"kind="trace",outcome="err""#,
+            ),
+            RequestKind::Shutdown => (
+                r#"kind="shutdown",outcome="ok""#,
+                r#"kind="shutdown",outcome="err""#,
+            ),
+            RequestKind::Invalid => (
+                r#"kind="invalid",outcome="ok""#,
+                r#"kind="invalid",outcome="err""#,
+            ),
         }
     }
 
@@ -76,22 +144,38 @@ const BUCKETS: usize = 40;
 /// concurrently and anyone may snapshot at any time.
 pub struct Metrics {
     hist: [AtomicU64; BUCKETS],
-    by_kind: [AtomicU64; RequestKind::ALL.len()],
+    ok_by_kind: [AtomicU64; RequestKind::ALL.len()],
+    err_by_kind: [AtomicU64; RequestKind::ALL.len()],
     requests: AtomicU64,
     errors: AtomicU64,
     total_us: AtomicU64,
+    /// Registry mirrors of the per-kind outcome counters, interned once
+    /// at construction so [`record`](Metrics::record) stays
+    /// allocation-free.
+    reg_ok: [Arc<obs::Counter>; RequestKind::ALL.len()],
+    reg_err: [Arc<obs::Counter>; RequestKind::ALL.len()],
 }
 
 impl Default for Metrics {
     // (not derived: std only provides array Default up to 32 elements,
     // and `hist` has 40)
     fn default() -> Self {
+        const HELP: &str = "Service requests by kind and outcome.";
         Metrics {
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
-            by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
+            ok_by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
+            err_by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             total_us: AtomicU64::new(0),
+            reg_ok: std::array::from_fn(|i| {
+                let (ok, _) = RequestKind::ALL[i].outcome_labels();
+                obs::registry().counter("ecoflow_requests_total", ok, HELP)
+            }),
+            reg_err: std::array::from_fn(|i| {
+                let (_, err) = RequestKind::ALL[i].outcome_labels();
+                obs::registry().counter("ecoflow_requests_total", err, HELP)
+            }),
         }
     }
 }
@@ -103,8 +187,8 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     /// Requests answered with `ok: false`.
     pub errors: u64,
-    /// Per-kind request counts, in [`RequestKind::ALL`] order.
-    pub by_kind: Vec<(&'static str, u64)>,
+    /// Per-kind `(name, ok, err)` counts, in [`RequestKind::ALL`] order.
+    pub by_kind: Vec<(&'static str, u64, u64)>,
     /// Mean latency in microseconds (0 when nothing was served).
     pub mean_us: u64,
     /// Median latency upper bound in microseconds.
@@ -114,6 +198,7 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Fresh zeroed metrics (registry mirrors interned immediately).
     pub fn new() -> Self {
         Self::default()
     }
@@ -121,12 +206,17 @@ impl Metrics {
     /// Record one served request.
     pub fn record(&self, kind: RequestKind, latency: Duration, ok: bool) {
         let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        let i = kind.index();
         self.hist[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
-        self.by_kind[kind.index()].fetch_add(1, Ordering::Relaxed);
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.total_us.fetch_add(us, Ordering::Relaxed);
-        if !ok {
+        if ok {
+            self.ok_by_kind[i].fetch_add(1, Ordering::Relaxed);
+            self.reg_ok[i].inc();
+        } else {
+            self.err_by_kind[i].fetch_add(1, Ordering::Relaxed);
             self.errors.fetch_add(1, Ordering::Relaxed);
+            self.reg_err[i].inc();
         }
     }
 
@@ -147,7 +237,13 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             by_kind: RequestKind::ALL
                 .iter()
-                .map(|k| (k.name(), self.by_kind[k.index()].load(Ordering::Relaxed)))
+                .map(|k| {
+                    (
+                        k.name(),
+                        self.ok_by_kind[k.index()].load(Ordering::Relaxed),
+                        self.err_by_kind[k.index()].load(Ordering::Relaxed),
+                    )
+                })
                 .collect(),
             mean_us: if total == 0 { 0 } else { total_us / total },
             p50_us: percentile(&hist, total, 0.50),
@@ -225,13 +321,35 @@ mod tests {
         assert_eq!(s.errors, 1);
         assert_eq!(s.p50_us, 1, "{s:?}");
         assert_eq!(s.p99_us, 1, "99/100 fit the first bucket");
-        let kind = |n: &str| s.by_kind.iter().find(|(k, _)| *k == n).unwrap().1;
-        assert_eq!(kind("layer_cost"), 99);
-        assert_eq!(kind("sweep"), 1);
-        assert_eq!(kind("table"), 0);
+        let kind = |n: &str| *s.by_kind.iter().find(|(k, _, _)| *k == n).unwrap();
+        assert_eq!(kind("layer_cost"), ("layer_cost", 99, 0));
+        assert_eq!(kind("sweep"), ("sweep", 0, 1), "errors split per kind");
+        assert_eq!(kind("table"), ("table", 0, 0));
         // the slow outlier dominates the mean but not the median
         assert!(s.mean_us >= 9, "{s:?}");
         assert!(s.render_line().contains("100 requests"));
+    }
+
+    #[test]
+    fn per_kind_outcome_counters_are_mirrored_to_the_registry() {
+        // The registry series aggregate across Metrics instances, so
+        // assert on the delta this instance contributes.
+        let before: u64 = obs::registry()
+            .snapshot()
+            .into_iter()
+            .filter(|(k, _)| k.starts_with("ecoflow_requests_total"))
+            .map(|(_, v)| v)
+            .sum();
+        let m = Metrics::new();
+        m.record(RequestKind::Trace, Duration::from_micros(3), true);
+        m.record(RequestKind::Metrics, Duration::from_micros(3), false);
+        let after: u64 = obs::registry()
+            .snapshot()
+            .into_iter()
+            .filter(|(k, _)| k.starts_with("ecoflow_requests_total"))
+            .map(|(_, v)| v)
+            .sum();
+        assert_eq!(after - before, 2);
     }
 
     #[test]

@@ -37,6 +37,18 @@
 //! [`ServiceHandle::shutdown`]) only raises a flag — every in-flight
 //! request still gets its response, queued sweep jobs still run, and
 //! the store is flushed before the last thread exits.
+//!
+//! # Observability
+//!
+//! Beyond the JSON `stats` request, the service exposes the unified
+//! [`obs`](crate::obs) layer two ways: a `metrics` request returns the
+//! [`obs::registry`](crate::obs::registry) in Prometheus text
+//! exposition (and a raw HTTP `GET /metrics` on the same port is
+//! answered for real scrapers), and a `trace` request opens/closes a
+//! Chrome-trace capture window over the live pipeline
+//! (`{"type":"trace","action":"start"}` … `{"action":"stop"}` returns
+//! the trace JSON). Request handling itself is spanned
+//! (`svc/parse` → `svc/queue` → `svc/round` → `svc/reply`).
 
 pub mod batcher;
 pub mod json;
@@ -52,9 +64,10 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::scheduler::{SweepJob, SweepResult};
 use crate::coordinator::{CacheStats, Session};
+use crate::obs;
 use crate::sim::batch::SimEngine;
 
-use batcher::Batcher;
+use batcher::{Batcher, BatcherStats};
 use json::Json;
 use metrics::{Metrics, MetricsSnapshot};
 use protocol::Request;
@@ -86,6 +99,8 @@ pub struct ServiceReport {
     pub metrics: MetricsSnapshot,
     /// The session cache's final counters.
     pub cache: CacheStats,
+    /// Cross-request fuse counters from the [`Batcher`].
+    pub batcher: BatcherStats,
     /// Successful store saves by the writer thread (0 when the session
     /// has no store configured).
     pub store_saves: u64,
@@ -95,10 +110,13 @@ impl ServiceReport {
     /// Multi-line human summary (the CLI prints this on exit).
     pub fn render(&self) -> String {
         format!(
-            "sweep service: {}\nsweep service: {} (store saves: {})",
+            "sweep service: {}\nsweep service: {} (store saves: {})\nsweep service: {} submissions ({} jobs) fused into {} sweep rounds",
             self.metrics.render_line(),
             self.cache.render_line(),
             self.store_saves,
+            self.batcher.submissions,
+            self.batcher.jobs,
+            self.batcher.rounds,
         )
     }
 }
@@ -193,6 +211,7 @@ pub fn spawn(session: Session, config: ServiceConfig) -> io::Result<ServiceHandl
             ServiceReport {
                 metrics: shared.metrics.snapshot(),
                 cache: shared.session.cache_stats(),
+                batcher: shared.batcher.stats(),
                 store_saves: shared.store_saves.load(Ordering::Relaxed),
             }
         })
@@ -247,6 +266,16 @@ fn connection_loop(shared: &Arc<Shared>, mut stream: TcpStream) {
             Ok(0) => break, // client hung up
             Ok(n) => {
                 buf.extend_from_slice(&chunk[..n]);
+                // a Prometheus scraper speaks HTTP, not JSON lines:
+                // answer `GET /metrics` with one text-exposition
+                // response and close (Connection: close is promised)
+                if buf.starts_with(b"GET ") {
+                    if http_request_complete(&buf) {
+                        handle_http_scrape(shared, &mut stream, &buf);
+                        break;
+                    }
+                    continue; // headers still arriving
+                }
                 // answer every complete line before reading more —
                 // lines already buffered when a shutdown lands still
                 // get their responses
@@ -258,11 +287,14 @@ fn connection_loop(shared: &Arc<Shared>, mut stream: TcpStream) {
                         continue;
                     }
                     let reply = handle_line(shared, line);
-                    if stream
-                        .write_all(reply.as_bytes())
-                        .and_then(|()| stream.write_all(b"\n"))
-                        .is_err()
-                    {
+                    let wrote = {
+                        let _reply_span =
+                            obs::span1("svc/reply", "bytes", reply.len() as u64);
+                        stream
+                            .write_all(reply.as_bytes())
+                            .and_then(|()| stream.write_all(b"\n"))
+                    };
+                    if wrote.is_err() {
                         break 'conn;
                     }
                 }
@@ -282,13 +314,56 @@ fn connection_loop(shared: &Arc<Shared>, mut stream: TcpStream) {
     }
 }
 
+/// Has a buffered HTTP request received its full header block yet?
+fn http_request_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+}
+
+/// Answer one HTTP request on the JSON-lines port: `GET /metrics`
+/// serves the registry in Prometheus text exposition, anything else is
+/// a 404. Either way the connection closes after the response, which
+/// is the scrape model Prometheus expects.
+fn handle_http_scrape(shared: &Shared, stream: &mut TcpStream, buf: &[u8]) {
+    let start = Instant::now();
+    let request_line = String::from_utf8_lossy(buf);
+    let path = request_line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or("")
+        .to_string();
+    let is_metrics = path == "/metrics" || path.starts_with("/metrics?");
+    let (status, content_type, body) = if is_metrics {
+        (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            obs::registry().prometheus(),
+        )
+    } else {
+        ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    let ok = stream.write_all(response.as_bytes()).is_ok() && is_metrics;
+    shared
+        .metrics
+        .record(metrics::RequestKind::Metrics, start.elapsed(), ok);
+}
+
 /// Parse, dispatch and time one request line; returns the response
 /// line (without trailing newline).
 fn handle_line(shared: &Shared, line: &str) -> String {
     let start = Instant::now();
-    let envelope = protocol::parse_line(line);
+    let envelope = {
+        let _parse_span = obs::span("svc/parse");
+        protocol::parse_line(line)
+    };
     let (reply, ok) = match envelope.request {
-        Ok(request) => dispatch(shared, &envelope.id, request),
+        Ok(request) => {
+            let _dispatch_span = obs::span("svc/dispatch");
+            dispatch(shared, &envelope.id, request)
+        }
         Err(e) => (protocol::err_response(&envelope.id, &e), false),
     };
     shared.metrics.record(envelope.kind, start.elapsed(), ok);
@@ -342,6 +417,36 @@ fn dispatch(shared: &Shared, id: &Json, request: Request) -> (String, bool) {
             )
         }
         Request::Stats => (protocol::ok_response(id, stats_fields(shared)), true),
+        Request::Metrics => (
+            protocol::ok_response(
+                id,
+                vec![(
+                    "metrics".to_string(),
+                    Json::Str(obs::registry().prometheus()),
+                )],
+            ),
+            true,
+        ),
+        Request::Trace { start } => {
+            if start {
+                obs::start_capture();
+                (
+                    protocol::ok_response(
+                        id,
+                        vec![("tracing".to_string(), Json::Bool(true))],
+                    ),
+                    true,
+                )
+            } else {
+                // the capture document rides inside the response as one
+                // (escaped) JSON string — clients unescape and save it
+                let doc = obs::stop_capture();
+                (
+                    protocol::ok_response(id, vec![("trace".to_string(), Json::Str(doc))]),
+                    true,
+                )
+            }
+        }
         Request::Shutdown => {
             // reply first (the caller still gets its line), then raise
             // the flag; the supervisor takes it from there
@@ -358,6 +463,7 @@ fn dispatch(shared: &Shared, id: &Json, request: Request) -> (String, bool) {
 /// Hand jobs to the dispatcher and wait for this submission's slice of
 /// the fused sweep.
 fn submit(shared: &Shared, jobs: Vec<SweepJob>) -> Result<Vec<SweepResult>, String> {
+    let _queue_span = obs::span1("svc/queue", "jobs", jobs.len() as u64);
     let rx = shared
         .batcher
         .submit(jobs)
@@ -370,12 +476,25 @@ fn submit(shared: &Shared, jobs: Vec<SweepJob>) -> Result<Vec<SweepResult>, Stri
 fn stats_fields(shared: &Shared) -> Vec<(String, Json)> {
     let m = shared.metrics.snapshot();
     let c = shared.session.cache_stats();
+    let b = shared.batcher.stats();
     let num = |v: u64| Json::Num(v as f64);
     let engine = match shared.session.engine() {
         SimEngine::Auto => "auto",
         SimEngine::Scalar => "scalar",
         SimEngine::Batched => "batched",
     };
+    // the store writer's append/rewrite split lives in the process-wide
+    // registry (the store layer records it at each save); surface the
+    // per-mode series here next to this service's own save count
+    let save_modes: Vec<(String, Json)> = obs::registry()
+        .snapshot()
+        .into_iter()
+        .filter_map(|(series, v)| {
+            let rest = series.strip_prefix("ecoflow_store_saves_total{mode=\"")?;
+            let mode = rest.strip_suffix("\"}")?;
+            Some((mode.to_string(), num(v)))
+        })
+        .collect();
     vec![
         ("requests".to_string(), num(m.requests)),
         ("errors".to_string(), num(m.errors)),
@@ -387,7 +506,15 @@ fn stats_fields(shared: &Shared) -> Vec<(String, Json)> {
             Json::Obj(
                 m.by_kind
                     .iter()
-                    .map(|(k, v)| (k.to_string(), num(*v)))
+                    .map(|(k, ok, err)| {
+                        (
+                            k.to_string(),
+                            Json::Obj(vec![
+                                ("ok".to_string(), num(*ok)),
+                                ("err".to_string(), num(*err)),
+                            ]),
+                        )
+                    })
                     .collect(),
             ),
         ),
@@ -401,6 +528,14 @@ fn stats_fields(shared: &Shared) -> Vec<(String, Json)> {
             ]),
         ),
         (
+            "batcher".to_string(),
+            Json::Obj(vec![
+                ("rounds".to_string(), num(b.rounds)),
+                ("submissions".to_string(), num(b.submissions)),
+                ("jobs".to_string(), num(b.jobs)),
+            ]),
+        ),
+        (
             "threads".to_string(),
             Json::Num(shared.session.threads() as f64),
         ),
@@ -409,17 +544,26 @@ fn stats_fields(shared: &Shared) -> Vec<(String, Json)> {
             "store_saves".to_string(),
             num(shared.store_saves.load(Ordering::Relaxed)),
         ),
+        ("store_save_modes".to_string(), Json::Obj(save_modes)),
     ]
 }
 
 /// Fuse and run submission batches until the batcher closes.
 fn dispatcher_loop(shared: &Shared, linger: Duration, writer_tx: &mpsc::Sender<WriterMsg>) {
     while let Some(pendings) = shared.batcher.next_batch(linger) {
+        obs::lane_name(|| "dispatcher".to_string());
         let counts: Vec<usize> = pendings.iter().map(|p| p.jobs.len()).collect();
         let all: Vec<SweepJob> = pendings
             .iter()
             .flat_map(|p| p.jobs.iter().cloned())
             .collect();
+        let _round_span = obs::span2(
+            "svc/round",
+            "submissions",
+            counts.len() as u64,
+            "jobs",
+            all.len() as u64,
+        );
         // ONE sweep for the whole round: the scheduler dedups repeats
         // across submissions and fuses same-geometry jobs into shared
         // batched simulations; results keep submission order
@@ -466,6 +610,8 @@ fn writer_loop(shared: &Shared, rx: &mpsc::Receiver<WriterMsg>) {
 }
 
 fn save_store(shared: &Shared) {
+    obs::lane_name(|| "store-writer".to_string());
+    let _save_span = obs::span("svc/save");
     if let Some(result) = shared.session.save_store() {
         match result {
             Ok(_) => {
@@ -521,6 +667,63 @@ mod tests {
         assert_eq!(report.metrics.requests, 3);
         assert_eq!(report.metrics.errors, 1);
         assert!(report.render().contains("3 requests"));
+    }
+
+    #[test]
+    fn serves_prometheus_metrics_and_trace_captures() {
+        let session = Session::builder().threads(1).build();
+        let handle = spawn(
+            session,
+            ServiceConfig {
+                addr: "127.0.0.1:0".to_string(),
+                linger: Duration::ZERO,
+            },
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+
+        let m = request(&mut stream, r#"{"id":1,"type":"metrics"}"#);
+        assert_eq!(m.get("ok").and_then(Json::as_bool), Some(true));
+        let text = m.get("metrics").and_then(Json::as_str).unwrap();
+        assert!(
+            text.contains("# TYPE ecoflow_requests_total counter"),
+            "exposition must carry the request counter family:\n{text}"
+        );
+
+        let t = request(&mut stream, r#"{"id":2,"type":"trace","action":"start"}"#);
+        assert_eq!(t.get("ok").and_then(Json::as_bool), Some(true));
+        let t = request(&mut stream, r#"{"id":3,"type":"trace","action":"stop"}"#);
+        assert_eq!(t.get("ok").and_then(Json::as_bool), Some(true));
+        let doc = t.get("trace").and_then(Json::as_str).unwrap();
+        assert!(
+            doc.starts_with(r#"{"traceEvents":["#),
+            "trace field must hold a Chrome trace document: {doc}"
+        );
+
+        // a raw Prometheus scrape over HTTP on the same port
+        let mut http = TcpStream::connect(handle.addr()).unwrap();
+        http.write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n")
+            .unwrap();
+        let mut body = String::new();
+        http.read_to_string(&mut body).unwrap();
+        assert!(body.starts_with("HTTP/1.1 200 OK"), "{body}");
+        assert!(body.contains("ecoflow_requests_total"), "{body}");
+
+        // stats carries the enriched per-kind / batcher / store objects
+        let stats = request(&mut stream, r#"{"id":4,"type":"stats"}"#);
+        let by_kind = stats.get("by_kind").unwrap();
+        let metrics_kind = by_kind.get("metrics").unwrap();
+        // one JSON metrics request + one HTTP scrape, both counted
+        assert_eq!(metrics_kind.get("ok").and_then(Json::as_u64), Some(2));
+        assert_eq!(metrics_kind.get("err").and_then(Json::as_u64), Some(0));
+        assert!(stats.get("batcher").is_some());
+        assert!(stats.get("store_save_modes").is_some());
+
+        assert!(request(&mut stream, r#"{"id":5,"type":"shutdown"}"#)
+            .get("ok")
+            .and_then(Json::as_bool)
+            .unwrap());
+        handle.join();
     }
 
     #[test]

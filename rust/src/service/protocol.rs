@@ -12,7 +12,10 @@
 //! {"id":4,"type":"table","target":"table6"}
 //! {"id":5,"type":"traffic"}
 //! {"id":6,"type":"stats"}
-//! {"id":7,"type":"shutdown"}
+//! {"id":7,"type":"metrics"}
+//! {"id":8,"type":"trace","action":"start"}
+//! {"id":9,"type":"trace","action":"stop"}
+//! {"id":10,"type":"shutdown"}
 //! ```
 //!
 //! Responses are `{"id":...,"ok":true,...}` or
@@ -110,8 +113,17 @@ pub enum Request {
     Sweep(Vec<SweepJob>),
     /// Regenerate a table/figure; the response carries the rows.
     Report(ReportTarget),
-    /// Service counters + latency percentiles + cache stats.
+    /// Service counters + latency percentiles + cache/batcher/store
+    /// stats.
     Stats,
+    /// The unified metric registry in Prometheus text exposition format.
+    Metrics,
+    /// Trace capture control: `true` opens a capture window, `false`
+    /// closes it and returns the Chrome trace-event JSON.
+    Trace {
+        /// `{"action":"start"}` → true, `{"action":"stop"}` → false.
+        start: bool,
+    },
     /// Graceful shutdown: drain in-flight work, flush the store.
     Shutdown,
 }
@@ -147,6 +159,8 @@ pub fn parse_line(line: &str) -> Envelope {
             Ok(Request::Report(ReportTarget::Table(TableId::Traffic))),
         ),
         Some("stats") => (RequestKind::Stats, Ok(Request::Stats)),
+        Some("metrics") => (RequestKind::Metrics, Ok(Request::Metrics)),
+        Some("trace") => (RequestKind::Trace, parse_trace(&doc)),
         Some("shutdown") => (RequestKind::Shutdown, Ok(Request::Shutdown)),
         Some(other) => (
             RequestKind::Invalid,
@@ -258,6 +272,14 @@ fn parse_sweep(doc: &Json) -> Result<Vec<SweepJob>, String> {
         .enumerate()
         .map(|(i, spec)| parse_job(spec).map_err(|e| format!("job {i}: {e}")))
         .collect()
+}
+
+fn parse_trace(doc: &Json) -> Result<Request, String> {
+    match doc.get("action").and_then(Json::as_str) {
+        Some("start") => Ok(Request::Trace { start: true }),
+        Some("stop") => Ok(Request::Trace { start: false }),
+        _ => Err("trace needs an \"action\" of \"start\" or \"stop\"".to_string()),
+    }
 }
 
 fn parse_table(doc: &Json) -> Result<ReportTarget, String> {
@@ -415,6 +437,25 @@ mod tests {
             parse_line(r#"{"type":"shutdown"}"#).request.unwrap(),
             Request::Shutdown
         ));
+    }
+
+    #[test]
+    fn metrics_and_trace_parse() {
+        let env = parse_line(r#"{"type":"metrics"}"#);
+        assert_eq!(env.kind, RequestKind::Metrics);
+        assert!(matches!(env.request.unwrap(), Request::Metrics));
+        assert!(matches!(
+            parse_line(r#"{"type":"trace","action":"start"}"#).request.unwrap(),
+            Request::Trace { start: true }
+        ));
+        assert!(matches!(
+            parse_line(r#"{"type":"trace","action":"stop"}"#).request.unwrap(),
+            Request::Trace { start: false }
+        ));
+        // missing/unknown action is a parse error of kind Trace
+        let env = parse_line(r#"{"type":"trace"}"#);
+        assert_eq!(env.kind, RequestKind::Trace);
+        assert!(env.request.is_err());
     }
 
     #[test]

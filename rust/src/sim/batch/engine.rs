@@ -352,11 +352,16 @@ pub fn run_shared_program(
 ) -> Result<Vec<(Mat, PassStats)>, SimError> {
     if super::use_batched(ops.len()) {
         super::note_engine_run(true);
+        crate::obs::counter("batch_lane_occupancy", "sets", ops.len() as u64);
+        let _span =
+            crate::obs::span2("engine/shared_program", "sets", ops.len() as u64, "batched", 1);
         BatchSim::new(arch, mp).run(ops)
     } else {
         if !ops.is_empty() {
             super::note_engine_run(false);
         }
+        let _span =
+            crate::obs::span2("engine/shared_program", "sets", ops.len() as u64, "batched", 0);
         ops.iter().map(|o| ArraySim::new(arch, mp).run(o)).collect()
     }
 }

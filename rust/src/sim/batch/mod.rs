@@ -159,29 +159,54 @@ pub fn current_engine() -> SimEngine {
 }
 
 /// Scalar-engine runs completed process-wide (shared programs and
-/// lowered systolic matmuls alike).
-static SCALAR_RUNS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-/// Lane-parallel runs completed process-wide.
-static BATCHED_RUNS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+/// lowered systolic matmuls alike), interned in the unified metrics
+/// registry as `ecoflow_engine_runs_total{engine="scalar"}`.
+fn scalar_runs() -> &'static std::sync::Arc<crate::obs::Counter> {
+    static C: std::sync::OnceLock<std::sync::Arc<crate::obs::Counter>> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| {
+        crate::obs::registry().counter(
+            "ecoflow_engine_runs_total",
+            r#"engine="scalar""#,
+            "Simulation-engine dispatches by engine kind, both fabrics.",
+        )
+    })
+}
+
+/// Lane-parallel runs completed process-wide
+/// (`ecoflow_engine_runs_total{engine="batched"}`).
+fn batched_runs() -> &'static std::sync::Arc<crate::obs::Counter> {
+    static C: std::sync::OnceLock<std::sync::Arc<crate::obs::Counter>> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| {
+        crate::obs::registry().counter(
+            "ecoflow_engine_runs_total",
+            r#"engine="batched""#,
+            "Simulation-engine dispatches by engine kind, both fabrics.",
+        )
+    })
+}
 
 /// Record one engine dispatch. Both policy points (shared-program and
 /// systolic matmul) call this on every run, so the counters attribute
 /// every simulated schedule to the engine that actually executed it.
 pub(crate) fn note_engine_run(batched: bool) {
-    let ctr = if batched { &BATCHED_RUNS } else { &SCALAR_RUNS };
-    ctr.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    if batched {
+        batched_runs().inc();
+    } else {
+        scalar_runs().inc();
+    }
 }
 
-/// Process-wide `(scalar_runs, batched_runs)` dispatch counters.
+/// Process-wide `(scalar_runs, batched_runs)` dispatch counters — a
+/// view over the registry's
+/// `ecoflow_engine_runs_total{engine="scalar"|"batched"}` series.
 ///
 /// Monotonic over the process lifetime; take a delta around a region to
 /// attribute its simulations. The Session-scoping test uses this to
 /// prove two Sessions in one process really ran different engines.
 pub fn engine_run_counts() -> (u64, u64) {
-    (
-        SCALAR_RUNS.load(std::sync::atomic::Ordering::Relaxed),
-        BATCHED_RUNS.load(std::sync::atomic::Ordering::Relaxed),
-    )
+    (scalar_runs().get(), batched_runs().get())
 }
 
 /// The shared batched-vs-scalar decision: should `shared_sets` operand

@@ -261,10 +261,12 @@ pub fn systolic_matmul_policy(arch: &ArchConfig, a: &Mat, b: &Mat) -> (Mat, Pass
     match super::current_engine() {
         super::SimEngine::Scalar => {
             super::note_engine_run(false);
+            let _span = crate::obs::span1("engine/systolic_matmul", "batched", 0);
             return systolic_matmul(arch, a, b);
         }
         super::SimEngine::Batched => {
             super::note_engine_run(true);
+            let _span = crate::obs::span1("engine/systolic_matmul", "batched", 1);
             return BatchSystolicSim::new(arch).matmul(a, b);
         }
         super::SimEngine::Auto => {}
@@ -282,12 +284,25 @@ pub fn systolic_matmul_policy(arch: &ArchConfig, a: &Mat, b: &Mat) -> (Mat, Pass
     }
     if geos.iter().any(|(_, c)| *c >= 2) {
         super::note_engine_run(true);
+        crate::obs::counter(
+            "batch_lane_occupancy",
+            "sets",
+            geos.iter().map(|(_, c)| *c).max().unwrap_or(0) as u64,
+        );
+        let _span = crate::obs::span2(
+            "engine/systolic_matmul",
+            "tiles",
+            spans.len() as u64,
+            "batched",
+            1,
+        );
         BatchSystolicSim::new(arch)
             .run_spanned(&[(a, b)], &spans)
             .pop()
             .expect("one pair in, one result out")
     } else {
         super::note_engine_run(false);
+        let _span = crate::obs::span1("engine/systolic_matmul", "batched", 0);
         systolic_matmul(arch, a, b)
     }
 }

@@ -3,6 +3,13 @@
 //! Each `cargo bench` target is a `harness = false` binary that calls
 //! [`bench_case`] / [`BenchSet`] and prints median / mean / min wall-times
 //! plus whatever paper-table rows the target reproduces.
+//!
+//! Perf targets additionally honor `--bench-out PATH`
+//! ([`bench_out_path`]): every measurement — plus any extra
+//! machine-readable lines the target computes (PE-slot rates, tracing
+//! overhead) — is written to `PATH` as one JSON array, the repo's
+//! `BENCH_*.json` trajectory files:
+//! `cargo bench --bench perf_hotpath -- --bench-out BENCH_hotpath.json`.
 
 use std::time::{Duration, Instant};
 
@@ -21,6 +28,32 @@ impl Measurement {
     pub fn median_ns(&self) -> f64 {
         self.median.as_nanos() as f64
     }
+
+    /// One JSON object for the `--bench-out` trajectory file. Names are
+    /// bench-author-controlled identifiers (no quoting needed).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"bench\":\"{}\",\"iters\":{},\"median_ns\":{},\"mean_ns\":{},\"min_ns\":{}}}",
+            self.name,
+            self.iters,
+            self.median.as_nanos(),
+            self.mean.as_nanos(),
+            self.min.as_nanos(),
+        )
+    }
+}
+
+/// The `--bench-out PATH` argument, if present. Cargo forwards its own
+/// flags (e.g. `--bench`) to `harness = false` binaries, so this scans
+/// the argument list instead of strictly parsing it.
+pub fn bench_out_path() -> Option<std::path::PathBuf> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--bench-out" {
+            return args.next().map(std::path::PathBuf::from);
+        }
+    }
+    None
 }
 
 /// Time `f` adaptively: warm up, then run enough iterations to cover
@@ -84,6 +117,17 @@ impl BenchSet {
         };
         Some(t(other)? / t(base)?)
     }
+
+    /// Write every measurement, plus `extras` (pre-rendered JSON
+    /// objects), to `path` as one JSON array.
+    pub fn write_json(&self, path: &std::path::Path, extras: &[String]) -> std::io::Result<()> {
+        let mut rows: Vec<String> = self.measurements.iter().map(Measurement::to_json).collect();
+        rows.extend_from_slice(extras);
+        let doc = format!("[\n  {}\n]\n", rows.join(",\n  "));
+        std::fs::write(path, doc)?;
+        println!("bench-out: wrote {} records to {}", rows.len(), path.display());
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +141,28 @@ mod tests {
         });
         assert!(m.iters >= 1);
         assert!(m.min <= m.median);
+    }
+
+    #[test]
+    fn bench_out_json_is_parseable() {
+        let mut set = BenchSet::new();
+        set.run("tiny/case", 1, || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        let path = std::env::temp_dir()
+            .join(format!("ecoflow-bench-out-{}.json", std::process::id()));
+        set.write_json(&path, &["{\"bench\":\"extra\",\"x\":1}".to_string()])
+            .unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let v = crate::service::json::Json::parse(&doc).unwrap();
+        let arr = v.as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(
+            arr[0].get("bench").and_then(crate::service::json::Json::as_str),
+            Some("tiny/case")
+        );
+        assert!(arr[0].get("median_ns").is_some());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

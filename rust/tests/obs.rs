@@ -1,0 +1,227 @@
+//! Integration tests for the observability layer over the real
+//! pipeline: a traced sweep must export a balanced, per-lane-monotonic
+//! Chrome trace that covers every scheduler stage, and tracing must be
+//! a pure observer — results byte-identical with the capture window
+//! open or closed.
+//!
+//! Tracing state (the capture window, the lane registry) is
+//! process-global, so every test that opens a window serializes on
+//! [`capture_lock`].
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use ecoflow::compiler::Dataflow;
+use ecoflow::coordinator::scheduler::{arch_for, SweepJob};
+use ecoflow::coordinator::{store, Session};
+use ecoflow::energy::{DramModel, EnergyParams};
+use ecoflow::model::{ConvLayer, TrainingPass};
+use ecoflow::obs;
+use ecoflow::service::json::Json;
+
+fn capture_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// A small but real job set: a tiny layer through two flows and two
+/// passes, so the sweep exercises dedup, grouping, both engine entry
+/// points (EcoFlow's shared-program arrays and the TPU's systolic
+/// fabric) and member extension.
+fn small_jobs() -> Vec<SweepJob> {
+    let layer = ConvLayer::conv("ObsNet", "CONV1", 8, 9, 4, 3, 8, 2);
+    let mut jobs = Vec::new();
+    for flow in [Dataflow::EcoFlow, Dataflow::Tpu] {
+        for pass in [TrainingPass::Forward, TrainingPass::InputGrad] {
+            jobs.push(SweepJob {
+                layer: layer.clone(),
+                pass,
+                flow,
+                batch: 2,
+            });
+        }
+    }
+    // a duplicate, so the dedup stage has something to collapse
+    jobs.push(jobs[0].clone());
+    jobs
+}
+
+/// One parsed trace event. `ts` is `None` for metadata (`M`) events,
+/// which carry no timestamp.
+struct Ev {
+    ph: String,
+    tid: u64,
+    ts: Option<f64>,
+    name: String,
+}
+
+fn parse_trace(doc: &str) -> Vec<Ev> {
+    let v = Json::parse(doc).expect("trace must be valid JSON");
+    v.get("traceEvents")
+        .and_then(Json::as_array)
+        .expect("traceEvents array")
+        .iter()
+        .map(|e| Ev {
+            ph: e.get("ph").and_then(Json::as_str).unwrap().to_string(),
+            tid: e.get("tid").and_then(Json::as_u64).unwrap(),
+            ts: e.get("ts").and_then(Json::as_f64),
+            name: e.get("name").and_then(Json::as_str).unwrap().to_string(),
+        })
+        .collect()
+}
+
+#[test]
+fn traced_sweep_exports_balanced_monotonic_spans_for_every_stage() {
+    let _guard = capture_lock();
+    let session = Session::builder().threads(2).build();
+    obs::start_capture();
+    let results = session.sweep(small_jobs());
+    let doc = obs::stop_capture();
+    assert!(results.iter().all(|r| r.cost.is_ok()));
+
+    let events = parse_trace(&doc);
+    assert!(!events.is_empty(), "a traced sweep must record events");
+
+    // per-lane invariants: strictly stack-balanced B/E pairs with
+    // matching names, timestamps non-decreasing in record order
+    let tids: std::collections::BTreeSet<u64> =
+        events.iter().map(|e| e.tid).collect();
+    for tid in tids {
+        let mut stack: Vec<&str> = Vec::new();
+        let mut last_ts = 0.0f64;
+        for e in events.iter().filter(|e| e.tid == tid) {
+            if e.ph == "M" {
+                continue; // metadata carries no timestamp ordering
+            }
+            let ts = e.ts.expect("timed events carry a ts");
+            assert!(ts >= last_ts, "lane {tid}: ts went backwards");
+            last_ts = ts;
+            match e.ph.as_str() {
+                "B" => stack.push(&e.name),
+                "E" => {
+                    let open = stack.pop().unwrap_or_else(|| {
+                        panic!("lane {tid}: end {:?} with no open span", e.name)
+                    });
+                    assert_eq!(open, e.name, "lane {tid}: mismatched nesting");
+                }
+                "C" => {}
+                other => panic!("unexpected phase {other:?}"),
+            }
+        }
+        assert!(
+            stack.is_empty(),
+            "lane {tid}: spans left open at export: {stack:?}"
+        );
+    }
+
+    // coverage: the session boundary, every scheduler stage, and at
+    // least one engine dispatch must be on the trace
+    let names: std::collections::BTreeSet<&str> = events
+        .iter()
+        .filter(|e| e.ph == "B")
+        .map(|e| e.name.as_str())
+        .collect();
+    for stage in [
+        "session/sweep",
+        "sched/sweep",
+        "sched/key",
+        "sched/dedup",
+        "sched/resolve",
+        "sched/group",
+        "sched/fuse",
+        "sched/proxies",
+        "sched/proxy_unit",
+        "sched/extend",
+        "sched/fanout",
+    ] {
+        assert!(names.contains(stage), "missing stage span {stage}: {names:?}");
+    }
+    assert!(
+        names.contains("engine/shared_program")
+            || names.contains("engine/systolic_matmul"),
+        "no engine span recorded: {names:?}"
+    );
+
+    // worker lanes are named via thread_name metadata
+    let lane_names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.ph == "M")
+        .map(|e| e.name.as_str())
+        .collect();
+    assert!(
+        lane_names.contains(&"thread_name"),
+        "lane naming metadata missing"
+    );
+}
+
+#[test]
+fn tracing_is_a_pure_observer_of_store_lines() {
+    let _guard = capture_lock();
+    let jobs = small_jobs();
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let encode_all = |results: &[ecoflow::coordinator::scheduler::SweepResult]| {
+        results
+            .iter()
+            .map(|r| {
+                let key = r.job.cost_key(&arch_for(r.job.flow), &params, &dram);
+                store::encode_line(&key, r.cost.as_ref().expect("job must succeed"))
+            })
+            .collect::<Vec<String>>()
+    };
+
+    // cold session each way, so both runs actually simulate
+    let off = encode_all(&Session::builder().threads(2).build().sweep(jobs.clone()));
+    obs::start_capture();
+    let on = encode_all(&Session::builder().threads(2).build().sweep(jobs));
+    let _ = obs::stop_capture();
+
+    assert_eq!(off, on, "tracing must never perturb results");
+}
+
+#[test]
+fn sweep_counters_land_in_the_unified_registry() {
+    // no capture window needed: registry counters record unconditionally
+    let sum_of = |prefix: &str| {
+        obs::registry()
+            .snapshot()
+            .into_iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v)
+            .sum::<u64>()
+    };
+    let jobs = small_jobs();
+    let n = jobs.len() as u64;
+    let jobs_before = sum_of("ecoflow_sched_jobs_total");
+    let runs_before = sum_of("ecoflow_engine_runs_total");
+    let lookups_before =
+        sum_of("ecoflow_cache_hits_total") + sum_of("ecoflow_cache_misses_total");
+    let results = Session::builder().threads(2).build().sweep(jobs);
+    assert!(results.iter().all(|r| r.cost.is_ok()));
+
+    assert_eq!(
+        sum_of("ecoflow_sched_jobs_total") - jobs_before,
+        n,
+        "every submitted job must be counted"
+    );
+    assert!(
+        sum_of("ecoflow_engine_runs_total") > runs_before,
+        "a cold sweep must dispatch at least one engine run"
+    );
+    assert!(
+        sum_of("ecoflow_cache_hits_total") + sum_of("ecoflow_cache_misses_total")
+            > lookups_before,
+        "cache lookups must be counted globally"
+    );
+
+    // and the exposition endpoint renders them
+    let text = obs::registry().prometheus();
+    for family in [
+        "# TYPE ecoflow_sched_jobs_total counter",
+        "# TYPE ecoflow_engine_runs_total counter",
+        "# TYPE ecoflow_cache_hits_total counter",
+    ] {
+        assert!(text.contains(family), "{family} missing from:\n{text}");
+    }
+}
