@@ -1,0 +1,89 @@
+//! Perf bench: the analytical estimator tier vs the exact engine, and
+//! the explorer's estimator-only sweep throughput.
+//!
+//! Reported metrics: the per-layer estimate-vs-exact speedup (the
+//! factor that makes thousand-point design sweeps affordable) and
+//! design points per second through `Explorer::run` on the demo space.
+
+use ecoflow::compiler::{tiling, Dataflow};
+use ecoflow::coordinator::scheduler::arch_for;
+use ecoflow::dse::{self, DesignSpace, ExploreConfig, Explorer};
+use ecoflow::energy::{DramModel, EnergyParams};
+use ecoflow::model::{zoo, TrainingPass};
+use ecoflow::util::bench::BenchSet;
+
+fn main() {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let flow = Dataflow::EcoFlow;
+    let arch = arch_for(flow);
+    let layer = zoo::table5_layers()
+        .into_iter()
+        .find(|l| l.net == "ShuffleNet")
+        .expect("ShuffleNet layer in the zoo");
+
+    let mut set = BenchSet::new();
+
+    // -- single layer: closed-form estimate vs cycle-accurate proxy ------
+    let est_m = set
+        .run("estimate_layer_cost/shufflenet_igrad", 600, || {
+            std::hint::black_box(dse::estimate_layer_cost(
+                &arch,
+                &params,
+                &dram,
+                &layer,
+                TrainingPass::InputGrad,
+                flow,
+                1,
+            ));
+        })
+        .clone();
+    let exact_m = set
+        .run("exact_layer_cost/shufflenet_igrad", 1500, || {
+            std::hint::black_box(
+                tiling::layer_cost(
+                    &arch,
+                    &params,
+                    &dram,
+                    &layer,
+                    TrainingPass::InputGrad,
+                    flow,
+                    1,
+                )
+                .unwrap(),
+            );
+        })
+        .clone();
+    let speedup = exact_m.median_ns() / est_m.median_ns().max(1e-9);
+    println!("  -> estimator is {speedup:.0}x the exact engine on this layer");
+
+    // -- the explorer: demo space, full network, estimator only ----------
+    let cfg = {
+        let mut c = ExploreConfig::new(DesignSpace::demo16());
+        c.flows = vec![flow];
+        c
+    };
+    let explorer = Explorer {
+        params,
+        dram,
+        threads: 4,
+        engine: None,
+    };
+    let bases = vec![(flow, arch.clone())];
+    let sweep_m = set
+        .run("explore_demo16/shufflenet_x3passes", 2000, || {
+            std::hint::black_box(explorer.run(&bases, &cfg).expect("demo sweep"));
+        })
+        .clone();
+    let points_per_s = cfg.space.len() as f64 / (sweep_m.median_ns() / 1e9);
+    let dse_line = format!(
+        "{{\"bench\":\"dse_estimator\",\"unit\":\"points_per_s\",\"points_per_s\":{:.1},\"est_vs_exact_speedup\":{:.1}}}",
+        points_per_s, speedup
+    );
+    println!("{dse_line}");
+
+    if let Some(path) = ecoflow::util::bench::bench_out_path() {
+        set.write_json(&path, &[dse_line])
+            .expect("bench-out write failed");
+    }
+}

@@ -12,6 +12,7 @@
 //! ecoflow validate [--artifacts DIR]             golden JAX-vs-sim check
 //! ecoflow train [--steps N] [--variant stride|pool]
 //! ecoflow sweep [--csv]                          full layer sweep
+//! ecoflow dse [--space FILE.toml] [--frontier-exact] [--out FILE]
 //! ecoflow serve [--addr HOST:PORT]               resident sweep service
 //! ecoflow version
 //! ```
@@ -115,6 +116,9 @@ pub fn usage() -> &'static str {
      \u{20}  validate [--artifacts DIR]         golden JAX-vs-simulator check\n\
      \u{20}  train [--steps N] [--variant stride|pool] [--artifacts DIR]\n\
      \u{20}  sweep [--csv] [--net N] [--layer L]   layer x dataflow sweep\n\
+     \u{20}  dse [--space FILE.toml] [--net N] [--batch B] [--flow F]\n\
+     \u{20}      [--frontier-exact] [--out FILE]   design-space exploration:\n\
+     \u{20}      estimator sweep + Pareto frontier (see README \"Estimator & DSE\")\n\
      \u{20}  serve [--addr HOST:PORT] [--linger-ms N]   resident sweep service\n\
      \u{20}        (JSON-lines over TCP; see README \"Sweep service\")\n\
      \u{20}  version\n\
@@ -569,6 +573,42 @@ pub fn run(args: &[String]) -> Result<()> {
             }
             emit(t, csv);
         }
+        "dse" => {
+            // the space: a TOML file or the built-in >=1024-point sweep
+            let mut space = match parsed.options.get("space") {
+                Some(v) if v == "true" => {
+                    return Err(anyhow!("--space requires a TOML file path"))
+                }
+                Some(v) => crate::dse::DesignSpace::from_file(std::path::Path::new(v))?,
+                None => crate::dse::DesignSpace::default_sweep(),
+            };
+            if let Some(net) = parsed.options.get("net") {
+                if net == "true" {
+                    return Err(anyhow!("--net requires a network name"));
+                }
+                space.net = net.clone();
+            }
+            space.batch = parsed.usize_or("batch", space.batch);
+            let mut cfg = crate::dse::ExploreConfig::new(space);
+            if let Some(v) = parsed.options.get("flow") {
+                let flow = parse_flow(v)
+                    .ok_or_else(|| anyhow!("unknown --flow {v} (see the flows command)"))?;
+                cfg.flows = vec![flow];
+            }
+            cfg.frontier_exact = parsed.flag("frontier-exact");
+            cfg.space.validate().map_err(|e| anyhow!(e))?;
+            let report = session.explore(&cfg).map_err(|e| anyhow!(e))?;
+            print!("{}", report.summary());
+            match parsed.options.get("out") {
+                Some(v) if v == "true" => return Err(anyhow!("--out requires a path")),
+                Some(v) => {
+                    std::fs::write(v, report.to_json())
+                        .map_err(|e| anyhow!("dse out file {v}: {e}"))?;
+                    eprintln!("dse: wrote frontier report to {v}");
+                }
+                None => {}
+            }
+        }
         other => return Err(anyhow!("unknown command {other}\n{}", usage())),
     }
     if let Some(path) = session.store_path() {
@@ -763,6 +803,47 @@ mod tests {
         assert!(err.to_string().contains("--pass"), "{err}");
         let err = run(&["cost".into(), "--flow".into(), "warp".into()]).unwrap_err();
         assert!(err.to_string().contains("--flow"), "{err}");
+    }
+
+    #[test]
+    fn dse_command_writes_a_frontier_report() {
+        let dir = std::env::temp_dir();
+        let space = dir.join(format!("ecoflow-dse-space-{}.toml", std::process::id()));
+        let out = dir.join(format!("ecoflow-dse-out-{}.json", std::process::id()));
+        std::fs::write(
+            &space,
+            "[rows]\nmin = 9\nmax = 13\nstep = 4\n\n\
+             [cols]\nmin = 11\nmax = 15\nstep = 4\n\n\
+             [gbuf_kib]\nmin = 108\n\n[rf_filter]\nmin = 224\n\n\
+             [noc_bits]\nmin = 64\n\n[word_bits]\nmin = 16\n\n\
+             [sweep]\nnet = \"ShuffleNet\"\nbatch = 1\n",
+        )
+        .unwrap();
+        run(&[
+            "dse".into(),
+            "--space".into(),
+            space.to_string_lossy().to_string(),
+            "--flow".into(),
+            "EcoFlow".into(),
+            "--out".into(),
+            out.to_string_lossy().to_string(),
+        ])
+        .unwrap();
+        let doc = std::fs::read_to_string(&out).unwrap();
+        assert!(doc.contains("\"points_per_flow\":4"), "{doc}");
+        assert!(doc.contains("\"flow\":\"EcoFlow\""), "{doc}");
+        std::fs::remove_file(&space).ok();
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn dse_command_rejects_bad_usage() {
+        let err = run(&["dse".into(), "--space".into()]).unwrap_err();
+        assert!(err.to_string().contains("--space"), "{err}");
+        let err = run(&["dse".into(), "--flow".into(), "warp".into()]).unwrap_err();
+        assert!(err.to_string().contains("--flow"), "{err}");
+        let err = run(&["dse".into(), "--net".into(), "NoSuchNet".into()]).unwrap_err();
+        assert!(err.to_string().contains("NoSuchNet"), "{err}");
     }
 
     #[test]

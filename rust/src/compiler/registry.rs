@@ -73,10 +73,17 @@ pub enum Dataflow {
     Custom(u16),
 }
 
-/// Compilers registered at runtime. `&'static` because flow handles are
-/// `Copy` and flow through every cost-model key; a leaked box or a true
-/// `static` both satisfy it.
-static CUSTOM: RwLock<Vec<&'static dyn DataflowCompiler>> = RwLock::new(Vec::new());
+/// Compilers registered at runtime, each with its optional claimed
+/// stable store code. `&'static` because flow handles are `Copy` and
+/// flow through every cost-model key; a leaked box or a true `static`
+/// both satisfy it.
+static CUSTOM: RwLock<Vec<(&'static dyn DataflowCompiler, Option<u16>)>> =
+    RwLock::new(Vec::new());
+
+/// First code of the reserved stable range custom flows may claim via
+/// [`register_stable`]. Codes below it belong to the built-ins (0–3,
+/// frozen on disk) and to process-local dynamic handles (256 + index).
+pub const STABLE_CODE_MIN: u16 = 0x8000;
 
 /// Register a dataflow compiler and get its [`Dataflow`] handle.
 ///
@@ -85,11 +92,47 @@ static CUSTOM: RwLock<Vec<&'static dyn DataflowCompiler>> = RwLock::new(Vec::new
 /// and [`Session`](crate::coordinator::Session) sweeps — with **zero**
 /// edits to any of those modules (pinned by `tests/registry_dispatch.rs`,
 /// which registers a test-only flow and runs the full pipeline on it).
+///
+/// The handle's [`code`](Dataflow::code) depends on registration order,
+/// so the persistent cost store skips its entries at save time; use
+/// [`register_stable`] to claim a cross-process code instead.
 pub fn register(compiler: &'static dyn DataflowCompiler) -> Dataflow {
+    register_impl(compiler, None).expect("dynamic registration cannot collide")
+}
+
+/// [`register`], additionally claiming `code` — a caller-owned store
+/// code in the reserved `>= STABLE_CODE_MIN` range — so the flow's
+/// entries persist across processes via `--cache-file`. Rejects codes
+/// outside the reserved range (they could collide with built-in or
+/// dynamic codes) and codes already claimed in this process.
+pub fn register_stable(
+    compiler: &'static dyn DataflowCompiler,
+    code: u16,
+) -> Result<Dataflow, String> {
+    if code < STABLE_CODE_MIN {
+        return Err(format!(
+            "stable code {code:#06x} is below the reserved range ({STABLE_CODE_MIN:#06x}..)"
+        ));
+    }
+    register_impl(compiler, Some(code))
+}
+
+fn register_impl(
+    compiler: &'static dyn DataflowCompiler,
+    stable: Option<u16>,
+) -> Result<Dataflow, String> {
     let mut table = CUSTOM.write().unwrap();
     assert!(table.len() < u16::MAX as usize, "dataflow registry full");
-    table.push(compiler);
-    Dataflow::Custom((table.len() - 1) as u16)
+    if let Some(code) = stable {
+        if let Some((prev, _)) = table.iter().find(|(_, c)| *c == Some(code)) {
+            return Err(format!(
+                "stable code {code:#06x} already claimed by flow `{}`",
+                prev.name()
+            ));
+        }
+    }
+    table.push((compiler, stable));
+    Ok(Dataflow::Custom((table.len() - 1) as u16))
 }
 
 impl Dataflow {
@@ -130,7 +173,7 @@ impl Dataflow {
                 .read()
                 .unwrap()
                 .get(i as usize)
-                .copied()
+                .map(|(c, _)| *c)
                 .unwrap_or_else(|| panic!("Dataflow::Custom({i}) was never registered")),
         }
     }
@@ -141,24 +184,39 @@ impl Dataflow {
     }
 
     /// Stable serialization code (persistent cost store, CLI listings).
-    /// Built-in codes are frozen — they are the on-disk format; custom
-    /// flows start at 256 and are only stable within one process.
+    /// Built-in codes are frozen — they are the on-disk format. Custom
+    /// flows report their claimed [`register_stable`] code when they
+    /// have one; plain [`register`]ed flows fall back to `256 + index`,
+    /// which is only stable within one process.
     pub fn code(self) -> u64 {
         match self {
             Dataflow::RowStationary => 0,
             Dataflow::Tpu => 1,
             Dataflow::EcoFlow => 2,
             Dataflow::Ganax => 3,
-            Dataflow::Custom(i) => 256 + i as u64,
+            Dataflow::Custom(i) => CUSTOM
+                .read()
+                .unwrap()
+                .get(i as usize)
+                .and_then(|(_, stable)| *stable)
+                .map_or(256 + i as u64, u64::from),
         }
     }
 
     /// Is this flow's [`code`](Dataflow::code) stable across processes?
     /// True for the built-ins (their codes are the on-disk cost-store
-    /// format); false for [`register`]ed flows, whose codes depend on
-    /// registration order — the store skips those at save time.
+    /// format) and for [`register_stable`]ed flows; false for plain
+    /// [`register`]ed flows, whose codes depend on registration order —
+    /// the store skips those at save time.
     pub fn has_stable_code(self) -> bool {
-        !matches!(self, Dataflow::Custom(_))
+        match self {
+            Dataflow::Custom(i) => CUSTOM
+                .read()
+                .unwrap()
+                .get(i as usize)
+                .is_some_and(|(_, stable)| stable.is_some()),
+            _ => true,
+        }
     }
 
     /// Inverse of [`Dataflow::code`]; `None` for unknown codes and for
@@ -169,6 +227,14 @@ impl Dataflow {
             1 => Some(Dataflow::Tpu),
             2 => Some(Dataflow::EcoFlow),
             3 => Some(Dataflow::Ganax),
+            c if c >= STABLE_CODE_MIN as u64 => u16::try_from(c).ok().and_then(|code| {
+                CUSTOM
+                    .read()
+                    .unwrap()
+                    .iter()
+                    .position(|(_, stable)| *stable == Some(code))
+                    .map(|i| Dataflow::Custom(i as u16))
+            }),
             c if c >= 256 => {
                 let i = (c - 256) as usize;
                 (i < CUSTOM.read().unwrap().len()).then_some(Dataflow::Custom(i as u16))
@@ -402,6 +468,23 @@ pub trait DataflowCompiler: Sync {
             .map(|&(proxy, nf_tile)| self.proxy_stats(arch, proxy, nf_tile))
             .collect()
     }
+
+    /// Closed-form *estimate* of [`proxy_stats`](DataflowCompiler::proxy_stats):
+    /// the same per-plane statistics, reconstructed analytically without
+    /// invoking a simulator — the entry point of the
+    /// [`dse`](crate::dse) estimator tier. The default counts the
+    /// microprogrammed-array schedule
+    /// ([`dse::estimator::microprogrammed`](crate::dse::estimator::microprogrammed)),
+    /// which matches every flow that executes through `ArraySim`
+    /// (RS / EcoFlow / GANAX and minimal external comparators built on
+    /// the same passes); the TPU overrides with the systolic wavefront's
+    /// closed form. Accuracy per (PlaneOp × Dataflow) cell is pinned by
+    /// [`dse::estimator::ceiling`](crate::dse::estimator::ceiling) in
+    /// `tests/engine_matrix.rs`.
+    fn estimate(&self, arch: &ArchConfig, proxy: PlaneOp, nf_tile: usize) -> PassStats {
+        let _ = nf_tile;
+        crate::dse::estimator::microprogrammed(arch, proxy, self.zero_free(proxy))
+    }
 }
 
 // --- built-in compilers -------------------------------------------------
@@ -511,6 +594,10 @@ impl DataflowCompiler for TpuCompiler {
         jobs: &[(PlaneOp, usize)],
     ) -> Vec<Result<PassStats, SimError>> {
         tpu::multi_proxy_fused(arch, jobs)
+    }
+
+    fn estimate(&self, arch: &ArchConfig, proxy: PlaneOp, nf_tile: usize) -> PassStats {
+        crate::dse::estimator::systolic(arch, proxy, nf_tile)
     }
 }
 
@@ -649,6 +736,60 @@ mod tests {
                 assert_eq!(plan.flow_name, c.name());
             }
         }
+    }
+
+    #[test]
+    fn stable_codes_round_trip_and_reject_collisions() {
+        struct StableDummy;
+        impl DataflowCompiler for StableDummy {
+            fn name(&self) -> &'static str {
+                "StableDummy"
+            }
+            fn default_arch(&self) -> ArchConfig {
+                ArchConfig::eyeriss()
+            }
+            fn zero_free(&self, op: PlaneOp) -> bool {
+                matches!(op, PlaneOp::Direct { .. })
+            }
+            fn execute(
+                &self,
+                arch: &ArchConfig,
+                op: PlaneOp,
+                ops: &PlaneOperands,
+            ) -> Result<(Mat, PassStats), SimError> {
+                match op {
+                    PlaneOp::Direct { s, .. } => rs::direct_pass(arch, &ops.a, &ops.b, s),
+                    PlaneOp::Transpose { s, .. } => {
+                        rs::transpose_via_padding(arch, &ops.a, &ops.b, s)
+                    }
+                    PlaneOp::Dilated { s, .. } => rs::dilated_via_padding(arch, &ops.a, &ops.b, s),
+                }
+            }
+        }
+        static FLOW: StableDummy = StableDummy;
+
+        // out-of-range codes could collide with built-in (0–3) or
+        // process-local dynamic (256+i) codes: rejected up front
+        assert!(register_stable(&FLOW, 3).is_err());
+        assert!(register_stable(&FLOW, 0x7FFF).is_err());
+
+        let f = register_stable(&FLOW, 0x8123).unwrap();
+        assert!(matches!(f, Dataflow::Custom(_)));
+        assert!(f.has_stable_code());
+        assert_eq!(f.code(), 0x8123);
+        assert_eq!(Dataflow::from_code(0x8123), Some(f));
+        assert_eq!(Dataflow::from_code(0x8124), None);
+
+        // one claimant per code per process
+        static FLOW2: StableDummy = StableDummy;
+        assert!(register_stable(&FLOW2, 0x8123).is_err());
+
+        // plain registration still yields order-dependent codes the
+        // store refuses to persist
+        let dynamic = register(&FLOW2);
+        assert!(!dynamic.has_stable_code());
+        assert!(dynamic.code() >= 256 && dynamic.code() < STABLE_CODE_MIN as u64);
+        assert_eq!(Dataflow::from_code(dynamic.code()), Some(dynamic));
     }
 
     #[test]

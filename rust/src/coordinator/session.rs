@@ -360,6 +360,35 @@ impl Session {
         e2e::gan_e2e(self, net, batch)
     }
 
+    /// Sweep an architecture design space through the analytical
+    /// estimator tier ([`crate::dse`]) and extract the per-flow
+    /// cycles × energy Pareto frontier. Thousands of candidate points
+    /// cost closed-form arithmetic only; when
+    /// [`frontier_exact`](crate::dse::ExploreConfig::frontier_exact) is
+    /// set, the handful of frontier survivors are re-run through the
+    /// exact simulator (on this session's engine and thread count) so
+    /// the report can state the estimator's real error at the points
+    /// that matter.
+    pub fn explore(
+        &self,
+        cfg: &crate::dse::ExploreConfig,
+    ) -> Result<crate::dse::ExploreReport, String> {
+        let _span = crate::obs::span1(
+            "session/explore",
+            "points",
+            (cfg.space.len() * cfg.flows.len()) as u64,
+        );
+        let bases: Vec<(Dataflow, ArchConfig)> =
+            cfg.flows.iter().map(|&f| (f, self.arch_for(f))).collect();
+        crate::dse::Explorer {
+            params: self.params,
+            dram: self.dram,
+            threads: self.threads,
+            engine: Some(self.engine),
+        }
+        .run(&bases, cfg)
+    }
+
     /// Regenerate one paper table over the session cache.
     pub fn table(&self, id: TableId) -> Table {
         id.generate(self)

@@ -1,0 +1,532 @@
+//! The design-space explorer: estimator-driven architecture sweeps
+//! with Pareto-frontier extraction and exact-engine frontier re-runs.
+//!
+//! [`Explorer::run`] fans every `(flow × DesignPoint)` task out over an
+//! atomic-cursor work-stealing loop (the scheduler's idiom; the points
+//! vary [`ArchConfig`], which the memoizing sweep scheduler deliberately
+//! holds fixed, so the explorer owns its own loop). Each task sums the
+//! closed-form [`estimate_layer_cost`](super::estimate_layer_cost) over
+//! the full network × all three training passes. Per flow, the 2-D
+//! cycles × energy Pareto frontier is the standard staircase: sort by
+//! cycles, keep strictly-improving energy. Only frontier points are
+//! ever re-run through the exact cycle-accurate engine
+//! ([`crate::cost::layer_cost`]) — that is the entire point of the
+//! estimator tier, and `tests/dse.rs` pins it via the
+//! `ecoflow_dse_{points,frontier,exact_reruns}_total` counters.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::compiler::Dataflow;
+use crate::config::ArchConfig;
+use crate::energy::{DramModel, EnergyParams};
+use crate::model::{zoo, TrainingPass};
+use crate::obs::{self, Counter};
+use crate::sim::batch::{EngineScope, SimEngine};
+
+use super::estimator::sym_rel_err;
+use super::{estimate_layer_cost, DesignPoint, DesignSpace};
+
+/// The three DSE registry counters, interned once:
+/// `ecoflow_dse_points_total`, `ecoflow_dse_frontier_total`,
+/// `ecoflow_dse_exact_reruns_total`.
+pub fn counters() -> &'static (Arc<Counter>, Arc<Counter>, Arc<Counter>) {
+    static C: OnceLock<(Arc<Counter>, Arc<Counter>, Arc<Counter>)> = OnceLock::new();
+    C.get_or_init(|| {
+        let r = obs::registry();
+        (
+            r.counter(
+                "ecoflow_dse_points_total",
+                "",
+                "Design points evaluated through the analytical estimator",
+            ),
+            r.counter(
+                "ecoflow_dse_frontier_total",
+                "",
+                "Points retained on an extracted Pareto frontier",
+            ),
+            r.counter(
+                "ecoflow_dse_exact_reruns_total",
+                "",
+                "Frontier points re-run through the exact engine",
+            ),
+        )
+    })
+}
+
+/// What to explore: the space (with its workload) plus which flows to
+/// sweep and whether to re-run the frontier exactly.
+#[derive(Clone, Debug)]
+pub struct ExploreConfig {
+    pub space: DesignSpace,
+    /// Flows to sweep (each gets its own frontier). Defaults to all
+    /// four built-ins.
+    pub flows: Vec<Dataflow>,
+    /// Re-run frontier points through the exact engine and attach
+    /// estimator-vs-exact deltas.
+    pub frontier_exact: bool,
+}
+
+impl ExploreConfig {
+    pub fn new(space: DesignSpace) -> Self {
+        Self {
+            space,
+            flows: Dataflow::ALL.to_vec(),
+            frontier_exact: false,
+        }
+    }
+}
+
+/// One Pareto-frontier point, with the exact-engine companion numbers
+/// when the run asked for them.
+#[derive(Clone, Debug)]
+pub struct FrontierPoint {
+    pub point: DesignPoint,
+    pub est_cycles: u64,
+    pub est_energy_uj: f64,
+    pub exact_cycles: Option<u64>,
+    pub exact_energy_uj: Option<f64>,
+}
+
+impl FrontierPoint {
+    /// Symmetric relative cycles error vs the exact engine, if re-run.
+    pub fn cycles_err(&self) -> Option<f64> {
+        self.exact_cycles
+            .map(|e| sym_rel_err(self.est_cycles as f64, e as f64))
+    }
+
+    /// Symmetric relative energy error vs the exact engine, if re-run.
+    pub fn energy_err(&self) -> Option<f64> {
+        self.exact_energy_uj
+            .map(|e| sym_rel_err(self.est_energy_uj, e))
+    }
+}
+
+/// One flow's frontier over the swept space.
+#[derive(Clone, Debug)]
+pub struct FlowFrontier {
+    pub flow: Dataflow,
+    /// Points evaluated for this flow (the full space).
+    pub evaluated: usize,
+    /// Frontier points in ascending-cycles order.
+    pub frontier: Vec<FrontierPoint>,
+}
+
+/// The full result of one [`Explorer::run`].
+#[derive(Clone, Debug)]
+pub struct ExploreReport {
+    pub net: String,
+    pub batch: usize,
+    /// Points per flow (the space size).
+    pub points_per_flow: usize,
+    pub frontier_exact: bool,
+    pub flows: Vec<FlowFrontier>,
+}
+
+impl ExploreReport {
+    /// Frontier points across all flows.
+    pub fn total_frontier(&self) -> usize {
+        self.flows.iter().map(|f| f.frontier.len()).sum()
+    }
+
+    /// Worst estimator-vs-exact `(cycles, energy)` symmetric error over
+    /// every re-run frontier point; `None` without `frontier_exact`.
+    pub fn max_err(&self) -> Option<(f64, f64)> {
+        let mut any = false;
+        let (mut c, mut e) = (0.0f64, 0.0f64);
+        for f in &self.flows {
+            for p in &f.frontier {
+                if let (Some(ce), Some(ee)) = (p.cycles_err(), p.energy_err()) {
+                    any = true;
+                    c = c.max(ce);
+                    e = e.max(ee);
+                }
+            }
+        }
+        any.then_some((c, e))
+    }
+
+    /// Serialize as one JSON document (the `dse --out` payload).
+    pub fn to_json(&self) -> String {
+        let mut flows = Vec::new();
+        for f in &self.flows {
+            let pts: Vec<String> = f
+                .frontier
+                .iter()
+                .map(|p| {
+                    let mut fields = vec![
+                        format!("\"point\":\"{}\"", p.point.label()),
+                        format!("\"rows\":{}", p.point.rows),
+                        format!("\"cols\":{}", p.point.cols),
+                        format!("\"gbuf_kib\":{}", p.point.gbuf_kib),
+                        format!("\"rf_filter\":{}", p.point.rf_filter),
+                        format!("\"noc_bits\":{}", p.point.noc_bits),
+                        format!("\"word_bits\":{}", p.point.word_bits),
+                        format!("\"est_cycles\":{}", p.est_cycles),
+                        format!("\"est_energy_uj\":{}", p.est_energy_uj),
+                    ];
+                    if let (Some(c), Some(e)) = (p.exact_cycles, p.exact_energy_uj) {
+                        fields.push(format!("\"exact_cycles\":{c}"));
+                        fields.push(format!("\"exact_energy_uj\":{e}"));
+                        fields.push(format!("\"cycles_err\":{}", p.cycles_err().unwrap_or(0.0)));
+                        fields.push(format!("\"energy_err\":{}", p.energy_err().unwrap_or(0.0)));
+                    }
+                    format!("{{{}}}", fields.join(","))
+                })
+                .collect();
+            flows.push(format!(
+                "{{\"flow\":\"{}\",\"evaluated\":{},\"frontier\":[{}]}}",
+                f.flow.name(),
+                f.evaluated,
+                pts.join(",")
+            ));
+        }
+        format!(
+            "{{\"net\":\"{}\",\"batch\":{},\"points_per_flow\":{},\"frontier_exact\":{},\"flows\":[{}]}}\n",
+            self.net,
+            self.batch,
+            self.points_per_flow,
+            self.frontier_exact,
+            flows.join(",")
+        )
+    }
+
+    /// Human-readable multi-line summary (the `dse` subcommand's
+    /// stdout).
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "dse: {} points/flow over {} ({} flows, batch {})\n",
+            self.points_per_flow,
+            self.net,
+            self.flows.len(),
+            self.batch
+        );
+        for f in &self.flows {
+            out.push_str(&format!(
+                "  {:<8} frontier {:>3} of {}\n",
+                f.flow.name(),
+                f.frontier.len(),
+                f.evaluated
+            ));
+            for p in &f.frontier {
+                out.push_str(&format!(
+                    "    {:<26} est {:>12} cyc {:>10.3} uJ",
+                    p.point.label(),
+                    p.est_cycles,
+                    p.est_energy_uj
+                ));
+                if let (Some(c), Some(e)) = (p.exact_cycles, p.exact_energy_uj) {
+                    out.push_str(&format!(
+                        "  exact {c:>12} cyc {e:>10.3} uJ  err {:.1}%/{:.1}%",
+                        p.cycles_err().unwrap_or(0.0) * 100.0,
+                        p.energy_err().unwrap_or(0.0) * 100.0
+                    ));
+                }
+                out.push('\n');
+            }
+        }
+        if let Some((c, e)) = self.max_err() {
+            out.push_str(&format!(
+                "  worst estimator-vs-exact error: cycles {:.2}%, energy {:.2}%\n",
+                c * 100.0,
+                e * 100.0
+            ));
+        }
+        out
+    }
+}
+
+/// The sweep driver. Holds everything a worker needs that is not in the
+/// [`ExploreConfig`]: cost-model parameters and the session's thread /
+/// engine choices.
+#[derive(Clone, Debug)]
+pub struct Explorer {
+    pub params: EnergyParams,
+    pub dram: DramModel,
+    pub threads: usize,
+    /// Engine pinned on exact-rerun workers (`None` = process default).
+    /// The estimator phase never dispatches an engine.
+    pub engine: Option<SimEngine>,
+}
+
+impl Explorer {
+    /// Sweep `cfg.space` for every `(flow, base arch)` pair: estimate
+    /// all points, extract each flow's Pareto frontier, optionally
+    /// re-run the frontier exactly. `bases[i].1` supplies the unswept
+    /// [`ArchConfig`] fields for `cfg.flows`-aligned `bases[i].0`.
+    pub fn run(
+        &self,
+        bases: &[(Dataflow, ArchConfig)],
+        cfg: &ExploreConfig,
+    ) -> Result<ExploreReport, String> {
+        cfg.space.validate()?;
+        if bases.is_empty() {
+            return Err("explore: no flows to sweep".to_string());
+        }
+        let points = cfg.space.points();
+        let n_points = points.len();
+        let tasks = bases.len() * n_points;
+        let _span = obs::span2(
+            "dse/explore",
+            "points",
+            tasks as u64,
+            "flows",
+            bases.len() as u64,
+        );
+        let layers = zoo::full_network(&cfg.space.net);
+
+        // Phase 1: estimate every (flow, point) — closed form, no
+        // simulator, no engine dispatch.
+        let results: Vec<OnceLock<(u64, f64)>> = (0..tasks).map(|_| OnceLock::new()).collect();
+        {
+            let cursor = AtomicUsize::new(0);
+            let namer = AtomicUsize::new(0);
+            let workers = self.threads.max(1).min(tasks);
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| {
+                        obs::lane_name(|| {
+                            format!("dse-worker-{}", namer.fetch_add(1, Ordering::Relaxed))
+                        });
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= tasks {
+                                break;
+                            }
+                            let (flow, base) = &bases[i / n_points];
+                            let point = &points[i % n_points];
+                            let arch = cfg.space.apply(base, point);
+                            let mut cycles: u64 = 0;
+                            let mut uj = 0.0;
+                            for rl in &layers {
+                                for pass in TrainingPass::ALL {
+                                    let c = estimate_layer_cost(
+                                        &arch,
+                                        &self.params,
+                                        &self.dram,
+                                        &rl.layer,
+                                        pass,
+                                        *flow,
+                                        cfg.space.batch,
+                                    );
+                                    cycles = cycles
+                                        .saturating_add(c.cycles.saturating_mul(rl.count as u64));
+                                    uj += c.energy.total_uj() * rl.count as f64;
+                                }
+                            }
+                            results[i].set((cycles, uj)).ok();
+                        }
+                    });
+                }
+            });
+        }
+        counters().0.add(tasks as u64);
+
+        // Phase 2: per-flow Pareto staircase (sort by cycles, keep
+        // strictly-improving energy).
+        let mut flows: Vec<FlowFrontier> = Vec::with_capacity(bases.len());
+        {
+            let _span = obs::span("dse/frontier");
+            for (fi, (flow, _)) in bases.iter().enumerate() {
+                let costs: Vec<(u64, f64)> = (0..n_points)
+                    .map(|pi| *results[fi * n_points + pi].get().expect("estimated"))
+                    .collect();
+                let frontier = pareto_indices(&costs)
+                    .into_iter()
+                    .map(|pi| FrontierPoint {
+                        point: points[pi],
+                        est_cycles: costs[pi].0,
+                        est_energy_uj: costs[pi].1,
+                        exact_cycles: None,
+                        exact_energy_uj: None,
+                    })
+                    .collect::<Vec<_>>();
+                counters().1.add(frontier.len() as u64);
+                flows.push(FlowFrontier {
+                    flow: *flow,
+                    evaluated: n_points,
+                    frontier,
+                });
+            }
+        }
+
+        // Phase 3 (optional): exact re-runs, frontier points only.
+        if cfg.frontier_exact {
+            self.rerun_frontier_exact(bases, cfg, &mut flows)?;
+        }
+
+        Ok(ExploreReport {
+            net: cfg.space.net.clone(),
+            batch: cfg.space.batch,
+            points_per_flow: n_points,
+            frontier_exact: cfg.frontier_exact,
+            flows,
+        })
+    }
+
+    /// Re-run every frontier point through the exact cycle-accurate
+    /// engine and attach the companion numbers in place.
+    fn rerun_frontier_exact(
+        &self,
+        bases: &[(Dataflow, ArchConfig)],
+        cfg: &ExploreConfig,
+        flows: &mut [FlowFrontier],
+    ) -> Result<(), String> {
+        let work: Vec<(usize, usize)> = flows
+            .iter()
+            .enumerate()
+            .flat_map(|(fi, f)| (0..f.frontier.len()).map(move |pi| (fi, pi)))
+            .collect();
+        let _span = obs::span1("dse/exact", "points", work.len() as u64);
+        let layers = zoo::full_network(&cfg.space.net);
+        let results: Vec<OnceLock<Result<(u64, f64), String>>> =
+            (0..work.len()).map(|_| OnceLock::new()).collect();
+        {
+            let flows = &*flows; // shared view for the workers
+            let cursor = AtomicUsize::new(0);
+            let namer = AtomicUsize::new(0);
+            let workers = self.threads.max(1).min(work.len().max(1));
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| {
+                        obs::lane_name(|| {
+                            format!("dse-exact-{}", namer.fetch_add(1, Ordering::Relaxed))
+                        });
+                        let _engine = self.engine.map(EngineScope::enter);
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= work.len() {
+                                break;
+                            }
+                            let (fi, pi) = work[i];
+                            let (flow, base) = &bases[fi];
+                            let point = &flows[fi].frontier[pi].point;
+                            let arch = cfg.space.apply(base, point);
+                            let out = (|| -> Result<(u64, f64), String> {
+                                let mut cycles: u64 = 0;
+                                let mut uj = 0.0;
+                                for rl in &layers {
+                                    for pass in TrainingPass::ALL {
+                                        let c = crate::cost::layer_cost(
+                                            &arch,
+                                            &self.params,
+                                            &self.dram,
+                                            &rl.layer,
+                                            pass,
+                                            *flow,
+                                            cfg.space.batch,
+                                        )
+                                        .map_err(|e| {
+                                            format!("exact re-run {}: {e}", point.label())
+                                        })?;
+                                        cycles = cycles.saturating_add(
+                                            c.cycles.saturating_mul(rl.count as u64),
+                                        );
+                                        uj += c.energy.total_uj() * rl.count as f64;
+                                    }
+                                }
+                                Ok((cycles, uj))
+                            })();
+                            results[i].set(out).ok();
+                        }
+                    });
+                }
+            });
+        }
+        counters().2.add(work.len() as u64);
+        for (i, &(fi, pi)) in work.iter().enumerate() {
+            let (cycles, uj) = results[i]
+                .get()
+                .cloned()
+                .unwrap_or_else(|| Err("exact re-run missing".to_string()))?;
+            let p = &mut flows[fi].frontier[pi];
+            p.exact_cycles = Some(cycles);
+            p.exact_energy_uj = Some(uj);
+        }
+        Ok(())
+    }
+}
+
+/// Indices of the 2-D Pareto frontier of `(cycles, energy)` costs, in
+/// ascending-cycles order: sort by cycles (energy tie-break), keep
+/// points that strictly improve energy.
+pub fn pareto_indices(costs: &[(u64, f64)]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| {
+        costs[a].0.cmp(&costs[b].0).then(
+            costs[a]
+                .1
+                .partial_cmp(&costs[b].1)
+                .unwrap_or(std::cmp::Ordering::Equal),
+        )
+    });
+    let mut best = f64::INFINITY;
+    let mut out = Vec::new();
+    for i in order {
+        if costs[i].1 < best {
+            best = costs[i].1;
+            out.push(i);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_staircase() {
+        // (cycles, energy): only strictly-improving energy survives
+        let costs = vec![
+            (10, 5.0), // frontier (fastest)
+            (12, 4.0), // frontier
+            (12, 6.0), // dominated by (10, 5.0)
+            (20, 4.0), // dominated by (12, 4.0) on cycles, equal energy
+            (30, 1.0), // frontier
+            (40, 2.0), // dominated
+        ];
+        assert_eq!(pareto_indices(&costs), vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn pareto_handles_duplicates_and_edges() {
+        assert_eq!(pareto_indices(&[]), Vec::<usize>::new());
+        assert_eq!(pareto_indices(&[(5, 1.0)]), vec![0]);
+        // exact duplicates: exactly one survives
+        assert_eq!(pareto_indices(&[(5, 1.0), (5, 1.0)]).len(), 1);
+    }
+
+    #[test]
+    fn estimator_only_explore_runs_and_reports() {
+        let ex = Explorer {
+            params: EnergyParams::default(),
+            dram: DramModel::default(),
+            threads: 4,
+            engine: None,
+        };
+        let mut cfg = ExploreConfig::new(DesignSpace::demo16());
+        cfg.flows = vec![Dataflow::EcoFlow];
+        let bases = vec![(Dataflow::EcoFlow, ArchConfig::ecoflow())];
+        let before = counters().2.get();
+        let report = ex.run(&bases, &cfg).unwrap();
+        assert_eq!(report.points_per_flow, 16);
+        assert_eq!(report.flows.len(), 1);
+        let fr = &report.flows[0].frontier;
+        assert!(!fr.is_empty() && fr.len() <= 16);
+        // frontier is sorted by cycles with strictly decreasing energy
+        for w in fr.windows(2) {
+            assert!(w[0].est_cycles <= w[1].est_cycles);
+            assert!(w[0].est_energy_uj > w[1].est_energy_uj);
+        }
+        // estimator-only: the exact engine never ran
+        assert_eq!(counters().2.get(), before);
+        assert!(report.max_err().is_none());
+        let json = report.to_json();
+        let doc = crate::service::json::Json::parse(&json).unwrap();
+        assert_eq!(
+            doc.get("net").and_then(crate::service::json::Json::as_str),
+            Some("ShuffleNet")
+        );
+    }
+}

@@ -1,0 +1,411 @@
+//! Analytical estimator tier + architecture design-space exploration.
+//!
+//! Every point of an architecture sweep used to cost a cycle-accurate
+//! proxy simulation. This subsystem replaces the simulated step with
+//! the closed-form program counts of [`estimator`] — everything
+//! downstream (tile-schedule extension, roofline timing,
+//! [`TrafficModel`](crate::cost::TrafficModel), energy) is the exact
+//! cost pipeline's own arithmetic — and drives it over a declarative
+//! [`DesignSpace`] of thousands of points ([`Explorer`]),
+//! extracting the cycles × energy Pareto frontier per dataflow and
+//! re-running *only* frontier points through the exact engine to
+//! report estimator-vs-exact deltas.
+//!
+//! Entry points: [`Session::explore`](crate::coordinator::Session::explore),
+//! the `dse` CLI subcommand (`ecoflow dse --space file.toml
+//! --frontier-exact --out dse.json`), the `explore` service request,
+//! and [`TableId::Pareto`](crate::report::TableId).
+//!
+//! # Space files
+//!
+//! A space file is plain TOML, one section per axis, each with `min` /
+//! `max` / `step` (step defaults to 1; a section with only `min` pins
+//! the axis). Missing axes keep the built-in default sweep's range.
+//! An optional `[sweep]` section sets the network and batch size:
+//!
+//! ```toml
+//! [rows]
+//! min = 8
+//! max = 16
+//! step = 4
+//!
+//! [gbuf_kib]
+//! min = 54
+//! max = 108
+//! step = 54
+//!
+//! [sweep]
+//! net = "ShuffleNet"
+//! batch = 1
+//! ```
+//!
+//! Axes: `rows`, `cols` (PE array), `gbuf_kib` (global buffer KiB),
+//! `rf_filter` (per-PE filter scratchpad words), `noc_bits` (GIN ifmap
+//! *and* GON link width), `word_bits` (operand width).
+
+pub mod estimator;
+pub mod explore;
+
+pub use explore::{ExploreConfig, ExploreReport, Explorer, FlowFrontier, FrontierPoint};
+
+use crate::compiler::tiling::PlaneOp;
+use crate::compiler::Dataflow;
+use crate::config::ArchConfig;
+use crate::cost::{self, LayerCost};
+use crate::energy::{DramModel, EnergyParams};
+use crate::model::{ConvLayer, TrainingPass};
+
+/// Estimate one `(layer, pass, flow, batch)` cost analytically: the
+/// flow's [`estimate`](crate::compiler::DataflowCompiler::estimate)
+/// reconstructs the proxy-plane [`PassStats`](crate::sim::stats::PassStats)
+/// in closed form, then the exact pipeline's own
+/// [`layer_cost_from_proxy`](crate::cost::layer_cost_from_proxy)
+/// extends it to the full layer — same tile schedule, same roofline,
+/// same traffic/energy model, no simulator invocation.
+pub fn estimate_layer_cost(
+    arch: &ArchConfig,
+    params: &EnergyParams,
+    dram: &DramModel,
+    layer: &ConvLayer,
+    pass: TrainingPass,
+    flow: Dataflow,
+    batch: usize,
+) -> LayerCost {
+    let _span = crate::obs::span("dse/estimate");
+    let proxy = PlaneOp::from_layer(layer, pass).proxy();
+    let compiler = flow.resolve();
+    let stats = compiler.estimate(arch, proxy, compiler.nf_tile(arch, layer));
+    cost::layer_cost_from_proxy(arch, params, dram, layer, pass, flow, batch, &stats)
+}
+
+/// One swept axis: the inclusive `min..=max` range walked by `step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AxisSpec {
+    pub min: usize,
+    pub max: usize,
+    pub step: usize,
+}
+
+impl AxisSpec {
+    /// An axis pinned to a single value.
+    pub fn fixed(v: usize) -> Self {
+        Self {
+            min: v,
+            max: v,
+            step: 1,
+        }
+    }
+
+    /// An inclusive stepped range.
+    pub fn range(min: usize, max: usize, step: usize) -> Self {
+        Self { min, max, step }
+    }
+
+    /// The enumerated axis values (always at least `min`).
+    pub fn values(&self) -> Vec<usize> {
+        let step = self.step.max(1);
+        let mut out = Vec::new();
+        let mut v = self.min;
+        while v <= self.max {
+            out.push(v);
+            v += step;
+        }
+        if out.is_empty() {
+            out.push(self.min);
+        }
+        out
+    }
+
+    fn validate(&self, name: &str) -> Result<(), String> {
+        if self.min == 0 {
+            return Err(format!("space axis `{name}`: min must be >= 1"));
+        }
+        if self.max < self.min {
+            return Err(format!("space axis `{name}`: max {} < min {}", self.max, self.min));
+        }
+        Ok(())
+    }
+}
+
+/// One concrete architecture point of a [`DesignSpace`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DesignPoint {
+    pub rows: usize,
+    pub cols: usize,
+    pub gbuf_kib: usize,
+    pub rf_filter: usize,
+    pub noc_bits: usize,
+    pub word_bits: usize,
+}
+
+impl DesignPoint {
+    /// Compact human-readable label, e.g. `13x15 gb108 rf224 noc64 w16`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}x{} gb{} rf{} noc{} w{}",
+            self.rows, self.cols, self.gbuf_kib, self.rf_filter, self.noc_bits, self.word_bits
+        )
+    }
+}
+
+/// The declarative architecture design space: the cartesian product of
+/// six [`AxisSpec`] ranges, plus the workload it is evaluated on.
+#[derive(Clone, Debug)]
+pub struct DesignSpace {
+    pub rows: AxisSpec,
+    pub cols: AxisSpec,
+    pub gbuf_kib: AxisSpec,
+    pub rf_filter: AxisSpec,
+    pub noc_bits: AxisSpec,
+    pub word_bits: AxisSpec,
+    /// Network from [`zoo::NETWORKS`](crate::model::zoo::NETWORKS).
+    pub net: String,
+    pub batch: usize,
+}
+
+impl Default for DesignSpace {
+    fn default() -> Self {
+        Self::default_sweep()
+    }
+}
+
+impl DesignSpace {
+    /// The built-in 1024-point sweep (4·4·4·2·4·2) around the paper's
+    /// Eyeriss/EcoFlow operating points.
+    pub fn default_sweep() -> Self {
+        Self {
+            rows: AxisSpec::range(5, 17, 4),
+            cols: AxisSpec::range(7, 19, 4),
+            gbuf_kib: AxisSpec::range(27, 108, 27),
+            rf_filter: AxisSpec::range(112, 224, 112),
+            noc_bits: AxisSpec::range(16, 64, 16),
+            word_bits: AxisSpec::range(8, 16, 8),
+            net: "ShuffleNet".to_string(),
+            batch: 1,
+        }
+    }
+
+    /// A tiny 16-point space (2·2·2·1·2·1) for smoke tests and the
+    /// [`Pareto`](crate::report::TableId) report table.
+    pub fn demo16() -> Self {
+        Self {
+            rows: AxisSpec::range(9, 13, 4),
+            cols: AxisSpec::range(11, 15, 4),
+            gbuf_kib: AxisSpec::range(54, 108, 54),
+            rf_filter: AxisSpec::fixed(224),
+            noc_bits: AxisSpec::range(32, 64, 32),
+            word_bits: AxisSpec::fixed(16),
+            net: "ShuffleNet".to_string(),
+            batch: 1,
+        }
+    }
+
+    /// Load a space file (see the module docs for the schema), starting
+    /// from [`default_sweep`](Self::default_sweep) and overriding every
+    /// axis that has a section.
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let doc = crate::config::toml::parse_file(path)?;
+        let mut space = Self::default_sweep();
+        {
+            let mut axis = |name: &str, spec: &mut AxisSpec| {
+                if let Some(v) = doc.get(name, "min").and_then(crate::config::toml::Value::as_usize) {
+                    let max = doc.usize_or(name, "max", v);
+                    let step = doc.usize_or(name, "step", 1);
+                    *spec = AxisSpec::range(v, max, step);
+                }
+            };
+            axis("rows", &mut space.rows);
+            axis("cols", &mut space.cols);
+            axis("gbuf_kib", &mut space.gbuf_kib);
+            axis("rf_filter", &mut space.rf_filter);
+            axis("noc_bits", &mut space.noc_bits);
+            axis("word_bits", &mut space.word_bits);
+        }
+        if let Some(net) = doc.get("sweep", "net").and_then(crate::config::toml::Value::as_str) {
+            space.net = net.to_string();
+        }
+        space.batch = doc.usize_or("sweep", "batch", space.batch);
+        space.validate().map_err(anyhow::Error::msg)?;
+        Ok(space)
+    }
+
+    /// Check every axis range and the workload name.
+    pub fn validate(&self) -> Result<(), String> {
+        self.rows.validate("rows")?;
+        self.cols.validate("cols")?;
+        self.gbuf_kib.validate("gbuf_kib")?;
+        self.rf_filter.validate("rf_filter")?;
+        self.noc_bits.validate("noc_bits")?;
+        self.word_bits.validate("word_bits")?;
+        for wb in self.word_bits.values() {
+            if wb % 8 != 0 {
+                return Err(format!("word_bits {wb} is not a whole number of bytes"));
+            }
+        }
+        if !crate::model::zoo::NETWORKS.contains(&self.net.as_str()) {
+            return Err(format!(
+                "unknown network `{}` (expected one of {:?})",
+                self.net,
+                crate::model::zoo::NETWORKS
+            ));
+        }
+        if self.batch == 0 {
+            return Err("batch must be >= 1".to_string());
+        }
+        Ok(())
+    }
+
+    /// Number of points in the cartesian product.
+    pub fn len(&self) -> usize {
+        self.rows.values().len()
+            * self.cols.values().len()
+            * self.gbuf_kib.values().len()
+            * self.rf_filter.values().len()
+            * self.noc_bits.values().len()
+            * self.word_bits.values().len()
+    }
+
+    /// True when the product is a single point.
+    pub fn is_empty(&self) -> bool {
+        false // the product always contains at least one point
+    }
+
+    /// Enumerate the full cartesian product, row-major in declaration
+    /// order (rows outermost, word_bits innermost).
+    pub fn points(&self) -> Vec<DesignPoint> {
+        let (rv, cv) = (self.rows.values(), self.cols.values());
+        let (gv, fv) = (self.gbuf_kib.values(), self.rf_filter.values());
+        let (nv, wv) = (self.noc_bits.values(), self.word_bits.values());
+        let mut out = Vec::with_capacity(self.len());
+        for &rows in &rv {
+            for &cols in &cv {
+                for &gbuf_kib in &gv {
+                    for &rf_filter in &fv {
+                        for &noc_bits in &nv {
+                            for &word_bits in &wv {
+                                out.push(DesignPoint {
+                                    rows,
+                                    cols,
+                                    gbuf_kib,
+                                    rf_filter,
+                                    noc_bits,
+                                    word_bits,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize one point as a full [`ArchConfig`]: `base` (the
+    /// flow's registered default or the session override) supplies every
+    /// field the space does not sweep.
+    pub fn apply(&self, base: &ArchConfig, p: &DesignPoint) -> ArchConfig {
+        let mut arch = base.clone();
+        arch.array_rows = p.rows;
+        arch.array_cols = p.cols;
+        arch.gbuf_bytes = p.gbuf_kib * 1024;
+        arch.rf_filter = p.rf_filter;
+        arch.noc.gin_ifmap_bits = p.noc_bits;
+        arch.noc.gon_bits = p.noc_bits;
+        arch.word_bits = p.word_bits;
+        arch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_values_enumerate_inclusive_ranges() {
+        assert_eq!(AxisSpec::range(8, 16, 4).values(), vec![8, 12, 16]);
+        assert_eq!(AxisSpec::fixed(7).values(), vec![7]);
+        assert_eq!(AxisSpec::range(5, 6, 4).values(), vec![5]);
+    }
+
+    #[test]
+    fn default_sweep_is_the_thousand_point_space() {
+        let space = DesignSpace::default_sweep();
+        assert_eq!(space.len(), 1024);
+        assert_eq!(space.points().len(), 1024);
+        space.validate().unwrap();
+    }
+
+    #[test]
+    fn demo16_is_sixteen_points() {
+        let space = DesignSpace::demo16();
+        assert_eq!(space.len(), 16);
+        space.validate().unwrap();
+    }
+
+    #[test]
+    fn points_are_distinct() {
+        let space = DesignSpace::demo16();
+        let pts = space.points();
+        let set: std::collections::HashSet<_> = pts.iter().copied().collect();
+        assert_eq!(set.len(), pts.len());
+    }
+
+    #[test]
+    fn apply_overrides_only_swept_fields() {
+        let space = DesignSpace::demo16();
+        let base = ArchConfig::eyeriss();
+        let p = DesignPoint {
+            rows: 9,
+            cols: 11,
+            gbuf_kib: 54,
+            rf_filter: 112,
+            noc_bits: 32,
+            word_bits: 8,
+        };
+        let arch = space.apply(&base, &p);
+        assert_eq!(arch.array_rows, 9);
+        assert_eq!(arch.array_cols, 11);
+        assert_eq!(arch.gbuf_bytes, 54 * 1024);
+        assert_eq!(arch.rf_filter, 112);
+        assert_eq!(arch.noc.gin_ifmap_bits, 32);
+        assert_eq!(arch.noc.gon_bits, 32);
+        assert_eq!(arch.word_bits, 8);
+        // unswept fields ride along from the base
+        assert_eq!(arch.clock_mhz, base.clock_mhz);
+        assert_eq!(arch.noc.gin_filter_bits, base.noc.gin_filter_bits);
+    }
+
+    #[test]
+    fn validate_rejects_bad_spaces() {
+        let mut s = DesignSpace::demo16();
+        s.net = "NoSuchNet".to_string();
+        assert!(s.validate().is_err());
+        let mut s = DesignSpace::demo16();
+        s.rows = AxisSpec::range(8, 4, 1);
+        assert!(s.validate().is_err());
+        let mut s = DesignSpace::demo16();
+        s.word_bits = AxisSpec::fixed(12);
+        assert!(s.validate().is_err());
+        let mut s = DesignSpace::demo16();
+        s.batch = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn estimate_layer_cost_is_deterministic_and_plausible() {
+        let arch = ArchConfig::ecoflow();
+        let params = EnergyParams::default();
+        let dram = DramModel::default();
+        let layer = ConvLayer::conv("t", "c1", 8, 10, 8, 3, 8, 1);
+        for flow in Dataflow::ALL {
+            for pass in TrainingPass::ALL {
+                let a = estimate_layer_cost(&arch, &params, &dram, &layer, pass, flow, 2);
+                let b = estimate_layer_cost(&arch, &params, &dram, &layer, pass, flow, 2);
+                assert_eq!(a.cycles, b.cycles);
+                assert!(a.cycles > 0, "{flow:?}/{pass:?} zero cycles");
+                assert!(a.energy.total_pj() > 0.0);
+                assert_eq!(a.energy.total_pj(), b.energy.total_pj());
+            }
+        }
+    }
+}

@@ -10,8 +10,10 @@
 //!   EcoFlow and GANAX built in ([`compiler::registry`]); energy models
 //!   ([`energy`]); the paper's analytic models ([`analysis`]); the
 //!   CNN/GAN model zoo ([`model`]); a multi-threaded sweep coordinator
-//!   behind the [`coordinator::Session`] facade; and report generators
-//!   for every table and figure in the paper ([`report`]).
+//!   behind the [`coordinator::Session`] facade; an analytical
+//!   estimator tier + design-space explorer with Pareto-frontier
+//!   extraction ([`dse`]); and report generators for every table and
+//!   figure in the paper ([`report`]).
 //!
 //! Library users start at [`coordinator::Session`] (sweeps, layer
 //! costs, tables, figures — one object owns the whole environment) and
@@ -31,6 +33,7 @@ pub mod compiler;
 pub mod config;
 pub mod coordinator;
 pub mod cost;
+pub mod dse;
 pub mod energy;
 pub mod model;
 pub mod obs;

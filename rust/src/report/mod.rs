@@ -38,12 +38,17 @@ pub enum TableId {
     /// [`TrafficModel`](crate::cost::TrafficModel) access counts behind
     /// the Fig. 10 energy bars, per (layer, pass, flow).
     Traffic,
+    /// Pareto-frontier table (not a paper table): the
+    /// [`dse`](crate::dse) demo sweep's per-flow cycles × energy
+    /// frontier, with exact re-runs and estimator error per point.
+    Pareto,
 }
 
 impl TableId {
     /// All tables: the paper tables in paper order (the `report`
-    /// command's order), then the traffic table the cost subsystem adds.
-    pub const ALL: [TableId; 7] = [
+    /// command's order), then the traffic and Pareto tables the cost
+    /// and DSE subsystems add.
+    pub const ALL: [TableId; 8] = [
         TableId::Noc,
         TableId::Validation,
         TableId::CnnLayers,
@@ -51,6 +56,7 @@ impl TableId {
         TableId::GanLayers,
         TableId::GanE2e,
         TableId::Traffic,
+        TableId::Pareto,
     ];
 
     /// Regenerate this table over `session`.
@@ -63,6 +69,7 @@ impl TableId {
             TableId::GanLayers => tables::table7_layers(),
             TableId::GanE2e => tables::table8_gan_e2e(session),
             TableId::Traffic => tables::traffic_table(session),
+            TableId::Pareto => tables::pareto_table(session),
         }
     }
 }

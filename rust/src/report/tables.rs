@@ -252,6 +252,47 @@ pub fn traffic_table(session: &Session) -> Table {
     t
 }
 
+/// The Pareto-frontier table (not a paper table): the [`crate::dse`]
+/// demo design-space sweep (16 points over PE dims / GBUF / NoC width,
+/// ShuffleNet) per flow, frontier points re-run through the exact
+/// engine so every row states the estimator's real error. The full
+/// sweep (`DesignSpace::default_sweep`, ≥1024 points) is the `dse`
+/// CLI subcommand; this table is the glanceable demo of the same
+/// machinery.
+pub fn pareto_table(session: &Session) -> Table {
+    let mut cfg = crate::dse::ExploreConfig::new(crate::dse::DesignSpace::demo16());
+    cfg.frontier_exact = true;
+    let report = session.explore(&cfg).expect("dse demo sweep");
+    let mut t = Table::new(
+        "Pareto frontier — demo design-space sweep (cycles x energy, per flow)",
+        &[
+            "flow",
+            "design point",
+            "est cycles",
+            "est uJ",
+            "exact cycles",
+            "exact uJ",
+            "cyc err",
+            "uJ err",
+        ],
+    );
+    for f in &report.flows {
+        for p in &f.frontier {
+            t.row(vec![
+                f.flow.name().to_string(),
+                p.point.label(),
+                p.est_cycles.to_string(),
+                fnum(p.est_energy_uj, 1),
+                p.exact_cycles.map_or_else(|| "-".to_string(), |c| c.to_string()),
+                p.exact_energy_uj.map_or_else(|| "-".to_string(), |e| fnum(e, 1)),
+                p.cycles_err().map_or_else(|| "-".to_string(), pct),
+                p.energy_err().map_or_else(|| "-".to_string(), pct),
+            ]);
+        }
+    }
+    t
+}
+
 /// Table 8: end-to-end GAN training vs TPU, over the session's memo
 /// table — the per-flow TPU baselines and the shapes shared by both
 /// GANs are guaranteed re-hits.

@@ -47,6 +47,8 @@ pub enum RequestKind {
     Metrics,
     /// Trace capture control (`start`/`stop`).
     Trace,
+    /// A design-space exploration sweep ([`crate::dse`]).
+    Explore,
     /// Graceful shutdown.
     Shutdown,
     /// Unparseable or unknown requests (counted, never dispatched).
@@ -55,7 +57,7 @@ pub enum RequestKind {
 
 impl RequestKind {
     /// Every kind, in wire/stats reporting order.
-    pub const ALL: [RequestKind; 9] = [
+    pub const ALL: [RequestKind; 10] = [
         RequestKind::LayerCost,
         RequestKind::Sweep,
         RequestKind::Table,
@@ -63,6 +65,7 @@ impl RequestKind {
         RequestKind::Stats,
         RequestKind::Metrics,
         RequestKind::Trace,
+        RequestKind::Explore,
         RequestKind::Shutdown,
         RequestKind::Invalid,
     ];
@@ -77,6 +80,7 @@ impl RequestKind {
             RequestKind::Stats => "stats",
             RequestKind::Metrics => "metrics",
             RequestKind::Trace => "trace",
+            RequestKind::Explore => "explore",
             RequestKind::Shutdown => "shutdown",
             RequestKind::Invalid => "invalid",
         }
@@ -113,6 +117,10 @@ impl RequestKind {
             RequestKind::Trace => (
                 r#"kind="trace",outcome="ok""#,
                 r#"kind="trace",outcome="err""#,
+            ),
+            RequestKind::Explore => (
+                r#"kind="explore",outcome="ok""#,
+                r#"kind="explore",outcome="err""#,
             ),
             RequestKind::Shutdown => (
                 r#"kind="shutdown",outcome="ok""#,

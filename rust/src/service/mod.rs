@@ -447,6 +447,23 @@ fn dispatch(shared: &Shared, id: &Json, request: Request) -> (String, bool) {
                 )
             }
         }
+        Request::Explore(cfg) => {
+            // like reports, explorations run over the shared session
+            // directly: the estimator phase is closed-form arithmetic on
+            // explorer-owned worker threads, and exact frontier re-runs
+            // go through the session's concurrency-safe cost path
+            match shared.session.explore(&cfg) {
+                Ok(report) => {
+                    let body = Json::parse(report.to_json().trim())
+                        .expect("ExploreReport::to_json emits valid JSON");
+                    (
+                        protocol::ok_response(id, vec![("report".to_string(), body)]),
+                        true,
+                    )
+                }
+                Err(e) => (protocol::err_response(id, &e), false),
+            }
+        }
         Request::Shutdown => {
             // reply first (the caller still gets its line), then raise
             // the flag; the supervisor takes it from there
@@ -724,6 +741,44 @@ mod tests {
             .and_then(Json::as_bool)
             .unwrap());
         handle.join();
+    }
+
+    #[test]
+    fn serves_explore_requests() {
+        let session = Session::builder().threads(2).build();
+        let handle = spawn(
+            session,
+            ServiceConfig {
+                addr: "127.0.0.1:0".to_string(),
+                linger: Duration::ZERO,
+            },
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+
+        // estimator-only demo sweep over one flow
+        let r = request(&mut stream, r#"{"id":1,"type":"explore","flows":["EcoFlow"]}"#);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
+        let report = r.get("report").unwrap();
+        assert_eq!(
+            report.get("points_per_flow").and_then(Json::as_u64),
+            Some(16)
+        );
+        let flows = report.get("flows").and_then(Json::as_array).unwrap();
+        assert_eq!(flows.len(), 1);
+        assert!(!flows[0]
+            .get("frontier")
+            .and_then(Json::as_array)
+            .unwrap()
+            .is_empty());
+
+        // a bad explore is answered, not fatal
+        let err = request(&mut stream, r#"{"id":2,"type":"explore","space":"tiny"}"#);
+        assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+
+        request(&mut stream, r#"{"id":3,"type":"shutdown"}"#);
+        let report = handle.join();
+        assert_eq!(report.metrics.requests, 3);
     }
 
     #[test]

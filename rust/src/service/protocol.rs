@@ -15,7 +15,8 @@
 //! {"id":7,"type":"metrics"}
 //! {"id":8,"type":"trace","action":"start"}
 //! {"id":9,"type":"trace","action":"stop"}
-//! {"id":10,"type":"shutdown"}
+//! {"id":10,"type":"explore","net":"ShuffleNet","flows":["EcoFlow"],"frontier_exact":true}
+//! {"id":11,"type":"shutdown"}
 //! ```
 //!
 //! Responses are `{"id":...,"ok":true,...}` or
@@ -85,6 +86,7 @@ impl ReportTarget {
             "table7" => t(TableId::GanLayers),
             "table8" => t(TableId::GanE2e),
             "traffic" => t(TableId::Traffic),
+            "pareto" => t(TableId::Pareto),
             "fig3" => f(FigureId::ZeroMults),
             "fig8" => f(FigureId::InputGrad),
             "fig9" => f(FigureId::FilterGrad),
@@ -124,6 +126,9 @@ pub enum Request {
         /// `{"action":"start"}` → true, `{"action":"stop"}` → false.
         start: bool,
     },
+    /// A design-space exploration ([`crate::dse`]): estimator sweep,
+    /// Pareto extraction, optional exact frontier re-runs.
+    Explore(crate::dse::ExploreConfig),
     /// Graceful shutdown: drain in-flight work, flush the store.
     Shutdown,
 }
@@ -161,6 +166,7 @@ pub fn parse_line(line: &str) -> Envelope {
         Some("stats") => (RequestKind::Stats, Ok(Request::Stats)),
         Some("metrics") => (RequestKind::Metrics, Ok(Request::Metrics)),
         Some("trace") => (RequestKind::Trace, parse_trace(&doc)),
+        Some("explore") => (RequestKind::Explore, parse_explore(&doc)),
         Some("shutdown") => (RequestKind::Shutdown, Ok(Request::Shutdown)),
         Some(other) => (
             RequestKind::Invalid,
@@ -280,6 +286,49 @@ fn parse_trace(doc: &Json) -> Result<Request, String> {
         Some("stop") => Ok(Request::Trace { start: false }),
         _ => Err("trace needs an \"action\" of \"start\" or \"stop\"".to_string()),
     }
+}
+
+/// Decode an explore request. `space` picks the preset ("demo16",
+/// default, or "default" for the full ≥1024-point sweep); `net`,
+/// `batch`, `flows` and `frontier_exact` override the preset's
+/// workload, flow set and exactness.
+fn parse_explore(doc: &Json) -> Result<Request, String> {
+    let mut space = match doc.get("space").and_then(Json::as_str) {
+        Some("demo16") | None => crate::dse::DesignSpace::demo16(),
+        Some("default") => crate::dse::DesignSpace::default_sweep(),
+        Some(other) => {
+            return Err(format!(
+                "unknown design space {other:?} (want \"demo16\" or \"default\")"
+            ))
+        }
+    };
+    if let Some(v) = doc.get("net") {
+        space.net = v.as_str().ok_or("\"net\" must be a string")?.to_string();
+    }
+    if let Some(v) = doc.get("batch") {
+        space.batch = v
+            .as_usize()
+            .filter(|&b| b >= 1)
+            .ok_or("\"batch\" must be a positive integer")?;
+    }
+    let mut cfg = crate::dse::ExploreConfig::new(space);
+    if let Some(v) = doc.get("flows") {
+        let arr = v.as_array().ok_or("\"flows\" must be an array of flow names")?;
+        let mut flows = Vec::new();
+        for f in arr {
+            let s = f.as_str().ok_or("\"flows\" entries must be strings")?;
+            flows.push(parse_flow(s).ok_or_else(|| format!("unknown flow {s:?}"))?);
+        }
+        if flows.is_empty() {
+            return Err("\"flows\" must not be empty".to_string());
+        }
+        cfg.flows = flows;
+    }
+    if let Some(v) = doc.get("frontier_exact") {
+        cfg.frontier_exact = v.as_bool().ok_or("\"frontier_exact\" must be a boolean")?;
+    }
+    cfg.space.validate()?;
+    Ok(Request::Explore(cfg))
 }
 
 fn parse_table(doc: &Json) -> Result<ReportTarget, String> {
@@ -459,6 +508,46 @@ mod tests {
     }
 
     #[test]
+    fn explore_parses_presets_overrides_and_rejects_garbage() {
+        let env = parse_line(r#"{"type":"explore"}"#);
+        assert_eq!(env.kind, RequestKind::Explore);
+        match env.request.unwrap() {
+            Request::Explore(cfg) => {
+                assert_eq!(cfg.space.len(), 16, "default preset is demo16");
+                assert_eq!(cfg.space.net, "ShuffleNet");
+                assert_eq!(cfg.flows.len(), Dataflow::ALL.len());
+                assert!(!cfg.frontier_exact);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        let env = parse_line(
+            r#"{"type":"explore","space":"default","net":"MobileNet","batch":2,"flows":["EcoFlow","TPU"],"frontier_exact":true}"#,
+        );
+        match env.request.unwrap() {
+            Request::Explore(cfg) => {
+                assert!(cfg.space.len() >= 1024, "full preset");
+                assert_eq!(cfg.space.net, "MobileNet");
+                assert_eq!(cfg.space.batch, 2);
+                assert_eq!(cfg.flows, vec![Dataflow::EcoFlow, Dataflow::Tpu]);
+                assert!(cfg.frontier_exact);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        for line in [
+            r#"{"type":"explore","space":"tiny"}"#,
+            r#"{"type":"explore","net":"NoSuchNet"}"#,
+            r#"{"type":"explore","flows":[]}"#,
+            r#"{"type":"explore","flows":["warp"]}"#,
+            r#"{"type":"explore","batch":0}"#,
+            r#"{"type":"explore","frontier_exact":"yes"}"#,
+        ] {
+            let env = parse_line(line);
+            assert_eq!(env.kind, RequestKind::Explore, "{line}");
+            assert!(env.request.is_err(), "{line} should fail");
+        }
+    }
+
+    #[test]
     fn malformed_requests_keep_their_id() {
         let cases = [
             r#"{"id":"a","type":"warp"}"#,
@@ -484,8 +573,8 @@ mod tests {
     #[test]
     fn every_report_target_resolves() {
         let names = [
-            "table1", "table2", "table5", "table6", "table7", "table8", "traffic", "fig3",
-            "fig8", "fig9", "fig10", "fig11", "fig12",
+            "table1", "table2", "table5", "table6", "table7", "table8", "traffic", "pareto",
+            "fig3", "fig8", "fig9", "fig10", "fig11", "fig12",
         ];
         assert_eq!(names.len(), TableId::ALL.len() + FigureId::ALL.len());
         for n in names {

@@ -1,0 +1,434 @@
+//! Integration: the analytical estimator tier + design-space explorer.
+//!
+//! Four properties, each the acceptance criterion of one piece of the
+//! DSE subsystem:
+//!
+//! 1. **Estimator-only sweeps, frontier-only re-runs:** a full
+//!    `default_sweep` (1024 points) moves only the
+//!    `ecoflow_dse_points_total` counter — the exact engine is never
+//!    dispatched — and with `frontier_exact` the
+//!    `ecoflow_dse_exact_reruns_total` delta equals the frontier size
+//!    exactly. The counters ARE the proof that exploration cost scales
+//!    with the frontier, not the space.
+//! 2. **Pinned error bounds:** the measured estimator-vs-exact error
+//!    per (flow × op family) over the engine-matrix layer set is
+//!    snapshotted in `tests/golden/estimator_bounds.txt` (bootstrap on
+//!    first run, same scheme as `table_regression.rs`) and must stay
+//!    under the in-code ceilings.
+//! 3. **Design-space codec:** TOML space files round-trip through
+//!    `DesignSpace::from_file`, and every applied design point yields a
+//!    distinct, word-round-trippable `EnvKey` — the cache/store
+//!    fingerprint discriminates the whole swept space.
+//! 4. **Stable store codes:** a `register_stable` flow's cost entries
+//!    survive a store-v2 save/load round trip; a plain `register`ed
+//!    flow's entries are filtered on both the save and load side.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use ecoflow::compiler::keys::{CostKey, EnvKey};
+use ecoflow::compiler::registry::{register_stable, STABLE_CODE_MIN};
+use ecoflow::compiler::tiling::{self, PlaneOp};
+use ecoflow::compiler::{register, rs, Dataflow, DataflowCompiler, PlaneOperands};
+use ecoflow::config::ArchConfig;
+use ecoflow::coordinator::scheduler::arch_for;
+use ecoflow::coordinator::{load_tracked, CostCache, LoadOutcome, Session};
+use ecoflow::dse::{estimator, explore, DesignSpace, ExploreConfig, Explorer};
+use ecoflow::energy::{DramModel, EnergyParams};
+use ecoflow::model::{ConvLayer, TrainingPass};
+use ecoflow::sim::stats::PassStats;
+use ecoflow::sim::SimError;
+use ecoflow::tensor::Mat;
+
+/// The engine-matrix layer set: three training passes over these cover
+/// every proxy-op family, strided and unit-stride, on both layer kinds.
+fn layer_matrix() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::conv("EngineMatrix", "conv-s2", 16, 17, 8, 3, 16, 2),
+        ConvLayer::conv("EngineMatrix", "conv-s1", 8, 10, 8, 3, 8, 1),
+        ConvLayer::tconv("EngineMatrix", "tconv-s2", 8, 7, 14, 4, 8, 2),
+    ]
+}
+
+// --- 1. counters: estimator-only sweeps, frontier-only re-runs --------
+
+/// The ONLY test in this binary that runs the explorer: the DSE
+/// counters are process-global, so both delta checks live in one test
+/// body, sequentially, where nothing can race them.
+#[test]
+fn explorer_sweeps_estimator_only_and_reruns_exactly_the_frontier() {
+    let (points, frontier, exact) = explore::counters().clone();
+
+    // Leg 1: the full built-in space (>= 1000 points), estimator only.
+    let (p0, f0, x0) = (points.get(), frontier.get(), exact.get());
+    let cfg = {
+        let mut c = ExploreConfig::new(DesignSpace::default_sweep());
+        c.flows = vec![Dataflow::EcoFlow];
+        c
+    };
+    let explorer = Explorer {
+        params: EnergyParams::default(),
+        dram: DramModel::default(),
+        threads: 8,
+        engine: None,
+    };
+    let bases = vec![(Dataflow::EcoFlow, arch_for(Dataflow::EcoFlow))];
+    let report = explorer.run(&bases, &cfg).expect("default sweep");
+    assert_eq!(report.points_per_flow, 1024);
+    assert_eq!(report.flows.len(), 1);
+    let ff = &report.flows[0];
+    assert_eq!(ff.evaluated, 1024);
+    assert!(!ff.frontier.is_empty());
+    assert!(ff.frontier.len() < 1024, "a frontier that keeps everything is no frontier");
+    // the Pareto staircase: cycles never regress, energy strictly improves
+    for w in ff.frontier.windows(2) {
+        assert!(w[0].est_cycles <= w[1].est_cycles, "frontier not cycle-sorted");
+        assert!(
+            w[0].est_energy_uj > w[1].est_energy_uj,
+            "frontier keeps a non-improving energy point"
+        );
+    }
+    for p in &ff.frontier {
+        assert!(p.exact_cycles.is_none() && p.exact_energy_uj.is_none());
+        assert!(p.cycles_err().is_none() && p.energy_err().is_none());
+    }
+    assert_eq!(points.get() - p0, 1024, "one estimate per (flow, point)");
+    assert_eq!(frontier.get() - f0, ff.frontier.len() as u64);
+    assert_eq!(exact.get() - x0, 0, "estimator-only sweeps never touch the exact engine");
+
+    // Leg 2: demo16 with exact frontier re-runs, through the Session
+    // facade (the path the CLI, the service and TableId::Pareto share).
+    let (p1, f1, x1) = (points.get(), frontier.get(), exact.get());
+    let cfg = {
+        let mut c = ExploreConfig::new(DesignSpace::demo16());
+        c.flows = vec![Dataflow::EcoFlow, Dataflow::Tpu];
+        c.frontier_exact = true;
+        c
+    };
+    let session = Session::builder().threads(4).build();
+    let report = session.explore(&cfg).expect("demo sweep");
+    assert_eq!(report.points_per_flow, 16);
+    assert_eq!(report.flows.len(), 2);
+    assert!(report.frontier_exact);
+    assert_eq!(points.get() - p1, 32, "16 points x 2 flows");
+    let total = report.total_frontier() as u64;
+    assert!(total > 0);
+    assert_eq!(frontier.get() - f1, total);
+    assert_eq!(exact.get() - x1, total, "exact re-runs must cover exactly the frontier");
+    // every frontier point carries exact companions, within the worst
+    // in-code ceiling (0.70; per-cell ceilings are pinned by
+    // engine_matrix and the golden snapshot below)
+    for fl in &report.flows {
+        for p in &fl.frontier {
+            let ce = p.cycles_err().expect("exact cycles attached");
+            let ee = p.energy_err().expect("exact energy attached");
+            assert!(
+                ce <= 0.70 && ee <= 0.70,
+                "{:?} {}: estimator drifted (cycles {ce:.3}, energy {ee:.3})",
+                fl.flow,
+                p.point.label()
+            );
+        }
+    }
+    let (mc, me) = report.max_err().expect("frontier_exact report has deltas");
+    assert!(mc <= 0.70 && me <= 0.70);
+}
+
+// --- 2. golden: measured estimator error bounds -----------------------
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("estimator_bounds.txt")
+}
+
+/// Compare `snapshot` against the golden file at `path`, bootstrapping
+/// it on first run (the `table_regression.rs` scheme).
+fn check_golden(path: &std::path::Path, snapshot: &str, what: &str) {
+    match std::fs::read_to_string(path) {
+        Ok(golden) => {
+            assert_eq!(
+                golden, snapshot,
+                "{what} moved vs {}; if the estimator or cost model changed \
+                 intentionally, delete the file to re-baseline",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir");
+            std::fs::write(path, snapshot).expect("write golden");
+            eprintln!("bootstrapped {} ({what})", path.display());
+        }
+    }
+}
+
+fn family(op: PlaneOp) -> (&'static str, usize) {
+    match op {
+        PlaneOp::Direct { .. } => ("direct", 0),
+        PlaneOp::Transpose { .. } => ("transpose", 1),
+        PlaneOp::Dilated { .. } => ("dilated", 2),
+    }
+}
+
+/// A representative op per family — `estimator::ceiling` discriminates
+/// only the family, never the geometry.
+fn family_op(fam: usize) -> PlaneOp {
+    match fam {
+        0 => PlaneOp::Direct { hx: 8, k: 3, s: 1 },
+        1 => PlaneOp::Transpose { he: 4, k: 3, s: 2 },
+        _ => PlaneOp::Dilated { he: 4, k: 3, s: 2 },
+    }
+}
+
+#[test]
+fn estimator_error_bounds_stay_pinned_under_the_golden_snapshot() {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    const BATCH: usize = 2;
+
+    // max measured (cycles, energy) error per (flow, op family), in
+    // fixed (Dataflow::ALL x family) order
+    let mut worst = [[(0.0f64, 0.0f64); 3]; 4];
+    for layer in layer_matrix() {
+        for pass in TrainingPass::ALL {
+            let (_, fam) = family(PlaneOp::from_layer(&layer, pass).proxy());
+            for (fi, &flow) in Dataflow::ALL.iter().enumerate() {
+                let arch = arch_for(flow);
+                let exact = tiling::layer_cost(&arch, &params, &dram, &layer, pass, flow, BATCH)
+                    .expect("exact cost");
+                let est =
+                    ecoflow::dse::estimate_layer_cost(&arch, &params, &dram, &layer, pass, flow, BATCH);
+                let cell = &mut worst[fi][fam];
+                cell.0 = cell.0.max(estimator::sym_rel_err(
+                    est.cycles as f64,
+                    exact.cycles as f64,
+                ));
+                cell.1 = cell.1.max(estimator::sym_rel_err(
+                    est.energy.total_uj(),
+                    exact.energy.total_uj(),
+                ));
+            }
+        }
+    }
+
+    let mut snapshot = String::from(
+        "estimator error bounds: max symmetric relative error vs the exact engine\n\
+         over the engine-matrix layer set (see tests/dse.rs); ceiling = in-code bound\n\
+         flow           op         cycles   energy   ceiling\n",
+    );
+    for (fi, &flow) in Dataflow::ALL.iter().enumerate() {
+        for fam in 0..3 {
+            let (cyc, uj) = worst[fi][fam];
+            let bound = estimator::ceiling(flow, family_op(fam));
+            assert!(
+                cyc <= bound && uj <= bound,
+                "{flow:?}/{}: measured ({cyc:.4}, {uj:.4}) above ceiling {bound}",
+                family(family_op(fam)).0
+            );
+            snapshot.push_str(&format!(
+                "{:<14} {:<10} {:>7.4}  {:>7.4}  {:>7.2}\n",
+                format!("{flow:?}"),
+                family(family_op(fam)).0,
+                cyc,
+                uj,
+                bound
+            ));
+        }
+    }
+    check_golden(&golden_path(), &snapshot, "estimator error bounds");
+}
+
+// --- 3. design-space codec: TOML files + EnvKey coverage --------------
+
+#[test]
+fn design_space_files_round_trip_and_reject_garbage() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("ecoflow-dse-space-{}.toml", std::process::id()));
+    std::fs::write(
+        &path,
+        "# swept axes override the built-in defaults\n\
+         [rows]\n\
+         min = 6\n\
+         max = 10\n\
+         step = 2\n\n\
+         [cols]\n\
+         min = 9\n\n\
+         [sweep]\n\
+         net = \"MobileNet\"\n\
+         batch = 4\n",
+    )
+    .expect("write space file");
+    let space = DesignSpace::from_file(&path).expect("parse space file");
+    assert_eq!(space.rows.values(), vec![6, 8, 10]);
+    assert_eq!(space.cols.values(), vec![9], "min without max pins the axis");
+    // unlisted axes keep the default_sweep ranges
+    let default = DesignSpace::default_sweep();
+    assert_eq!(space.gbuf_kib, default.gbuf_kib);
+    assert_eq!(space.word_bits, default.word_bits);
+    assert_eq!(space.net, "MobileNet");
+    assert_eq!(space.batch, 4);
+    assert_eq!(space.len(), 3 * default.len() / (4 * 4));
+
+    // a bad workload fails at parse time, not deep in a sweep
+    std::fs::write(&path, "[sweep]\nnet = \"NoSuchNet\"\n").expect("rewrite");
+    let err = DesignSpace::from_file(&path).unwrap_err().to_string();
+    assert!(err.contains("NoSuchNet"), "got: {err}");
+    std::fs::remove_file(&path).ok();
+
+    // and a missing file is an error, not a silent default
+    assert!(DesignSpace::from_file(&path).is_err());
+}
+
+#[test]
+fn every_applied_design_point_yields_a_distinct_round_trippable_env_key() {
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let base = arch_for(Dataflow::EcoFlow);
+    let space = DesignSpace::demo16();
+    let mut keys = HashSet::new();
+    for point in space.points() {
+        let arch = space.apply(&base, &point);
+        let key = EnvKey::of(&arch, &params, &dram);
+        let words = key.to_words();
+        assert_eq!(words.len(), EnvKey::WORDS);
+        assert_eq!(
+            EnvKey::from_words(&words),
+            Some(key),
+            "{}: EnvKey words do not round-trip",
+            point.label()
+        );
+        assert_eq!(EnvKey::from_words(&words[..EnvKey::WORDS - 1]), None);
+        keys.insert(key);
+    }
+    assert_eq!(
+        keys.len(),
+        space.len(),
+        "every swept axis must be visible to the cache/store fingerprint"
+    );
+}
+
+// --- 4. stable store codes: register_stable round trip ----------------
+
+/// A test-only dataflow borrowing RS schedules on a custom-width array;
+/// two instances below exercise the stable and the dynamic code paths.
+struct StoreDummy(&'static str, usize);
+
+impl DataflowCompiler for StoreDummy {
+    fn name(&self) -> &'static str {
+        self.0
+    }
+
+    fn default_arch(&self) -> ArchConfig {
+        let mut arch = ArchConfig::eyeriss();
+        arch.array_cols = self.1;
+        arch
+    }
+
+    fn zero_free(&self, op: PlaneOp) -> bool {
+        matches!(op, PlaneOp::Direct { .. })
+    }
+
+    fn execute(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        ops: &PlaneOperands,
+    ) -> Result<(Mat, PassStats), SimError> {
+        match op {
+            PlaneOp::Direct { s, .. } => rs::direct_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Transpose { s, .. } => rs::transpose_via_padding(arch, &ops.a, &ops.b, s),
+            PlaneOp::Dilated { s, .. } => rs::dilated_via_padding(arch, &ops.a, &ops.b, s),
+        }
+    }
+}
+
+#[test]
+fn stable_coded_flows_round_trip_through_the_cost_store() {
+    static STABLE: StoreDummy = StoreDummy("StableDummy", 11);
+    static PLAIN: StoreDummy = StoreDummy("PlainDummy", 13);
+    static CLASH: StoreDummy = StoreDummy("ClashDummy", 7);
+
+    // claim a code in the reserved range (distinct from the 0x8123 the
+    // lib unit tests claim — separate process, but keep it obvious)
+    let stable = register_stable(&STABLE, 0x8200).expect("claim 0x8200");
+    assert_eq!(stable.code(), 0x8200);
+    assert!(stable.has_stable_code());
+    assert_eq!(Dataflow::from_code(0x8200), Some(stable));
+    assert_eq!(stable.name(), "StableDummy");
+
+    // collisions and out-of-range codes are rejected loudly
+    assert!(register_stable(&CLASH, 0x8200).is_err(), "duplicate claim");
+    assert!(
+        register_stable(&CLASH, STABLE_CODE_MIN - 1).is_err(),
+        "below the reserved range"
+    );
+
+    // a plain registration stays process-local
+    let plain = register(&PLAIN);
+    assert!(!plain.has_stable_code());
+
+    let path = std::env::temp_dir().join(format!(
+        "ecoflow-dse-store-{}.cache",
+        std::process::id()
+    ));
+    std::fs::remove_file(&path).ok();
+    let layer = ConvLayer::conv("DseStore", "conv", 8, 10, 8, 3, 8, 1);
+
+    // session 1: compute one cost per flow kind, persist
+    {
+        let session = Session::builder().threads(1).store_path(&path).build();
+        assert!(matches!(session.store_outcome(), Some(LoadOutcome::Missing)));
+        for flow in [stable, plain, Dataflow::EcoFlow] {
+            session
+                .layer_cost(&layer, TrainingPass::Forward, flow, 1)
+                .expect("layer cost");
+        }
+        let saved = session.save_store().expect("store configured").expect("save");
+        assert_eq!(
+            saved, 2,
+            "the stable-coded and built-in entries persist; the \
+             order-dependent plain code must be filtered at save time"
+        );
+    }
+
+    // reload into a bare cache: exactly the two persistable keys survive
+    let cache = CostCache::new();
+    let (outcome, _disk) = load_tracked(&path, &cache);
+    assert!(
+        matches!(outcome, LoadOutcome::Loaded { entries: 2 }),
+        "unexpected outcome: {outcome:?}"
+    );
+    let params = EnergyParams::default();
+    let dram = DramModel::default();
+    let key = |flow: Dataflow| {
+        CostKey::of(
+            &arch_for(flow),
+            &params,
+            &dram,
+            &layer,
+            TrainingPass::Forward,
+            flow,
+            1,
+        )
+    };
+    assert!(cache.get(&key(stable)).is_some(), "stable entry round-trips");
+    assert!(cache.get(&key(Dataflow::EcoFlow)).is_some(), "built-in round-trips");
+    assert!(cache.get(&key(plain)).is_none(), "dynamic codes never persist");
+
+    // session 2: the stored stable entry answers as a warm cache hit
+    let session = Session::builder().threads(1).store_path(&path).build();
+    assert!(matches!(
+        session.store_outcome(),
+        Some(LoadOutcome::Loaded { entries: 2 })
+    ));
+    let hits_before = session.cache_stats().hits;
+    session
+        .layer_cost(&layer, TrainingPass::Forward, stable, 1)
+        .expect("warm stable cost");
+    assert!(
+        session.cache_stats().hits > hits_before,
+        "store-loaded stable entry must answer without simulation"
+    );
+    std::fs::remove_file(&path).ok();
+}

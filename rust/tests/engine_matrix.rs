@@ -8,7 +8,11 @@
 //!   array and systolic array alike) return bit-identical `LayerCost`s
 //!   to the scalar references, for every cell; and
 //! * **threads 1 == threads 8** — the sweep scheduler's sharding never
-//!   moves a result, under either engine.
+//!   moves a result, under either engine; and
+//! * **estimator within ceiling** — the analytical tier
+//!   (`dse::estimate_layer_cost`) lands within its pinned
+//!   per-(flow, op family) error ceiling of both exact engines at both
+//!   thread counts, for every cell.
 //!
 //! This replaces the ad-hoc per-engine spot checks that used to live in
 //! `batch_engine.rs` (tiled-pass functional checks) and alongside the
@@ -95,6 +99,59 @@ fn engine_matrix_batched_equals_scalar_and_threads_1_equals_8() {
                 assert_eq!(batched_1[cell], batched_8[cell], "{tag}: batched threads 1 vs 8");
                 assert_eq!(scalar_1[cell], batched_1[cell], "{tag}: batched vs scalar");
                 assert_eq!(scalar_1[cell], auto_8[cell], "{tag}: auto vs scalar");
+                cell += 1;
+            }
+        }
+    }
+
+    // --- the estimator column ---------------------------------------
+    // dse::estimate_layer_cost replaces only the simulated proxy plane
+    // with closed-form instruction counts; everything downstream is the
+    // exact pipeline's own arithmetic. Every cell must land within the
+    // per-(flow, op family) ceiling of BOTH exact engines at BOTH
+    // thread counts (which the assertions above already pinned equal).
+    let params = ecoflow::energy::EnergyParams::default();
+    let dram = ecoflow::energy::DramModel::default();
+    let mut cell = 0;
+    for layer in layer_matrix() {
+        for pass in TrainingPass::ALL {
+            let op = PlaneOp::from_layer(&layer, pass).proxy();
+            for flow in Dataflow::ALL {
+                let tag = format!("{} {pass:?} {flow:?}", layer.name);
+                let est = ecoflow::dse::estimate_layer_cost(
+                    &arch_for(flow),
+                    &params,
+                    &dram,
+                    &layer,
+                    pass,
+                    flow,
+                    BATCH,
+                );
+                let bound = ecoflow::dse::estimator::ceiling(flow, op);
+                for (leg, exact) in [("scalar@1", &scalar_1[cell]), ("batched@8", &batched_8[cell])] {
+                    let cyc_err = ecoflow::dse::estimator::sym_rel_err(
+                        est.cycles as f64,
+                        exact.cycles as f64,
+                    );
+                    let uj_err = ecoflow::dse::estimator::sym_rel_err(
+                        est.energy.total_uj(),
+                        exact.energy.total_uj(),
+                    );
+                    assert!(
+                        cyc_err <= bound,
+                        "{tag} vs {leg}: estimator cycles err {cyc_err:.4} > ceiling {bound} \
+                         (est {} vs exact {})",
+                        est.cycles,
+                        exact.cycles
+                    );
+                    assert!(
+                        uj_err <= bound,
+                        "{tag} vs {leg}: estimator energy err {uj_err:.4} > ceiling {bound} \
+                         (est {:.3} uJ vs exact {:.3} uJ)",
+                        est.energy.total_uj(),
+                        exact.energy.total_uj()
+                    );
+                }
                 cell += 1;
             }
         }
