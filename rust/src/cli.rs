@@ -6,8 +6,9 @@
 //! ecoflow fig3|fig8|fig9|fig10|fig11|fig12       regenerate a figure
 //! ecoflow table1|table2|table5|table6|table7|table8
 //! ecoflow traffic                                per-level traffic table
+//! ecoflow shootout                               rank all flows per layer class
 //! ecoflow cost [--net N] [--layer L] [--pass P] [--flow F] [--batch B]
-//! ecoflow report                                 all tables + figures
+//! ecoflow report [--table NAME]                  all tables + figures (or one)
 //! ecoflow flows                                  list registered dataflows
 //! ecoflow validate [--artifacts DIR]             golden JAX-vs-sim check
 //! ecoflow train [--steps N] [--variant stride|pool]
@@ -67,7 +68,7 @@ use crate::coordinator::scheduler::{default_threads, job_matrix, SweepJob, CLI_T
 use crate::coordinator::Session;
 use crate::model::{gan, zoo, ConvLayer, TrainingPass};
 use crate::report::{FigureId, TableId};
-use crate::service::protocol::{parse_flow, parse_pass};
+use crate::service::protocol::{parse_flow, parse_pass, unknown_flow, ReportTarget};
 use crate::service::{self, ServiceConfig};
 use crate::runtime::trainer::{Trainer, Variant};
 use crate::runtime::{golden, Engine};
@@ -109,9 +110,13 @@ pub fn usage() -> &'static str {
      \u{20}  fig3|fig8|fig9|fig10|fig11|fig12   regenerate a paper figure\n\
      \u{20}  table1|table2|table5|table6|table7|table8\n\
      \u{20}  traffic                            per-level traffic behind the Fig. 10 bars\n\
+     \u{20}  shootout                           every registered flow over the model zoo,\n\
+     \u{20}                                     ranked per layer class (cycles + energy)\n\
      \u{20}  cost [--net N] [--layer L] [--pass forward|input-grad|filter-grad]\n\
-     \u{20}       [--flow RS|TPU|EcoFlow|GANAX] [--batch B]   keys -> traffic -> energy\n\
-     \u{20}  report                             all tables + figures, one shared session\n\
+     \u{20}       [--flow RS|TPU|EcoFlow|GANAX|Kseg|CARLA|Decomp] [--batch B]\n\
+     \u{20}  report [--table NAME]              all tables + figures, one shared session\n\
+     \u{20}                                     (--table narrows to one target, e.g.\n\
+     \u{20}                                     --table shootout)\n\
      \u{20}  flows                              list the registered dataflows\n\
      \u{20}  validate [--artifacts DIR]         golden JAX-vs-simulator check\n\
      \u{20}  train [--steps N] [--variant stride|pool] [--artifacts DIR]\n\
@@ -337,6 +342,10 @@ fn cost_tables(
 
 /// Run the CLI; returns process exit code.
 pub fn run(args: &[String]) -> Result<()> {
+    // the comparator zoo registers before anything touches the flow
+    // registry, so `flows`, `--flow`, and the shootout table all see
+    // the full inventory regardless of subcommand
+    crate::compiler::ensure_comparators_registered();
     let parsed = parse_args(args)?;
     // Interactive commands default to a modest thread count (a CLI run
     // should not monopolize a large host); the resident service gets
@@ -428,6 +437,7 @@ pub fn run(args: &[String]) -> Result<()> {
         "table7" => emit(session.table(TableId::GanLayers), csv),
         "table8" => emit(session.table(TableId::GanE2e), csv),
         "traffic" => emit(session.table(TableId::Traffic), csv),
+        "shootout" => emit(session.table(TableId::Shootout), csv),
         "cost" => {
             let net = parsed
                 .options
@@ -442,8 +452,9 @@ pub fn run(args: &[String]) -> Result<()> {
                 None => TrainingPass::InputGrad,
             };
             let flow = match parsed.options.get("flow") {
-                Some(v) => parse_flow(v)
-                    .ok_or_else(|| anyhow!("unknown --flow {v} (see the flows command)"))?,
+                Some(v) => parse_flow(v).ok_or_else(|| {
+                    anyhow!("invalid --flow value: {} (see the flows command)", unknown_flow(v))
+                })?,
                 None => Dataflow::EcoFlow,
             };
             let batch = parsed.usize_or("batch", crate::report::figures::BATCH);
@@ -451,16 +462,32 @@ pub fn run(args: &[String]) -> Result<()> {
                 emit(t, csv);
             }
         }
-        "report" => {
-            // Every table and figure, in paper order, over one session —
-            // the repeated-layer/repeated-figure sweeps collapse.
-            for id in TableId::ALL {
-                emit(session.table(id), csv);
+        "report" => match parsed.options.get("table") {
+            // `--table NAME` narrows the run to one target (any table
+            // or figure spelling the wire protocol accepts)
+            Some(v) if v == "true" => {
+                return Err(anyhow!("--table requires a target name (e.g. shootout)"))
             }
-            for id in FigureId::ALL {
-                emit(session.figure(id), csv);
+            Some(v) => {
+                let target = ReportTarget::parse(v).ok_or_else(|| {
+                    anyhow!(
+                        "unknown --table {v} (table1..table8, traffic, pareto, shootout, fig3..fig12)"
+                    )
+                })?;
+                emit(target.generate(&session), csv);
             }
-        }
+            None => {
+                // Every table and figure, in paper order, over one
+                // session — the repeated-layer/repeated-figure sweeps
+                // collapse.
+                for id in TableId::ALL {
+                    emit(session.table(id), csv);
+                }
+                for id in FigureId::ALL {
+                    emit(session.figure(id), csv);
+                }
+            }
+        },
         "validate" => {
             let dir = parsed
                 .options
@@ -591,8 +618,9 @@ pub fn run(args: &[String]) -> Result<()> {
             space.batch = parsed.usize_or("batch", space.batch);
             let mut cfg = crate::dse::ExploreConfig::new(space);
             if let Some(v) = parsed.options.get("flow") {
-                let flow = parse_flow(v)
-                    .ok_or_else(|| anyhow!("unknown --flow {v} (see the flows command)"))?;
+                let flow = parse_flow(v).ok_or_else(|| {
+                    anyhow!("invalid --flow value: {} (see the flows command)", unknown_flow(v))
+                })?;
                 cfg.flows = vec![flow];
             }
             cfg.frontier_exact = parsed.flag("frontier-exact");
@@ -872,6 +900,37 @@ mod tests {
         // EcoFlow is zero-free everywhere; the baselines pad backward ops
         assert!(rendered.contains("zero-free"), "{rendered}");
         assert!(rendered.contains("padded"), "{rendered}");
+    }
+
+    #[test]
+    fn flows_lists_the_comparator_zoo() {
+        // run() registers the comparators before touching the registry,
+        // so the listing carries them with their stable store codes
+        run(&["flows".into()]).unwrap();
+        let rendered = flows_table().render();
+        for (name, code) in [("Kseg", "32769"), ("CARLA", "32770"), ("Decomp", "32771")] {
+            assert!(rendered.contains(name), "{rendered}");
+            assert!(rendered.contains(code), "{rendered}");
+        }
+        // Kseg's gather is stride-independent on transposed conv;
+        // CARLA's policy flips per stride regime
+        assert!(rendered.contains("stride-dep."), "{rendered}");
+    }
+
+    #[test]
+    fn report_table_option_rejects_bad_usage() {
+        let err = run(&["report".into(), "--table".into()]).unwrap_err();
+        assert!(err.to_string().contains("--table"), "{err}");
+        let err = run(&["report".into(), "--table".into(), "table9".into()]).unwrap_err();
+        assert!(err.to_string().contains("shootout"), "lists valid names: {err}");
+    }
+
+    #[test]
+    fn flow_errors_list_the_registered_names() {
+        let err = run(&["cost".into(), "--flow".into(), "warp".into()]).unwrap_err();
+        for name in ["--flow", "EcoFlow", "Kseg", "CARLA", "Decomp"] {
+            assert!(err.to_string().contains(name), "{err}");
+        }
     }
 
     #[test]

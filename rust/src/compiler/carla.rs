@@ -1,0 +1,207 @@
+//! CARLA-style reconfigurable comparator.
+//!
+//! CARLA (PAPERS.md) is a reconfigurable convolution accelerator that
+//! selects its dataflow *per layer shape* rather than committing to one
+//! schedule: layers whose geometry rewards the gathered zero-free
+//! mapping take it, layers where the gather cannot win fall back to the
+//! plain padded row-stationary execution. We model that behavioural
+//! envelope as a small **policy table** consulted by
+//! [`compile`](DataflowCompiler::compile) and `execute` alike — the
+//! mapping is a pure function of the plane-op geometry `(K, S)`, so
+//! compiled plans, simulated passes, and the analytical
+//! [`estimate`](DataflowCompiler::estimate) all agree on which schedule
+//! a layer runs.
+//!
+//! The policy (see [`mapping`]):
+//!
+//! | plane op            | shape           | mapping                     |
+//! |---------------------|-----------------|-----------------------------|
+//! | direct              | any             | `rs-direct` (already dense) |
+//! | transpose           | S = 1           | `rs-padded` (border only)   |
+//! | transpose           | S > 1, K ≥ S    | `ecoflow-gather` (zero-free)|
+//! | transpose           | S > K           | `rs-padded` (sparse output) |
+//! | dilated             | S = 1           | `rs-direct` (dilation no-op)|
+//! | dilated             | S > 1           | `ecoflow-gather` (zero-free)|
+//!
+//! Registered with stable store code `0x8002` by
+//! [`ensure_comparators_registered`](super::ensure_comparators_registered).
+
+use super::{ecoflow, rs};
+use crate::compiler::tiling::PlaneOp;
+use crate::compiler::{DataflowCompiler, PassPlan, PlaneOperands};
+use crate::config::ArchConfig;
+use crate::sim::stats::PassStats;
+use crate::sim::SimError;
+use crate::tensor::Mat;
+
+/// The policy table: which mapping the reconfigurable fabric selects
+/// for a plane op of this shape. Pure in the geometry, so every tier
+/// (plan, exact simulation, analytical estimate) derives the same
+/// choice.
+pub fn mapping(op: PlaneOp) -> &'static str {
+    match op {
+        PlaneOp::Direct { .. } => "rs-direct",
+        PlaneOp::Transpose { k, s, .. } => {
+            if s > 1 && k >= s {
+                "ecoflow-gather"
+            } else {
+                "rs-padded"
+            }
+        }
+        PlaneOp::Dilated { s, .. } => {
+            if s > 1 {
+                "ecoflow-gather"
+            } else {
+                "rs-direct"
+            }
+        }
+    }
+}
+
+/// The CARLA comparator: per-layer-shape reconfiguration between the
+/// gathered zero-free schedule and the padded row-stationary baseline.
+pub struct CarlaCompiler;
+
+impl DataflowCompiler for CarlaCompiler {
+    fn name(&self) -> &'static str {
+        "CARLA"
+    }
+
+    fn default_arch(&self) -> ArchConfig {
+        ArchConfig::eyeriss()
+    }
+
+    /// Zero-freedom follows the policy table exactly: the gathered
+    /// mappings never touch an inserted zero; `rs-padded` does unless
+    /// the geometry degenerates (K = 1 at unit stride pads nothing;
+    /// unit-stride dilation is the identity, so `rs-direct` is dense).
+    fn zero_free(&self, op: PlaneOp) -> bool {
+        match op {
+            PlaneOp::Direct { .. } => true,
+            PlaneOp::Transpose { k, s, .. } => (s > 1 && k >= s) || (k == 1 && s == 1),
+            PlaneOp::Dilated { .. } => true,
+        }
+    }
+
+    /// Consults the policy table: the plan's zero-freedom (and hence
+    /// its useful-MAC slot count) is the selected mapping's, not a
+    /// fixed property of the flow.
+    fn compile(&self, arch: &ArchConfig, op: PlaneOp) -> PassPlan {
+        let _ = arch;
+        debug_assert!(!mapping(op).is_empty());
+        PassPlan::describe(self.name(), op, self.zero_free(op))
+    }
+
+    fn execute(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        ops: &PlaneOperands,
+    ) -> Result<(Mat, PassStats), SimError> {
+        match op {
+            PlaneOp::Direct { s, .. } => rs::direct_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Transpose { k, s, .. } => match mapping(op) {
+                "ecoflow-gather" => ecoflow::transpose_pass(arch, &ops.a, &ops.b, s),
+                _ => {
+                    debug_assert!(s == 1 || s > k);
+                    rs::transpose_via_padding(arch, &ops.a, &ops.b, s)
+                }
+            },
+            PlaneOp::Dilated { s, .. } => match mapping(op) {
+                "ecoflow-gather" => ecoflow::dilated_pass(arch, &ops.a, &ops.b, s),
+                // S = 1: dilation is the identity, the padded path is
+                // already a dense direct pass
+                _ => rs::dilated_via_padding(arch, &ops.a, &ops.b, s),
+            },
+        }
+    }
+
+    fn estimate(&self, arch: &ArchConfig, proxy: PlaneOp, nf_tile: usize) -> PassStats {
+        let _ = nf_tile;
+        // Each policy row maps onto the microprogrammed closed form of
+        // the schedule it selects: the gathered rows are the EcoFlow
+        // forms, the padded rows the RS forms. Unit-stride dilation is
+        // the one seam: the pass runs the (dense) padded program, whose
+        // geometry is exactly the estimator's padded dilated form.
+        match proxy {
+            PlaneOp::Dilated { s, .. } if s == 1 => {
+                crate::dse::estimator::microprogrammed(arch, proxy, false)
+            }
+            _ => crate::dse::estimator::microprogrammed(arch, proxy, self.zero_free(proxy)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv;
+    use crate::util::prng::Prng;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::eyeriss()
+    }
+
+    #[test]
+    fn policy_covers_every_shape_regime() {
+        assert_eq!(mapping(PlaneOp::Direct { hx: 8, k: 3, s: 2 }), "rs-direct");
+        assert_eq!(
+            mapping(PlaneOp::Transpose { he: 4, k: 3, s: 1 }),
+            "rs-padded"
+        );
+        assert_eq!(
+            mapping(PlaneOp::Transpose { he: 4, k: 3, s: 2 }),
+            "ecoflow-gather"
+        );
+        assert_eq!(
+            mapping(PlaneOp::Transpose { he: 4, k: 2, s: 3 }),
+            "rs-padded"
+        );
+        assert_eq!(mapping(PlaneOp::Dilated { he: 4, k: 3, s: 1 }), "rs-direct");
+        assert_eq!(
+            mapping(PlaneOp::Dilated { he: 4, k: 3, s: 2 }),
+            "ecoflow-gather"
+        );
+    }
+
+    #[test]
+    fn every_policy_row_is_functionally_correct() {
+        let arch = arch();
+        let c = CarlaCompiler;
+        let mut rng = Prng::new(0xCA71A);
+        // transpose: all three policy rows
+        for (he, k, s) in [(4, 3, 1), (4, 3, 2), (3, 2, 3)] {
+            let op = PlaneOp::Transpose { he, k, s };
+            let ops = PlaneOperands {
+                a: Mat::random(he, he, &mut rng),
+                b: Mat::random(k, k, &mut rng),
+            };
+            let (got, _) = c.execute(&arch, op, &ops).unwrap();
+            got.assert_close(&conv::transposed_conv(&ops.a, &ops.b, s), 1e-3);
+        }
+        // dilated: both policy rows
+        for (he, k, s) in [(3, 3, 1), (3, 3, 2)] {
+            let hx = s * (he - 1) + k;
+            let op = PlaneOp::Dilated { he, k, s };
+            let ops = PlaneOperands {
+                a: Mat::random(hx, hx, &mut rng),
+                b: Mat::random(he, he, &mut rng),
+            };
+            let (got, _) = c.execute(&arch, op, &ops).unwrap();
+            got.assert_close(&conv::dilated_conv(&ops.a, &ops.b, s), 1e-3);
+        }
+    }
+
+    #[test]
+    fn zero_freedom_matches_the_selected_mapping() {
+        let c = CarlaCompiler;
+        // gathered rows are zero-free, padded rows are not
+        assert!(c.zero_free(PlaneOp::Transpose { he: 4, k: 3, s: 2 }));
+        assert!(!c.zero_free(PlaneOp::Transpose { he: 4, k: 3, s: 1 }));
+        assert!(!c.zero_free(PlaneOp::Transpose { he: 4, k: 2, s: 3 }));
+        // dilation: gathered for S > 1, identity for S = 1 — dense
+        // either way
+        assert!(c.zero_free(PlaneOp::Dilated { he: 4, k: 3, s: 2 }));
+        assert!(c.zero_free(PlaneOp::Dilated { he: 4, k: 3, s: 1 }));
+    }
+}

@@ -434,6 +434,41 @@ mod tests {
     }
 
     #[test]
+    fn phase_math_pinned_against_zero_inserted_reference() {
+        // Pins the phase-decomposition index math — the
+        // `(y + 1).saturating_sub(k).div_ceil(s)` contributor-row lower
+        // bound and the `rem_euclid` phase map — against the
+        // zero-inserted reference across all three stride regimes
+        // (k < s, k == s, k > s). The gathered schedule must produce
+        // the same plane the dilate-pad-convolve reference does while
+        // issuing exactly the He·We·K² useful MACs the reference
+        // wastes zeros on.
+        let arch = arch();
+        for (he, we, k, s) in [
+            (3, 4, 2, 3), // k < s
+            (2, 3, 2, 4), // k < s, wider gap
+            (3, 3, 3, 3), // k == s
+            (2, 2, 2, 2), // k == s, minimal
+            (4, 3, 5, 2), // k > s
+            (2, 2, 3, 2), // k > s, paper example
+        ] {
+            let mut rng = Prng::new((he * 41 + we * 13 + k * 5 + s) as u64);
+            let e = Mat::from_fn(he, we, |_, _| 1.0 + rng.f32());
+            let w = Mat::from_fn(k, k, |_, _| 1.0 + rng.f32());
+            let naive = conv::naive_transposed_conv(&e, &w, s);
+            let (got, stats) = transpose_pass(&arch, &e, &w, s).unwrap();
+            got.assert_close(&naive.out, 1e-3);
+            // gathered: exactly the useful slots, nothing gated
+            assert_eq!(stats.gated_macs, 0, "k={k} s={s}");
+            assert_eq!(stats.macs, (he * we * k * k) as u64, "k={k} s={s}");
+            // the reference really does insert zeros in these regimes —
+            // the savings the gather exists to capture
+            assert!(naive.zero_macs > 0, "k={k} s={s}");
+            assert_eq!((naive.total_macs - naive.zero_macs) as u64, stats.macs);
+        }
+    }
+
+    #[test]
     fn transpose_tiled_larger_than_array() {
         // error map larger than the 13x15 array: grouping tiles engage
         let arch = arch();

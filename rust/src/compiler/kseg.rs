@@ -1,0 +1,373 @@
+//! Kseg — kernel-segregated transposed convolution (comparator).
+//!
+//! Tida et al. (PAPERS.md) make the same observation EcoFlow builds on:
+//! in a transposed convolution the output phase `(y mod S, x mod S)`
+//! decides which kernel taps can ever contribute, so splitting the
+//! `K×K` kernel into `S×S` output-phase sub-kernels removes every
+//! inserted zero — the `h_idx % S == 0` gather of SNIPPETS.md §3.
+//! Where EcoFlow re-labels the *products* (circular shift, §4.1), Kseg
+//! segregates the *weights*: each PE owns one output column and the
+//! phase sub-kernel column that feeds it, so the pass runs on an
+//! unmodified inference-era row-stationary array
+//! ([`ArchConfig::eyeriss`]) with register-resident operands only — no
+//! broadcast stream at all.
+//!
+//! Schedule: PE `(p, c)` of a `He × Win` set holds error row `p`'s
+//! gathered elements `e[p, j]` for the columns `j` with
+//! `0 ≤ x − jS < K` (column `x`'s contributor set) plus the segregated
+//! taps `w[u, x − jS]`, and produces the partials of outputs
+//! `(pS + u, x)`. Output rows accumulate over vertically adjacent PEs
+//! through the local links — the same chain discipline (and the same
+//! contributor-row algebra `p ∈ [⌈(y−K+1)/S⌉, ⌊y/S⌋]`) as the EcoFlow
+//! transpose program, so the two flows are directly comparable in the
+//! Shootout table. Direct convolutions run the stock RS schedule;
+//! dilated convolutions (filter gradients) fall back to the padded RS
+//! execution — Kseg is a *transpose-only* specialization, which is
+//! exactly what makes it an interesting head-to-head comparator.
+
+use crate::compiler::tiling::PlaneOp;
+use crate::compiler::{rs, DataflowCompiler, PlaneOperands};
+use crate::config::ArchConfig;
+use crate::sim::batch::run_shared_program_chunked;
+use crate::sim::microprogram::{Microprogram, Operands, PeInstr, SrcRef, WSrc, XSrc};
+use crate::sim::stats::PassStats;
+use crate::sim::SimError;
+use crate::tensor::Mat;
+
+/// Error columns feeding output column `x`: the contiguous `j` range
+/// with `0 ≤ x − jS < K`, clipped to the error width. Empty exactly when
+/// `x mod S ≥ K` (the structurally-zero columns a stride > kernel
+/// transposed conv leaves behind).
+fn gather_cols(x: usize, we: usize, k: usize, s: usize) -> std::ops::RangeInclusive<usize> {
+    let j_lo = (x + 1).saturating_sub(k).div_ceil(s);
+    let j_hi = (x / s).min(we.saturating_sub(1));
+    j_lo..=j_hi
+}
+
+/// Compile the kernel-segregated transposed-convolution pass for a tile
+/// of `th` error rows (operand A is the full-width `th × we` error band)
+/// producing output columns `[x0, x0 + tw)` of a stride-`s` `k × k`
+/// transposed conv. Both operands are register-resident: each PE
+/// preloads its gathered error elements and its phase sub-kernel taps,
+/// so the program has no broadcast or multicast stream.
+pub fn transpose_program(
+    th: usize,
+    tw: usize,
+    x0: usize,
+    we: usize,
+    k: usize,
+    s: usize,
+    rf_psum: usize,
+) -> Microprogram {
+    assert!(th >= 1 && tw >= 1 && we >= 1 && k >= 1 && s >= 1);
+    let out_rows = s * (th - 1) + k;
+    let mut mp = Microprogram::new(th, tw, out_rows, tw, "kseg-transpose");
+    // stride > K leaves output rows/cols no phase sub-kernel covers
+    mp.zero_unwritten = s > k;
+    // one psum label per filter row u in flight; chunking the u range
+    // bounds the register file exactly like EcoFlow's grouping
+    let cu = rf_psum.clamp(1, k);
+
+    let mut used_j = vec![false; we];
+    for c in 0..tw {
+        let x = x0 + c;
+        let js: Vec<usize> = gather_cols(x, we, k, s).collect();
+        if js.is_empty() {
+            continue; // structurally-zero output column (s > k)
+        }
+        for &j in &js {
+            used_j[j] = true;
+        }
+        for pl in 0..th {
+            let pe = mp.pe_id(pl, c);
+            // gathered error elements: e[pl, j] for the contributor set
+            mp.x_preload[pe] = js
+                .iter()
+                .map(|&j| SrcRef::A((pl * we + j) as u32))
+                .collect();
+            // segregated sub-kernel: taps w[u, x − jS] only — never a
+            // zero, never an unused phase
+            let mut w_regs = Vec::with_capacity(k * js.len());
+            for u in 0..k {
+                for &j in &js {
+                    let v = x - j * s;
+                    w_regs.push(SrcRef::B((u * k + v) as u32));
+                }
+            }
+            mp.w_preload[pe] = w_regs;
+
+            let mut prog = Vec::new();
+            let mut u0 = 0;
+            while u0 < k {
+                let u1 = (u0 + cu).min(k);
+                for u in u0..u1 {
+                    let acc = (u - u0) as u8;
+                    for (ji, _) in js.iter().enumerate() {
+                        prog.push(PeInstr::Mac {
+                            acc,
+                            w: WSrc::Reg((u * js.len() + ji) as u16),
+                            x: XSrc::Reg(ji as u16),
+                        });
+                    }
+                }
+                // retire the chunk's labels in ascending output-row
+                // order — both ends of every vertical link observe the
+                // same sequence, the FIFO-consistency the EcoFlow
+                // transpose chain relies on
+                for u in u0..u1 {
+                    let y = pl * s + u;
+                    let p_hi = (y / s).min(th - 1);
+                    let p_lo = (y + 1).saturating_sub(k).div_ceil(s);
+                    debug_assert!((p_lo..=p_hi).contains(&pl));
+                    let acc = (u - u0) as u8;
+                    if pl != p_hi {
+                        prog.push(PeInstr::RecvAdd { acc });
+                    }
+                    if pl == p_lo {
+                        prog.push(PeInstr::WriteOut {
+                            acc,
+                            out_idx: (y * tw + c) as u32,
+                        });
+                    } else {
+                        prog.push(PeInstr::PassUp { acc });
+                    }
+                }
+                u0 = u1;
+            }
+            mp.programs[pe] = prog;
+        }
+    }
+    // error elements are multicast: several output columns gather the
+    // same e[p, j], but the GIN/GB cost is the unique footprint
+    let unique = used_j.iter().filter(|u| **u).count();
+    mp.x_preload_unique = Some(th * unique);
+    mp
+}
+
+/// Run the kernel-segregated transposed conv over a full error map,
+/// tiling error rows to the array height and output columns to the
+/// array width. Column tiles partition the output exactly (each output
+/// column lives in one PE column); row bands overlap by `k − s` output
+/// rows and are accumulated in the global buffer, with the
+/// read-modify-write traffic charged to the stats.
+pub fn transpose_pass(
+    arch: &ArchConfig,
+    err: &Mat,
+    w: &Mat,
+    s: usize,
+) -> Result<(Mat, PassStats), SimError> {
+    let k = w.rows;
+    let (he, we) = (err.rows, err.cols);
+    let hin = s * (he - 1) + k;
+    let win = s * (we - 1) + k;
+    let (tr, tc) = (arch.array_rows.max(1), arch.array_cols.max(1));
+
+    // enumerate (error-row band × output-column) tiles row-major
+    let mut tiles: Vec<(usize, usize, usize, usize)> = Vec::new(); // (p0, th, x0, tw)
+    let mut p0 = 0;
+    while p0 < he {
+        let th = tr.min(he - p0);
+        let mut x0 = 0;
+        while x0 < win {
+            let tw = tc.min(win - x0);
+            tiles.push((p0, th, x0, tw));
+            x0 += tw;
+        }
+        p0 += th;
+    }
+
+    // Tiles sharing (th, x0, tw) share one microprogram (the gather
+    // pattern depends on the absolute column x0, not on the row band):
+    // row bands of a tall error map fuse into lane-parallel batched
+    // runs, bit-identical to the scalar path by the engine contract.
+    let mut groups: Vec<((usize, usize, usize), Vec<usize>)> = Vec::new();
+    for (i, &(_, th, x0, tw)) in tiles.iter().enumerate() {
+        match groups.iter().position(|(g, _)| *g == (th, x0, tw)) {
+            Some(p) => groups[p].1.push(i),
+            None => groups.push(((th, x0, tw), vec![i])),
+        }
+    }
+    let mut results: Vec<Option<(Mat, PassStats)>> = (0..tiles.len()).map(|_| None).collect();
+    for ((th, x0, tw), members) in groups {
+        let mp = transpose_program(th, tw, x0, we, k, s, arch.rf_psum);
+        let outs = run_shared_program_chunked(arch, &mp, members.len(), |j| {
+            let (p0, _, _, _) = tiles[members[j]];
+            Operands {
+                a: Mat::from_fn(th, we, |r, c| err.at(p0 + r, c)),
+                b: w.clone(),
+            }
+        })?;
+        for (&i, r) in members.iter().zip(outs) {
+            results[i] = Some(r);
+        }
+    }
+
+    // stitch: columns partition the output; row bands halo-accumulate
+    let mut out = Mat::zeros(hin, win);
+    let mut written = Mat::zeros(hin, win);
+    let mut stats = PassStats::default();
+    for (&(p0, _, x0, _), r) in tiles.iter().zip(results) {
+        let (local, st) = r.expect("every tile simulated");
+        stats.accumulate(&st);
+        for r in 0..local.rows {
+            for c in 0..local.cols {
+                let (gy, gx) = (p0 * s + r, x0 + c);
+                if written.at(gy, gx) != 0.0 {
+                    // halo accumulation: read-modify-write in the GB
+                    stats.gbuf_reads += 1;
+                    stats.gbuf_writes += 1;
+                }
+                *out.at_mut(gy, gx) += local.at(r, c);
+                *written.at_mut(gy, gx) = 1.0;
+            }
+        }
+    }
+    Ok((out, stats))
+}
+
+/// The Kseg comparator: zero-free kernel-segregated transposed convs on
+/// stock inference hardware; direct convs on the plain RS schedule;
+/// dilated convs via the padded RS fallback (the flow's published scope
+/// stops at deconvolution). Registered with stable store code `0x8001`
+/// by [`ensure_comparators_registered`](super::ensure_comparators_registered).
+pub struct KsegCompiler;
+
+impl DataflowCompiler for KsegCompiler {
+    fn name(&self) -> &'static str {
+        "Kseg"
+    }
+
+    fn default_arch(&self) -> ArchConfig {
+        // the selling point: unmodified inference-era hardware
+        ArchConfig::eyeriss()
+    }
+
+    fn zero_free(&self, op: PlaneOp) -> bool {
+        // transposed convs gather, so no zero is ever inserted; the
+        // dilated fallback pads like RS
+        !matches!(op, PlaneOp::Dilated { .. })
+    }
+
+    fn execute(
+        &self,
+        arch: &ArchConfig,
+        op: PlaneOp,
+        ops: &PlaneOperands,
+    ) -> Result<(Mat, PassStats), SimError> {
+        match op {
+            PlaneOp::Direct { s, .. } => rs::direct_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Transpose { s, .. } => transpose_pass(arch, &ops.a, &ops.b, s),
+            PlaneOp::Dilated { s, .. } => rs::dilated_via_padding(arch, &ops.a, &ops.b, s),
+        }
+    }
+
+    fn estimate(&self, arch: &ArchConfig, proxy: PlaneOp, nf_tile: usize) -> PassStats {
+        let _ = nf_tile;
+        // The microprogrammed closed forms cover every leg exactly or
+        // tightly: Direct and the padded Dilated fallback ARE the RS
+        // programs the estimator counts, and the zero-free transpose
+        // issues the same He·We·K² useful MACs with the same
+        // chain-and-stitch structure as the EcoFlow gather it mirrors.
+        crate::dse::estimator::microprogrammed(arch, proxy, self.zero_free(proxy))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv;
+    use crate::util::prng::{for_each_case, Prng};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::eyeriss()
+    }
+
+    #[test]
+    fn transpose_matches_oracle_across_stride_regimes() {
+        // k < s, k == s, k > s pinned explicitly (the satellite-2 axis)
+        for (he, we, k, s) in [
+            (3, 4, 2, 3), // k < s
+            (3, 3, 3, 3), // k == s
+            (4, 3, 5, 2), // k > s
+            (2, 2, 3, 2), // the paper's running example geometry
+            (5, 4, 3, 1), // unit stride
+            (1, 1, 4, 3), // degenerate single error element
+        ] {
+            let mut rng = Prng::new((he * 31 + we * 7 + k * 3 + s) as u64);
+            let e = Mat::random(he, we, &mut rng);
+            let w = Mat::random(k, k, &mut rng);
+            let (got, _) = transpose_pass(&arch(), &e, &w, s).unwrap();
+            let want = conv::transposed_conv(&e, &w, s);
+            assert_eq!((got.rows, got.cols), (want.rows, want.cols), "k={k} s={s}");
+            got.assert_close(&want, 1e-3);
+        }
+    }
+
+    #[test]
+    fn transpose_matches_oracle_sweep() {
+        let arch = arch();
+        for_each_case(60, 0x5E6, |rng| {
+            let he = rng.range(1, 7);
+            let we = rng.range(1, 7);
+            let k = rng.range(1, 6);
+            let s = rng.range(1, 4);
+            let e = Mat::random(he, we, rng);
+            let w = Mat::random(k, k, rng);
+            let (got, _) = transpose_pass(&arch, &e, &w, s).unwrap();
+            got.assert_close(&conv::transposed_conv(&e, &w, s), 1e-3);
+        });
+    }
+
+    #[test]
+    fn transpose_tiled_larger_than_array() {
+        // win = 2·22 + 3 = 47 > 15 array columns: column tiles engage,
+        // each with its own absolute-phase gather pattern, and 20 error
+        // rows > 13 array rows: row bands halo-accumulate
+        let arch = arch();
+        let mut rng = Prng::new(0x5E7);
+        let e = Mat::random(20, 23, &mut rng);
+        let w = Mat::random(3, 3, &mut rng);
+        let (got, _) = transpose_pass(&arch, &e, &w, 2).unwrap();
+        got.assert_close(&conv::transposed_conv(&e, &w, 2), 1e-3);
+    }
+
+    #[test]
+    fn transpose_never_inserts_zeros() {
+        // the kernel-segregation claim: with dense inputs, not a single
+        // gated MAC and exactly He·We·K² useful ones — for every stride
+        // regime, including stride > kernel
+        let arch = arch();
+        for (he, we, k, s) in [(5, 4, 3, 2), (3, 3, 2, 3), (4, 4, 3, 3), (6, 5, 3, 1)] {
+            let mut rng = Prng::new((he + we * 5 + k * 11 + s * 17) as u64);
+            let e = Mat::from_fn(he, we, |_, _| 1.0 + rng.f32());
+            let w = Mat::from_fn(k, k, |_, _| 1.0 + rng.f32());
+            let (_, stats) = transpose_pass(&arch, &e, &w, s).unwrap();
+            assert_eq!(stats.gated_macs, 0, "k={k} s={s}");
+            assert_eq!(stats.macs, (he * we * k * k) as u64, "k={k} s={s}");
+        }
+    }
+
+    #[test]
+    fn transpose_program_validates_within_budgets() {
+        for (k, s) in [(3, 2), (5, 1), (5, 4), (11, 4), (2, 3), (7, 3)] {
+            for x0 in [0, 1, 7] {
+                let mp = transpose_program(3, 4, x0, 6, k, s, 24);
+                assert!(
+                    mp.acc_registers_used() <= 24,
+                    "k={k} s={s} x0={x0}: {}",
+                    mp.acc_registers_used()
+                );
+                assert!(mp.validate(24).is_empty(), "k={k} s={s} x0={x0}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_cols_tracks_the_phase() {
+        // k=3, s=2: column 4 gathers j ∈ {1, 2}; column 5 gathers {2}
+        assert_eq!(gather_cols(4, 6, 3, 2).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(gather_cols(5, 6, 3, 2).collect::<Vec<_>>(), vec![2]);
+        // s > k: phase x mod s ≥ k is structurally empty
+        assert!(gather_cols(2, 6, 2, 3).collect::<Vec<_>>().is_empty());
+    }
+}

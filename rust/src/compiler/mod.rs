@@ -13,6 +13,12 @@
 //! * [`lowering`] + [`tpu`] — im2col lowering onto the output-stationary
 //!   systolic matmul array (TPU baseline).
 //! * [`ganax`]    — behavioural GANAX comparator (§6.3).
+//! * [`kseg`], [`carla`], [`decomp`] — related-work comparators
+//!   (kernel-segregated transpose conv, CARLA-style per-layer
+//!   reconfiguration, Multi-Mode/HUGE2-style decomposed deconvolution),
+//!   registered with stable store codes by
+//!   [`ensure_comparators_registered`] and ranked head-to-head by the
+//!   Shootout table (`report --table shootout`).
 //! * [`tiling`]   — the plane-op algebra (§3.1/§4.3): op families, MAC-slot
 //!   closed forms and the capped proxy geometry.
 //! * [`keys`]     — content-address fingerprints (environment, evaluation,
@@ -22,6 +28,8 @@
 //! [`crate::cost`], fed by both simulated fabrics through the shared
 //! [`PassStats`](crate::sim::stats::PassStats).
 
+pub mod carla;
+pub mod decomp;
 pub mod ecoflow;
 pub mod ganax;
 pub mod keys;
@@ -32,3 +40,25 @@ pub mod tiling;
 pub mod tpu;
 
 pub use registry::{register, Dataflow, DataflowCompiler, PassPlan, PlaneOperands};
+
+/// Register the three related-work comparator flows
+/// ([`kseg`]/[`carla`]/[`decomp`]) with their reserved stable store
+/// codes (`0x8001`–`0x8003`), idempotently, and return their handles.
+/// Every entry point that sweeps "all registered flows" (the CLI, the
+/// service, the Shootout table, the differential test harnesses) calls
+/// this first so the comparator zoo is always addressable by name and
+/// its store entries survive across processes.
+pub fn ensure_comparators_registered() -> [Dataflow; 3] {
+    use std::sync::OnceLock;
+    static FLOWS: OnceLock<[Dataflow; 3]> = OnceLock::new();
+    *FLOWS.get_or_init(|| {
+        static KSEG: kseg::KsegCompiler = kseg::KsegCompiler;
+        static CARLA: carla::CarlaCompiler = carla::CarlaCompiler;
+        static DECOMP: decomp::DecompCompiler = decomp::DecompCompiler;
+        [
+            registry::register_stable(&KSEG, 0x8001).expect("Kseg store code reserved"),
+            registry::register_stable(&CARLA, 0x8002).expect("CARLA store code reserved"),
+            registry::register_stable(&DECOMP, 0x8003).expect("Decomp store code reserved"),
+        ]
+    })
+}

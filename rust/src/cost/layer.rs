@@ -56,6 +56,12 @@ impl LayerCost {
     pub fn millis(&self) -> f64 {
         self.seconds * 1e3
     }
+
+    /// Energy-delay product in µJ·s — the Shootout table's combined
+    /// ranking metric (low is better on both axes at once).
+    pub fn edp(&self) -> f64 {
+        self.energy.total_uj() * self.seconds
+    }
 }
 
 /// Per-pass DRAM footprint of a layer in bytes (16-bit words; §6.2 trains

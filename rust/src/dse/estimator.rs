@@ -64,7 +64,7 @@ pub fn sym_rel_err(a: f64, b: f64) -> f64 {
 /// ([`PlaneOp::mac_slots`] with `zero_free = true`): padded executions
 /// multiply by inserted zeros in exactly the complementary slots, and
 /// random proxy operands are nonzero, so the split is structural.
-fn split_macs(arch: &ArchConfig, stats: &mut PassStats, useful_slots: u64) {
+pub(crate) fn split_macs(arch: &ArchConfig, stats: &mut PassStats, useful_slots: u64) {
     let total = stats.macs + stats.gated_macs;
     if arch.clock_gating {
         let useful = useful_slots.min(total);
@@ -146,7 +146,7 @@ pub fn systolic(arch: &ArchConfig, op: PlaneOp, nf_tile: usize) -> PassStats {
 /// `hx × hx` plane: output rows tiled across the array columns, each
 /// tile preloading its filter rows + input rows and running one
 /// `k`-deep accumulation chain per output position.
-fn rs_direct(arch: &ArchConfig, hx: usize, k: usize, stride: usize) -> PassStats {
+pub(crate) fn rs_direct(arch: &ArchConfig, hx: usize, k: usize, stride: usize) -> PassStats {
     let fw = arch.noc.filter_words_per_cycle(arch.word_bits) as u64;
     let iw = arch.noc.ifmap_words_per_cycle(arch.word_bits) as u64;
     let stages = (arch.mul_stages + arch.add_stages) as u64;

@@ -450,20 +450,28 @@ impl Explorer {
 /// Indices of the 2-D Pareto frontier of `(cycles, energy)` costs, in
 /// ascending-cycles order: sort by cycles (energy tie-break), keep
 /// points that strictly improve energy.
+///
+/// NaN-safe and deterministic: ordering uses [`f64::total_cmp`] (a
+/// total order, so the sort is well-defined even when a swept point's
+/// cost degenerates to NaN — e.g. a zero-word-bits arch) and NaN-cost
+/// points are excluded from the frontier outright (NaN compares
+/// greater than every real under `total_cmp`, and a cost that is
+/// not-a-number dominates nothing). The previous
+/// `partial_cmp(..).unwrap_or(Equal)` made the sort order — and hence
+/// the frontier — depend on the incidental input order of the NaN
+/// points.
 pub fn pareto_indices(costs: &[(u64, f64)]) -> Vec<usize> {
     let mut order: Vec<usize> = (0..costs.len()).collect();
     order.sort_by(|&a, &b| {
-        costs[a].0.cmp(&costs[b].0).then(
-            costs[a]
-                .1
-                .partial_cmp(&costs[b].1)
-                .unwrap_or(std::cmp::Ordering::Equal),
-        )
+        costs[a]
+            .0
+            .cmp(&costs[b].0)
+            .then(costs[a].1.total_cmp(&costs[b].1))
     });
     let mut best = f64::INFINITY;
     let mut out = Vec::new();
     for i in order {
-        if costs[i].1 < best {
+        if !costs[i].1.is_nan() && costs[i].1 < best {
             best = costs[i].1;
             out.push(i);
         }
@@ -495,6 +503,32 @@ mod tests {
         assert_eq!(pareto_indices(&[(5, 1.0)]), vec![0]);
         // exact duplicates: exactly one survives
         assert_eq!(pareto_indices(&[(5, 1.0), (5, 1.0)]).len(), 1);
+    }
+
+    #[test]
+    fn pareto_excludes_nan_costs_deterministically() {
+        // a NaN-cost swept point (zero-word-bits arch degenerates the
+        // energy model) must never enter the frontier, and its presence
+        // must not perturb the ordering of the real points — wherever
+        // it lands in the input
+        let real = [(10, 5.0), (12, 4.0), (30, 1.0), (40, 2.0)];
+        let want: Vec<(u64, f64)> = vec![(10, 5.0), (12, 4.0), (30, 1.0)];
+        for slot in 0..=real.len() {
+            let mut costs: Vec<(u64, f64)> = real.to_vec();
+            costs.insert(slot, (11, f64::NAN));
+            let picked: Vec<(u64, f64)> = pareto_indices(&costs)
+                .into_iter()
+                .map(|i| costs[i])
+                .collect();
+            assert_eq!(picked, want, "NaN inserted at slot {slot}");
+            // byte-identical across repeated runs
+            assert_eq!(pareto_indices(&costs), pareto_indices(&costs));
+        }
+        // all-NaN input: empty frontier, not a panic or a garbage pick
+        assert_eq!(
+            pareto_indices(&[(1, f64::NAN), (2, f64::NAN)]),
+            Vec::<usize>::new()
+        );
     }
 
     #[test]

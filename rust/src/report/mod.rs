@@ -42,13 +42,18 @@ pub enum TableId {
     /// [`dse`](crate::dse) demo sweep's per-flow cycles × energy
     /// frontier, with exact re-runs and estimator error per point.
     Pareto,
+    /// Dataflow-shootout table (not a paper table): the full model zoo
+    /// swept across **all** registered flows — built-ins plus the
+    /// comparator zoo — three passes each, ranked per layer class by
+    /// cycles and energy with zero-freedom tallies.
+    Shootout,
 }
 
 impl TableId {
     /// All tables: the paper tables in paper order (the `report`
     /// command's order), then the traffic and Pareto tables the cost
     /// and DSE subsystems add.
-    pub const ALL: [TableId; 8] = [
+    pub const ALL: [TableId; 9] = [
         TableId::Noc,
         TableId::Validation,
         TableId::CnnLayers,
@@ -57,6 +62,7 @@ impl TableId {
         TableId::GanE2e,
         TableId::Traffic,
         TableId::Pareto,
+        TableId::Shootout,
     ];
 
     /// Regenerate this table over `session`.
@@ -70,6 +76,7 @@ impl TableId {
             TableId::GanE2e => tables::table8_gan_e2e(session),
             TableId::Traffic => tables::traffic_table(session),
             TableId::Pareto => tables::pareto_table(session),
+            TableId::Shootout => tables::shootout_table(session),
         }
     }
 }

@@ -2,6 +2,7 @@
 //! bench that trains the two topology variants through PJRT).
 
 use crate::analysis::noc;
+use crate::compiler::tiling::PlaneOp;
 use crate::compiler::Dataflow;
 use crate::config::{ArchConfig, NocConfig};
 use crate::coordinator::scheduler::SweepJob;
@@ -287,6 +288,149 @@ pub fn pareto_table(session: &Session) -> Table {
                 p.exact_energy_uj.map_or_else(|| "-".to_string(), |e| fnum(e, 1)),
                 p.cycles_err().map_or_else(|| "-".to_string(), pct),
                 p.energy_err().map_or_else(|| "-".to_string(), pct),
+            ]);
+        }
+    }
+    t
+}
+
+/// The Shootout layer-class names, in table order.
+const SHOOTOUT_CLASSES: [&str; 3] = ["direct", "transposed", "dilated"];
+
+fn shootout_class(op: PlaneOp) -> usize {
+    match op {
+        PlaneOp::Direct { .. } => 0,
+        PlaneOp::Transpose { .. } => 1,
+        PlaneOp::Dilated { .. } => 2,
+    }
+}
+
+/// The Shootout cell counter (`ecoflow_shootout_cells_total`), interned
+/// once: every (layer × pass × flow) cell swept for the table.
+fn shootout_cells() -> &'static std::sync::Arc<crate::obs::Counter> {
+    static C: std::sync::OnceLock<std::sync::Arc<crate::obs::Counter>> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| {
+        crate::obs::registry().counter(
+            "ecoflow_shootout_cells_total",
+            "",
+            "Shootout table cells (layer x pass x flow) swept",
+        )
+    })
+}
+
+#[derive(Clone, Default)]
+struct ShootoutAgg {
+    cycles: u64,
+    uj: f64,
+    edp: f64,
+    cells: u64,
+    zero_free: u64,
+    gated: u64,
+}
+
+/// The dataflow Shootout (ROADMAP direction 2, not a paper table):
+/// sweep the full model zoo — the Table 5 CNN evaluation set plus the
+/// Table 7 GAN layers — across **all registered flows** (built-ins and
+/// the comparator zoo of
+/// [`ensure_comparators_registered`](crate::compiler::ensure_comparators_registered)
+/// alike, so user-registered flows join automatically), all three
+/// training passes each, and rank the flows per layer class (direct /
+/// transposed / dilated) by total cycles and by total energy. The
+/// `zero-free` column states on how many of the class's cells the flow
+/// claims — and the gated-MAC tally verifies — that it inserted no
+/// zeros; `gated MACs` is the simulated count of multiplies that hit an
+/// inserted zero (Kseg must show 0 on every transposed-conv cell).
+/// One `session.sweep` answers the whole matrix, so repeated shapes
+/// across networks simulate once and the cells land in the memo table
+/// for later targets. Cell count is traced (`report/shootout` span) and
+/// counted in `ecoflow_shootout_cells_total`.
+pub fn shootout_table(session: &Session) -> Table {
+    crate::compiler::ensure_comparators_registered();
+    let flows = Dataflow::registered();
+    let mut layers = zoo::evaluation_layers();
+    layers.extend(gan::table7_layers());
+    let mut jobs = Vec::new();
+    for layer in &layers {
+        for pass in TrainingPass::ALL {
+            for &flow in &flows {
+                jobs.push(SweepJob {
+                    layer: layer.clone(),
+                    pass,
+                    flow,
+                    batch: crate::report::figures::BATCH,
+                });
+            }
+        }
+    }
+    shootout_cells().add(jobs.len() as u64);
+    let _span = crate::obs::span1("report/shootout", "cells", jobs.len() as u64);
+    let results = session.sweep(jobs);
+
+    let nf = flows.len();
+    let mut agg = vec![ShootoutAgg::default(); 3 * nf];
+    for r in results {
+        let c = r.cost.as_ref().expect("layer cost");
+        let op = PlaneOp::from_layer(&r.job.layer, r.job.pass);
+        let ci = shootout_class(op);
+        let fi = flows
+            .iter()
+            .position(|f| *f == r.job.flow)
+            .expect("swept flow is registered");
+        let a = &mut agg[ci * nf + fi];
+        a.cycles = a.cycles.saturating_add(c.cycles);
+        a.uj += c.energy.total_uj();
+        a.edp += c.edp();
+        a.cells += 1;
+        if r.job.flow.resolve().zero_free(op) {
+            a.zero_free += 1;
+        }
+        a.gated += c.stats.gated_macs;
+    }
+
+    let mut t = Table::new(
+        "Dataflow shootout — all registered flows, full model zoo, ranked per layer class",
+        &[
+            "class",
+            "flow",
+            "rank cyc",
+            "rank uJ",
+            "cycles",
+            "uJ",
+            "EDP uJ.s",
+            "zero-free",
+            "gated MACs",
+        ],
+    );
+    for (ci, class) in SHOOTOUT_CLASSES.iter().enumerate() {
+        // deterministic ranks: total_cmp on energy, name tie-break
+        let mut by_cycles: Vec<usize> = (0..nf).collect();
+        by_cycles.sort_by(|&a, &b| {
+            agg[ci * nf + a]
+                .cycles
+                .cmp(&agg[ci * nf + b].cycles)
+                .then_with(|| flows[a].name().cmp(flows[b].name()))
+        });
+        let mut by_uj: Vec<usize> = (0..nf).collect();
+        by_uj.sort_by(|&a, &b| {
+            agg[ci * nf + a]
+                .uj
+                .total_cmp(&agg[ci * nf + b].uj)
+                .then_with(|| flows[a].name().cmp(flows[b].name()))
+        });
+        for (rc, &fi) in by_cycles.iter().enumerate() {
+            let a = &agg[ci * nf + fi];
+            let re = by_uj.iter().position(|&x| x == fi).expect("ranked") + 1;
+            t.row(vec![
+                class.to_string(),
+                flows[fi].name().to_string(),
+                (rc + 1).to_string(),
+                re.to_string(),
+                a.cycles.to_string(),
+                fnum(a.uj, 1),
+                fnum(a.edp, 3),
+                format!("{}/{}", a.zero_free, a.cells),
+                a.gated.to_string(),
             ]);
         }
     }

@@ -41,6 +41,8 @@ pub enum RequestKind {
     Table,
     /// A traffic-model query.
     Traffic,
+    /// A dataflow-shootout table regeneration.
+    Shootout,
     /// The JSON stats snapshot.
     Stats,
     /// The Prometheus text-exposition snapshot.
@@ -57,11 +59,12 @@ pub enum RequestKind {
 
 impl RequestKind {
     /// Every kind, in wire/stats reporting order.
-    pub const ALL: [RequestKind; 10] = [
+    pub const ALL: [RequestKind; 11] = [
         RequestKind::LayerCost,
         RequestKind::Sweep,
         RequestKind::Table,
         RequestKind::Traffic,
+        RequestKind::Shootout,
         RequestKind::Stats,
         RequestKind::Metrics,
         RequestKind::Trace,
@@ -77,6 +80,7 @@ impl RequestKind {
             RequestKind::Sweep => "sweep",
             RequestKind::Table => "table",
             RequestKind::Traffic => "traffic",
+            RequestKind::Shootout => "shootout",
             RequestKind::Stats => "stats",
             RequestKind::Metrics => "metrics",
             RequestKind::Trace => "trace",
@@ -105,6 +109,10 @@ impl RequestKind {
             RequestKind::Traffic => (
                 r#"kind="traffic",outcome="ok""#,
                 r#"kind="traffic",outcome="err""#,
+            ),
+            RequestKind::Shootout => (
+                r#"kind="shootout",outcome="ok""#,
+                r#"kind="shootout",outcome="err""#,
             ),
             RequestKind::Stats => (
                 r#"kind="stats",outcome="ok""#,

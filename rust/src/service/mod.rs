@@ -168,6 +168,10 @@ enum WriterMsg {
 /// and every worker thread is up; the service then runs until a
 /// `shutdown` request arrives or [`ServiceHandle::shutdown`] is called.
 pub fn spawn(session: Session, config: ServiceConfig) -> io::Result<ServiceHandle> {
+    // comparator flows must exist before the first request: `flow`
+    // fields resolve against the registry, and the shootout table
+    // sweeps everything registered
+    crate::compiler::ensure_comparators_registered();
     let listener = TcpListener::bind(&config.addr)?;
     let addr = listener.local_addr()?;
     // non-blocking accept so the loop can poll the stop flag

@@ -11,6 +11,7 @@
 //! {"id":3,"type":"sweep","jobs":[{"net":"MobileNet","layer":"CONV1"},{"net":"MobileNet","layer":"CONV3"}]}
 //! {"id":4,"type":"table","target":"table6"}
 //! {"id":5,"type":"traffic"}
+//! {"id":6,"type":"shootout"}
 //! {"id":6,"type":"stats"}
 //! {"id":7,"type":"metrics"}
 //! {"id":8,"type":"trace","action":"start"}
@@ -64,6 +65,15 @@ pub fn parse_flow(s: &str) -> Option<Dataflow> {
         .find(|f| f.name().eq_ignore_ascii_case(s))
 }
 
+/// Error text for a flow name [`parse_flow`] rejected: lists every
+/// registered flow so callers can self-correct (the comparator zoo
+/// registers at startup, so its names are always present). Shared by
+/// the CLI's `--flow` errors and the service's `flow` field errors.
+pub fn unknown_flow(s: &str) -> String {
+    let known: Vec<&str> = Dataflow::registered().iter().map(|f| f.name()).collect();
+    format!("unknown flow {s:?} (known: {})", known.join(", "))
+}
+
 /// A report target: any paper table or figure the CLI can render, by
 /// its CLI subcommand name (`table1`..`table8`, `traffic`,
 /// `fig3`..`fig12`).
@@ -87,6 +97,7 @@ impl ReportTarget {
             "table8" => t(TableId::GanE2e),
             "traffic" => t(TableId::Traffic),
             "pareto" => t(TableId::Pareto),
+            "shootout" => t(TableId::Shootout),
             "fig3" => f(FigureId::ZeroMults),
             "fig8" => f(FigureId::InputGrad),
             "fig9" => f(FigureId::FilterGrad),
@@ -163,6 +174,10 @@ pub fn parse_line(line: &str) -> Envelope {
             RequestKind::Traffic,
             Ok(Request::Report(ReportTarget::Table(TableId::Traffic))),
         ),
+        Some("shootout") => (
+            RequestKind::Shootout,
+            Ok(Request::Report(ReportTarget::Table(TableId::Shootout))),
+        ),
         Some("stats") => (RequestKind::Stats, Ok(Request::Stats)),
         Some("metrics") => (RequestKind::Metrics, Ok(Request::Metrics)),
         Some("trace") => (RequestKind::Trace, parse_trace(&doc)),
@@ -216,7 +231,7 @@ fn parse_job(spec: &Json) -> Result<SweepJob, String> {
     let flow = match spec.get("flow") {
         Some(v) => {
             let s = v.as_str().ok_or("\"flow\" must be a string")?;
-            parse_flow(s).ok_or_else(|| format!("unknown flow {s:?}"))?
+            parse_flow(s).ok_or_else(|| unknown_flow(s))?
         }
         None => Dataflow::EcoFlow,
     };
@@ -317,7 +332,7 @@ fn parse_explore(doc: &Json) -> Result<Request, String> {
         let mut flows = Vec::new();
         for f in arr {
             let s = f.as_str().ok_or("\"flows\" entries must be strings")?;
-            flows.push(parse_flow(s).ok_or_else(|| format!("unknown flow {s:?}"))?);
+            flows.push(parse_flow(s).ok_or_else(|| unknown_flow(s))?);
         }
         if flows.is_empty() {
             return Err("\"flows\" must not be empty".to_string());
@@ -574,7 +589,7 @@ mod tests {
     fn every_report_target_resolves() {
         let names = [
             "table1", "table2", "table5", "table6", "table7", "table8", "traffic", "pareto",
-            "fig3", "fig8", "fig9", "fig10", "fig11", "fig12",
+            "shootout", "fig3", "fig8", "fig9", "fig10", "fig11", "fig12",
         ];
         assert_eq!(names.len(), TableId::ALL.len() + FigureId::ALL.len());
         for n in names {
@@ -634,5 +649,15 @@ mod tests {
         assert_eq!(parse_flow("ecoflow"), Some(Dataflow::EcoFlow));
         assert_eq!(parse_flow("RS"), Some(Dataflow::RowStationary));
         assert_eq!(parse_flow("warp"), None);
+        // registered comparators resolve case-insensitively, and the
+        // miss error names them
+        crate::compiler::ensure_comparators_registered();
+        assert!(parse_flow("kseg").is_some());
+        assert!(parse_flow("carla").is_some());
+        assert!(parse_flow("decomp").is_some());
+        let e = unknown_flow("warp");
+        for name in ["EcoFlow", "Kseg", "CARLA", "Decomp"] {
+            assert!(e.contains(name), "{e}");
+        }
     }
 }

@@ -31,13 +31,22 @@
 //! separate processes, so the rest of the suite is unaffected.)
 
 use ecoflow::compiler::tiling::{self, LayerCost, PlaneOp};
-use ecoflow::compiler::{Dataflow, DataflowCompiler, PlaneOperands};
+use ecoflow::compiler::{ensure_comparators_registered, Dataflow, DataflowCompiler, PlaneOperands};
 use ecoflow::coordinator::scheduler::{arch_for, SweepJob};
 use ecoflow::coordinator::Session;
 use ecoflow::model::{ConvLayer, TrainingPass};
 use ecoflow::sim::batch::{set_engine_override, SimEngine};
 
 const BATCH: usize = 2;
+
+/// Every flow the matrix sweeps: the four built-ins plus the comparator
+/// zoo (Kseg / CARLA / Decomp, registered on first call) — the harness
+/// pins engine/thread/estimator invariants for registered comparators
+/// exactly as it does for the built-ins.
+fn flows() -> Vec<Dataflow> {
+    let comparators = ensure_comparators_registered();
+    Dataflow::ALL.into_iter().chain(comparators).collect()
+}
 
 /// Layers whose three training passes cover every `PlaneOp` family,
 /// strided and unit-stride, on both layer kinds.
@@ -60,7 +69,7 @@ fn matrix_costs(engine: SimEngine, threads: usize) -> Vec<LayerCost> {
     let mut jobs = Vec::new();
     for layer in layer_matrix() {
         for pass in TrainingPass::ALL {
-            for flow in Dataflow::ALL {
+            for flow in flows() {
                 jobs.push(SweepJob {
                     layer: layer.clone(),
                     pass,
@@ -93,7 +102,7 @@ fn engine_matrix_batched_equals_scalar_and_threads_1_equals_8() {
     let mut cell = 0;
     for layer in layer_matrix() {
         for pass in TrainingPass::ALL {
-            for flow in Dataflow::ALL {
+            for flow in flows() {
                 let tag = format!("{} {pass:?} {flow:?}", layer.name);
                 assert_eq!(scalar_1[cell], scalar_8[cell], "{tag}: scalar threads 1 vs 8");
                 assert_eq!(batched_1[cell], batched_8[cell], "{tag}: batched threads 1 vs 8");
@@ -116,7 +125,7 @@ fn engine_matrix_batched_equals_scalar_and_threads_1_equals_8() {
     for layer in layer_matrix() {
         for pass in TrainingPass::ALL {
             let op = PlaneOp::from_layer(&layer, pass).proxy();
-            for flow in Dataflow::ALL {
+            for flow in flows() {
                 let tag = format!("{} {pass:?} {flow:?}", layer.name);
                 let est = ecoflow::dse::estimate_layer_cost(
                     &arch_for(flow),
@@ -169,7 +178,7 @@ fn engine_matrix_batched_equals_scalar_and_threads_1_equals_8() {
         PlaneOp::Dilated { he: 4, k: 3, s: 2 },
     ];
     for (i, op) in ops.into_iter().enumerate() {
-        for flow in Dataflow::ALL {
+        for flow in flows() {
             set_engine_override(SimEngine::Scalar);
             let scalar = tiling::simulate_plane(&arch_for(flow), op, flow, 0xE9 + i as u64)
                 .expect("scalar plane");
@@ -187,7 +196,7 @@ fn engine_matrix_batched_equals_scalar_and_threads_1_equals_8() {
     for engine in [SimEngine::Scalar, SimEngine::Batched, SimEngine::Auto] {
         set_engine_override(engine);
         for op in ops {
-            for flow in Dataflow::ALL {
+            for flow in flows() {
                 let arch = arch_for(flow);
                 let c = flow.resolve();
                 let sets: Vec<PlaneOperands> =
@@ -199,6 +208,50 @@ fn engine_matrix_batched_equals_scalar_and_threads_1_equals_8() {
                 }
             }
         }
+    }
+
+    // --- zero_free vs gated-MAC consistency, per flow ----------------
+    // a flow's zero_free claim is load-bearing (the cost model's MAC
+    // closed forms and the shootout table both scale by it): under the
+    // default clock-gating arch, a zero-free pass over all-nonzero
+    // operands must gate NOTHING and issue exactly the structural
+    // useful-slot count; every pass must issue exactly its compiled
+    // plan's slot budget either way.
+    set_engine_override(SimEngine::Scalar);
+    for op in ops {
+        for flow in flows() {
+            let arch = arch_for(flow);
+            let c = flow.resolve();
+            let plan = c.compile(&arch, op);
+            let (_, st) = c
+                .execute(&arch, op, &PlaneOperands::random(op, 0xFACE))
+                .expect("consistency execute");
+            let tag = format!("{op:?} {}", c.name());
+            assert_eq!(st.macs + st.gated_macs, plan.mac_slots, "{tag}: plan slot budget");
+            if c.zero_free(op) {
+                assert_eq!(st.gated_macs, 0, "{tag}: zero-free flows gate nothing");
+                assert_eq!(st.macs, op.mac_slots(true), "{tag}: useful slots only");
+            }
+        }
+    }
+    // and the claims that are *not* made must be visible in the stats:
+    // each comparator's padded regime really gates inserted zeros
+    for (flow_name, op) in [
+        ("Kseg", PlaneOp::Dilated { he: 4, k: 3, s: 2 }),
+        ("CARLA", PlaneOp::Transpose { he: 5, k: 3, s: 1 }),
+        ("Decomp", PlaneOp::Transpose { he: 4, k: 5, s: 2 }),
+    ] {
+        let flow = *flows()
+            .iter()
+            .find(|f| f.name() == flow_name)
+            .expect("comparator registered");
+        let c = flow.resolve();
+        let arch = arch_for(flow);
+        assert!(!c.zero_free(op), "{flow_name} {op:?} is a padded regime");
+        let (_, st) = c
+            .execute(&arch, op, &PlaneOperands::random(op, 0xFACE))
+            .expect("padded-regime execute");
+        assert!(st.gated_macs > 0, "{flow_name} {op:?}: padding must gate");
     }
 
     // leave the process the way we found it

@@ -1,0 +1,159 @@
+//! The dataflow-shootout table, end to end: sweep the full model zoo
+//! across every registered flow (built-ins plus the comparator zoo) and
+//! pin the claims the ISSUE makes about the ranking:
+//!
+//! * the table ranks **every registered flow** (>= 6, here 7) over all
+//!   three layer classes;
+//! * Kseg's transposed-conv row reports a full zero-free tally and ZERO
+//!   gated MACs — the kernel-segregated transform really inserts no
+//!   zeros on any transposed-conv cell of the zoo;
+//! * the ranking is scheduler-invariant (threads 1 == threads 8, fresh
+//!   sessions) — dedup/sharding cannot move a rank;
+//! * the deterministic columns (ranks, zero-free tallies, gated-MAC
+//!   counts) are snapshotted against `tests/golden/shootout_ranks.txt`
+//!   with the same bootstrap-then-pin scheme as the other goldens: the
+//!   file is written on first run, committed, and any later drift fails
+//!   with a re-baseline hint. Raw cycle/energy cells are *not* pinned
+//!   here — `table_regression.rs` owns absolute numbers; this snapshot
+//!   survives cost-model retunes that do not reorder the flows.
+
+use std::path::PathBuf;
+
+use ecoflow::compiler::ensure_comparators_registered;
+use ecoflow::coordinator::Session;
+use ecoflow::report::TableId;
+use ecoflow::util::table::Table;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("shootout_ranks.txt")
+}
+
+fn check_golden(path: &std::path::Path, snapshot: &str, what: &str) {
+    match std::fs::read_to_string(path) {
+        Ok(golden) => {
+            assert_eq!(
+                golden, snapshot,
+                "{what} moved vs {}; if the ranking changed \
+                 intentionally, delete the file to re-baseline",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir");
+            std::fs::write(path, snapshot).expect("write golden");
+            eprintln!("bootstrapped golden snapshot at {}", path.display());
+        }
+    }
+}
+
+fn shootout(threads: usize) -> Table {
+    ensure_comparators_registered();
+    Session::builder().threads(threads).build().table(TableId::Shootout)
+}
+
+/// The deterministic columns only: class, flow, both ranks, the
+/// zero-free tally, and the gated-MAC count (structural — independent
+/// of the energy parameters).
+fn rank_snapshot(t: &Table) -> String {
+    let mut out = String::new();
+    for r in &t.rows {
+        out.push_str(&format!(
+            "{} {} rank_cyc={} rank_uj={} zero_free={} gated={}\n",
+            r[0], r[1], r[2], r[3], r[7], r[8]
+        ));
+    }
+    out
+}
+
+#[test]
+fn shootout_ranks_every_flow_and_kseg_inserts_no_zeros() {
+    let t = shootout(8);
+    assert_eq!(
+        t.header,
+        [
+            "class",
+            "flow",
+            "rank cyc",
+            "rank uJ",
+            "cycles",
+            "uJ",
+            "EDP uJ.s",
+            "zero-free",
+            "gated MACs"
+        ],
+        "shootout column layout"
+    );
+
+    // every class ranks every registered flow
+    let classes: Vec<&str> = {
+        let mut seen = Vec::new();
+        for r in &t.rows {
+            if !seen.contains(&r[0].as_str()) {
+                seen.push(r[0].as_str());
+            }
+        }
+        seen
+    };
+    assert!(
+        classes.len() >= 3,
+        "expected >= 3 layer classes, got {classes:?}"
+    );
+    for class in &classes {
+        let flows: Vec<&str> = t
+            .rows
+            .iter()
+            .filter(|r| r[0] == *class)
+            .map(|r| r[1].as_str())
+            .collect();
+        assert!(
+            flows.len() >= 6,
+            "class {class}: expected >= 6 ranked flows, got {flows:?}"
+        );
+        // ranks are a permutation of 1..=n in cycle order
+        for (i, r) in t.rows.iter().filter(|r| r[0] == *class).enumerate() {
+            assert_eq!(r[2], (i + 1).to_string(), "{class}/{}: cycle rank", r[1]);
+        }
+        let mut uj_ranks: Vec<usize> = t
+            .rows
+            .iter()
+            .filter(|r| r[0] == *class)
+            .map(|r| r[3].parse().expect("uJ rank"))
+            .collect();
+        uj_ranks.sort_unstable();
+        assert_eq!(
+            uj_ranks,
+            (1..=flows.len()).collect::<Vec<_>>(),
+            "{class}: energy ranks must be a permutation"
+        );
+    }
+
+    // the acceptance criterion: Kseg inserts zero zeros on EVERY
+    // transposed-conv cell — full zero-free tally, zero gated MACs
+    let kseg = t
+        .rows
+        .iter()
+        .find(|r| r[0] == "transposed" && r[1] == "Kseg")
+        .expect("Kseg ranked on the transposed class");
+    let (claimed, cells) = kseg[7]
+        .split_once('/')
+        .expect("zero-free tally is claimed/cells");
+    assert_eq!(
+        claimed, cells,
+        "Kseg must claim zero-free on every transposed cell"
+    );
+    assert_ne!(claimed, "0", "the transposed class must be non-empty");
+    assert_eq!(kseg[8], "0", "Kseg gated MACs on transposed cells");
+
+    // scheduler invariance: sharding must not move a single cell
+    let serial = shootout(1);
+    assert_eq!(
+        serial.rows, t.rows,
+        "shootout rows differ between threads 1 and 8"
+    );
+
+    // pin the deterministic columns
+    check_golden(&golden_path(), &rank_snapshot(&t), "shootout ranking");
+}
