@@ -8,11 +8,22 @@
 //! view from the shutdown report, so the two observability paths can
 //! be eyeballed against each other.
 //!
-//! Machine-readable trajectory line (mirrors perf_hotpath's):
+//! The second scenario is the reactor's reason to exist: a fleet of
+//! interactive connections (64) issuing warm `layer_cost` requests is
+//! measured twice — idle, and with a bulk connection running `shootout`
+//! table regenerations (streamed replies) the whole time. The emitted
+//! JSON carries per-class percentiles plus the interactive
+//! mixed-vs-idle p99 ratio; the priority split's contract is that the
+//! ratio stays small (target: <=10x) even though the bulk work runs
+//! for the entire window.
+//!
+//! Machine-readable trajectory lines (mirror perf_hotpath's):
 //! `{"bench":"service_layer_cost","unit":"us","qps":...,"p50_us":...,"p99_us":...}`
+//! `{"bench":"service_mixed_priority","unit":"us","clients":...,"interactive_mixed_p99_us":...,"p99_ratio":...}`
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -21,10 +32,14 @@ use ecoflow::model::zoo;
 use ecoflow::service::{self, ServiceConfig};
 use ecoflow::util::bench::BenchSet;
 
-/// Concurrent connections in the timed phase.
+/// Concurrent connections in the plain timed phase.
 const CLIENTS: usize = 4;
-/// Rounds over the request set per connection.
+/// Rounds over the request set per connection in the plain phase.
 const ROUNDS: usize = 25;
+/// Interactive connections in the mixed-priority phase.
+const MIXED_CLIENTS: usize = 64;
+/// Rounds over the request set per connection in the mixed phase.
+const MIXED_ROUNDS: usize = 5;
 
 /// The request set: every Table 5 layer as a warm-key `layer_cost`.
 fn request_lines() -> Vec<String> {
@@ -65,6 +80,86 @@ fn client(addr: SocketAddr, lines: &[String], rounds: usize) -> Vec<Duration> {
     latencies
 }
 
+/// Exact percentile (upper value at rank ceil(q*n)) of sorted samples.
+fn pct(sorted: &[Duration], q: f64) -> Duration {
+    let rank = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// One bulk `shootout` request, draining a streamed reply to the
+/// terminator frame (or accepting a single-line reply when it stayed
+/// under the stream threshold). Returns the frame count.
+fn bulk_request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>) -> usize {
+    stream
+        .write_all(b"{\"type\":\"table\",\"target\":\"shootout\"}\n")
+        .expect("send bulk request");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read bulk reply");
+    assert!(
+        line.contains("\"ok\":true"),
+        "bulk request failed: {line}"
+    );
+    if !line.contains("\"stream\":true") {
+        return 1;
+    }
+    let mut frames = 1;
+    while !line.contains("\"done\":true") {
+        line.clear();
+        reader.read_line(&mut line).expect("read stream frame");
+        assert!(!line.is_empty(), "stream ended without a terminator");
+        frames += 1;
+    }
+    frames
+}
+
+/// The mixed-priority phase: `MIXED_CLIENTS` interactive connections
+/// run their warm rounds; when `with_bulk`, one extra connection loops
+/// bulk shootout regenerations for the whole window (at least one full
+/// request, even if the fleet finishes first). Returns
+/// `(interactive_latencies, bulk_latencies, streamed_frames)`.
+fn mixed_phase(
+    addr: SocketAddr,
+    lines: &[String],
+    with_bulk: bool,
+) -> (Vec<Duration>, Vec<Duration>, usize) {
+    let stop = AtomicBool::new(false);
+    thread::scope(|s| {
+        let bulk = with_bulk.then(|| {
+            s.spawn(|| {
+                let stream = TcpStream::connect(addr).expect("connect bulk client");
+                stream.set_nodelay(true).ok();
+                let mut reader =
+                    BufReader::new(stream.try_clone().expect("clone bulk stream"));
+                let mut stream = stream;
+                let mut latencies = Vec::new();
+                let mut frames = 0usize;
+                loop {
+                    let t = Instant::now();
+                    frames += bulk_request(&mut stream, &mut reader);
+                    latencies.push(t.elapsed());
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+                (latencies, frames)
+            })
+        });
+        let workers: Vec<_> = (0..MIXED_CLIENTS)
+            .map(|_| s.spawn(|| client(addr, lines, MIXED_ROUNDS)))
+            .collect();
+        let interactive: Vec<Duration> = workers
+            .into_iter()
+            .flat_map(|w| w.join().expect("interactive client"))
+            .collect();
+        stop.store(true, Ordering::Relaxed);
+        let (bulk_lat, frames) = match bulk {
+            Some(h) => h.join().expect("bulk client"),
+            None => (Vec::new(), 0),
+        };
+        (interactive, bulk_lat, frames)
+    })
+}
+
 fn main() {
     let lines = request_lines();
     let session = Session::builder().build();
@@ -73,12 +168,17 @@ fn main() {
         ServiceConfig {
             addr: "127.0.0.1:0".to_string(),
             linger: Duration::from_millis(1),
+            // low enough that the shootout table reply actually streams
+            stream_threshold: 8 * 1024,
+            // the mixed phase opens MIXED_CLIENTS + a few connections
+            max_connections: MIXED_CLIENTS * 2,
+            ..ServiceConfig::default()
         },
     )
     .expect("spawn service");
     let addr = handle.addr();
 
-    // Warm pass: every key simulated once, so the timed phase measures
+    // Warm pass: every key simulated once, so the timed phases measure
     // the resident-store hot path (cache hits + protocol + TCP), not
     // simulation time.
     let cold = client(addr, &lines, 1);
@@ -103,11 +203,7 @@ fn main() {
     latencies.sort();
     let total = latencies.len();
     let qps = total as f64 / wall.as_secs_f64();
-    let pct = |q: f64| {
-        let rank = ((total as f64 * q).ceil() as usize).clamp(1, total);
-        latencies[rank - 1]
-    };
-    let (p50, p99) = (pct(0.50), pct(0.99));
+    let (p50, p99) = (pct(&latencies, 0.50), pct(&latencies, 0.99));
     let mean_us =
         latencies.iter().sum::<Duration>().as_micros() as u64 / total as u64;
     println!(
@@ -124,6 +220,44 @@ fn main() {
         p99.as_micros()
     );
     println!("{svc_line}");
+
+    // Mixed-priority phase: the same warm interactive traffic from a
+    // 64-connection fleet, first idle, then with a bulk connection
+    // regenerating the shootout table (streamed reply) non-stop. The
+    // interactive p99 ratio between the two runs is the number the
+    // priority split exists to keep small.
+    let (mut idle, _, _) = mixed_phase(addr, &lines, false);
+    idle.sort();
+    let (idle_p50, idle_p99) = (pct(&idle, 0.50), pct(&idle, 0.99));
+    println!(
+        "mixed idle: {} interactive requests over {MIXED_CLIENTS} connections, p50 {idle_p50:?} p99 {idle_p99:?}",
+        idle.len()
+    );
+    let (mut mixed, mut bulk_lat, frames) = mixed_phase(addr, &lines, true);
+    mixed.sort();
+    bulk_lat.sort();
+    let (mixed_p50, mixed_p99) = (pct(&mixed, 0.50), pct(&mixed, 0.99));
+    let (bulk_p50, bulk_p99) = (pct(&bulk_lat, 0.50), pct(&bulk_lat, 0.99));
+    let ratio = mixed_p99.as_secs_f64() / idle_p99.as_secs_f64().max(1e-9);
+    println!(
+        "mixed under bulk: {} interactive requests, p50 {mixed_p50:?} p99 {mixed_p99:?} ({ratio:.2}x idle p99)",
+        mixed.len()
+    );
+    println!(
+        "  bulk: {} shootout rounds ({frames} reply frames), p50 {bulk_p50:?} p99 {bulk_p99:?}",
+        bulk_lat.len()
+    );
+    let mixed_line = format!(
+        "{{\"bench\":\"service_mixed_priority\",\"unit\":\"us\",\"clients\":{MIXED_CLIENTS},\"interactive_idle_p50_us\":{},\"interactive_idle_p99_us\":{},\"interactive_mixed_p50_us\":{},\"interactive_mixed_p99_us\":{},\"bulk_p50_us\":{},\"bulk_p99_us\":{},\"bulk_requests\":{},\"bulk_frames\":{frames},\"p99_ratio\":{ratio:.3}}}",
+        idle_p50.as_micros(),
+        idle_p99.as_micros(),
+        mixed_p50.as_micros(),
+        mixed_p99.as_micros(),
+        bulk_p50.as_micros(),
+        bulk_p99.as_micros(),
+        bulk_lat.len()
+    );
+    println!("{mixed_line}");
 
     // Single-connection round trip through the standard harness, for a
     // bench-suite-style line (no concurrency, pure protocol overhead).
@@ -145,13 +279,14 @@ fn main() {
     drop(stream);
 
     // The server's own view: histogram percentiles (2x-resolution upper
-    // bounds) should bracket the exact client-side numbers above.
+    // bounds) should bracket the exact client-side numbers above; since
+    // the priority split the render also breaks p99 out per class.
     handle.shutdown();
     let report = handle.join();
     println!("server: {}", report.render());
 
     if let Some(path) = ecoflow::util::bench::bench_out_path() {
-        set.write_json(&path, &[svc_line])
+        set.write_json(&path, &[svc_line, mixed_line])
             .expect("bench-out write failed");
     }
 }

@@ -14,7 +14,7 @@
 //! ecoflow train [--steps N] [--variant stride|pool]
 //! ecoflow sweep [--csv]                          full layer sweep
 //! ecoflow dse [--space FILE.toml] [--frontier-exact] [--out FILE]
-//! ecoflow serve [--addr HOST:PORT]               resident sweep service
+//! ecoflow serve [--addr HOST:PORT] [--max-conns N] [--stream-threshold B]
 //! ecoflow version
 //! ```
 //!
@@ -57,6 +57,11 @@
 //! `shutdown` request arrives. Unlike the one-shot commands, `serve`
 //! defaults `--threads` to the full host parallelism rather than the
 //! interactive cap, since a daemon's sweeps are its whole job.
+//! `--max-conns N` caps concurrently open connections (the reactor
+//! backpressures the listen backlog beyond it) and
+//! `--stream-threshold B` sets the reply size in bytes above which bulk
+//! replies are streamed as bounded frames; see
+//! [`ServiceConfig`](crate::service::ServiceConfig) for the defaults.
 
 use std::collections::HashMap;
 
@@ -124,7 +129,8 @@ pub fn usage() -> &'static str {
      \u{20}  dse [--space FILE.toml] [--net N] [--batch B] [--flow F]\n\
      \u{20}      [--frontier-exact] [--out FILE]   design-space exploration:\n\
      \u{20}      estimator sweep + Pareto frontier (see README \"Estimator & DSE\")\n\
-     \u{20}  serve [--addr HOST:PORT] [--linger-ms N]   resident sweep service\n\
+     \u{20}  serve [--addr HOST:PORT] [--linger-ms N] [--max-conns N]\n\
+     \u{20}        [--stream-threshold BYTES]   resident sweep service\n\
      \u{20}        (JSON-lines over TCP; see README \"Sweep service\")\n\
      \u{20}  version\n\
      options: --threads N, --csv, --cache-stats,\n\
@@ -535,10 +541,23 @@ pub fn run(args: &[String]) -> Result<()> {
                 Some(v) => v.clone(),
                 None => ServiceConfig::default().addr,
             };
+            let defaults = ServiceConfig::default();
             let linger = std::time::Duration::from_millis(
                 parsed.usize_or("linger-ms", 2) as u64
             );
-            let handle = service::spawn(session, ServiceConfig { addr, linger })?;
+            let max_connections = parsed.usize_or("max-conns", defaults.max_connections);
+            let stream_threshold =
+                parsed.usize_or("stream-threshold", defaults.stream_threshold);
+            let handle = service::spawn(
+                session,
+                ServiceConfig {
+                    addr,
+                    linger,
+                    max_connections,
+                    stream_threshold,
+                    ..defaults
+                },
+            )?;
             eprintln!(
                 "sweep service listening on {} ({threads} threads)",
                 handle.addr()

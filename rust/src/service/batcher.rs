@@ -1,4 +1,4 @@
-//! Cross-request job batching for the sweep service.
+//! Two-class request scheduling for the sweep service.
 //!
 //! The scheduler's fuse stage already merges same-fingerprint (and,
 //! for flows with a fuse key, same-lowered-geometry) jobs into single
@@ -8,64 +8,131 @@
 //! for sibling layers would run two separate sweeps, each simulating a
 //! proxy the other could have shared.
 //!
-//! The [`Batcher`] closes that gap. Connection threads
-//! [`submit`](Batcher::submit) their jobs and block on a private
-//! channel; a single dispatcher thread collects every submission
-//! queued at that moment (plus a short linger window for stragglers),
-//! concatenates them into ONE `Session::sweep` call, and routes each
-//! submission its own slice of the results. Sweep determinism makes
-//! this invisible to clients — a batched answer is bit-identical to a
-//! solo one — so batching is purely a throughput/latency trade, and
-//! the linger window keeps the latency side bounded.
+//! The [`Batcher`] closes that gap, and since the reactor rewrite it
+//! also keeps the *classes* of work apart:
+//!
+//! * The **interactive** queue holds `layer_cost` submissions. A
+//!   dedicated interactive dispatcher drains it with the same
+//!   linger-and-fuse behaviour as before: concurrent submissions become
+//!   ONE `Session::sweep` call and each submitter gets its own slice of
+//!   the results. Sweep determinism makes the fusing invisible — a
+//!   batched answer is bit-identical to a solo one.
+//! * The **bulk** queue holds `sweep`, `table`/`traffic`/`shootout`
+//!   and `explore` work. A separate bulk dispatcher drains it, so a
+//!   multi-minute report regeneration never sits between an
+//!   interactive submission and its sweep. Adjacent bulk sweeps fuse
+//!   with each other; reports and explorations run one per round.
+//! * An interactive arrival **cuts the bulk linger short**
+//!   ([`next_bulk`](Batcher::next_bulk) stops waiting for bulk
+//!   stragglers the moment interactive work is queued, counted as
+//!   `ecoflow_service_preemptions_total`), keeping the contention
+//!   window between the two dispatchers as small as possible.
+//!
+//! Queue depths are mirrored to the registry as the
+//! `ecoflow_service_queue_depth{class=...}` gauges, so a `/metrics`
+//! scrape shows the backlog per class at any moment.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::coordinator::scheduler::{SweepJob, SweepResult};
+use crate::coordinator::scheduler::SweepJob;
 use crate::obs;
 
-/// One submission waiting to ride the next fused sweep.
+use super::protocol::ReportTarget;
+use super::ReplySink;
+
+/// One interactive submission waiting to ride the next fused sweep.
 pub struct Pending {
     /// The submitter's jobs, in its own order.
     pub jobs: Vec<SweepJob>,
-    /// Where its slice of the fused results goes.
-    pub tx: mpsc::Sender<Vec<SweepResult>>,
+    /// Where the reply goes (the sink owns the connection reference,
+    /// the request id, and the latency clock).
+    pub sink: ReplySink,
+}
+
+/// One unit of queued bulk work.
+pub enum BulkWork {
+    /// A multi-job sweep; adjacent queued sweeps fuse into one round.
+    Sweep(Vec<SweepJob>, ReplySink),
+    /// A table/figure regeneration.
+    Report(ReportTarget, ReplySink),
+    /// A design-space exploration (boxed: the config is by far the
+    /// largest variant payload).
+    Explore(Box<crate::dse::ExploreConfig>, ReplySink),
+}
+
+impl BulkWork {
+    /// Recover the reply sink from a rejected submission so the
+    /// request can still be answered (with an error).
+    pub fn into_sink(self) -> ReplySink {
+        match self {
+            BulkWork::Sweep(_, sink) | BulkWork::Report(_, sink) | BulkWork::Explore(_, sink) => {
+                sink
+            }
+        }
+    }
+}
+
+/// What the bulk dispatcher runs next.
+pub enum BulkRound {
+    /// One fused `Session::sweep` over every submission in the vec.
+    Sweeps(Vec<(Vec<SweepJob>, ReplySink)>),
+    /// One report regeneration.
+    Report(ReportTarget, ReplySink),
+    /// One exploration.
+    Explore(Box<crate::dse::ExploreConfig>, ReplySink),
 }
 
 struct State {
-    queue: Vec<Pending>,
+    interactive: Vec<Pending>,
+    bulk: Vec<BulkWork>,
     /// False once the service is draining: new submissions are
-    /// rejected, [`next_batch`](Batcher::next_batch) returns `None`
-    /// after the queue empties.
+    /// rejected, the `next_*` calls return `None` after their queue
+    /// empties.
     open: bool,
 }
 
-/// Counter snapshot of a [`Batcher`] — how well cross-request fusing
-/// is working. `submissions / rounds` is the mean fuse width; a value
-/// near 1.0 means clients rarely overlap and the linger window buys
-/// nothing.
+/// Counter snapshot of a [`Batcher`]. `submissions / rounds` is the
+/// mean interactive fuse width; a value near 1.0 means clients rarely
+/// overlap and the linger window buys nothing.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct BatcherStats {
-    /// Fused sweep rounds handed to the dispatcher.
+    /// Fused interactive sweep rounds handed to the dispatcher.
     pub rounds: u64,
-    /// Client submissions accepted into some round.
+    /// Interactive submissions accepted into some round.
     pub submissions: u64,
-    /// Total jobs across all accepted submissions.
+    /// Total jobs across all accepted interactive submissions.
     pub jobs: u64,
+    /// Bulk rounds (fused sweeps, reports, explorations) dispatched.
+    pub bulk_rounds: u64,
+    /// Bulk work items accepted.
+    pub bulk_submissions: u64,
+    /// Bulk linger windows cut short by an interactive arrival.
+    pub preemptions: u64,
 }
 
-/// The submission queue between connection threads and the dispatcher.
+/// The two-class submission queue between the reactor's pollers and
+/// the dispatcher pair.
 pub struct Batcher {
     state: Mutex<State>,
+    /// Signalled on interactive arrivals and on close.
     ready: Condvar,
+    /// Signalled on bulk arrivals, interactive arrivals (to cut the
+    /// bulk linger short) and on close.
+    bulk_ready: Condvar,
     rounds: AtomicU64,
     submissions: AtomicU64,
     jobs: AtomicU64,
-    /// Registry mirrors (`ecoflow_batcher_*_total`), interned once here
-    /// so the submit path never touches the registry lock.
-    reg: [Arc<obs::Counter>; 3],
+    bulk_rounds: AtomicU64,
+    bulk_submissions: AtomicU64,
+    preemptions: AtomicU64,
+    /// Registry mirrors, interned once here so the submit path never
+    /// touches the registry lock. Order: rounds, submissions, jobs,
+    /// bulk rounds, bulk submissions, preemptions.
+    reg: [Arc<obs::Counter>; 6],
+    /// Per-class queue-depth gauges: interactive, bulk.
+    depth: [Arc<obs::Counter>; 2],
 }
 
 impl Default for Batcher {
@@ -80,101 +147,218 @@ impl Batcher {
         let reg = obs::registry();
         Batcher {
             state: Mutex::new(State {
-                queue: Vec::new(),
+                interactive: Vec::new(),
+                bulk: Vec::new(),
                 open: true,
             }),
             ready: Condvar::new(),
+            bulk_ready: Condvar::new(),
             rounds: AtomicU64::new(0),
             submissions: AtomicU64::new(0),
             jobs: AtomicU64::new(0),
+            bulk_rounds: AtomicU64::new(0),
+            bulk_submissions: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
             reg: [
                 reg.counter(
                     "ecoflow_batcher_rounds_total",
                     "",
-                    "Fused sweep rounds dispatched by the service batcher.",
+                    "Fused interactive sweep rounds dispatched by the service batcher.",
                 ),
                 reg.counter(
                     "ecoflow_batcher_submissions_total",
                     "",
-                    "Client submissions accepted by the service batcher.",
+                    "Interactive submissions accepted by the service batcher.",
                 ),
                 reg.counter(
                     "ecoflow_batcher_jobs_total",
                     "",
-                    "Sweep jobs accepted by the service batcher.",
+                    "Interactive sweep jobs accepted by the service batcher.",
+                ),
+                reg.counter(
+                    "ecoflow_batcher_bulk_rounds_total",
+                    "",
+                    "Bulk rounds (sweeps, reports, explorations) dispatched by the service batcher.",
+                ),
+                reg.counter(
+                    "ecoflow_batcher_bulk_submissions_total",
+                    "",
+                    "Bulk work items accepted by the service batcher.",
+                ),
+                reg.counter(
+                    "ecoflow_service_preemptions_total",
+                    "",
+                    "Bulk linger windows cut short by an interactive arrival.",
+                ),
+            ],
+            depth: [
+                reg.gauge(
+                    "ecoflow_service_queue_depth",
+                    r#"class="interactive""#,
+                    "Queued submissions per priority class.",
+                ),
+                reg.gauge(
+                    "ecoflow_service_queue_depth",
+                    r#"class="bulk""#,
+                    "Queued submissions per priority class.",
                 ),
             ],
         }
     }
 
-    /// Fuse counters so far.
+    /// Counters so far.
     pub fn stats(&self) -> BatcherStats {
         BatcherStats {
             rounds: self.rounds.load(Ordering::Relaxed),
             submissions: self.submissions.load(Ordering::Relaxed),
             jobs: self.jobs.load(Ordering::Relaxed),
+            bulk_rounds: self.bulk_rounds.load(Ordering::Relaxed),
+            bulk_submissions: self.bulk_submissions.load(Ordering::Relaxed),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
         }
     }
 
-    /// Queue `jobs` for the next fused sweep; the returned receiver
-    /// yields the matching results (same length, same order). `None`
-    /// when the batcher is already closed — the service is draining and
-    /// the request should be refused.
-    pub fn submit(&self, jobs: Vec<SweepJob>) -> Option<mpsc::Receiver<Vec<SweepResult>>> {
-        let (tx, rx) = mpsc::channel();
-        let n_jobs = jobs.len() as u64;
+    /// Current queue depths `(interactive, bulk)`.
+    pub fn depths(&self) -> (usize, usize) {
+        let s = self.state.lock().unwrap();
+        (s.interactive.len(), s.bulk.len())
+    }
+
+    /// Queue an interactive submission for the next fused sweep. A
+    /// closed batcher (the service is draining) hands the submission
+    /// back so the caller can answer it with an error.
+    pub fn submit_interactive(&self, pending: Pending) -> Result<(), Pending> {
+        let n_jobs = pending.jobs.len() as u64;
         {
             let mut state = self.state.lock().unwrap();
             if !state.open {
-                return None;
+                return Err(pending);
             }
-            state.queue.push(Pending { jobs, tx });
+            state.interactive.push(pending);
+            self.depth[0].set(state.interactive.len() as u64);
         }
         self.submissions.fetch_add(1, Ordering::Relaxed);
         self.jobs.fetch_add(n_jobs, Ordering::Relaxed);
         self.reg[1].inc();
         self.reg[2].add(n_jobs);
         self.ready.notify_all();
-        Some(rx)
+        // an interactive arrival also cuts a lingering bulk round short
+        self.bulk_ready.notify_all();
+        Ok(())
     }
 
-    /// Block until at least one submission is queued (or the batcher
-    /// closes), then linger briefly to let concurrent submitters pile
-    /// on, and drain the whole queue. `None` means closed *and* empty —
-    /// the dispatcher's signal to exit. Submissions queued during a
-    /// drain are picked up by the next call, closed or not, so closing
-    /// never drops work.
-    pub fn next_batch(&self, linger: Duration) -> Option<Vec<Pending>> {
+    /// Queue one bulk work item; hands it back when closed (see
+    /// [`submit_interactive`](Batcher::submit_interactive)).
+    pub fn submit_bulk(&self, work: BulkWork) -> Result<(), BulkWork> {
+        {
+            let mut state = self.state.lock().unwrap();
+            if !state.open {
+                return Err(work);
+            }
+            state.bulk.push(work);
+            self.depth[1].set(state.bulk.len() as u64);
+        }
+        self.bulk_submissions.fetch_add(1, Ordering::Relaxed);
+        self.reg[4].inc();
+        self.bulk_ready.notify_all();
+        Ok(())
+    }
+
+    /// Block until at least one interactive submission is queued (or
+    /// the batcher closes), linger briefly so concurrent submitters
+    /// pile onto the same fused sweep, then drain the whole interactive
+    /// queue. `None` means closed *and* empty — the dispatcher's signal
+    /// to exit. Submissions queued during a drain are picked up by the
+    /// next call, closed or not, so closing never drops work.
+    pub fn next_interactive(&self, linger: Duration) -> Option<Vec<Pending>> {
         let mut state = self.state.lock().unwrap();
         state = self
             .ready
-            .wait_while(state, |s| s.queue.is_empty() && s.open)
+            .wait_while(state, |s| s.interactive.is_empty() && s.open)
             .unwrap();
-        if state.queue.is_empty() {
+        if state.interactive.is_empty() {
             return None; // closed with nothing queued
         }
         if !linger.is_zero() {
             // a second wait, bounded by the linger window: submissions
             // racing with this wake-up join the same fused sweep
             // instead of waiting a full sweep behind it
-            let (s, _timeout) = self
-                .ready
-                .wait_timeout(state, linger)
-                .unwrap();
+            let (s, _timeout) = self.ready.wait_timeout(state, linger).unwrap();
             state = s;
         }
         self.rounds.fetch_add(1, Ordering::Relaxed);
         self.reg[0].inc();
-        Some(std::mem::take(&mut state.queue))
+        self.depth[0].set(0);
+        Some(std::mem::take(&mut state.interactive))
     }
 
-    /// Stop accepting submissions and wake the dispatcher. Already-
-    /// queued work is still handed out by
-    /// [`next_batch`](Batcher::next_batch) — close drains, it never
-    /// drops.
+    /// Block until bulk work is queued (or the batcher closes), linger
+    /// so adjacent bulk sweeps can fuse — UNLESS interactive work
+    /// arrives, which cuts the linger short immediately — then hand out
+    /// one round: a maximal front run of fused sweeps, or one
+    /// report/exploration. `None` means closed and empty.
+    pub fn next_bulk(&self, linger: Duration) -> Option<BulkRound> {
+        let mut state = self.state.lock().unwrap();
+        state = self
+            .bulk_ready
+            .wait_while(state, |s| s.bulk.is_empty() && s.open)
+            .unwrap();
+        if state.bulk.is_empty() {
+            return None;
+        }
+        if !linger.is_zero() {
+            if state.interactive.is_empty() {
+                let (s, _timeout) = self
+                    .bulk_ready
+                    .wait_timeout_while(state, linger, |s| s.interactive.is_empty() && s.open)
+                    .unwrap();
+                state = s;
+            }
+            if !state.interactive.is_empty() {
+                // preempted (the window was skipped or cut short): stop
+                // gathering, let the interactive dispatcher get to the
+                // session sooner
+                self.preemptions.fetch_add(1, Ordering::Relaxed);
+                self.reg[5].inc();
+            }
+        }
+        // a maximal run of sweeps at the front fuses into one round;
+        // anything else dispatches alone (FIFO order preserved)
+        let round = if matches!(state.bulk.first(), Some(BulkWork::Sweep(..))) {
+            let run = state
+                .bulk
+                .iter()
+                .take_while(|w| matches!(w, BulkWork::Sweep(..)))
+                .count();
+            let sweeps = state
+                .bulk
+                .drain(..run)
+                .map(|w| match w {
+                    BulkWork::Sweep(jobs, sink) => (jobs, sink),
+                    _ => unreachable!("run counted only sweeps"),
+                })
+                .collect();
+            BulkRound::Sweeps(sweeps)
+        } else {
+            match state.bulk.remove(0) {
+                BulkWork::Sweep(..) => unreachable!("front checked above"),
+                BulkWork::Report(t, sink) => BulkRound::Report(t, sink),
+                BulkWork::Explore(cfg, sink) => BulkRound::Explore(cfg, sink),
+            }
+        };
+        self.depth[1].set(state.bulk.len() as u64);
+        self.bulk_rounds.fetch_add(1, Ordering::Relaxed);
+        self.reg[3].inc();
+        Some(round)
+    }
+
+    /// Stop accepting submissions and wake both dispatchers. Already-
+    /// queued work is still handed out by the `next_*` calls — close
+    /// drains, it never drops.
     pub fn close(&self) {
         self.state.lock().unwrap().open = false;
         self.ready.notify_all();
+        self.bulk_ready.notify_all();
     }
 }
 
@@ -183,6 +367,7 @@ mod tests {
     use super::*;
     use crate::compiler::Dataflow;
     use crate::model::{ConvLayer, TrainingPass};
+    use crate::report::TableId;
 
     fn job(name: &'static str) -> SweepJob {
         SweepJob {
@@ -193,60 +378,145 @@ mod tests {
         }
     }
 
+    fn pending(jobs: Vec<SweepJob>) -> Pending {
+        Pending {
+            jobs,
+            sink: ReplySink::test_sink(),
+        }
+    }
+
     #[test]
-    fn batch_gathers_concurrent_submissions() {
+    fn interactive_round_gathers_concurrent_submissions() {
         let b = Batcher::new();
-        let _rx1 = b.submit(vec![job("a")]).unwrap();
-        let _rx2 = b.submit(vec![job("b"), job("c")]).unwrap();
-        let batch = b.next_batch(Duration::ZERO).unwrap();
+        assert!(b.submit_interactive(pending(vec![job("a")])).is_ok());
+        assert!(b
+            .submit_interactive(pending(vec![job("b"), job("c")]))
+            .is_ok());
+        assert_eq!(b.depths(), (2, 0));
+        let batch = b.next_interactive(Duration::ZERO).unwrap();
         assert_eq!(batch.len(), 2);
         assert_eq!(batch[0].jobs.len(), 1);
         assert_eq!(batch[1].jobs.len(), 2);
+        assert_eq!(b.depths(), (0, 0));
         // queue drained — a close with nothing left ends the dispatcher
         b.close();
-        assert!(b.next_batch(Duration::ZERO).is_none());
+        assert!(b.next_interactive(Duration::ZERO).is_none());
     }
 
     #[test]
     fn close_rejects_new_but_drains_queued() {
         let b = Batcher::new();
-        let _rx = b.submit(vec![job("queued")]).unwrap();
+        assert!(b.submit_interactive(pending(vec![job("queued")])).is_ok());
+        assert!(b
+            .submit_bulk(BulkWork::Sweep(vec![job("bulk")], ReplySink::test_sink()))
+            .is_ok());
         b.close();
-        assert!(b.submit(vec![job("late")]).is_none(), "closed must refuse");
-        let batch = b.next_batch(Duration::ZERO).unwrap();
+        assert!(
+            b.submit_interactive(pending(vec![job("late")])).is_err(),
+            "closed must refuse"
+        );
+        assert!(b
+            .submit_bulk(BulkWork::Report(
+                ReportTarget::Table(TableId::Noc),
+                ReplySink::test_sink()
+            ))
+            .is_err());
+        let batch = b.next_interactive(Duration::ZERO).unwrap();
         assert_eq!(batch.len(), 1, "queued work survives the close");
-        assert!(b.next_batch(Duration::ZERO).is_none());
+        assert!(b.next_interactive(Duration::ZERO).is_none());
+        assert!(b.next_bulk(Duration::ZERO).is_some());
+        assert!(b.next_bulk(Duration::ZERO).is_none());
     }
 
     #[test]
-    fn next_batch_blocks_until_work_arrives() {
-        use std::sync::Arc;
+    fn adjacent_bulk_sweeps_fuse_but_reports_run_alone() {
+        let b = Batcher::new();
+        assert!(b
+            .submit_bulk(BulkWork::Sweep(vec![job("s1")], ReplySink::test_sink()))
+            .is_ok());
+        assert!(b
+            .submit_bulk(BulkWork::Sweep(vec![job("s2")], ReplySink::test_sink()))
+            .is_ok());
+        assert!(b
+            .submit_bulk(BulkWork::Report(
+                ReportTarget::Table(TableId::Noc),
+                ReplySink::test_sink()
+            ))
+            .is_ok());
+        assert!(b
+            .submit_bulk(BulkWork::Sweep(vec![job("s3")], ReplySink::test_sink()))
+            .is_ok());
+        match b.next_bulk(Duration::ZERO).unwrap() {
+            BulkRound::Sweeps(subs) => assert_eq!(subs.len(), 2, "front run fuses"),
+            _ => panic!("expected the fused sweep round first"),
+        }
+        assert!(matches!(
+            b.next_bulk(Duration::ZERO).unwrap(),
+            BulkRound::Report(..)
+        ));
+        match b.next_bulk(Duration::ZERO).unwrap() {
+            BulkRound::Sweeps(subs) => assert_eq!(subs.len(), 1),
+            _ => panic!("trailing sweep dispatches after the report"),
+        }
+        let s = b.stats();
+        assert_eq!(s.bulk_submissions, 4);
+        assert_eq!(s.bulk_rounds, 3);
+    }
+
+    #[test]
+    fn interactive_arrival_cuts_the_bulk_linger_short() {
+        let b = Arc::new(Batcher::new());
+        assert!(b
+            .submit_bulk(BulkWork::Sweep(vec![job("bulk")], ReplySink::test_sink()))
+            .is_ok());
+        let interactive = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                b.submit_interactive(pending(vec![job("urgent")])).is_ok()
+            })
+        };
+        let t0 = std::time::Instant::now();
+        // a linger far longer than the interactive arrival: the round
+        // must come back early, not after the full window
+        let round = b.next_bulk(Duration::from_secs(10)).unwrap();
+        assert!(matches!(round, BulkRound::Sweeps(_)));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "bulk linger must be preempted by the interactive arrival"
+        );
+        assert!(interactive.join().unwrap());
+        assert!(b.stats().preemptions >= 1);
+        assert_eq!(b.stats().submissions, 1);
+    }
+
+    #[test]
+    fn next_interactive_blocks_until_work_arrives() {
         let b = Arc::new(Batcher::new());
         let waiter = {
-            let b = b.clone();
-            std::thread::spawn(move || b.next_batch(Duration::ZERO).map(|v| v.len()))
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || b.next_interactive(Duration::ZERO).map(|v| v.len()))
         };
         // give the waiter time to park, then feed it
         std::thread::sleep(Duration::from_millis(20));
-        let _rx = b.submit(vec![job("x")]).unwrap();
+        assert!(b.submit_interactive(pending(vec![job("x")])).is_ok());
         assert_eq!(waiter.join().unwrap(), Some(1));
     }
 
     #[test]
     fn linger_window_catches_stragglers() {
-        use std::sync::Arc;
         let b = Arc::new(Batcher::new());
-        let _rx1 = b.submit(vec![job("first")]).unwrap();
+        assert!(b.submit_interactive(pending(vec![job("first")])).is_ok());
         let straggler = {
-            let b = b.clone();
+            let b = Arc::clone(&b);
             std::thread::spawn(move || {
                 std::thread::sleep(Duration::from_millis(10));
-                b.submit(vec![job("second")]).unwrap()
+                b.submit_interactive(pending(vec![job("second")])).is_ok()
             })
         };
         // a generous linger lets the straggler join this batch
-        let batch = b.next_batch(Duration::from_millis(500)).unwrap();
-        let _keep = straggler.join().unwrap();
+        let batch = b.next_interactive(Duration::from_millis(500)).unwrap();
+        assert!(straggler.join().unwrap());
         assert_eq!(batch.len(), 2, "straggler must ride the same batch");
     }
 }

@@ -57,6 +57,40 @@ pub enum RequestKind {
     Invalid,
 }
 
+/// The two scheduling classes of the service: interactive requests are
+/// latency-sensitive and must never queue behind report regenerations;
+/// bulk requests trade latency for throughput (and get their large
+/// replies streamed as frames).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// `layer_cost`, `stats`, `metrics`, `trace`, `shutdown`, parse
+    /// errors — answered inline or via the interactive queue.
+    Interactive,
+    /// `sweep`, `table`, `traffic`, `shootout`, `explore` — queued
+    /// behind the bulk dispatcher, replies streamed when large.
+    Bulk,
+}
+
+impl Class {
+    /// Both classes, reporting order.
+    pub const ALL: [Class; 2] = [Class::Interactive, Class::Bulk];
+
+    /// Stats/metrics label of this class.
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Bulk => "bulk",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Class::Interactive => 0,
+            Class::Bulk => 1,
+        }
+    }
+}
+
 impl RequestKind {
     /// Every kind, in wire/stats reporting order.
     pub const ALL: [RequestKind; 11] = [
@@ -147,6 +181,18 @@ impl RequestKind {
             .position(|k| *k == self)
             .expect("ALL is exhaustive")
     }
+
+    /// The scheduling class this kind belongs to.
+    pub fn class(self) -> Class {
+        match self {
+            RequestKind::Sweep
+            | RequestKind::Table
+            | RequestKind::Traffic
+            | RequestKind::Shootout
+            | RequestKind::Explore => Class::Bulk,
+            _ => Class::Interactive,
+        }
+    }
 }
 
 /// One histogram bucket per power of two of microseconds: bucket `i`
@@ -160,6 +206,12 @@ const BUCKETS: usize = 40;
 /// concurrently and anyone may snapshot at any time.
 pub struct Metrics {
     hist: [AtomicU64; BUCKETS],
+    /// Per-class latency histograms ([`Class::ALL`] order): the number
+    /// that proves (or disproves) that bulk work stopped hurting
+    /// interactive tails.
+    class_hist: [[AtomicU64; BUCKETS]; Class::ALL.len()],
+    class_requests: [AtomicU64; Class::ALL.len()],
+    class_total_us: [AtomicU64; Class::ALL.len()],
     ok_by_kind: [AtomicU64; RequestKind::ALL.len()],
     err_by_kind: [AtomicU64; RequestKind::ALL.len()],
     requests: AtomicU64,
@@ -179,6 +231,9 @@ impl Default for Metrics {
         const HELP: &str = "Service requests by kind and outcome.";
         Metrics {
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            class_hist: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+            class_requests: std::array::from_fn(|_| AtomicU64::new(0)),
+            class_total_us: std::array::from_fn(|_| AtomicU64::new(0)),
             ok_by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
             err_by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
             requests: AtomicU64::new(0),
@@ -205,7 +260,24 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     /// Per-kind `(name, ok, err)` counts, in [`RequestKind::ALL`] order.
     pub by_kind: Vec<(&'static str, u64, u64)>,
+    /// Per-class request counts and latency stats, [`Class::ALL`] order.
+    pub by_class: Vec<ClassStats>,
     /// Mean latency in microseconds (0 when nothing was served).
+    pub mean_us: u64,
+    /// Median latency upper bound in microseconds.
+    pub p50_us: u64,
+    /// 99th-percentile latency upper bound in microseconds.
+    pub p99_us: u64,
+}
+
+/// One scheduling class's slice of a [`MetricsSnapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassStats {
+    /// `"interactive"` or `"bulk"`.
+    pub class: &'static str,
+    /// Requests served in this class.
+    pub requests: u64,
+    /// Mean latency in microseconds.
     pub mean_us: u64,
     /// Median latency upper bound in microseconds.
     pub p50_us: u64,
@@ -223,7 +295,11 @@ impl Metrics {
     pub fn record(&self, kind: RequestKind, latency: Duration, ok: bool) {
         let us = latency.as_micros().min(u64::MAX as u128) as u64;
         let i = kind.index();
+        let ci = kind.class().index();
         self.hist[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.class_hist[ci][bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.class_requests[ci].fetch_add(1, Ordering::Relaxed);
+        self.class_total_us[ci].fetch_add(us, Ordering::Relaxed);
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.total_us.fetch_add(us, Ordering::Relaxed);
         if ok {
@@ -259,6 +335,25 @@ impl Metrics {
                         self.ok_by_kind[k.index()].load(Ordering::Relaxed),
                         self.err_by_kind[k.index()].load(Ordering::Relaxed),
                     )
+                })
+                .collect(),
+            by_class: Class::ALL
+                .iter()
+                .map(|c| {
+                    let ci = c.index();
+                    let hist: Vec<u64> = self.class_hist[ci]
+                        .iter()
+                        .map(|b| b.load(Ordering::Relaxed))
+                        .collect();
+                    let n: u64 = hist.iter().sum();
+                    let sum_us = self.class_total_us[ci].load(Ordering::Relaxed);
+                    ClassStats {
+                        class: c.name(),
+                        requests: self.class_requests[ci].load(Ordering::Relaxed),
+                        mean_us: if n == 0 { 0 } else { sum_us / n },
+                        p50_us: percentile(&hist, n, 0.50),
+                        p99_us: percentile(&hist, n, 0.99),
+                    }
                 })
                 .collect(),
             mean_us: if total == 0 { 0 } else { total_us / total },
@@ -300,8 +395,19 @@ fn percentile(hist: &[u64], total: u64, q: f64) -> u64 {
 impl MetricsSnapshot {
     /// One-line human summary (the shutdown report uses this).
     pub fn render_line(&self) -> String {
+        let classes: Vec<String> = self
+            .by_class
+            .iter()
+            .filter(|c| c.requests > 0)
+            .map(|c| format!("{} p99<={}us", c.class, c.p99_us))
+            .collect();
+        let tail = if classes.is_empty() {
+            String::new()
+        } else {
+            format!(" ({})", classes.join(", "))
+        };
         format!(
-            "{} requests ({} errors), latency mean {}us p50<={}us p99<={}us",
+            "{} requests ({} errors), latency mean {}us p50<={}us p99<={}us{tail}",
             self.requests, self.errors, self.mean_us, self.p50_us, self.p99_us
         )
     }
@@ -380,6 +486,36 @@ mod tests {
         let s = m.snapshot();
         assert!(s.p50_us <= 16, "{s:?}");
         assert!(s.p99_us >= 4096, "{s:?}");
+    }
+
+    #[test]
+    fn latency_splits_by_scheduling_class() {
+        assert_eq!(RequestKind::LayerCost.class(), Class::Interactive);
+        assert_eq!(RequestKind::Stats.class(), Class::Interactive);
+        assert_eq!(RequestKind::Invalid.class(), Class::Interactive);
+        for k in [
+            RequestKind::Sweep,
+            RequestKind::Table,
+            RequestKind::Traffic,
+            RequestKind::Shootout,
+            RequestKind::Explore,
+        ] {
+            assert_eq!(k.class(), Class::Bulk, "{}", k.name());
+        }
+        let m = Metrics::new();
+        for _ in 0..20 {
+            m.record(RequestKind::LayerCost, Duration::from_micros(10), true);
+        }
+        m.record(RequestKind::Shootout, Duration::from_micros(100_000), true);
+        let s = m.snapshot();
+        let class = |n: &str| s.by_class.iter().find(|c| c.class == n).unwrap().clone();
+        let i = class("interactive");
+        let b = class("bulk");
+        assert_eq!(i.requests, 20);
+        assert_eq!(b.requests, 1);
+        assert!(i.p99_us <= 16, "slow bulk work must not pollute {i:?}");
+        assert!(b.p99_us >= 65_536, "{b:?}");
+        assert!(s.render_line().contains("interactive p99<="), "{}", s.render_line());
     }
 
     #[test]

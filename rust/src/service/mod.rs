@@ -10,33 +10,53 @@
 //!
 //! Thread architecture, one instance each unless noted:
 //!
-//! * **accept** — non-blocking `TcpListener` loop; spawns one
-//!   **connection** thread per client (N of these) and joins them all
-//!   when the service stops.
-//! * **connection** (per client) — assembles request lines from the
-//!   byte stream, parses ([`protocol::parse_line`]), dispatches, writes
-//!   one response line per request, and records latency into the shared
-//!   [`Metrics`]. Simulation work is *submitted*, never run here.
-//! * **dispatcher** — drains the [`Batcher`]: concurrent submissions
-//!   become ONE [`Session::sweep`] call, so same-geometry jobs from
-//!   different clients fuse into mixed-origin batched simulations
-//!   exactly as they would inside a single sweep. Results are routed
-//!   back per submission, then the writer is nudged.
+//! * **accept** — non-blocking `TcpListener` loop
+//!   ([`reactor::accept_loop`]); enforces the connection cap
+//!   ([`ServiceConfig::max_connections`]) with backpressure and deals
+//!   accepted sockets round-robin onto the poller pool.
+//! * **poller** (small fixed pool, [`ServiceConfig::pollers`]) — owns
+//!   its connections' non-blocking sockets outright: multiplexes them
+//!   with `poll(2)`, assembles request lines (inbound capped at
+//!   [`ServiceConfig::max_line_bytes`]), parses and classifies each
+//!   request, answers cheap ones inline and queues the rest, and
+//!   drains the per-connection bounded outbound queues. Idle
+//!   connections cost a pollfd entry, not a parked thread.
+//! * **interactive dispatcher** — drains the [`Batcher`]'s interactive
+//!   queue: concurrent `layer_cost` submissions become ONE
+//!   [`Session::sweep`] call, so same-geometry jobs from different
+//!   clients fuse into mixed-origin batched simulations exactly as
+//!   they would inside a single sweep.
+//! * **bulk dispatcher** — drains the bulk queue (`sweep`, `table`/
+//!   `traffic`/`shootout`, `explore`) on its own thread, so a report
+//!   regeneration can never sit between an interactive request and its
+//!   answer; an interactive arrival even cuts the bulk linger window
+//!   short ([`Batcher::next_bulk`]). Large bulk replies are streamed
+//!   as bounded frames ([`protocol::stream_frames`]) instead of
+//!   buffered whole per client.
 //! * **writer** — the *only* thread that calls
 //!   [`Session::save_store`]. Persistence requests from any number of
 //!   dispatch rounds coalesce into single appending saves, so the
 //!   store-v2 append guard sees one writer and readers never see a torn
 //!   file mid-save.
-//! * **supervisor** — sequences shutdown: accept (and with it every
-//!   connection) drains first, then the batcher closes and the
-//!   dispatcher finishes queued work, then the writer flushes once more
-//!   and exits. [`ServiceHandle::join`] returns its final
-//!   [`ServiceReport`].
+//! * **supervisor** — sequences shutdown: accept exits first, then
+//!   every poller stops consuming request bytes (buffered complete
+//!   lines still get answered), then the batcher closes and both
+//!   dispatchers finish queued work (their replies still flush through
+//!   the pollers), then the writer saves once more and exits.
+//!   [`ServiceHandle::join`] returns the final [`ServiceReport`].
 //!
 //! Shutdown is graceful by construction: a `shutdown` request (or
 //! [`ServiceHandle::shutdown`]) only raises a flag — every in-flight
 //! request still gets its response, queued sweep jobs still run, and
 //! the store is flushed before the last thread exits.
+//!
+//! # Reply ordering
+//!
+//! Replies on one connection are no longer globally FIFO: an
+//! interactive request pipelined behind a bulk one overtakes it by
+//! design (that is the point of the priority split). Clients correlate
+//! by `id`, which the protocol has required since PR 6; within one
+//! class, per-connection order is preserved.
 //!
 //! # Observability
 //!
@@ -45,20 +65,29 @@
 //! [`obs::registry`](crate::obs::registry) in Prometheus text
 //! exposition (and a raw HTTP `GET /metrics` on the same port is
 //! answered for real scrapers), and a `trace` request opens/closes a
-//! Chrome-trace capture window over the live pipeline
-//! (`{"type":"trace","action":"start"}` … `{"action":"stop"}` returns
-//! the trace JSON). Request handling itself is spanned
-//! (`svc/parse` → `svc/queue` → `svc/round` → `svc/reply`).
+//! Chrome-trace capture window over the live pipeline. Request
+//! handling is spanned (`svc/parse` → `svc/queue` → `svc/round` →
+//! `svc/reply`, plus `svc/reactor` for poller iterations and
+//! `svc/stream` for framed replies), and the service-specific registry
+//! series cover the new machinery: per-class
+//! `ecoflow_service_queue_depth` gauges,
+//! `ecoflow_service_preemptions_total`,
+//! `ecoflow_service_streamed_{replies,frames}_total`,
+//! `ecoflow_service_open_connections`,
+//! `ecoflow_service_accept_backpressure_total`,
+//! `ecoflow_service_oversized_lines_total` and
+//! `ecoflow_service_slow_reader_disconnects_total`.
 
 pub mod batcher;
 pub mod json;
 pub mod metrics;
 pub mod protocol;
+pub(crate) mod reactor;
 
-use std::io::{self, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -67,20 +96,49 @@ use crate::coordinator::{CacheStats, Session};
 use crate::obs;
 use crate::sim::batch::SimEngine;
 
-use batcher::{Batcher, BatcherStats};
+use batcher::{Batcher, BatcherStats, BulkRound, BulkWork, Pending};
 use json::Json;
-use metrics::{Metrics, MetricsSnapshot};
+use metrics::{Class, Metrics, MetricsSnapshot, RequestKind};
 use protocol::Request;
+
+/// Smallest chunk a streamed frame will carry (fragmenting finer than
+/// this is all framing overhead).
+const MIN_FRAME_CHUNK: usize = 64;
+
+/// Largest chunk a streamed frame will carry, whatever the threshold.
+const MAX_FRAME_CHUNK: usize = 16 * 1024;
 
 /// Tunables of one service instance.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Bind address; use port 0 to let the OS pick (tests do).
     pub addr: String,
-    /// How long the dispatcher lingers after the first submission of a
+    /// How long a dispatcher lingers after the first submission of a
     /// round to let concurrent clients join the same fused sweep. Zero
     /// disables cross-request batching (every submission sweeps alone).
+    /// The bulk linger is additionally cut short by any interactive
+    /// arrival.
     pub linger: Duration,
+    /// Hard cap on concurrently open connections. Beyond it the accept
+    /// loop applies backpressure: new sockets wait in the listen
+    /// backlog until a slot frees up.
+    pub max_connections: usize,
+    /// Per-connection inbound cap: a request line longer than this
+    /// (i.e. bytes buffered with no `\n`) gets one error reply and a
+    /// disconnect instead of unbounded buffer growth.
+    pub max_line_bytes: usize,
+    /// Bulk replies longer than this many bytes are streamed as
+    /// bounded JSON-line frames instead of one giant line (see
+    /// [`protocol::stream_frames`]).
+    pub stream_threshold: usize,
+    /// Per-connection outbound queue cap in bytes; reply producers
+    /// block (briefly) when a client reads slower than we answer.
+    pub outbound_cap: usize,
+    /// How long a reply producer waits for outbound space before the
+    /// client is declared a slow reader and disconnected.
+    pub slow_reader_grace: Duration,
+    /// Poller threads in the reactor pool (min 1).
+    pub pollers: usize,
 }
 
 impl Default for ServiceConfig {
@@ -88,6 +146,12 @@ impl Default for ServiceConfig {
         ServiceConfig {
             addr: "127.0.0.1:7878".to_string(),
             linger: Duration::from_millis(2),
+            max_connections: 256,
+            max_line_bytes: 1 << 20,
+            stream_threshold: 32 * 1024,
+            outbound_cap: 4 << 20,
+            slow_reader_grace: Duration::from_secs(2),
+            pollers: 2,
         }
     }
 }
@@ -95,11 +159,11 @@ impl Default for ServiceConfig {
 /// What the service did over its lifetime ([`ServiceHandle::join`]).
 #[derive(Clone, Debug)]
 pub struct ServiceReport {
-    /// Request counters and latency percentiles.
+    /// Request counters and latency percentiles (split by class).
     pub metrics: MetricsSnapshot,
     /// The session cache's final counters.
     pub cache: CacheStats,
-    /// Cross-request fuse counters from the [`Batcher`].
+    /// Cross-request fuse and priority counters from the [`Batcher`].
     pub batcher: BatcherStats,
     /// Successful store saves by the writer thread (0 when the session
     /// has no store configured).
@@ -110,13 +174,16 @@ impl ServiceReport {
     /// Multi-line human summary (the CLI prints this on exit).
     pub fn render(&self) -> String {
         format!(
-            "sweep service: {}\nsweep service: {} (store saves: {})\nsweep service: {} submissions ({} jobs) fused into {} sweep rounds",
+            "sweep service: {}\nsweep service: {} (store saves: {})\nsweep service: {} interactive submissions ({} jobs) fused into {} rounds; {} bulk items in {} rounds ({} preemptions)",
             self.metrics.render_line(),
             self.cache.render_line(),
             self.store_saves,
             self.batcher.submissions,
             self.batcher.jobs,
             self.batcher.rounds,
+            self.batcher.bulk_submissions,
+            self.batcher.bulk_rounds,
+            self.batcher.preemptions,
         )
     }
 }
@@ -154,6 +221,9 @@ struct Shared {
     metrics: Metrics,
     stopping: AtomicBool,
     store_saves: AtomicU64,
+    /// Connections currently owned by the reactor (accept's cap gate).
+    live_conns: AtomicUsize,
+    config: ServiceConfig,
 }
 
 /// The writer thread's mailbox.
@@ -164,6 +234,95 @@ enum WriterMsg {
     Stop,
 }
 
+/// Where one request's reply goes: the connection it arrived on, the
+/// `id` to echo, and the kind/clock for the latency record. Consuming
+/// it with [`respond`](ReplySink::respond) is the only way a request
+/// gets answered — one sink, one reply, whatever thread ran the work.
+pub struct ReplySink {
+    conn: Arc<reactor::ConnHandle>,
+    id: Json,
+    kind: RequestKind,
+    start: Instant,
+}
+
+impl ReplySink {
+    /// Record the latency and queue the reply onto the connection:
+    /// whole (one newline-terminated frame, one `write` syscall) for
+    /// interactive and small replies, streamed frames for large bulk
+    /// replies. Also releases the connection's pending-count hold.
+    fn respond(self, shared: &Shared, reply: String, ok: bool) {
+        shared.metrics.record(self.kind, self.start.elapsed(), ok);
+        let cfg = &shared.config;
+        if ok && self.kind.class() == Class::Bulk && reply.len() > cfg.stream_threshold {
+            let chunk = cfg.stream_threshold.clamp(MIN_FRAME_CHUNK, MAX_FRAME_CHUNK);
+            let frames = protocol::stream_frames(&self.id, &reply, chunk);
+            let _stream_span = obs::span2(
+                "svc/stream",
+                "frames",
+                frames.len() as u64,
+                "bytes",
+                reply.len() as u64,
+            );
+            let s = stream_series();
+            s.replies.inc();
+            s.frames.add(frames.len() as u64);
+            for frame in frames {
+                if !push_line(&self.conn, cfg, frame) {
+                    break; // connection died mid-stream; nothing to salvage
+                }
+            }
+        } else {
+            let _reply_span = obs::span1("svc/reply", "bytes", reply.len() as u64);
+            push_line(&self.conn, cfg, reply);
+        }
+        self.conn.end_pending();
+    }
+
+    /// A sink wired to a throwaway connection, for queue unit tests.
+    #[cfg(test)]
+    pub(crate) fn test_sink() -> ReplySink {
+        ReplySink {
+            conn: Arc::new(reactor::ConnHandle::detached()),
+            id: Json::Null,
+            kind: RequestKind::LayerCost,
+            start: Instant::now(),
+        }
+    }
+}
+
+/// Append the line terminator and queue the result as ONE outbound
+/// frame — reply and newline in a single buffered write, so frames can
+/// never interleave partially and the hot path saves a syscall.
+fn push_line(conn: &reactor::ConnHandle, cfg: &ServiceConfig, mut line: String) -> bool {
+    line.push('\n');
+    conn.push_frame(line.into_bytes(), cfg.outbound_cap, cfg.slow_reader_grace)
+}
+
+/// The streamed-reply registry series, interned once.
+struct StreamSeries {
+    replies: Arc<obs::Counter>,
+    frames: Arc<obs::Counter>,
+}
+
+fn stream_series() -> &'static StreamSeries {
+    static S: OnceLock<StreamSeries> = OnceLock::new();
+    S.get_or_init(|| {
+        let r = obs::registry();
+        StreamSeries {
+            replies: r.counter(
+                "ecoflow_service_streamed_replies_total",
+                "",
+                "Bulk replies sent as streamed frame sequences.",
+            ),
+            frames: r.counter(
+                "ecoflow_service_streamed_frames_total",
+                "",
+                "Streamed reply frames emitted (terminators included).",
+            ),
+        }
+    })
+}
+
 /// Start a service around `session`. Returns once the socket is bound
 /// and every worker thread is up; the service then runs until a
 /// `shutdown` request arrives or [`ServiceHandle::shutdown`] is called.
@@ -172,44 +331,82 @@ pub fn spawn(session: Session, config: ServiceConfig) -> io::Result<ServiceHandl
     // fields resolve against the registry, and the shootout table
     // sweeps everything registered
     crate::compiler::ensure_comparators_registered();
+    // pre-intern the service series so the first `/metrics` scrape
+    // lists the whole inventory at zero
+    reactor::intern_series();
+    let _ = stream_series();
     let listener = TcpListener::bind(&config.addr)?;
     let addr = listener.local_addr()?;
     // non-blocking accept so the loop can poll the stop flag
     listener.set_nonblocking(true)?;
 
+    let n_pollers = config.pollers.max(1);
     let shared = Arc::new(Shared {
         session,
         batcher: Batcher::new(),
         metrics: Metrics::new(),
         stopping: AtomicBool::new(false),
         store_saves: AtomicU64::new(0),
+        live_conns: AtomicUsize::new(0),
+        config,
     });
     let (writer_tx, writer_rx) = mpsc::channel::<WriterMsg>();
 
-    let dispatcher = {
+    // the readers-done barrier: each poller bumps it once it can no
+    // longer submit new work, gating the batcher close below
+    let readers_done = Arc::new(AtomicUsize::new(0));
+    let mut pollers: Vec<Arc<reactor::Poller>> = Vec::with_capacity(n_pollers);
+    let mut poller_handles = Vec::with_capacity(n_pollers);
+    for i in 0..n_pollers {
+        let poller = Arc::new(reactor::Poller::new()?);
+        let shared = shared.clone();
+        let poller2 = poller.clone();
+        let done = readers_done.clone();
+        poller_handles.push(
+            thread::Builder::new()
+                .name(format!("svc-poller-{i}"))
+                .spawn(move || reactor::poller_loop(&shared, &poller2, &done))
+                .expect("spawn a service poller thread"),
+        );
+        pollers.push(poller);
+    }
+    let accept = {
+        let shared = shared.clone();
+        thread::spawn(move || reactor::accept_loop(&listener, &shared, &pollers))
+    };
+    let interactive = {
         let shared = shared.clone();
         let tx = writer_tx.clone();
-        let linger = config.linger;
-        thread::spawn(move || dispatcher_loop(&shared, linger, &tx))
+        thread::spawn(move || interactive_loop(&shared, &tx))
+    };
+    let bulk = {
+        let shared = shared.clone();
+        let tx = writer_tx.clone();
+        thread::spawn(move || bulk_loop(&shared, &tx))
     };
     let writer = {
         let shared = shared.clone();
         thread::spawn(move || writer_loop(&shared, &writer_rx))
-    };
-    let accept = {
-        let shared = shared.clone();
-        thread::spawn(move || accept_loop(&listener, &shared))
     };
     let supervisor = {
         let shared = shared.clone();
         thread::spawn(move || {
             // shutdown sequence — each stage drains before the next
             // one's inputs close, so nothing in flight is dropped:
-            // connections finish answering, then the dispatcher sweeps
-            // whatever they submitted, then the writer flushes it all.
+            // accept stops feeding the pollers, the pollers stop
+            // feeding the batcher, the dispatchers sweep what is
+            // queued (replies still flush through the live pollers),
+            // then the writer persists it all.
             let _ = accept.join();
+            while readers_done.load(Ordering::SeqCst) < n_pollers {
+                thread::sleep(Duration::from_millis(1));
+            }
             shared.batcher.close();
-            let _ = dispatcher.join();
+            let _ = interactive.join();
+            let _ = bulk.join();
+            for h in poller_handles {
+                let _ = h.join();
+            }
             let _ = writer_tx.send(WriterMsg::Stop);
             let _ = writer.join();
             ServiceReport {
@@ -228,269 +425,101 @@ pub fn spawn(session: Session, config: ServiceConfig) -> io::Result<ServiceHandl
     })
 }
 
-/// Accept clients until the stop flag goes up (a `shutdown` request or
-/// [`ServiceHandle::shutdown`]), then join every connection thread.
-fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
-    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
-    loop {
-        if shared.stopping.load(Ordering::SeqCst) {
-            break;
-        }
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let shared = shared.clone();
-                conns.push(thread::spawn(move || connection_loop(&shared, stream)));
-                // reap finished connections so a long-lived service
-                // doesn't accumulate dead handles
-                conns.retain(|h| !h.is_finished());
-            }
-            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                thread::sleep(Duration::from_millis(5));
-            }
-            Err(_) => thread::sleep(Duration::from_millis(5)),
-        }
-    }
-    for h in conns {
-        let _ = h.join();
-    }
-}
-
-/// Serve one client: line in, line out, until EOF or shutdown.
-fn connection_loop(shared: &Arc<Shared>, mut stream: TcpStream) {
-    // a short read timeout doubles as the stop-flag poll interval
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
-    let _ = stream.set_nodelay(true);
-    let mut buf: Vec<u8> = Vec::new();
-    let mut chunk = [0u8; 4096];
-    'conn: loop {
-        if shared.stopping.load(Ordering::SeqCst) {
-            break;
-        }
-        match stream.read(&mut chunk) {
-            Ok(0) => break, // client hung up
-            Ok(n) => {
-                buf.extend_from_slice(&chunk[..n]);
-                // a Prometheus scraper speaks HTTP, not JSON lines:
-                // answer `GET /metrics` with one text-exposition
-                // response and close (Connection: close is promised)
-                if buf.starts_with(b"GET ") {
-                    if http_request_complete(&buf) {
-                        handle_http_scrape(shared, &mut stream, &buf);
-                        break;
-                    }
-                    continue; // headers still arriving
-                }
-                // answer every complete line before reading more —
-                // lines already buffered when a shutdown lands still
-                // get their responses
-                while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
-                    let raw: Vec<u8> = buf.drain(..=pos).collect();
-                    let text = String::from_utf8_lossy(&raw);
-                    let line = text.trim();
-                    if line.is_empty() {
-                        continue;
-                    }
-                    let reply = handle_line(shared, line);
-                    let wrote = {
-                        let _reply_span =
-                            obs::span1("svc/reply", "bytes", reply.len() as u64);
-                        stream
-                            .write_all(reply.as_bytes())
-                            .and_then(|()| stream.write_all(b"\n"))
-                    };
-                    if wrote.is_err() {
-                        break 'conn;
-                    }
-                }
-            }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    io::ErrorKind::WouldBlock
-                        | io::ErrorKind::TimedOut
-                        | io::ErrorKind::Interrupted
-                ) =>
-            {
-                continue;
-            }
-            Err(_) => break,
-        }
-    }
-}
-
-/// Has a buffered HTTP request received its full header block yet?
-fn http_request_complete(buf: &[u8]) -> bool {
-    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
-}
-
-/// Answer one HTTP request on the JSON-lines port: `GET /metrics`
-/// serves the registry in Prometheus text exposition, anything else is
-/// a 404. Either way the connection closes after the response, which
-/// is the scrape model Prometheus expects.
-fn handle_http_scrape(shared: &Shared, stream: &mut TcpStream, buf: &[u8]) {
-    let start = Instant::now();
-    let request_line = String::from_utf8_lossy(buf);
-    let path = request_line
-        .split_whitespace()
-        .nth(1)
-        .unwrap_or("")
-        .to_string();
-    let is_metrics = path == "/metrics" || path.starts_with("/metrics?");
-    let (status, content_type, body) = if is_metrics {
-        (
-            "200 OK",
-            "text/plain; version=0.0.4; charset=utf-8",
-            obs::registry().prometheus(),
-        )
-    } else {
-        ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string())
-    };
-    let response = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len(),
-    );
-    let ok = stream.write_all(response.as_bytes()).is_ok() && is_metrics;
-    shared
-        .metrics
-        .record(metrics::RequestKind::Metrics, start.elapsed(), ok);
-}
-
-/// Parse, dispatch and time one request line; returns the response
-/// line (without trailing newline).
-fn handle_line(shared: &Shared, line: &str) -> String {
+/// Parse, classify and route one request line (called on the owning
+/// poller thread). Cheap requests are answered inline; simulation and
+/// report work is queued for the matching dispatcher.
+pub(crate) fn handle_request_line(
+    shared: &Arc<Shared>,
+    conn: &Arc<reactor::ConnHandle>,
+    line: &str,
+) {
     let start = Instant::now();
     let envelope = {
         let _parse_span = obs::span("svc/parse");
         protocol::parse_line(line)
     };
-    let (reply, ok) = match envelope.request {
-        Ok(request) => {
-            let _dispatch_span = obs::span("svc/dispatch");
-            dispatch(shared, &envelope.id, request)
-        }
-        Err(e) => (protocol::err_response(&envelope.id, &e), false),
+    let sink = ReplySink {
+        conn: Arc::clone(conn),
+        id: envelope.id,
+        kind: envelope.kind,
+        start,
     };
-    shared.metrics.record(envelope.kind, start.elapsed(), ok);
-    reply
-}
-
-/// Serve one parsed request. The envelope `ok` reflects whether the
-/// *service* answered; a job whose simulation failed still gets
-/// `ok:true` with the error inside its result object (a sweep's healthy
-/// siblings should not be masked by one bad geometry).
-fn dispatch(shared: &Shared, id: &Json, request: Request) -> (String, bool) {
-    match request {
-        Request::LayerCost(job) => match submit(shared, vec![job]) {
-            Ok(mut results) => {
-                let r = results.pop().expect("one job in, one result out");
-                let body = protocol::job_result_json(&shared.session, &r.job, &r.cost);
-                (
-                    protocol::ok_response(id, vec![("result".to_string(), body)]),
-                    true,
-                )
-            }
-            Err(e) => (protocol::err_response(id, &e), false),
-        },
-        Request::Sweep(jobs) => match submit(shared, jobs) {
-            Ok(results) => {
-                let arr = Json::Arr(
-                    results
-                        .iter()
-                        .map(|r| protocol::job_result_json(&shared.session, &r.job, &r.cost))
-                        .collect(),
-                );
-                (
-                    protocol::ok_response(id, vec![("results".to_string(), arr)]),
-                    true,
-                )
-            }
-            Err(e) => (protocol::err_response(id, &e), false),
-        },
-        Request::Report(target) => {
-            // reports regenerate over the shared session directly — its
-            // cache and scheduler are concurrency-safe, and report
-            // sweeps are exactly the kind of bulk work that should not
-            // serialize behind interactive layer_cost batches
-            let table = target.generate(&shared.session);
-            (
-                protocol::ok_response(
-                    id,
-                    vec![("table".to_string(), protocol::table_json(&table))],
-                ),
-                true,
-            )
+    sink.conn.begin_pending();
+    let request = match envelope.request {
+        Ok(r) => r,
+        Err(e) => {
+            let reply = protocol::err_response(&sink.id, &e);
+            sink.respond(shared, reply, false);
+            return;
         }
-        Request::Stats => (protocol::ok_response(id, stats_fields(shared)), true),
-        Request::Metrics => (
-            protocol::ok_response(
-                id,
+    };
+    let _dispatch_span = obs::span("svc/dispatch");
+    match request {
+        Request::LayerCost(job) => enqueue_interactive(shared, sink, vec![job]),
+        Request::Sweep(jobs) => enqueue_bulk(shared, BulkWork::Sweep(jobs, sink)),
+        Request::Report(target) => enqueue_bulk(shared, BulkWork::Report(target, sink)),
+        Request::Explore(cfg) => enqueue_bulk(shared, BulkWork::Explore(Box::new(cfg), sink)),
+        Request::Stats => {
+            let reply = protocol::ok_response(&sink.id, stats_fields(shared));
+            sink.respond(shared, reply, true);
+        }
+        Request::Metrics => {
+            let reply = protocol::ok_response(
+                &sink.id,
                 vec![(
                     "metrics".to_string(),
                     Json::Str(obs::registry().prometheus()),
                 )],
-            ),
-            true,
-        ),
+            );
+            sink.respond(shared, reply, true);
+        }
         Request::Trace { start } => {
-            if start {
+            let reply = if start {
                 obs::start_capture();
-                (
-                    protocol::ok_response(
-                        id,
-                        vec![("tracing".to_string(), Json::Bool(true))],
-                    ),
-                    true,
-                )
+                protocol::ok_response(&sink.id, vec![("tracing".to_string(), Json::Bool(true))])
             } else {
                 // the capture document rides inside the response as one
                 // (escaped) JSON string — clients unescape and save it
                 let doc = obs::stop_capture();
-                (
-                    protocol::ok_response(id, vec![("trace".to_string(), Json::Str(doc))]),
-                    true,
-                )
-            }
-        }
-        Request::Explore(cfg) => {
-            // like reports, explorations run over the shared session
-            // directly: the estimator phase is closed-form arithmetic on
-            // explorer-owned worker threads, and exact frontier re-runs
-            // go through the session's concurrency-safe cost path
-            match shared.session.explore(&cfg) {
-                Ok(report) => {
-                    let body = Json::parse(report.to_json().trim())
-                        .expect("ExploreReport::to_json emits valid JSON");
-                    (
-                        protocol::ok_response(id, vec![("report".to_string(), body)]),
-                        true,
-                    )
-                }
-                Err(e) => (protocol::err_response(id, &e), false),
-            }
+                protocol::ok_response(&sink.id, vec![("trace".to_string(), Json::Str(doc))])
+            };
+            sink.respond(shared, reply, true);
         }
         Request::Shutdown => {
             // reply first (the caller still gets its line), then raise
             // the flag; the supervisor takes it from there
-            let reply = protocol::ok_response(
-                id,
-                vec![("stopping".to_string(), Json::Bool(true))],
-            );
+            let reply =
+                protocol::ok_response(&sink.id, vec![("stopping".to_string(), Json::Bool(true))]);
+            sink.respond(shared, reply, true);
             shared.stopping.store(true, Ordering::SeqCst);
-            (reply, true)
         }
     }
 }
 
-/// Hand jobs to the dispatcher and wait for this submission's slice of
-/// the fused sweep.
-fn submit(shared: &Shared, jobs: Vec<SweepJob>) -> Result<Vec<SweepResult>, String> {
+/// Queue interactive jobs; a refused submission (service draining) is
+/// answered with an error instead.
+fn enqueue_interactive(shared: &Arc<Shared>, sink: ReplySink, jobs: Vec<SweepJob>) {
     let _queue_span = obs::span1("svc/queue", "jobs", jobs.len() as u64);
-    let rx = shared
-        .batcher
-        .submit(jobs)
-        .ok_or_else(|| "service is shutting down".to_string())?;
-    rx.recv()
-        .map_err(|_| "service dispatcher exited".to_string())
+    if let Err(rejected) = shared.batcher.submit_interactive(Pending { jobs, sink }) {
+        refuse(shared, rejected.sink);
+    }
+}
+
+/// Queue one bulk work item; refusals are answered like interactive.
+fn enqueue_bulk(shared: &Arc<Shared>, work: BulkWork) {
+    let n = match &work {
+        BulkWork::Sweep(jobs, _) => jobs.len() as u64,
+        _ => 1,
+    };
+    let _queue_span = obs::span1("svc/queue", "jobs", n);
+    if let Err(rejected) = shared.batcher.submit_bulk(work) {
+        refuse(shared, rejected.into_sink());
+    }
+}
+
+fn refuse(shared: &Shared, sink: ReplySink) {
+    let reply = protocol::err_response(&sink.id, "service is shutting down");
+    sink.respond(shared, reply, false);
 }
 
 /// The `stats` response body.
@@ -498,6 +527,7 @@ fn stats_fields(shared: &Shared) -> Vec<(String, Json)> {
     let m = shared.metrics.snapshot();
     let c = shared.session.cache_stats();
     let b = shared.batcher.stats();
+    let (depth_i, depth_b) = shared.batcher.depths();
     let num = |v: u64| Json::Num(v as f64);
     let engine = match shared.session.engine() {
         SimEngine::Auto => "auto",
@@ -540,6 +570,36 @@ fn stats_fields(shared: &Shared) -> Vec<(String, Json)> {
             ),
         ),
         (
+            "latency_by_class".to_string(),
+            Json::Obj(
+                m.by_class
+                    .iter()
+                    .map(|cs| {
+                        (
+                            cs.class.to_string(),
+                            Json::Obj(vec![
+                                ("requests".to_string(), num(cs.requests)),
+                                ("mean_us".to_string(), num(cs.mean_us)),
+                                ("p50_us".to_string(), num(cs.p50_us)),
+                                ("p99_us".to_string(), num(cs.p99_us)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "queues".to_string(),
+            Json::Obj(vec![
+                ("interactive".to_string(), Json::Num(depth_i as f64)),
+                ("bulk".to_string(), Json::Num(depth_b as f64)),
+            ]),
+        ),
+        (
+            "connections".to_string(),
+            Json::Num(shared.live_conns.load(Ordering::SeqCst) as f64),
+        ),
+        (
             "cache".to_string(),
             Json::Obj(vec![
                 ("hits".to_string(), num(c.hits)),
@@ -554,6 +614,9 @@ fn stats_fields(shared: &Shared) -> Vec<(String, Json)> {
                 ("rounds".to_string(), num(b.rounds)),
                 ("submissions".to_string(), num(b.submissions)),
                 ("jobs".to_string(), num(b.jobs)),
+                ("bulk_rounds".to_string(), num(b.bulk_rounds)),
+                ("bulk_submissions".to_string(), num(b.bulk_submissions)),
+                ("preemptions".to_string(), num(b.preemptions)),
             ]),
         ),
         (
@@ -569,9 +632,36 @@ fn stats_fields(shared: &Shared) -> Vec<(String, Json)> {
     ]
 }
 
-/// Fuse and run submission batches until the batcher closes.
-fn dispatcher_loop(shared: &Shared, linger: Duration, writer_tx: &mpsc::Sender<WriterMsg>) {
-    while let Some(pendings) = shared.batcher.next_batch(linger) {
+/// Answer one sweep slice through its sink: a `layer_cost` submission
+/// gets the single `result` object, everything else the `results`
+/// array.
+fn respond_sweep_slice(shared: &Shared, sink: ReplySink, slice: &[SweepResult]) {
+    let reply = if sink.kind == RequestKind::LayerCost {
+        let r = slice.first().expect("one job in, one result out");
+        protocol::ok_response(
+            &sink.id,
+            vec![(
+                "result".to_string(),
+                protocol::job_result_json(&shared.session, &r.job, &r.cost),
+            )],
+        )
+    } else {
+        let arr = Json::Arr(
+            slice
+                .iter()
+                .map(|r| protocol::job_result_json(&shared.session, &r.job, &r.cost))
+                .collect(),
+        );
+        protocol::ok_response(&sink.id, vec![("results".to_string(), arr)])
+    };
+    sink.respond(shared, reply, true);
+}
+
+/// Fuse and run interactive submission batches until the batcher
+/// closes.
+fn interactive_loop(shared: &Arc<Shared>, writer_tx: &mpsc::Sender<WriterMsg>) {
+    let linger = shared.config.linger;
+    while let Some(pendings) = shared.batcher.next_interactive(linger) {
         obs::lane_name(|| "dispatcher".to_string());
         let counts: Vec<usize> = pendings.iter().map(|p| p.jobs.len()).collect();
         let all: Vec<SweepJob> = pendings
@@ -592,13 +682,120 @@ fn dispatcher_loop(shared: &Shared, linger: Duration, writer_tx: &mpsc::Sender<W
         for (p, n) in pendings.into_iter().zip(counts) {
             let tail = rest.split_off(n);
             let slice = std::mem::replace(&mut rest, tail);
-            // a submitter that gave up (connection died) just drops
-            // its receiver; the sweep results are still cached
-            let _ = p.tx.send(slice);
+            respond_sweep_slice(shared, p.sink, &slice);
         }
         // new results may be worth persisting; the writer coalesces
         let _ = writer_tx.send(WriterMsg::Flush);
     }
+}
+
+/// Run bulk rounds (fused sweeps, reports, explorations) until the
+/// batcher closes. Lives on its own thread so none of this ever sits
+/// between an interactive submission and its sweep.
+fn bulk_loop(shared: &Arc<Shared>, writer_tx: &mpsc::Sender<WriterMsg>) {
+    let linger = shared.config.linger;
+    while let Some(round) = shared.batcher.next_bulk(linger) {
+        obs::lane_name(|| "dispatcher-bulk".to_string());
+        match round {
+            BulkRound::Sweeps(subs) => {
+                let counts: Vec<usize> = subs.iter().map(|(jobs, _)| jobs.len()).collect();
+                let all: Vec<SweepJob> = subs
+                    .iter()
+                    .flat_map(|(jobs, _)| jobs.iter().cloned())
+                    .collect();
+                let _round_span = obs::span2(
+                    "svc/round",
+                    "submissions",
+                    counts.len() as u64,
+                    "jobs",
+                    all.len() as u64,
+                );
+                let mut rest = shared.session.sweep(all);
+                for ((_jobs, sink), n) in subs.into_iter().zip(counts) {
+                    let tail = rest.split_off(n);
+                    let slice = std::mem::replace(&mut rest, tail);
+                    respond_sweep_slice(shared, sink, &slice);
+                }
+                let _ = writer_tx.send(WriterMsg::Flush);
+            }
+            BulkRound::Report(target, sink) => {
+                let _round_span = obs::span2("svc/round", "submissions", 1, "jobs", 0);
+                // report sweeps go through the session's concurrency-
+                // safe cost path and warm the shared cache
+                let table = target.generate(&shared.session);
+                let reply = protocol::ok_response(
+                    &sink.id,
+                    vec![("table".to_string(), protocol::table_json(&table))],
+                );
+                sink.respond(shared, reply, true);
+                let _ = writer_tx.send(WriterMsg::Flush);
+            }
+            BulkRound::Explore(cfg, sink) => {
+                let _round_span = obs::span2("svc/round", "submissions", 1, "jobs", 0);
+                // the estimator phase is closed-form arithmetic on
+                // explorer-owned worker threads, and exact frontier
+                // re-runs go through the session's cost path
+                match shared.session.explore(&cfg) {
+                    Ok(report) => {
+                        let body = Json::parse(report.to_json().trim())
+                            .expect("ExploreReport::to_json emits valid JSON");
+                        let reply = protocol::ok_response(
+                            &sink.id,
+                            vec![("report".to_string(), body)],
+                        );
+                        sink.respond(shared, reply, true);
+                    }
+                    Err(e) => {
+                        let reply = protocol::err_response(&sink.id, &e);
+                        sink.respond(shared, reply, false);
+                    }
+                }
+                let _ = writer_tx.send(WriterMsg::Flush);
+            }
+        }
+    }
+}
+
+/// Has a buffered HTTP request received its full header block yet?
+fn http_request_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+}
+
+/// Answer one HTTP request on the JSON-lines port: `GET /metrics`
+/// serves the registry in Prometheus text exposition, anything else is
+/// a 404. The response is queued as one frame and the reactor closes
+/// the connection after flushing it, which is the scrape model
+/// Prometheus expects.
+fn handle_http_scrape(shared: &Shared, conn: &Arc<reactor::ConnHandle>, buf: &[u8]) {
+    let start = Instant::now();
+    let request_line = String::from_utf8_lossy(buf);
+    let path = request_line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or("")
+        .to_string();
+    let is_metrics = path == "/metrics" || path.starts_with("/metrics?");
+    let (status, content_type, body) = if is_metrics {
+        (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            obs::registry().prometheus(),
+        )
+    } else {
+        (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found\n".to_string(),
+        )
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    let ok = conn.push_frame(response.into_bytes(), usize::MAX, Duration::ZERO) && is_metrics;
+    shared
+        .metrics
+        .record(RequestKind::Metrics, start.elapsed(), ok);
 }
 
 /// The single store writer: every persistence request funnels here, so
@@ -646,28 +843,30 @@ fn save_store(shared: &Shared) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::BufRead;
+    use std::io::{BufRead, Read, Write};
+    use std::net::TcpStream;
 
     fn request(stream: &mut TcpStream, line: &str) -> Json {
         stream.write_all(line.as_bytes()).unwrap();
         stream.write_all(b"\n").unwrap();
-        let mut reader = io::BufReader::new(stream.try_clone().unwrap());
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
         let mut reply = String::new();
         reader.read_line(&mut reply).unwrap();
         Json::parse(reply.trim()).unwrap()
     }
 
+    fn test_config() -> ServiceConfig {
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            linger: Duration::ZERO,
+            ..ServiceConfig::default()
+        }
+    }
+
     #[test]
     fn serves_stats_and_shuts_down_on_request() {
         let session = Session::builder().threads(1).build();
-        let handle = spawn(
-            session,
-            ServiceConfig {
-                addr: "127.0.0.1:0".to_string(),
-                linger: Duration::ZERO,
-            },
-        )
-        .unwrap();
+        let handle = spawn(session, test_config()).unwrap();
         let mut stream = TcpStream::connect(handle.addr()).unwrap();
 
         let stats = request(&mut stream, r#"{"id":1,"type":"stats"}"#);
@@ -675,6 +874,12 @@ mod tests {
         assert_eq!(stats.get("id").and_then(Json::as_u64), Some(1));
         assert_eq!(stats.get("engine").and_then(Json::as_str), Some("auto"));
         assert_eq!(stats.get("threads").and_then(Json::as_u64), Some(1));
+        // the reactor/priority machinery shows up in stats
+        let queues = stats.get("queues").expect("queue depths");
+        assert_eq!(queues.get("interactive").and_then(Json::as_u64), Some(0));
+        assert_eq!(queues.get("bulk").and_then(Json::as_u64), Some(0));
+        assert!(stats.get("latency_by_class").is_some());
+        assert_eq!(stats.get("connections").and_then(Json::as_u64), Some(1));
 
         // a garbage line is answered, not fatal
         let err = request(&mut stream, r#"{"id":2,"type":"warp"}"#);
@@ -693,14 +898,7 @@ mod tests {
     #[test]
     fn serves_prometheus_metrics_and_trace_captures() {
         let session = Session::builder().threads(1).build();
-        let handle = spawn(
-            session,
-            ServiceConfig {
-                addr: "127.0.0.1:0".to_string(),
-                linger: Duration::ZERO,
-            },
-        )
-        .unwrap();
+        let handle = spawn(session, test_config()).unwrap();
         let mut stream = TcpStream::connect(handle.addr()).unwrap();
 
         let m = request(&mut stream, r#"{"id":1,"type":"metrics"}"#);
@@ -721,7 +919,9 @@ mod tests {
             "trace field must hold a Chrome trace document: {doc}"
         );
 
-        // a raw Prometheus scrape over HTTP on the same port
+        // a raw Prometheus scrape over HTTP on the same port; the new
+        // per-class queue-depth gauges and priority counters must be in
+        // the exposition from the first scrape
         let mut http = TcpStream::connect(handle.addr()).unwrap();
         http.write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n")
             .unwrap();
@@ -729,6 +929,9 @@ mod tests {
         http.read_to_string(&mut body).unwrap();
         assert!(body.starts_with("HTTP/1.1 200 OK"), "{body}");
         assert!(body.contains("ecoflow_requests_total"), "{body}");
+        assert!(body.contains("ecoflow_service_queue_depth"), "{body}");
+        assert!(body.contains("ecoflow_service_preemptions_total"), "{body}");
+        assert!(body.contains("ecoflow_service_open_connections"), "{body}");
 
         // stats carries the enriched per-kind / batcher / store objects
         let stats = request(&mut stream, r#"{"id":4,"type":"stats"}"#);
@@ -750,14 +953,7 @@ mod tests {
     #[test]
     fn serves_explore_requests() {
         let session = Session::builder().threads(2).build();
-        let handle = spawn(
-            session,
-            ServiceConfig {
-                addr: "127.0.0.1:0".to_string(),
-                linger: Duration::ZERO,
-            },
-        )
-        .unwrap();
+        let handle = spawn(session, test_config()).unwrap();
         let mut stream = TcpStream::connect(handle.addr()).unwrap();
 
         // estimator-only demo sweep over one flow
@@ -783,6 +979,7 @@ mod tests {
         request(&mut stream, r#"{"id":3,"type":"shutdown"}"#);
         let report = handle.join();
         assert_eq!(report.metrics.requests, 3);
+        assert_eq!(report.batcher.bulk_submissions, 1, "explore rode the bulk queue");
     }
 
     #[test]

@@ -33,6 +33,27 @@
 //! Parsing is strict: unknown `type`s, unknown nets/layers/flows, and
 //! malformed numbers are errors (`ok:false` with the `id` echoed), and
 //! the connection stays usable afterwards.
+//!
+//! # Streamed replies
+//!
+//! Large replies to bulk requests (`sweep`, `table`, `traffic`,
+//! `shootout`, `explore` — anything over the service's
+//! `stream_threshold`) are not sent as one giant line but as a sequence
+//! of bounded JSON-line frames ([`stream_frames`]):
+//!
+//! ```text
+//! {"id":4,"ok":true,"stream":true,"frame":0,"chunk":"<first slice>"}
+//! {"id":4,"frame":1,"chunk":"<next slice>"}
+//! ...
+//! {"id":4,"frame":N,"done":true}
+//! ```
+//!
+//! Concatenating every `chunk` in `frame` order reproduces the exact
+//! single-line reply byte for byte ([`reassemble`] does this, with
+//! ordering/termination checks) — so streaming changes framing, never
+//! content, and the store-`entry` bit-exactness contract survives it.
+//! Replies under the threshold (and every interactive reply) stay
+//! single-line, so simple clients keep working unchanged.
 
 use crate::compiler::Dataflow;
 use crate::coordinator::scheduler::SweepJob;
@@ -428,6 +449,82 @@ pub fn table_json(t: &Table) -> Json {
     ])
 }
 
+// --- streamed replies --------------------------------------------------
+
+/// Split one rendered reply line into streamed frames (see the module
+/// docs for the schema). `chunk_bytes` bounds the *payload* per frame;
+/// cuts land on char boundaries, so every frame renders valid JSON.
+/// The terminator frame carries no chunk. Concatenating the `chunk`
+/// fields of the returned frames reproduces `reply` exactly.
+pub fn stream_frames(id: &Json, reply: &str, chunk_bytes: usize) -> Vec<String> {
+    let chunk_bytes = chunk_bytes.max(16);
+    let mut frames = Vec::with_capacity(reply.len() / chunk_bytes + 2);
+    let mut rest = reply;
+    let mut n = 0u64;
+    while !rest.is_empty() {
+        let mut cut = rest.len().min(chunk_bytes);
+        while !rest.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        let (head, tail) = rest.split_at(cut);
+        let mut obj = vec![("id".to_string(), id.clone())];
+        if n == 0 {
+            // the first frame doubles as the "ok" header, so clients
+            // that dispatch on `ok`/`stream` need only look at line one
+            obj.push(("ok".to_string(), Json::Bool(true)));
+            obj.push(("stream".to_string(), Json::Bool(true)));
+        }
+        obj.push(("frame".to_string(), Json::Num(n as f64)));
+        obj.push(("chunk".to_string(), Json::Str(head.to_string())));
+        frames.push(Json::Obj(obj).render());
+        rest = tail;
+        n += 1;
+    }
+    frames.push(
+        Json::Obj(vec![
+            ("id".to_string(), id.clone()),
+            ("frame".to_string(), Json::Num(n as f64)),
+            ("done".to_string(), Json::Bool(true)),
+        ])
+        .render(),
+    );
+    frames
+}
+
+/// Reassemble a full streamed reply from its parsed frames: checks
+/// ordering (`frame` numbers must be 0..N in sequence), the `stream`
+/// marker on frame 0 and the `done` terminator, then concatenates the
+/// chunks. The result is byte-identical to the buffered reply the
+/// frames replaced. Clients (and the bit-identity test) use this.
+pub fn reassemble(frames: &[Json]) -> Result<String, String> {
+    if frames.is_empty() {
+        return Err("no frames to reassemble".to_string());
+    }
+    let mut out = String::new();
+    for (i, f) in frames.iter().enumerate() {
+        let n = f
+            .get("frame")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("frame {i} lacks a \"frame\" number"))?;
+        if n != i as u64 {
+            return Err(format!("frame {n} arrived out of order (expected {i})"));
+        }
+        if i == 0 && f.get("stream").and_then(Json::as_bool) != Some(true) {
+            return Err("first frame must carry \"stream\":true".to_string());
+        }
+        let last = i + 1 == frames.len();
+        if last && f.get("done").and_then(Json::as_bool) != Some(true) {
+            return Err("stream not terminated by a \"done\" frame".to_string());
+        }
+        match f.get("chunk").and_then(Json::as_str) {
+            Some(c) => out.push_str(c),
+            None if last => {}
+            None => return Err(format!("frame {n} lacks a \"chunk\"")),
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -638,6 +735,57 @@ mod tests {
             )
         );
         assert_eq!(decoded, cost, "wire entry must be the exact cost");
+    }
+
+    #[test]
+    fn stream_frames_reassemble_bit_identically() {
+        let id = Json::Num(9.0);
+        // a reply with JSON-meaningful characters, multi-byte UTF-8 and
+        // enough length to span many frames
+        let reply = format!(
+            r#"{{"id":9,"ok":true,"rows":[{}"µ≈🚀"]}}"#,
+            r#""quoted \" cell","#.repeat(40)
+        );
+        for chunk in [16, 37, 100, 1 << 20] {
+            let frames = stream_frames(&id, &reply, chunk);
+            assert!(frames.len() >= 2, "payload frames plus a terminator");
+            for (i, line) in frames.iter().enumerate() {
+                assert!(!line.contains('\n'));
+                let f = Json::parse(line).unwrap_or_else(|e| panic!("frame {i}: {e}"));
+                assert_eq!(f.get("id").and_then(Json::as_u64), Some(9));
+                assert_eq!(f.get("frame").and_then(Json::as_u64), Some(i as u64));
+            }
+            let first = Json::parse(&frames[0]).unwrap();
+            assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true));
+            assert_eq!(first.get("stream").and_then(Json::as_bool), Some(true));
+            let last = Json::parse(frames.last().unwrap()).unwrap();
+            assert_eq!(last.get("done").and_then(Json::as_bool), Some(true));
+            let parsed: Vec<Json> =
+                frames.iter().map(|l| Json::parse(l).unwrap()).collect();
+            assert_eq!(
+                reassemble(&parsed).unwrap(),
+                reply,
+                "chunk concatenation must be byte-identical (chunk={chunk})"
+            );
+        }
+    }
+
+    #[test]
+    fn reassemble_rejects_broken_streams() {
+        let id = Json::Null;
+        let frames: Vec<Json> = stream_frames(&id, "0123456789abcdef0123456789", 16)
+            .iter()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(frames.len(), 3);
+        assert!(reassemble(&[]).is_err(), "empty stream");
+        let mut missing_done = frames.clone();
+        missing_done.pop();
+        assert!(reassemble(&missing_done).is_err(), "no terminator");
+        let reordered = vec![frames[1].clone(), frames[0].clone(), frames[2].clone()];
+        assert!(reassemble(&reordered).is_err(), "out-of-order frames");
+        let headless = vec![frames[1].clone(), frames[2].clone()];
+        assert!(reassemble(&headless).is_err(), "missing stream header");
     }
 
     #[test]

@@ -1,0 +1,776 @@
+//! The event-driven connection layer of the sweep service.
+//!
+//! PR 6's daemon parked one thread per client; at the connection counts
+//! the ROADMAP aims for that is a thread-stack per idle socket and a
+//! blocking `write_all` per reply. This module replaces it with a
+//! std-only reactor:
+//!
+//! * **accept** keeps its own thread but enforces a hard connection cap
+//!   ([`ServiceConfig::max_connections`](super::ServiceConfig)); beyond
+//!   it, new sockets wait in the listen backlog (accept backpressure,
+//!   counted as `ecoflow_service_accept_backpressure_total`).
+//! * A small fixed pool of **poller** threads owns every accepted
+//!   socket. Sockets are non-blocking; on Unix the pollers multiplex
+//!   them with `poll(2)` (a direct libc call — std already links libc,
+//!   so this adds no dependency), elsewhere a short-sleep fallback
+//!   degrades gracefully. Each poller also watches a self-wake pipe
+//!   ([`Waker`]) so dispatcher threads can interrupt a `poll` the
+//!   instant a reply is queued.
+//! * Per-connection **outbound queues** ([`ConnHandle`]) are bounded
+//!   byte-wise. Dispatchers push whole reply frames (reply + `\n` in
+//!   one buffer, so a frame is one `write` syscall and can never
+//!   interleave partially); a queue that stays full past
+//!   [`ServiceConfig::slow_reader_grace`](super::ServiceConfig) marks
+//!   the connection dead — the slow-reader disconnect policy
+//!   (`ecoflow_service_slow_reader_disconnects_total`) — instead of
+//!   stalling the dispatcher behind one stalled socket.
+//! * The per-connection **inbound buffer is capped**
+//!   ([`ServiceConfig::max_line_bytes`](super::ServiceConfig)): a
+//!   client streaming bytes with no `\n` gets one error reply and a
+//!   disconnect (`ecoflow_service_oversized_lines_total`) instead of
+//!   growing the buffer without bound.
+//!
+//! Reactor iterations that moved bytes are spanned (`svc/reactor`) so a
+//! trace capture shows poller activity next to the dispatch pipeline.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::obs;
+
+use super::json::Json;
+use super::metrics::RequestKind;
+use super::{protocol, Shared};
+
+/// How long a `poll` may park before re-checking the stop flag.
+const POLL_TIMEOUT_MS: i32 = 10;
+
+/// How long the drain phase waits for queued replies to flush before
+/// force-closing the stragglers.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// Read-chunk size: one socket read per readiness event, looped only
+/// while the kernel keeps filling the whole chunk.
+const READ_CHUNK: usize = 16 * 1024;
+
+// --- self-wake pipe ----------------------------------------------------
+
+#[cfg(unix)]
+mod wake {
+    //! A `UnixStream` pair as a self-wake pipe: dispatchers write one
+    //! byte, the poller sees the read end become readable and drains it.
+    use std::io::{Read, Write};
+    use std::os::unix::net::UnixStream;
+
+    /// The write end — cheap, `Sync`, shared by every reply producer.
+    pub(crate) struct Waker {
+        tx: UnixStream,
+    }
+
+    /// The read end — owned by exactly one poller.
+    pub(crate) struct WakeRx {
+        rx: UnixStream,
+    }
+
+    pub(crate) fn pair() -> std::io::Result<(Waker, WakeRx)> {
+        let (tx, rx) = UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok((Waker { tx }, WakeRx { rx }))
+    }
+
+    impl Waker {
+        /// Nudge the poller. A full pipe (`WouldBlock`) already means a
+        /// wake-up is pending, so every error is ignorable.
+        pub(crate) fn wake(&self) {
+            let _ = (&self.tx).write(&[1u8]);
+        }
+    }
+
+    impl WakeRx {
+        /// Swallow every pending wake byte.
+        pub(crate) fn drain(&self) {
+            let mut buf = [0u8; 64];
+            while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+        }
+
+        /// The raw fd for the pollset.
+        pub(crate) fn fd(&self) -> std::os::unix::io::RawFd {
+            use std::os::unix::io::AsRawFd;
+            self.rx.as_raw_fd()
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod wake {
+    //! Fallback waker: the non-Unix poller sleeps instead of polling,
+    //! so a wake-up has nothing to interrupt and these are no-ops.
+    pub(crate) struct Waker;
+    pub(crate) struct WakeRx;
+
+    pub(crate) fn pair() -> std::io::Result<(Waker, WakeRx)> {
+        Ok((Waker, WakeRx))
+    }
+
+    impl Waker {
+        pub(crate) fn wake(&self) {}
+    }
+
+    impl WakeRx {
+        pub(crate) fn drain(&self) {}
+    }
+}
+
+pub(crate) use wake::Waker;
+
+// --- poll(2) -----------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    //! Hand-rolled `poll(2)` binding. std links libc on every Unix
+    //! target, so declaring the symbol costs nothing and keeps the
+    //! crate dependency-free.
+    use std::ffi::{c_int, c_ulong};
+    use std::os::unix::io::RawFd;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub(crate) struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub(crate) const POLLIN: i16 = 0x001;
+    pub(crate) const POLLOUT: i16 = 0x004;
+    pub(crate) const POLLERR: i16 = 0x008;
+    pub(crate) const POLLHUP: i16 = 0x010;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+
+    /// `poll` with EINTR retry. A genuinely failed poll degrades to a
+    /// short timed spin instead of crashing the poller.
+    pub(crate) fn wait(fds: &mut [PollFd], timeout_ms: i32) {
+        loop {
+            let r = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+            if r >= 0 {
+                return;
+            }
+            let e = std::io::Error::last_os_error();
+            if e.kind() != std::io::ErrorKind::Interrupted {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                return;
+            }
+        }
+    }
+}
+
+// --- shared connection handle ------------------------------------------
+
+/// The outbound side of one connection, bounded byte-wise.
+struct Outbound {
+    /// Whole frames (each already newline-terminated / self-delimiting);
+    /// the poller writes them front to back, possibly partially.
+    frames: VecDeque<Vec<u8>>,
+    /// Total queued bytes across `frames`.
+    bytes: usize,
+    /// Once true the connection is beyond saving: pushes are refused,
+    /// the poller drops the socket at the next sweep.
+    dead: bool,
+}
+
+/// The dispatcher-facing half of a connection: a bounded outbound frame
+/// queue plus the in-flight request count that keeps the poller from
+/// closing a drained socket too early. The socket itself stays with the
+/// owning poller thread; everything here is shared state.
+pub(crate) struct ConnHandle {
+    out: Mutex<Outbound>,
+    /// Signalled when the poller frees queue space (or the conn dies).
+    space: Condvar,
+    /// Requests accepted from this connection but not yet answered.
+    pending: AtomicUsize,
+    /// The owning poller's waker: pushed frames interrupt its `poll`.
+    waker: Arc<Waker>,
+}
+
+impl ConnHandle {
+    pub(crate) fn new(waker: Arc<Waker>) -> ConnHandle {
+        ConnHandle {
+            out: Mutex::new(Outbound {
+                frames: VecDeque::new(),
+                bytes: 0,
+                dead: false,
+            }),
+            space: Condvar::new(),
+            pending: AtomicUsize::new(0),
+            waker,
+        }
+    }
+
+    /// A handle with a throwaway waker, for unit tests that never
+    /// attach a real socket.
+    #[cfg(test)]
+    pub(crate) fn detached() -> ConnHandle {
+        let (w, _rx) = wake::pair().expect("socketpair for a test waker");
+        ConnHandle::new(Arc::new(w))
+    }
+
+    /// Queue one reply frame, waiting up to `grace` for space when the
+    /// queue is over `cap` bytes. `false` means the frame was dropped:
+    /// the connection is dead, or stayed full past the grace window (it
+    /// is then marked dead — the slow-reader disconnect policy). A
+    /// frame larger than `cap` is still accepted when the queue is
+    /// empty, so a single huge reply cannot deadlock a tiny cap.
+    pub(crate) fn push_frame(&self, frame: Vec<u8>, cap: usize, grace: Duration) -> bool {
+        let start = Instant::now();
+        let mut out = self.out.lock().unwrap();
+        loop {
+            if out.dead {
+                return false;
+            }
+            if out.frames.is_empty() || out.bytes.saturating_add(frame.len()) <= cap {
+                out.bytes = out.bytes.saturating_add(frame.len());
+                out.frames.push_back(frame);
+                drop(out);
+                self.waker.wake();
+                return true;
+            }
+            let waited = start.elapsed();
+            if waited >= grace {
+                out.dead = true;
+                out.frames.clear();
+                out.bytes = 0;
+                drop(out);
+                series().slow_readers.inc();
+                self.waker.wake();
+                return false;
+            }
+            let (o, _timeout) = self.space.wait_timeout(out, grace - waited).unwrap();
+            out = o;
+        }
+    }
+
+    /// Pop the next frame for the socket (poller side), freeing space.
+    fn pop_frame(&self) -> Option<Vec<u8>> {
+        let mut out = self.out.lock().unwrap();
+        let frame = out.frames.pop_front();
+        if let Some(f) = &frame {
+            out.bytes = out.bytes.saturating_sub(f.len());
+            self.space.notify_all();
+        }
+        frame
+    }
+
+    /// Any frames still queued?
+    fn has_output(&self) -> bool {
+        !self.out.lock().unwrap().frames.is_empty()
+    }
+
+    /// Give up on this connection: refuse new frames, drop queued ones,
+    /// wake both the poller (to drop the socket) and blocked pushers.
+    pub(crate) fn mark_dead(&self) {
+        let mut out = self.out.lock().unwrap();
+        out.dead = true;
+        out.frames.clear();
+        out.bytes = 0;
+        drop(out);
+        self.space.notify_all();
+        self.waker.wake();
+    }
+
+    fn is_dead(&self) -> bool {
+        self.out.lock().unwrap().dead
+    }
+
+    /// Count one accepted-but-unanswered request (keeps the poller from
+    /// reaping the connection before its reply is queued).
+    pub(crate) fn begin_pending(&self) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// The matching decrement; wakes the poller so a drained connection
+    /// can be reaped promptly.
+    pub(crate) fn end_pending(&self) {
+        self.pending.fetch_sub(1, Ordering::SeqCst);
+        self.waker.wake();
+    }
+
+    fn pending(&self) -> usize {
+        self.pending.load(Ordering::SeqCst)
+    }
+}
+
+// --- poller ------------------------------------------------------------
+
+/// One poller thread's shared mailbox: its waker plus the intake of
+/// freshly accepted sockets.
+pub(crate) struct Poller {
+    waker: Arc<Waker>,
+    rx: wake::WakeRx,
+    intake: Mutex<Vec<(TcpStream, Arc<ConnHandle>)>>,
+}
+
+impl Poller {
+    pub(crate) fn new() -> io::Result<Poller> {
+        let (waker, rx) = wake::pair()?;
+        Ok(Poller {
+            waker: Arc::new(waker),
+            rx,
+            intake: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The waker new [`ConnHandle`]s of this poller must hold.
+    pub(crate) fn waker(&self) -> Arc<Waker> {
+        Arc::clone(&self.waker)
+    }
+
+    /// Hand a freshly accepted socket to this poller.
+    pub(crate) fn adopt(&self, stream: TcpStream, handle: Arc<ConnHandle>) {
+        self.intake.lock().unwrap().push((stream, handle));
+        self.waker.wake();
+    }
+
+    /// Interrupt a parked `poll` (used by accept on shutdown).
+    pub(crate) fn wake(&self) {
+        self.waker.wake();
+    }
+}
+
+/// Poller-private per-connection state (the socket itself lives here).
+struct Conn {
+    stream: TcpStream,
+    handle: Arc<ConnHandle>,
+    /// Bytes received but not yet forming a complete line.
+    inbound: Vec<u8>,
+    /// The frame currently being written and the offset already sent.
+    writing: Option<(Vec<u8>, usize)>,
+    /// No more requests will be read (EOF, error, HTTP answered,
+    /// oversized line, or service drain).
+    reads_done: bool,
+    /// The client spoke HTTP (`GET ...`) instead of JSON lines.
+    is_http: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, handle: Arc<ConnHandle>) -> Conn {
+        Conn {
+            stream,
+            handle,
+            inbound: Vec::new(),
+            writing: None,
+            reads_done: false,
+            is_http: false,
+        }
+    }
+
+    /// Can this connection be dropped? Order matters: `pending` is read
+    /// before the outbound queue, so a reply pushed-then-accounted by a
+    /// dispatcher is never missed between the two checks.
+    fn finished(&self) -> bool {
+        if self.handle.is_dead() {
+            return true;
+        }
+        self.reads_done
+            && self.handle.pending() == 0
+            && self.writing.is_none()
+            && !self.handle.has_output()
+    }
+
+    /// Does the pollset need to watch this socket for writability?
+    fn wants_write(&self) -> bool {
+        self.writing.is_some() || self.handle.has_output()
+    }
+}
+
+/// Run one poller until shutdown completes its drain. `readers_done` is
+/// the supervisor's barrier: it is bumped exactly once, after this
+/// poller has stopped consuming request bytes, so the batcher is only
+/// closed once no poller can submit new work.
+pub(crate) fn poller_loop(shared: &Arc<Shared>, poller: &Arc<Poller>, readers_done: &AtomicUsize) {
+    obs::lane_name(|| "svc-poller".to_string());
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut chunk = vec![0u8; READ_CHUNK];
+    let mut marked_done = false;
+    let mut drain_started: Option<Instant> = None;
+    loop {
+        for (stream, handle) in poller.intake.lock().unwrap().drain(..) {
+            conns.push(Conn::new(stream, handle));
+        }
+        if shared.stopping.load(Ordering::SeqCst) {
+            // stop consuming request bytes; complete lines were already
+            // answered as they arrived, a trailing partial line is
+            // dropped (its newline never came)
+            for c in conns.iter_mut() {
+                c.reads_done = true;
+            }
+            if !marked_done {
+                marked_done = true;
+                drain_started = Some(Instant::now());
+                readers_done.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let before = conns.len();
+        conns.retain(|c| !c.finished());
+        if conns.len() != before {
+            let removed = before - conns.len();
+            let left = shared.live_conns.fetch_sub(removed, Ordering::SeqCst) - removed;
+            series().open.set(left as u64);
+        }
+        if marked_done {
+            if conns.is_empty() {
+                break;
+            }
+            if drain_started.is_some_and(|t| t.elapsed() > DRAIN_GRACE) {
+                // stragglers that would not flush: force-close
+                let left = shared.live_conns.fetch_sub(conns.len(), Ordering::SeqCst)
+                    - conns.len();
+                series().open.set(left as u64);
+                for c in &conns {
+                    c.handle.mark_dead();
+                }
+                break;
+            }
+        }
+        let ready = wait_ready(poller, &conns, POLL_TIMEOUT_MS);
+        let mut read_bytes = 0u64;
+        let mut wrote_bytes = 0u64;
+        for (c, (readable, writable)) in conns.iter_mut().zip(ready) {
+            if readable && !c.reads_done {
+                read_bytes += service_read(shared, c, &mut chunk);
+            }
+            // attempt a write whenever output exists — on a freshly
+            // queued reply the socket was not yet in the pollset for
+            // POLLOUT, and an eager attempt usually succeeds
+            if writable || c.wants_write() {
+                wrote_bytes += service_write(c);
+            }
+        }
+        if (read_bytes + wrote_bytes) > 0 && obs::trace_enabled() {
+            let _span = obs::span2(
+                "svc/reactor",
+                "read_bytes",
+                read_bytes,
+                "write_bytes",
+                wrote_bytes,
+            );
+        }
+    }
+}
+
+/// Pull whatever the socket has ready, answering complete lines as they
+/// appear. Returns the bytes consumed.
+fn service_read(shared: &Arc<Shared>, c: &mut Conn, chunk: &mut [u8]) -> u64 {
+    let mut total = 0u64;
+    loop {
+        match c.stream.read(chunk) {
+            Ok(0) => {
+                c.reads_done = true; // client hung up (replies still flush)
+                break;
+            }
+            Ok(n) => {
+                total += n as u64;
+                c.inbound.extend_from_slice(&chunk[..n]);
+                process_inbound(shared, c);
+                if c.reads_done || n < chunk.len() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.reads_done = true;
+                c.handle.mark_dead();
+                break;
+            }
+        }
+    }
+    total
+}
+
+/// Answer every complete line buffered on `c`, then enforce the inbound
+/// cap on whatever partial line remains.
+fn process_inbound(shared: &Arc<Shared>, c: &mut Conn) {
+    if c.is_http || c.inbound.starts_with(b"GET ") {
+        // a Prometheus scraper speaks HTTP, not JSON lines: answer one
+        // `GET /metrics` (or 404) and close after the flush
+        c.is_http = true;
+        if super::http_request_complete(&c.inbound) {
+            super::handle_http_scrape(shared, &c.handle, &c.inbound);
+            c.reads_done = true;
+        } else if c.inbound.len() > shared.config.max_line_bytes {
+            c.handle.mark_dead(); // header flood: no reply owed
+            c.reads_done = true;
+        }
+        return;
+    }
+    while let Some(pos) = c.inbound.iter().position(|&b| b == b'\n') {
+        let raw: Vec<u8> = c.inbound.drain(..=pos).collect();
+        let text = String::from_utf8_lossy(&raw);
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
+        }
+        super::handle_request_line(shared, &c.handle, line);
+    }
+    if c.inbound.len() > shared.config.max_line_bytes {
+        // the read-buffer cap: a newline-less byte stream gets one
+        // error reply and a disconnect instead of unbounded memory
+        series().oversized.inc();
+        shared
+            .metrics
+            .record(RequestKind::Invalid, Duration::ZERO, false);
+        let reply = protocol::err_response(
+            &Json::Null,
+            &format!(
+                "request line exceeds {} bytes; closing connection",
+                shared.config.max_line_bytes
+            ),
+        );
+        let mut frame = reply.into_bytes();
+        frame.push(b'\n');
+        let _ = c.handle.push_frame(frame, usize::MAX, Duration::ZERO);
+        c.inbound.clear();
+        c.reads_done = true;
+    }
+}
+
+/// Flush queued frames while the socket accepts them. Returns the bytes
+/// written.
+fn service_write(c: &mut Conn) -> u64 {
+    let mut total = 0u64;
+    loop {
+        if c.writing.is_none() {
+            match c.handle.pop_frame() {
+                Some(f) => c.writing = Some((f, 0)),
+                None => break,
+            }
+        }
+        let done = {
+            let (buf, off) = c.writing.as_mut().expect("frame installed above");
+            match c.stream.write(&buf[*off..]) {
+                Ok(0) => {
+                    c.handle.mark_dead();
+                    break;
+                }
+                Ok(n) => {
+                    total += n as u64;
+                    *off += n;
+                    *off == buf.len()
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => false,
+                Err(_) => {
+                    c.handle.mark_dead();
+                    break;
+                }
+            }
+        };
+        if done {
+            c.writing = None;
+        }
+    }
+    total
+}
+
+/// Block until something is ready (or `timeout_ms` passes); returns one
+/// `(readable, writable)` pair per connection, in order.
+#[cfg(unix)]
+fn wait_ready(poller: &Poller, conns: &[Conn], timeout_ms: i32) -> Vec<(bool, bool)> {
+    use std::os::unix::io::AsRawFd;
+    let mut fds = Vec::with_capacity(conns.len() + 1);
+    fds.push(sys::PollFd {
+        fd: poller.rx.fd(),
+        events: sys::POLLIN,
+        revents: 0,
+    });
+    for c in conns {
+        let mut events = 0i16;
+        if !c.reads_done {
+            events |= sys::POLLIN;
+        }
+        if c.wants_write() {
+            events |= sys::POLLOUT;
+        }
+        // events == 0 still reports POLLERR/POLLHUP, which is exactly
+        // what a reply-waiting connection needs to learn it died
+        fds.push(sys::PollFd {
+            fd: c.stream.as_raw_fd(),
+            events,
+            revents: 0,
+        });
+    }
+    sys::wait(&mut fds, timeout_ms);
+    if fds[0].revents != 0 {
+        poller.rx.drain();
+    }
+    fds[1..]
+        .iter()
+        .map(|p| {
+            let gone = p.revents & (sys::POLLERR | sys::POLLHUP) != 0;
+            (
+                p.revents & sys::POLLIN != 0 || gone,
+                p.revents & sys::POLLOUT != 0 || gone,
+            )
+        })
+        .collect()
+}
+
+/// Degraded fallback without `poll(2)`: a short sleep, then treat every
+/// socket as ready — they are non-blocking, so a spurious attempt costs
+/// one `WouldBlock` each.
+#[cfg(not(unix))]
+fn wait_ready(_poller: &Poller, conns: &[Conn], _timeout_ms: i32) -> Vec<(bool, bool)> {
+    thread::sleep(Duration::from_millis(1));
+    conns.iter().map(|_| (true, true)).collect()
+}
+
+// --- accept ------------------------------------------------------------
+
+/// Accept clients round-robin onto the poller pool until the stop flag
+/// goes up, holding the line at
+/// [`max_connections`](super::ServiceConfig::max_connections): beyond
+/// the cap, sockets wait in the listen backlog.
+pub(crate) fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>, pollers: &[Arc<Poller>]) {
+    let mut next = 0usize;
+    loop {
+        if shared.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        if shared.live_conns.load(Ordering::SeqCst) >= shared.config.max_connections {
+            series().backpressure.inc();
+            thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(true);
+                let _ = stream.set_nodelay(true);
+                let poller = &pollers[next % pollers.len()];
+                next = next.wrapping_add(1);
+                let n = shared.live_conns.fetch_add(1, Ordering::SeqCst) + 1;
+                series().open.set(n as u64);
+                poller.adopt(stream, Arc::new(ConnHandle::new(poller.waker())));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    // make sure every parked poller notices the stop flag promptly
+    for p in pollers {
+        p.wake();
+    }
+}
+
+// --- registry series ---------------------------------------------------
+
+/// The reactor's registry series, interned once.
+struct Series {
+    open: Arc<obs::Counter>,
+    backpressure: Arc<obs::Counter>,
+    oversized: Arc<obs::Counter>,
+    slow_readers: Arc<obs::Counter>,
+}
+
+fn series() -> &'static Series {
+    static S: OnceLock<Series> = OnceLock::new();
+    S.get_or_init(|| {
+        let r = obs::registry();
+        Series {
+            open: r.gauge(
+                "ecoflow_service_open_connections",
+                "",
+                "Connections currently owned by the service reactor.",
+            ),
+            backpressure: r.counter(
+                "ecoflow_service_accept_backpressure_total",
+                "",
+                "Accept-loop waits taken because the connection cap was reached.",
+            ),
+            oversized: r.counter(
+                "ecoflow_service_oversized_lines_total",
+                "",
+                "Connections dropped for exceeding the request-line byte cap.",
+            ),
+            slow_readers: r.counter(
+                "ecoflow_service_slow_reader_disconnects_total",
+                "",
+                "Connections dropped because their outbound queue stayed full past the grace window.",
+            ),
+        }
+    })
+}
+
+/// Pre-intern the reactor's registry series so `/metrics` expositions
+/// list them (at zero) from the first scrape, not the first event.
+pub(crate) fn intern_series() {
+    let _ = series();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_roundtrips_frames_in_order() {
+        let h = ConnHandle::detached();
+        assert!(h.push_frame(b"one\n".to_vec(), 1024, Duration::ZERO));
+        assert!(h.push_frame(b"two\n".to_vec(), 1024, Duration::ZERO));
+        assert!(h.has_output());
+        assert_eq!(h.pop_frame().unwrap(), b"one\n");
+        assert_eq!(h.pop_frame().unwrap(), b"two\n");
+        assert!(h.pop_frame().is_none());
+        assert!(!h.has_output());
+    }
+
+    #[test]
+    fn full_queue_past_grace_marks_the_connection_dead() {
+        let h = ConnHandle::detached();
+        // first frame always lands, even over the cap
+        assert!(h.push_frame(vec![0u8; 64], 16, Duration::ZERO));
+        // the queue is now over cap and nobody is draining it
+        let before = series().slow_readers.get();
+        assert!(!h.push_frame(vec![0u8; 64], 16, Duration::from_millis(10)));
+        assert!(h.is_dead(), "slow reader must be cut loose");
+        assert_eq!(series().slow_readers.get(), before + 1);
+        // dead connections refuse everything and hold nothing
+        assert!(!h.push_frame(b"x".to_vec(), 1024, Duration::ZERO));
+        assert!(h.pop_frame().is_none());
+    }
+
+    #[test]
+    fn space_freed_by_the_poller_unblocks_a_waiting_pusher() {
+        let h = Arc::new(ConnHandle::detached());
+        assert!(h.push_frame(vec![0u8; 64], 64, Duration::ZERO));
+        let pusher = {
+            let h = Arc::clone(&h);
+            thread::spawn(move || h.push_frame(vec![0u8; 32], 64, Duration::from_secs(5)))
+        };
+        thread::sleep(Duration::from_millis(20));
+        assert!(h.pop_frame().is_some(), "poller drains the head frame");
+        assert!(pusher.join().unwrap(), "freed space must admit the frame");
+    }
+
+    #[test]
+    fn pending_tracks_begin_end_pairs() {
+        let h = ConnHandle::detached();
+        assert_eq!(h.pending(), 0);
+        h.begin_pending();
+        h.begin_pending();
+        assert_eq!(h.pending(), 2);
+        h.end_pending();
+        assert_eq!(h.pending(), 1);
+        h.end_pending();
+        assert_eq!(h.pending(), 0);
+    }
+}

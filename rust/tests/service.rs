@@ -2,7 +2,11 @@
 //! concurrent clients get answers bit-identical to the one-shot CLI
 //! path, protocol errors are survivable, racing writers are serialized
 //! through the single writer thread, and shutdown drains before it
-//! flushes.
+//! flushes. The reactor-era behaviours are pinned too: oversized
+//! request lines get one error and a disconnect, large bulk replies
+//! stream as frames that reassemble bit-identically, a client that
+//! stops reading cannot stall interactive clients or shutdown, and an
+//! interactive arrival preempts the bulk linger window.
 //!
 //! Each test spawns its own service on an OS-assigned port (`:0`) with
 //! its own session, so the tests are independent and parallel-safe.
@@ -21,12 +25,14 @@ use ecoflow::coordinator::scheduler::SweepJob;
 use ecoflow::coordinator::{store, CostCache, LoadOutcome, Session};
 use ecoflow::model::{ConvLayer, TrainingPass};
 use ecoflow::service::json::Json;
+use ecoflow::service::protocol;
 use ecoflow::service::{spawn, ServiceConfig};
 
 fn config() -> ServiceConfig {
     ServiceConfig {
         addr: "127.0.0.1:0".to_string(),
         linger: Duration::from_millis(5),
+        ..ServiceConfig::default()
     }
 }
 
@@ -44,12 +50,19 @@ impl Client {
     }
 
     fn request(&mut self, line: &str) -> Json {
+        let reply = self.raw_request(line);
+        assert!(!reply.is_empty(), "connection closed with no reply to {line}");
+        Json::parse(reply.trim()).unwrap()
+    }
+
+    /// Like [`request`](Client::request), but returns the raw reply
+    /// line (newline included) without parsing it.
+    fn raw_request(&mut self, line: &str) -> String {
         self.stream.write_all(line.as_bytes()).unwrap();
         self.stream.write_all(b"\n").unwrap();
         let mut reply = String::new();
         self.reader.read_line(&mut reply).unwrap();
-        assert!(!reply.is_empty(), "connection closed with no reply to {line}");
-        Json::parse(reply.trim()).unwrap()
+        reply
     }
 }
 
@@ -305,6 +318,7 @@ fn shutdown_drains_in_flight_work_and_flushes_the_store() {
         ServiceConfig {
             addr: "127.0.0.1:0".to_string(),
             linger: Duration::from_millis(300),
+            ..ServiceConfig::default()
         },
     )
     .unwrap();
@@ -338,4 +352,218 @@ fn shutdown_drains_in_flight_work_and_flushes_the_store() {
         other => panic!("store not flushed on shutdown: {other:?}"),
     }
     std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn oversized_request_lines_get_an_error_then_disconnect() {
+    let handle = spawn(
+        Session::builder().threads(1).build(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            linger: Duration::ZERO,
+            max_line_bytes: 4096,
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr();
+
+    // a newline-less byte stream just past the cap (the service reads
+    // every byte we send before replying, so the close is a clean FIN):
+    // exactly one error reply, then EOF
+    let mut c = Client::connect(addr);
+    c.stream.write_all(&vec![b'x'; 4200]).unwrap();
+    let mut reply = String::new();
+    c.reader.read_line(&mut reply).unwrap();
+    let reply = Json::parse(reply.trim()).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(
+        reply
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("4096"),
+        "the error names the cap: {}",
+        reply.render()
+    );
+    let mut rest = String::new();
+    assert_eq!(
+        c.reader.read_line(&mut rest).unwrap(),
+        0,
+        "the flooding connection must be closed, got {rest:?}"
+    );
+
+    // the service itself is unharmed: a fresh client still gets answers
+    let mut c2 = Client::connect(addr);
+    assert!(ok(&c2.request(r#"{"id":1,"type":"stats"}"#)));
+    assert!(ok(&c2.request(r#"{"type":"shutdown"}"#)));
+    let report = handle.join();
+    assert_eq!(report.metrics.errors, 1, "the flood counted as one error");
+}
+
+#[test]
+fn streamed_bulk_replies_reassemble_bit_identically() {
+    let spawn_with = |threshold: usize| {
+        spawn(
+            Session::builder().threads(1).build(),
+            ServiceConfig {
+                addr: "127.0.0.1:0".to_string(),
+                linger: Duration::ZERO,
+                stream_threshold: threshold,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap()
+    };
+    // reference: a threshold no reply reaches, so the same request is
+    // answered as ONE line (table1 is analytic — cheap and
+    // deterministic across sessions)
+    let whole = spawn_with(usize::MAX);
+    let mut cw = Client::connect(whole.addr());
+    let reference = cw.raw_request(r#"{"id":5,"type":"table","target":"table1"}"#);
+    assert!(ok(&Json::parse(reference.trim()).unwrap()), "{reference}");
+
+    // a tiny threshold forces the identical reply into streamed frames
+    let streamed = spawn_with(200);
+    let mut cs = Client::connect(streamed.addr());
+    cs.stream
+        .write_all(b"{\"id\":5,\"type\":\"table\",\"target\":\"table1\"}\n")
+        .unwrap();
+    let mut frames = Vec::new();
+    loop {
+        let mut line = String::new();
+        cs.reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "stream ended without a terminator frame");
+        let frame = Json::parse(line.trim()).unwrap();
+        let done = frame.get("done").and_then(Json::as_bool) == Some(true);
+        frames.push(frame);
+        if done {
+            break;
+        }
+    }
+    assert!(
+        frames.len() >= 3,
+        "a 200-byte threshold must fragment table1, got {} frames",
+        frames.len()
+    );
+    assert_eq!(frames[0].get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(frames[0].get("stream").and_then(Json::as_bool), Some(true));
+    for (i, f) in frames.iter().enumerate() {
+        assert_eq!(f.get("frame").and_then(Json::as_u64), Some(i as u64));
+        assert_eq!(f.get("id").and_then(Json::as_u64), Some(5));
+    }
+    let rebuilt = protocol::reassemble(&frames).expect("well-formed stream");
+    assert_eq!(
+        rebuilt,
+        reference.trim_end_matches('\n'),
+        "reassembled frames must be bit-identical to the unstreamed reply"
+    );
+
+    assert!(ok(&cs.request(r#"{"type":"shutdown"}"#)));
+    streamed.join();
+    assert!(ok(&cw.request(r#"{"type":"shutdown"}"#)));
+    whole.join();
+}
+
+#[test]
+fn a_slow_reader_cannot_stall_interactive_clients() {
+    let handle = spawn(
+        Session::builder().threads(2).build(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            linger: Duration::from_millis(5),
+            stream_threshold: 4096,
+            outbound_cap: 16 * 1024,
+            slow_reader_grace: Duration::from_millis(100),
+            max_line_bytes: 8 << 20,
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr();
+
+    // a bulk sweep whose reply is several MB (the jobs dedup to ONE
+    // cheap simulation, but every job still gets its result object),
+    // sent by a client that then never reads a byte
+    let slow = TcpStream::connect(addr).unwrap();
+    {
+        let (spec, _) = small_layer(0);
+        let one = format!(r#"{{"layer":{spec}}}"#);
+        let jobs = vec![one; 25_000].join(",");
+        (&slow)
+            .write_all(format!("{{\"id\":1,\"type\":\"sweep\",\"jobs\":[{jobs}]}}\n").as_bytes())
+            .unwrap();
+    }
+
+    // while that reply jams (or is cut loose as a slow reader), other
+    // clients' interactive requests keep completing — the bulk
+    // dispatcher may block on the dead queue, the interactive one never
+    let t0 = std::time::Instant::now();
+    let mut c = Client::connect(addr);
+    for i in 0..5u32 {
+        let (spec, _) = small_layer(1 + (i as usize) % 2);
+        let reply = c.request(&format!(r#"{{"id":{i},"type":"layer_cost","layer":{spec}}}"#));
+        assert!(ok(&reply), "{}", reply.render());
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "interactive requests starved behind a slow bulk reader"
+    );
+
+    // and the service still drains: the stalled connection cannot hold
+    // shutdown hostage past the slow-reader grace
+    assert!(ok(&c.request(r#"{"type":"shutdown"}"#)));
+    let report = handle.join();
+    assert!(report.batcher.bulk_submissions >= 1);
+    assert!(report.batcher.submissions >= 5);
+    drop(slow);
+}
+
+#[test]
+fn interactive_arrivals_preempt_the_bulk_linger() {
+    let handle = spawn(
+        Session::builder().threads(2).build(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            // a long linger: without preemption the bulk round would sit
+            // in its gather window while interactive work piles up
+            linger: Duration::from_millis(150),
+            ..ServiceConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr();
+
+    // one connection pipelines a bulk table behind nothing, then a
+    // second connection feeds interactive requests into the bulk
+    // linger window
+    let mut bulk = Client::connect(addr);
+    bulk.stream
+        .write_all(b"{\"id\":1,\"type\":\"table\",\"target\":\"table1\"}\n")
+        .unwrap();
+    let mut c = Client::connect(addr);
+    for i in 0..4u32 {
+        let (spec, _) = small_layer(i as usize);
+        let reply = c.request(&format!(r#"{{"id":{i},"type":"layer_cost","layer":{spec}}}"#));
+        assert!(ok(&reply), "{}", reply.render());
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // the bulk reply still arrives, on its own connection
+    let table = {
+        let mut line = String::new();
+        bulk.reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+    assert!(ok(&table));
+    assert_eq!(table.get("id").and_then(Json::as_u64), Some(1));
+
+    assert!(ok(&c.request(r#"{"type":"shutdown"}"#)));
+    let report = handle.join();
+    assert!(
+        report.batcher.preemptions >= 1,
+        "an interactive arrival inside the bulk linger must be counted: {:?}",
+        report.batcher
+    );
+    assert_eq!(report.batcher.bulk_rounds, 1);
+    assert!(report.batcher.rounds >= 1);
 }
